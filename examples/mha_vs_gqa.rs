@@ -1,0 +1,38 @@
+//! MHA vs GQA comparison — the paper's central narrative (Figs. 1, 5-7):
+//! same accelerator, two attention mechanisms, radically different
+//! on-chip memory behavior.
+//!
+//! Run: `cargo run --release --example mha_vs_gqa`
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::MIB;
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::new();
+
+    // Decode-phase motivation (Fig. 1): a parameter-matched pair.
+    let f1 = exp::fig1(&coord)?;
+    print!("{}", figures::fig1(&f1));
+
+    // Prefill at M=2048 on the 128 MiB baseline (Figs. 5-7).
+    let pair = exp::paired_prefill(&coord)?;
+    println!(
+        "\npeak needed: MHA {:.1} MiB vs GQA {:.1} MiB -> {:.2}x \
+         (paper 107.3 vs 39.1 = 2.72x)",
+        pair.mha.result.peak_needed() as f64 / MIB as f64,
+        pair.gqa.result.peak_needed() as f64 / MIB as f64,
+        pair.peak_ratio(),
+    );
+    println!(
+        "end-to-end: MHA {:.1} ms vs GQA {:.1} ms -> {:.2}x (paper 1.89x)",
+        pair.mha.result.seconds() * 1e3,
+        pair.gqa.result.seconds() * 1e3,
+        pair.time_ratio(),
+    );
+    let (fig5_text, _, _) = figures::fig5(&pair);
+    print!("{fig5_text}");
+    print!("{}", figures::fig6(&pair));
+    print!("{}", figures::fig7(&pair));
+    Ok(())
+}

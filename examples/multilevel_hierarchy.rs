@@ -1,0 +1,66 @@
+//! Multi-level on-chip hierarchy (paper §IV-D, Fig. 10, Table III):
+//! shared SRAM + two dedicated memories attached to SA pairs, with the
+//! non-optimized placement that produces cross-memory data hopping.
+//!
+//! Run: `cargo run --release --example multilevel_hierarchy`
+
+use trapti::config::{baseline, multilevel};
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::tables;
+use trapti::util::MIB;
+use trapti::workload::{Workload, DS_R1D_Q15B};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::new();
+
+    // Single-level reference.
+    let single = coord.stage1(
+        &DS_R1D_Q15B,
+        Workload::Prefill { seq: 2048 },
+        &baseline(),
+    )?;
+    // Multi-level run.
+    let t3 = exp::table3(&coord)?;
+    let multi = &t3.stage1;
+
+    println!("DS-R1D Q-1.5B prefill, single vs multi-level hierarchy:");
+    println!(
+        "{:>24} {:>12} {:>12}",
+        "", "single", "multi-level"
+    );
+    println!(
+        "{:>24} {:>9.1} ms {:>9.1} ms   (paper: 313.6 -> 550 ms)",
+        "end-to-end",
+        single.result.seconds() * 1e3,
+        multi.result.seconds() * 1e3,
+    );
+    println!(
+        "{:>24} {:>11.0}% {:>11.0}%   (paper: 77% -> 57%)",
+        "active PE utilization",
+        single.result.active_utilization() * 100.0,
+        multi.result.active_utilization() * 100.0,
+    );
+    println!(
+        "{:>24} {:>10.1} J {:>10.1} J   (paper: 40.5 -> 73.4 J)",
+        "on-chip energy",
+        single.energy.on_chip_j(),
+        multi.energy.on_chip_j(),
+    );
+    println!("\nper-memory peak needed bytes:");
+    for tr in &multi.result.traces {
+        println!(
+            "  {:>6}: {:>6.1} MiB (paper: sram 34.1, dm1 35.5, dm2 37.7)",
+            tr.memory,
+            tr.peak_needed() as f64 / MIB as f64
+        );
+    }
+    println!();
+    for t in tables::table3(&t3) {
+        print!("{}", t.render());
+    }
+    println!(
+        "\nbest per-memory reduction: {:.1}% (paper: up to -77.8%)",
+        t3.best_delta()
+    );
+    Ok(())
+}

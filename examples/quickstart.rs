@@ -1,0 +1,56 @@
+//! Quickstart: the complete TRAPTI two-stage flow on one workload in
+//! ~40 lines of user code.
+//!
+//! Stage I simulates DeepSeek-R1-Distill-Qwen-1.5B prefill (M=2048) on
+//! the paper's baseline accelerator and extracts the time-resolved SRAM
+//! occupancy trace; Stage II sweeps banked organizations with power
+//! gating and prints the energy/area candidates.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use trapti::banking::{GatingPolicy, SweepSpec};
+use trapti::config::baseline;
+use trapti::coordinator::Coordinator;
+use trapti::util::MIB;
+use trapti::workload::{Workload, DS_R1D_Q15B};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::new();
+    let accel = baseline();
+
+    // --- Stage I: cycle-level simulation + occupancy trace ------------
+    let s1 = coord.stage1(&DS_R1D_Q15B, Workload::Prefill { seq: 2048 }, &accel)?;
+    println!("{}", s1.graph.summary());
+    println!(
+        "Stage I: {:.1} ms simulated, peak needed {:.1} MiB, \
+         {} SRAM reads, feasible={}",
+        s1.result.seconds() * 1e3,
+        s1.result.peak_needed() as f64 / MIB as f64,
+        s1.result.stats.reads,
+        s1.result.feasible(),
+    );
+
+    // --- Stage II: banking + power-gating exploration ------------------
+    let spec = SweepSpec {
+        capacities: vec![48 * MIB, 64 * MIB, 128 * MIB],
+        banks: vec![1, 4, 8, 16],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::Aggressive],
+    };
+    println!("\nStage II (alpha=0.9, aggressive gating):");
+    println!(
+        "{:>8} {:>6} {:>12} {:>8} {:>12}",
+        "C[MiB]", "banks", "E_total[J]", "dE%", "area[mm2]"
+    );
+    for p in coord.stage2(&s1, &spec, accel.sa.freq_ghz) {
+        println!(
+            "{:>8} {:>6} {:>12.2} {:>8.1} {:>12.1}",
+            p.eval.capacity / MIB,
+            p.eval.banks,
+            p.eval.e_total_j(),
+            p.delta_e_pct(),
+            p.eval.area_mm2,
+        );
+    }
+    Ok(())
+}

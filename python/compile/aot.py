@@ -1,0 +1,213 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README).
+
+Every entry point is lowered with ``return_tuple=True``; the Rust side
+unwraps with ``Literal::to_tuple``. A ``manifest.json`` records, for each
+artifact, the positional input order / shapes / dtypes and output shapes,
+so the Rust runtime never has to guess at pytree flattening order — the
+entry functions here take *positional* args in the documented order.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged); Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import NEG_INF, attention_decode, tiled_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(specs):
+    return [
+        {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+        for name, s in specs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Entry points. Positional-arg wrappers with fixed, manifest-recorded order.
+# ---------------------------------------------------------------------------
+
+
+def _decode_entry(cfg: M.ModelConfig):
+    """decode(x, k_cache, v_cache, pos, *weights) -> (y, new_k, new_v)."""
+    L, D, S = cfg.n_layers, cfg.d_model, cfg.max_seq
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    weight_names = ["wqkv", "wo", "w2", "ln1_g", "ln2_g"]
+    if cfg.ffn == "swiglu":
+        weight_names += ["wg", "wu"]
+    else:
+        weight_names += ["w1"]
+    if cfg.norm == "layernorm":
+        weight_names += ["ln1_b", "ln2_b"]
+
+    def fn(x, kc, vc, pos, *weights):
+        params = dict(zip(weight_names, weights))
+        return M.decode_step(cfg, params, x, kc, vc, pos)
+
+    shapes = {
+        "wqkv": (L, D, cfg.qkv_out_dim),
+        "wo": (L, cfg.n_heads * Dh, D),
+        "w2": (L, cfg.d_ff, D),
+        "ln1_g": (L, D),
+        "ln2_g": (L, D),
+        "wg": (L, D, cfg.d_ff),
+        "wu": (L, D, cfg.d_ff),
+        "w1": (L, D, cfg.d_ff),
+        "ln1_b": (L, D),
+        "ln2_b": (L, D),
+    }
+    inputs = [
+        ("x", _spec((1, D))),
+        ("k_cache", _spec((L, S, Hkv, Dh))),
+        ("v_cache", _spec((L, S, Hkv, Dh))),
+        ("pos", _spec((), jnp.int32)),
+    ] + [(n, _spec(shapes[n])) for n in weight_names]
+    outputs = [
+        ("y", _spec((1, D))),
+        ("new_k_cache", _spec((L, S, Hkv, Dh))),
+        ("new_v_cache", _spec((L, S, Hkv, Dh))),
+    ]
+    return fn, inputs, outputs
+
+
+def _prefill_entry(cfg: M.ModelConfig, m: int):
+    """prefill(xs, *weights) -> (ys, k_cache, v_cache)."""
+    L, D = cfg.n_layers, cfg.d_model
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    weight_names = ["wqkv", "wo", "w2", "ln1_g", "ln2_g"]
+    if cfg.ffn == "swiglu":
+        weight_names += ["wg", "wu"]
+    else:
+        weight_names += ["w1"]
+    if cfg.norm == "layernorm":
+        weight_names += ["ln1_b", "ln2_b"]
+
+    def fn(xs, *weights):
+        params = dict(zip(weight_names, weights))
+        return M.prefill(cfg, params, xs)
+
+    shapes = {
+        "wqkv": (L, D, cfg.qkv_out_dim),
+        "wo": (L, cfg.n_heads * Dh, D),
+        "w2": (L, cfg.d_ff, D),
+        "ln1_g": (L, D),
+        "ln2_g": (L, D),
+        "wg": (L, D, cfg.d_ff),
+        "wu": (L, D, cfg.d_ff),
+        "w1": (L, D, cfg.d_ff),
+        "ln1_b": (L, D),
+        "ln2_b": (L, D),
+    }
+    inputs = [("xs", _spec((m, D)))] + [(n, _spec(shapes[n])) for n in weight_names]
+    outputs = [
+        ("ys", _spec((m, D))),
+        ("k_cache", _spec((L, m, Hkv, Dh))),
+        ("v_cache", _spec((L, m, Hkv, Dh))),
+    ]
+    return fn, inputs, outputs
+
+
+def _attention_entry(h: int, hkv: int, dh: int, s: int):
+    def fn(q, k, v, mask):
+        return (attention_decode(q, k, v, mask, s_tile=min(128, s)),)
+
+    inputs = [
+        ("q", _spec((h, dh))),
+        ("k", _spec((s, hkv, dh))),
+        ("v", _spec((s, hkv, dh))),
+        ("mask", _spec((s,))),
+    ]
+    outputs = [("out", _spec((h, dh)))]
+    return fn, inputs, outputs
+
+
+def _matmul_entry(m: int, k: int, n: int):
+    def fn(x, w):
+        return (tiled_matmul(x, w),)
+
+    inputs = [("x", _spec((m, k))), ("w", _spec((k, n)))]
+    outputs = [("out", _spec((m, n)))]
+    return fn, inputs, outputs
+
+
+def entries():
+    """All AOT entry points: name -> (fn, input specs, output specs, meta)."""
+    out = {}
+    for cfg in (M.TINY_MHA, M.TINY_GQA):
+        tag = cfg.name.replace("-", "_")
+        fn, ins, outs = _decode_entry(cfg)
+        out[f"decode_{tag}"] = (fn, ins, outs, {"model": cfg.name, "kind": "decode"})
+        fn, ins, outs = _prefill_entry(cfg, m=32)
+        out[f"prefill_{tag}"] = (
+            fn,
+            ins,
+            outs,
+            {"model": cfg.name, "kind": "prefill", "m": 32},
+        )
+    fn, ins, outs = _attention_entry(h=4, hkv=2, dh=32, s=128)
+    out["attn_decode_gqa"] = (fn, ins, outs, {"kind": "kernel"})
+    fn, ins, outs = _matmul_entry(128, 128, 128)
+    out["matmul_f32_128"] = (fn, ins, outs, {"kind": "kernel"})
+    return out
+
+
+def build(out_dir: pathlib.Path, only: str | None = None) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"format": "hlo-text", "neg_inf": NEG_INF, "entries": {}}
+    manifest_path = out_dir / "manifest.json"
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+    for name, (fn, ins, outs, meta) in entries().items():
+        if only and name != only:
+            continue
+        path = out_dir / f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*[s for _, s in ins])
+        text = to_hlo_text(lowered)
+        path.write_text(text)
+        manifest["entries"][name] = {
+            "file": path.name,
+            "inputs": _io(ins),
+            "outputs": _io(outs),
+            "meta": meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest_path.write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {manifest_path} ({len(manifest['entries'])} entries)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single entry by name")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out), args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+Import surface used by the L2 model (`compile.model`) and the pytest
+suite. All kernels run interpret=True (see attention.py module docs).
+"""
+
+from .attention import (  # noqa: F401
+    NEG_INF,
+    attention_decode,
+    attention_prefill,
+    attention_prefill_multihead,
+)
+from .matmul import quant_matmul, tiled_matmul  # noqa: F401
+from . import ref  # noqa: F401

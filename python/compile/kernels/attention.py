@@ -1,0 +1,233 @@
+"""Pallas attention kernels (L1) — the paper's compute hot-spot.
+
+Two kernels:
+
+* :func:`attention_decode` — single-token decode attention over a padded
+  KV cache with grouped KV heads (GQA; MHA/MQA as special cases), using a
+  one-pass online softmax so the ``[H, S]`` score matrix is never
+  materialized in VMEM.
+* :func:`attention_prefill` — causal flash-style prefill attention over
+  M tokens, tiled ``(head, q-tile, k-tile)`` with block-level causal
+  skipping.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+accelerator streams the shared/inner dimension through row/column FIFOs
+into a 128x128 systolic array. On TPU the analogous schedule is the
+``BlockSpec`` index map: the sequence axis is streamed HBM->VMEM in
+``S_TILE`` blocks while per-head accumulators stay VMEM-resident — the
+same "keep the reduction stationary, stream the long axis" insight.
+
+Kernels MUST run ``interpret=True`` here: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The interpret
+path lowers to plain HLO, which is what ``aot.py`` ships to the Rust
+runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["attention_decode", "attention_prefill", "NEG_INF"]
+
+# Finite stand-in for -inf. exp(NEG_INF - NEG_INF) == 1 keeps the online
+# softmax correction factor well-defined for fully-masked tiles (a true
+# -inf would produce exp(-inf + inf) = nan).
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *, scale):
+    """One (head, seq-tile) grid step of online-softmax decode attention."""
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :]  # [Dh]
+    k = k_ref[:, 0, :]  # [S_TILE, Dh]
+    v = v_ref[:, 0, :]  # [S_TILE, Dh]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...]  # [S_TILE]
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores))
+    corr = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(scores - m_cur)  # [S_TILE]
+    l_ref[0, 0] = l_prev * corr + jnp.sum(p)
+    m_ref[0, 0] = m_cur
+    acc_ref[0, :] = acc_ref[0, :] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+
+def attention_decode(
+    q: jax.Array,  # [H, Dh]
+    k: jax.Array,  # [S, Hkv, Dh]
+    v: jax.Array,  # [S, Hkv, Dh]
+    mask: jax.Array,  # [S] additive; 0 valid, NEG_INF padded
+    *,
+    s_tile: int = 128,
+) -> jax.Array:  # [H, Dh]
+    """Fused single-token GQA decode attention (online softmax).
+
+    Query head ``h`` reads KV head ``h // (H // Hkv)`` directly through
+    the BlockSpec index map — the grouped heads are never materialized
+    (that is the GQA bandwidth saving the paper's Fig. 1 measures).
+    """
+    H, dh = q.shape
+    S, hkv, _ = k.shape
+    if H % hkv != 0:
+        raise ValueError(f"H={H} must be divisible by Hkv={hkv}")
+    if S % s_tile != 0:
+        raise ValueError(f"S={S} must be divisible by s_tile={s_tile}")
+    group = H // hkv
+    grid = (H, S // s_tile)
+    scale = 1.0 / (dh**0.5)
+
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda h, s: (h, 0)),  # q: head-stationary
+            pl.BlockSpec((s_tile, 1, dh), lambda h, s, g=group: (s, h // g, 0)),
+            pl.BlockSpec((s_tile, 1, dh), lambda h, s, g=group: (s, h // g, 0)),
+            pl.BlockSpec((s_tile,), lambda h, s: (s,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dh), lambda h, s: (h, 0)),  # acc revisited over s
+            pl.BlockSpec((1, 1), lambda h, s: (h, 0)),  # running max
+            pl.BlockSpec((1, 1), lambda h, s: (h, 0)),  # running denom
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((H, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask)
+    del m  # running max only needed inside the online-softmax recurrence
+    return acc / l
+
+
+def _prefill_kernel(
+    q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, scale, q_tile, s_tile
+):
+    """One (head, q-tile, k-tile) grid step of causal flash attention."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level causality: a k-tile strictly above the diagonal of this
+    # q-tile contributes nothing. (The grid still visits it; the paper's
+    # scheduler similarly skips empty sub-operations — cf. subops tiling.)
+    @pl.when(ki * s_tile < (qi + 1) * q_tile)
+    def _body():
+        q = q_ref[:, 0, :]  # [Q_TILE, Dh]
+        k = k_ref[:, 0, :]  # [S_TILE, Dh]
+        v = v_ref[:, 0, :]  # [S_TILE, Dh]
+        scores = (
+            jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        )  # [Q_TILE, S_TILE]
+        q_pos = qi * q_tile + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        k_pos = ki * s_tile + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(k_pos <= q_pos, scores, NEG_INF)
+
+        m_prev = m_ref[:, 0]  # [Q_TILE]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur[:, None])
+        l_ref[:, 0] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_ref[:, 0] = m_cur
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+
+def attention_prefill(
+    q: jax.Array,  # [M, H, Dh]
+    k: jax.Array,  # [M, Hkv, Dh]
+    v: jax.Array,  # [M, Hkv, Dh]
+    *,
+    q_tile: int = 128,
+    s_tile: int = 128,
+) -> jax.Array:  # [M, Dh] — single-head (H must be 1); see multihead wrapper
+    """Causal flash-style prefill attention, one head per call."""
+    M, H, dh = q.shape
+    hkv = k.shape[1]
+    if H % hkv != 0:
+        raise ValueError(f"H={H} must be divisible by Hkv={hkv}")
+    if M % q_tile != 0 or M % s_tile != 0:
+        raise ValueError(f"M={M} must be divisible by q_tile and s_tile")
+    group = H // hkv
+    grid = (H, M // q_tile, M // s_tile)
+    scale = 1.0 / (dh**0.5)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, q_tile=q_tile, s_tile=s_tile
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, 1, dh), lambda h, qi, ki: (qi, h, 0)),
+            pl.BlockSpec((s_tile, 1, dh), lambda h, qi, ki, g=group: (ki, h // g, 0)),
+            pl.BlockSpec((s_tile, 1, dh), lambda h, qi, ki, g=group: (ki, h // g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, dh), lambda h, qi, ki: (qi, 0)),
+            pl.BlockSpec((q_tile, 1), lambda h, qi, ki: (qi, 0)),
+            pl.BlockSpec((q_tile, 1), lambda h, qi, ki: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, dh), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    del m
+    # Kernel computes one head per outermost grid index into the same
+    # [M, Dh] accumulator; heads are therefore vmapped at the caller level
+    # to keep VMEM residency bounded at one head's accumulator.
+    return acc / l
+
+
+# The prefill kernel above writes all heads into a single [M, Dh]
+# accumulator (the out_specs ignore h), which is only correct for H == 1.
+# attention_prefill_multihead vmaps over heads so each head gets a private
+# accumulator while preserving the GQA head->group mapping.
+def attention_prefill_multihead(
+    q: jax.Array,  # [M, H, Dh]
+    k: jax.Array,  # [M, Hkv, Dh]
+    v: jax.Array,  # [M, Hkv, Dh]
+    *,
+    q_tile: int = 128,
+    s_tile: int = 128,
+) -> jax.Array:  # [M, H, Dh]
+    M, H, dh = q.shape
+    hkv = k.shape[1]
+    group = H // hkv
+
+    def one_head(h):
+        qh = jax.lax.dynamic_slice_in_dim(q, h, 1, axis=1)  # [M, 1, Dh]
+        g = h // group
+        kg = jax.lax.dynamic_slice_in_dim(k, g, 1, axis=1)
+        vg = jax.lax.dynamic_slice_in_dim(v, g, 1, axis=1)
+        return attention_prefill(qh, kg, vg, q_tile=q_tile, s_tile=s_tile)
+
+    heads = jax.lax.map(one_head, jnp.arange(H))  # [H, M, Dh]
+    return jnp.transpose(heads, (1, 0, 2))

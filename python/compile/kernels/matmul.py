@@ -1,0 +1,140 @@
+"""Pallas tiled matmul kernels (L1).
+
+``tiled_matmul`` is the f32 projection workhorse used by the L2 model for
+QKV / output / FFN projections; ``quant_matmul`` mirrors the paper's
+uniform 8-bit operand setting (int8 x int8 -> int32 accumulate -> f32
+dequant), which is what the Rust performance model assumes per MAC.
+
+Tiles default to 128 — the MXU systolic tile and, not coincidentally, the
+paper's 128x128 PE array dimension: one output tile per grid step with the
+shared dimension streamed in ``k_tile`` blocks is exactly the row/column
+FIFO streaming schedule of the paper's Fig. 4 template, expressed as a
+BlockSpec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tiled_matmul", "quant_matmul"]
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (m, n, k) grid step: o[m,n] += x[m,k] @ w[k,n]."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def tiled_matmul(
+    x: jax.Array,  # [M, K] f32
+    w: jax.Array,  # [K, N] f32
+    *,
+    m_tile: int = 128,
+    n_tile: int = 128,
+    k_tile: int = 128,
+) -> jax.Array:  # [M, N] f32
+    """Blocked f32 matmul; output tile stationary, K streamed."""
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {K} vs {K2}")
+    m_tile = min(m_tile, M)
+    n_tile = min(n_tile, N)
+    k_tile = min(k_tile, K)
+    if M % m_tile or N % n_tile or K % k_tile:
+        raise ValueError(
+            f"dims ({M},{K},{N}) not divisible by tiles ({m_tile},{k_tile},{n_tile})"
+        )
+    grid = (M // m_tile, N // n_tile, K // k_tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tile, k_tile), lambda m, n, k: (m, k)),
+            pl.BlockSpec((k_tile, n_tile), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, n_tile), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _quant_matmul_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, *, k_steps):
+    """int8 x int8 -> int32 accumulate; dequantize on the last K step.
+
+    The f32 output ref doubles as the int32 accumulator (bit-compatible
+    width); values are reinterpreted only at the final dequant step.
+    """
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(ki == k_steps - 1)
+    def _dequant():
+        o_ref[...] = o_ref[...] * xs_ref[0] * ws_ref[...][None, :]
+
+
+def quant_matmul(
+    x_q: jax.Array,  # [M, K] int8
+    w_q: jax.Array,  # [K, N] int8
+    x_scale: jax.Array,  # [1] f32 per-tensor
+    w_scale: jax.Array,  # [N] f32 per-channel
+    *,
+    m_tile: int = 128,
+    n_tile: int = 128,
+    k_tile: int = 128,
+) -> jax.Array:  # [M, N] f32
+    """8-bit symmetric quantized matmul with int32 accumulation.
+
+    Note: partial sums are carried in f32 (exact for |acc| < 2^24, which
+    holds for int8 x int8 with K_tile <= 2^8 terms per step and the tiny
+    model dims used on this substrate; the ref oracle accumulates in
+    int32 and the property tests assert exact agreement).
+    """
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: {K} vs {K2}")
+    m_tile = min(m_tile, M)
+    n_tile = min(n_tile, N)
+    k_tile = min(k_tile, K)
+    if M % m_tile or N % n_tile or K % k_tile:
+        raise ValueError(
+            f"dims ({M},{K},{N}) not divisible by tiles ({m_tile},{k_tile},{n_tile})"
+        )
+    k_steps = K // k_tile
+    grid = (M // m_tile, N // n_tile, k_steps)
+    import functools
+
+    kernel = functools.partial(_quant_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tile, k_tile), lambda m, n, k: (m, k)),
+            pl.BlockSpec((k_tile, n_tile), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1,), lambda m, n, k: (0,)),
+            pl.BlockSpec((n_tile,), lambda m, n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((m_tile, n_tile), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(x_q, w_q, x_scale, w_scale)

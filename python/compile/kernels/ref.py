@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. pytest (python/tests/) sweeps shapes/dtypes with
+hypothesis and asserts allclose between the kernel (interpret=True) and
+these references. The references are also what the L2 model's unit tests
+compare against, so L1-vs-L2 disagreements are always attributable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "attention_decode_ref",
+    "attention_prefill_ref",
+    "matmul_ref",
+    "quant_matmul_ref",
+    "rmsnorm_ref",
+    "layernorm_ref",
+    "swiglu_ref",
+    "softmax_ref",
+]
+
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable softmax (subtract running max)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_decode_ref(
+    q: jax.Array,  # [H, Dh]        query for the single decode token
+    k: jax.Array,  # [S, Hkv, Dh]   key cache (padded to S)
+    v: jax.Array,  # [S, Hkv, Dh]   value cache (padded to S)
+    mask: jax.Array,  # [S]         additive mask: 0 for valid, -inf for pad
+) -> jax.Array:  # [H, Dh]
+    """Single-token decode attention with grouped KV heads (GQA).
+
+    Query head h attends to KV head ``h // (H // Hkv)``. MHA is the
+    Hkv == H special case; MQA is Hkv == 1.
+    """
+    H, dh = q.shape
+    S, hkv, _ = k.shape
+    assert H % hkv == 0, f"H={H} not divisible by Hkv={hkv}"
+    group = H // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    # Expand kv heads to query heads: [S, H, Dh]
+    k_exp = jnp.repeat(k, group, axis=1)
+    v_exp = jnp.repeat(v, group, axis=1)
+    # scores[h, s] = q[h] . k[s, h]
+    scores = jnp.einsum("hd,shd->hs", q, k_exp) * scale
+    scores = scores + mask[None, :]
+    p = softmax_ref(scores, axis=-1)
+    return jnp.einsum("hs,shd->hd", p, v_exp)
+
+
+def attention_prefill_ref(
+    q: jax.Array,  # [M, H, Dh]
+    k: jax.Array,  # [M, Hkv, Dh]
+    v: jax.Array,  # [M, Hkv, Dh]
+) -> jax.Array:  # [M, H, Dh]
+    """Causal self-attention over a full M-token prefill."""
+    M, H, dh = q.shape
+    hkv = k.shape[1]
+    group = H // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    k_exp = jnp.repeat(k, group, axis=1)
+    v_exp = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("mhd,nhd->hmn", q, k_exp) * scale
+    causal = jnp.tril(jnp.ones((M, M), dtype=bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    p = softmax_ref(scores, axis=-1)
+    return jnp.einsum("hmn,nhd->mhd", p, v_exp)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul oracle: [M, K] @ [K, N] -> [M, N]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quant_matmul_ref(
+    x_q: jax.Array,  # [M, K] int8
+    w_q: jax.Array,  # [K, N] int8
+    x_scale: jax.Array,  # scalar f32
+    w_scale: jax.Array,  # [N] f32 per-output-channel
+) -> jax.Array:  # [M, N] f32
+    """8-bit symmetric-quantized matmul with int32 accumulation.
+
+    Mirrors the paper's uniform 8-bit operand setting: accumulate in
+    int32, dequantize with per-tensor activation scale x per-channel
+    weight scale.
+    """
+    acc = jnp.dot(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * x_scale * w_scale[None, :]
+
+
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis (DeepSeek/Qwen-style)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm over the last axis (GPT-2-style)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """SwiGLU gate: silu(x @ w_gate) * (x @ w_up)."""
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    return jax.nn.silu(g) * u

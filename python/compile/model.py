@@ -1,0 +1,324 @@
+"""L2 — JAX transformer decoder (build-time only; never on the request path).
+
+Defines the paper's two workload families as *functional* models:
+
+* GPT-2-XL-style blocks: LayerNorm + MHA + GELU FFN
+* DeepSeek-R1-Distill-Qwen-style blocks: RMSNorm + GQA + SwiGLU
+
+The full-size configs (`GPT2_XL`, `DS_R1D_Q15B`) are used for parameter /
+MAC accounting only (they cross-check the paper's Table I and the Rust
+workload builder). The `TINY_*` configs are the ones actually lowered by
+``aot.py`` and executed from the Rust runtime — same code path, smaller
+dims, per DESIGN.md's substitution table.
+
+All heavy compute goes through the L1 Pallas kernels
+(``kernels.tiled_matmul``, ``kernels.attention_decode``,
+``kernels.attention_prefill_multihead``) so the lowered HLO exercises the
+kernel path end to end. Layers are folded with ``lax.scan`` over stacked
+parameters (one trace per block, not per layer — §Perf L2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    NEG_INF,
+    attention_decode,
+    attention_prefill_multihead,
+    tiled_matmul,
+)
+from .kernels.ref import layernorm_ref, rmsnorm_ref
+
+__all__ = [
+    "ModelConfig",
+    "GPT2_XL",
+    "DS_R1D_Q15B",
+    "TINY_MHA",
+    "TINY_GQA",
+    "init_params",
+    "decode_step",
+    "prefill",
+    "param_count",
+    "total_macs",
+    "kv_cache_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Structural description of a decoder-only transformer.
+
+    Mirrors the paper's Table I columns: L (layers), D (embedding dim),
+    D_ff (FFN hidden dim), H (query heads), H_kv (shared KV heads), FFN
+    type. ``max_seq`` is the padded KV-cache length S used by the decode
+    path (the paper's M).
+    """
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    ffn: Literal["gelu", "swiglu"]
+    norm: Literal["layernorm", "rmsnorm"]
+    max_seq: int
+
+    def __post_init__(self):
+        if self.n_heads % self.n_kv_heads:
+            raise ValueError(
+                f"{self.name}: H={self.n_heads} not divisible by "
+                f"Hkv={self.n_kv_heads}"
+            )
+
+    @property
+    def attention_kind(self) -> str:
+        if self.n_kv_heads == self.n_heads:
+            return "MHA"
+        if self.n_kv_heads == 1:
+            return "MQA"
+        return "GQA"
+
+    @property
+    def qkv_out_dim(self) -> int:
+        return (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+
+
+# ---------------------------------------------------------------------------
+# Paper configurations (Table I) — accounting only, never lowered.
+# ---------------------------------------------------------------------------
+
+GPT2_XL = ModelConfig(
+    name="gpt2-xl",
+    n_layers=48,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=25,  # MHA
+    d_head=64,
+    d_ff=6400,
+    ffn="gelu",
+    norm="layernorm",
+    max_seq=2048,
+)
+
+DS_R1D_Q15B = ModelConfig(
+    name="ds-r1d-qwen-1.5b",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,  # GQA, group size 6
+    d_head=128,
+    d_ff=8960,
+    ffn="swiglu",
+    norm="rmsnorm",
+    max_seq=2048,
+)
+
+# ---------------------------------------------------------------------------
+# Tiny configs — the ones AOT-lowered and run from Rust (same code path).
+# ---------------------------------------------------------------------------
+
+TINY_MHA = ModelConfig(
+    name="tiny-mha",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=32,
+    d_ff=256,
+    ffn="gelu",
+    norm="layernorm",
+    max_seq=128,
+)
+
+TINY_GQA = ModelConfig(
+    name="tiny-gqa",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    ffn="swiglu",
+    norm="rmsnorm",
+    max_seq=128,
+)
+
+
+# ---------------------------------------------------------------------------
+# Accounting (cross-checked against the paper's Table I by pytest and by
+# the Rust workload builder).
+# ---------------------------------------------------------------------------
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Non-embedding parameter count (the paper's P column)."""
+    qkv = cfg.d_model * cfg.qkv_out_dim
+    out = cfg.n_heads * cfg.d_head * cfg.d_model
+    if cfg.ffn == "swiglu":
+        ffn = 3 * cfg.d_model * cfg.d_ff
+    else:
+        ffn = 2 * cfg.d_model * cfg.d_ff
+    norms = (2 if cfg.norm == "layernorm" else 1) * 2 * cfg.d_model
+    return cfg.n_layers * (qkv + out + ffn + norms)
+
+
+def total_macs(cfg: ModelConfig, seq_len: int | None = None) -> int:
+    """Total MACs for a full causal pass over ``seq_len`` tokens.
+
+    Projection MACs are seq_len * weight-matrix sizes; attention
+    score/context MACs are 2 * H * S^2 * Dh per layer (full causal score
+    matrix, matching the simulator's op graph and the paper's MACs column).
+    """
+    s = seq_len or cfg.max_seq
+    qkv = cfg.d_model * cfg.qkv_out_dim
+    out = cfg.n_heads * cfg.d_head * cfg.d_model
+    ffn = (3 if cfg.ffn == "swiglu" else 2) * cfg.d_model * cfg.d_ff
+    proj = s * (qkv + out + ffn)
+    attn = 2 * cfg.n_heads * s * s * cfg.d_head
+    return cfg.n_layers * (proj + attn)
+
+
+def kv_cache_bytes(
+    cfg: ModelConfig, seq_len: int | None = None, bytes_per_el: int = 1
+) -> int:
+    """KV-cache footprint at ``seq_len`` tokens (8-bit operands default)."""
+    s = seq_len or cfg.max_seq
+    return 2 * cfg.n_layers * s * cfg.n_kv_heads * cfg.d_head * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """Random (scaled-normal) parameters, stacked over layers.
+
+    Layout (L = n_layers, D = d_model):
+      wqkv [L, D, (H+2Hkv)*Dh]   wo [L, H*Dh, D]
+      gelu:   w1 [L, D, Dff]  w2 [L, Dff, D]
+      swiglu: wg [L, D, Dff]  wu [L, D, Dff]  w2 [L, Dff, D]
+      norm scales [L, D] (+ biases for layernorm)
+    """
+    L, D = cfg.n_layers, cfg.d_model
+    keys = jax.random.split(key, 8)
+
+    def w(k, *shape):
+        fan_in = shape[-2]
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    params = {
+        "wqkv": w(keys[0], L, D, cfg.qkv_out_dim),
+        "wo": w(keys[1], L, cfg.n_heads * cfg.d_head, D),
+        "w2": w(keys[2], L, cfg.d_ff, D),
+        "ln1_g": jnp.ones((L, D), jnp.float32),
+        "ln2_g": jnp.ones((L, D), jnp.float32),
+    }
+    if cfg.ffn == "swiglu":
+        params["wg"] = w(keys[3], L, D, cfg.d_ff)
+        params["wu"] = w(keys[4], L, D, cfg.d_ff)
+    else:
+        params["w1"] = w(keys[3], L, D, cfg.d_ff)
+    if cfg.norm == "layernorm":
+        params["ln1_b"] = jnp.zeros((L, D), jnp.float32)
+        params["ln2_b"] = jnp.zeros((L, D), jnp.float32)
+    return params
+
+
+def _norm(cfg: ModelConfig, x, g, b):
+    if cfg.norm == "layernorm":
+        return layernorm_ref(x, g, b)
+    return rmsnorm_ref(x, g)
+
+
+def _ffn(cfg: ModelConfig, h, layer):
+    if cfg.ffn == "swiglu":
+        gate = tiled_matmul(h, layer["wg"])
+        up = tiled_matmul(h, layer["wu"])
+        act = jax.nn.silu(gate) * up
+    else:
+        act = jax.nn.gelu(tiled_matmul(h, layer["w1"]))
+    return tiled_matmul(act, layer["w2"])
+
+
+def _split_qkv(cfg: ModelConfig, qkv: jax.Array):
+    """Split a [T, (H+2Hkv)*Dh] projection into q/k/v head tensors."""
+    T = qkv.shape[0]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = qkv[:, : H * Dh].reshape(T, H, Dh)
+    k = qkv[:, H * Dh : (H + Hkv) * Dh].reshape(T, Hkv, Dh)
+    v = qkv[:, (H + Hkv) * Dh :].reshape(T, Hkv, Dh)
+    return q, k, v
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict[str, jax.Array],
+    x: jax.Array,  # [1, D] hidden state of the current token
+    k_cache: jax.Array,  # [L, S, Hkv, Dh]
+    v_cache: jax.Array,  # [L, S, Hkv, Dh]
+    pos: jax.Array,  # scalar int32: index of the current token
+):
+    """One auto-regressive decode step across all layers.
+
+    Returns ``(y [1, D], new_k_cache, new_v_cache)``. The KV caches are
+    functionally updated at ``pos``; the Rust runtime round-trips them
+    between steps (they are the tensors whose growth the paper's Stage I
+    traces).
+    """
+    S = cfg.max_seq
+    mask = jnp.where(jnp.arange(S) <= pos, 0.0, NEG_INF).astype(jnp.float32)
+
+    def body(x, layer):
+        h = _norm(cfg, x, layer["ln1_g"], layer.get("ln1_b"))
+        qkv = tiled_matmul(h, layer["wqkv"])  # [1, (H+2Hkv)*Dh]
+        q, k_new, v_new = _split_qkv(cfg, qkv)
+        kc = jax.lax.dynamic_update_slice(layer["k_cache"], k_new, (pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(layer["v_cache"], v_new, (pos, 0, 0))
+        attn = attention_decode(q[0], kc, vc, mask, s_tile=min(128, S))
+        x = x + tiled_matmul(attn.reshape(1, -1), layer["wo"])
+        h2 = _norm(cfg, x, layer["ln2_g"], layer.get("ln2_b"))
+        x = x + _ffn(cfg, h2, layer)
+        return x, (kc, vc)
+
+    layers = dict(params)
+    layers["k_cache"] = k_cache
+    layers["v_cache"] = v_cache
+    y, (new_k, new_v) = jax.lax.scan(body, x, layers)
+    return y, new_k, new_v
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict[str, jax.Array],
+    xs: jax.Array,  # [M, D] hidden states of the prompt tokens
+):
+    """Causal forward pass over the whole prompt, producing the KV caches.
+
+    Returns ``(ys [M, D], k_cache [L, M, Hkv, Dh], v_cache)``. This is
+    the op graph Stage I simulates at M=2048 for the paper's workloads.
+    """
+    M = xs.shape[0]
+    tile = min(128, M)
+
+    def body(x, layer):
+        h = _norm(cfg, x, layer["ln1_g"], layer.get("ln1_b"))
+        qkv = tiled_matmul(h, layer["wqkv"])  # [M, (H+2Hkv)*Dh]
+        q, k, v = _split_qkv(cfg, qkv)
+        attn = attention_prefill_multihead(q, k, v, q_tile=tile, s_tile=tile)
+        x = x + tiled_matmul(attn.reshape(M, -1), layer["wo"])
+        h2 = _norm(cfg, x, layer["ln2_g"], layer.get("ln2_b"))
+        x = x + _ffn(cfg, h2, layer)
+        return x, (k, v)
+
+    ys, (ks, vs) = jax.lax.scan(body, xs, params)
+    return ys, ks, vs

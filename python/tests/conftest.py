@@ -1,0 +1,17 @@
+"""Shared pytest fixtures/settings for the TRAPTI python suite."""
+
+import jax
+import pytest
+from hypothesis import settings
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Pallas interpret mode re-traces per shape; keep hypothesis deadlines off
+# so compile time is never mistaken for flakiness.
+settings.register_profile("trapti", deadline=None, max_examples=25)
+settings.load_profile("trapti")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

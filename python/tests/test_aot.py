@@ -1,0 +1,95 @@
+"""AOT pipeline tests: every entry lowers to parseable HLO text and the
+manifest faithfully records the positional interface the Rust runtime uses."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def entry_map():
+    return aot.entries()
+
+
+def test_entry_inventory(entry_map):
+    names = set(entry_map)
+    assert {
+        "decode_tiny_mha",
+        "decode_tiny_gqa",
+        "prefill_tiny_mha",
+        "prefill_tiny_gqa",
+        "attn_decode_gqa",
+        "matmul_f32_128",
+    } <= names
+
+
+def test_all_entries_lower_to_hlo_text(entry_map):
+    for name, (fn, ins, outs, _meta) in entry_map.items():
+        lowered = jax.jit(fn).lower(*[s for _, s in ins])
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        # return_tuple=True: root is a tuple of the declared outputs
+        assert text.count("parameter(") >= len(ins), name
+
+
+def test_lowered_outputs_match_declared_shapes(entry_map):
+    for name, (fn, ins, outs, _meta) in entry_map.items():
+        res = jax.eval_shape(fn, *[s for _, s in ins])
+        flat = jax.tree.leaves(res)
+        assert len(flat) == len(outs), name
+        for got, (oname, want) in zip(flat, outs):
+            assert tuple(got.shape) == tuple(want.shape), (name, oname)
+            assert got.dtype == want.dtype, (name, oname)
+
+
+def test_decode_entry_executes_positionally():
+    """The positional wrapper == the dict-params model call."""
+    cfg = M.TINY_GQA
+    fn, ins, _outs, _meta = aot.entries()["decode_tiny_gqa"]
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.d_model), jnp.float32)
+    kc = jnp.zeros(
+        (cfg.n_layers, cfg.max_seq, cfg.n_kv_heads, cfg.d_head), jnp.float32
+    )
+    vc = jnp.zeros_like(kc)
+    # manifest order: x, k_cache, v_cache, pos, then weights by name
+    weight_names = [n for n, _ in ins[4:]]
+    args = [x, kc, vc, jnp.int32(0)] + [params[n] for n in weight_names]
+    y_pos, _, _ = fn(*args)
+    y_ref, _, _ = M.decode_step(cfg, params, x, kc, vc, jnp.int32(0))
+    np.testing.assert_allclose(y_pos, y_ref, atol=1e-6)
+
+
+@pytest.mark.skipif(not ARTIFACTS.exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_entries():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    live = aot.entries()
+    for name, ent in manifest["entries"].items():
+        assert name in live, f"stale manifest entry {name}"
+        _fn, ins, outs, _meta = live[name]
+        assert [i["name"] for i in ent["inputs"]] == [n for n, _ in ins]
+        for rec, (_n, spec) in zip(ent["inputs"], ins):
+            assert tuple(rec["shape"]) == tuple(spec.shape)
+            assert rec["dtype"] == str(spec.dtype)
+        assert [o["name"] for o in ent["outputs"]] == [n for n, _ in outs]
+        assert (ARTIFACTS / ent["file"]).exists()
+
+
+@pytest.mark.skipif(not ARTIFACTS.exists(), reason="run `make artifacts` first")
+def test_artifact_files_are_hlo_text():
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    for name, ent in manifest["entries"].items():
+        text = (ARTIFACTS / ent["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name

@@ -1,0 +1,191 @@
+"""L1 attention kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps the GQA shape space (H, Hkv grouping, head dim,
+sequence length, valid prefix length); fixed tests pin the MHA/MQA
+corner cases and numerical-stability behaviors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    NEG_INF,
+    attention_decode,
+    attention_prefill_multihead,
+)
+from compile.kernels import ref
+
+ATOL = 2e-5
+
+
+def _mk_qkv(rng, H, Hkv, Dh, S):
+    q = jnp.asarray(rng.standard_normal((H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((S, Hkv, Dh)), jnp.float32)
+    return q, k, v
+
+
+def _mask(S, valid):
+    return jnp.where(jnp.arange(S) < valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# --- decode ---------------------------------------------------------------
+
+
+@st.composite
+def decode_shapes(draw):
+    hkv = draw(st.sampled_from([1, 2, 4]))
+    group = draw(st.sampled_from([1, 2, 3, 4]))
+    dh = draw(st.sampled_from([8, 16, 32, 64]))
+    n_tiles = draw(st.integers(1, 4))
+    s_tile = draw(st.sampled_from([32, 64, 128]))
+    s = n_tiles * s_tile
+    valid = draw(st.integers(1, s))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return hkv * group, hkv, dh, s, s_tile, valid, seed
+
+
+@given(decode_shapes())
+def test_decode_matches_ref_hypothesis(shape):
+    H, Hkv, Dh, S, s_tile, valid, seed = shape
+    rng = np.random.default_rng(seed)
+    q, k, v = _mk_qkv(rng, H, Hkv, Dh, S)
+    mask = _mask(S, valid)
+    out = attention_decode(q, k, v, mask, s_tile=s_tile)
+    want = ref.attention_decode_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, want, atol=ATOL, rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "H,Hkv,label",
+    [(8, 8, "MHA"), (8, 2, "GQA"), (8, 1, "MQA")],
+)
+def test_decode_attention_variants(H, Hkv, label):
+    """The kernel covers all three of the paper's Fig. 2 variants."""
+    rng = np.random.default_rng(42)
+    q, k, v = _mk_qkv(rng, H, Hkv, 32, 128)
+    mask = _mask(128, 77)
+    out = attention_decode(q, k, v, mask)
+    want = ref.attention_decode_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, want, atol=ATOL, rtol=1e-5, err_msg=label)
+
+
+def test_decode_single_valid_token():
+    """valid=1 -> output is exactly v[0] for each head's group."""
+    rng = np.random.default_rng(7)
+    H, Hkv, Dh, S = 4, 2, 16, 64
+    q, k, v = _mk_qkv(rng, H, Hkv, Dh, S)
+    out = attention_decode(q, k, v, _mask(S, 1), s_tile=32)
+    group = H // Hkv
+    for h in range(H):
+        np.testing.assert_allclose(out[h], v[0, h // group], atol=ATOL)
+
+
+def test_decode_mask_invariance_to_padding_values():
+    """Padded cache slots must not influence the result at all."""
+    rng = np.random.default_rng(3)
+    H, Hkv, Dh, S, valid = 4, 4, 32, 128, 50
+    q, k, v = _mk_qkv(rng, H, Hkv, Dh, S)
+    mask = _mask(S, valid)
+    out1 = attention_decode(q, k, v, mask)
+    k2 = k.at[valid:].set(1e6)  # garbage in padded region
+    v2 = v.at[valid:].set(-1e6)
+    out2 = attention_decode(q, k2, v2, mask)
+    np.testing.assert_allclose(out1, out2, atol=ATOL)
+
+
+def test_decode_large_score_stability():
+    """Online softmax must survive large logits (no overflow)."""
+    rng = np.random.default_rng(11)
+    H, Hkv, Dh, S = 2, 2, 16, 64
+    q = jnp.asarray(rng.standard_normal((H, Dh)) * 100, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((S, Hkv, Dh)) * 100, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((S, Hkv, Dh)), jnp.float32)
+    out = attention_decode(q, k, v, _mask(S, S), s_tile=32)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    want = ref.attention_decode_ref(q, k, v, _mask(S, S))
+    np.testing.assert_allclose(out, want, atol=1e-4, rtol=1e-4)
+
+
+def test_decode_rejects_bad_grouping():
+    rng = np.random.default_rng(0)
+    q, k, v = _mk_qkv(rng, 5, 2, 16, 64)
+    with pytest.raises(ValueError, match="divisible"):
+        attention_decode(q, k, v, _mask(64, 64), s_tile=32)
+
+
+def test_decode_rejects_bad_tiling():
+    rng = np.random.default_rng(0)
+    q, k, v = _mk_qkv(rng, 4, 2, 16, 96)
+    with pytest.raises(ValueError, match="divisible"):
+        attention_decode(q, k, v, _mask(96, 96), s_tile=64)
+
+
+# --- prefill ---------------------------------------------------------------
+
+
+@st.composite
+def prefill_shapes(draw):
+    hkv = draw(st.sampled_from([1, 2]))
+    group = draw(st.sampled_from([1, 2, 4]))
+    dh = draw(st.sampled_from([8, 16, 32]))
+    tile = draw(st.sampled_from([16, 32, 64]))
+    n_tiles = draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return hkv * group, hkv, dh, tile * n_tiles, tile, seed
+
+
+@settings(max_examples=10)
+@given(prefill_shapes())
+def test_prefill_matches_ref_hypothesis(shape):
+    H, Hkv, Dh, M, tile, seed = shape
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((M, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    out = attention_prefill_multihead(q, k, v, q_tile=tile, s_tile=tile)
+    want = ref.attention_prefill_ref(q, k, v)
+    np.testing.assert_allclose(out, want, atol=ATOL, rtol=1e-5)
+
+
+def test_prefill_causality():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(5)
+    M, H, Hkv, Dh = 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((M, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    out1 = attention_prefill_multihead(q, k, v, q_tile=32, s_tile=32)
+    k2 = k.at[40:].add(5.0)
+    v2 = v.at[40:].add(-3.0)
+    out2 = attention_prefill_multihead(q, k2, v2, q_tile=32, s_tile=32)
+    np.testing.assert_allclose(out1[:40], out2[:40], atol=ATOL)
+    assert float(jnp.max(jnp.abs(out1[41:] - out2[41:]))) > 1e-3
+
+
+def test_prefill_first_token_is_v0():
+    rng = np.random.default_rng(9)
+    M, H, Hkv, Dh = 32, 2, 1, 16
+    q = jnp.asarray(rng.standard_normal((M, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    out = attention_prefill_multihead(q, k, v, q_tile=16, s_tile=16)
+    for h in range(H):
+        np.testing.assert_allclose(out[0, h], v[0, 0], atol=ATOL)
+
+
+def test_prefill_equals_decode_composition():
+    """Prefill row t == decode with a cache holding tokens 0..t."""
+    rng = np.random.default_rng(13)
+    M, H, Hkv, Dh = 32, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((M, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((M, Hkv, Dh)), jnp.float32)
+    pre = attention_prefill_multihead(q, k, v, q_tile=16, s_tile=16)
+    for t in (0, 7, 31):
+        dec = attention_decode(q[t], k, v, _mask(M, t + 1), s_tile=16)
+        np.testing.assert_allclose(pre[t], dec, atol=ATOL, rtol=1e-5)

@@ -1,0 +1,108 @@
+"""L1 matmul kernels vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import quant_matmul, tiled_matmul
+from compile.kernels import ref
+
+
+@st.composite
+def mm_shapes(draw):
+    t = draw(st.sampled_from([16, 32, 64]))
+    m = t * draw(st.integers(1, 3))
+    k = t * draw(st.integers(1, 3))
+    n = t * draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, t, seed
+
+
+@given(mm_shapes())
+def test_tiled_matmul_matches_ref(shape):
+    m, k, n, t, seed = shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    out = tiled_matmul(x, w, m_tile=t, n_tile=t, k_tile=t)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(out, want, atol=1e-4 * k**0.5, rtol=1e-5)
+
+
+def test_tiled_matmul_m1_row_vector():
+    """The decode path multiplies [1, K] x [K, N] — M smaller than tile."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    out = tiled_matmul(x, w)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, w), atol=1e-4, rtol=1e-5)
+
+
+def test_tiled_matmul_identity():
+    x = jnp.eye(64, dtype=jnp.float32)
+    w = jnp.asarray(np.random.default_rng(2).standard_normal((64, 64)), jnp.float32)
+    np.testing.assert_allclose(
+        tiled_matmul(x, w, m_tile=32, n_tile=32, k_tile=32), w, atol=1e-6
+    )
+
+
+def test_tiled_matmul_rejects_mismatched_inner():
+    x = jnp.zeros((32, 64), jnp.float32)
+    w = jnp.zeros((65, 32), jnp.float32)
+    with pytest.raises(ValueError, match="inner dims"):
+        tiled_matmul(x, w)
+
+
+def test_tiled_matmul_rejects_indivisible():
+    x = jnp.zeros((48, 64), jnp.float32)
+    w = jnp.zeros((64, 64), jnp.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        tiled_matmul(x, w, m_tile=32, n_tile=32, k_tile=32)
+
+
+@st.composite
+def qmm_shapes(draw):
+    t = draw(st.sampled_from([16, 32, 64]))
+    m = t * draw(st.integers(1, 2))
+    k = t * draw(st.integers(1, 2))
+    n = t * draw(st.integers(1, 2))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, t, seed
+
+
+@settings(max_examples=15)
+@given(qmm_shapes())
+def test_quant_matmul_matches_ref_exactly(shape):
+    """int8 x int8 with int32-exact f32 carries: bitwise-equal dequant."""
+    m, k, n, t, seed = shape
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    xs = jnp.asarray([float(rng.random() * 0.1 + 1e-3)], jnp.float32)
+    ws = jnp.asarray(rng.random(n) * 0.1 + 1e-3, jnp.float32)
+    out = quant_matmul(xq, wq, xs, ws, m_tile=t, n_tile=t, k_tile=t)
+    want = ref.quant_matmul_ref(xq, wq, xs[0], ws)
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_quant_matmul_zero_inputs():
+    xq = jnp.zeros((32, 32), jnp.int8)
+    wq = jnp.zeros((32, 32), jnp.int8)
+    out = quant_matmul(
+        xq, wq, jnp.asarray([0.5], jnp.float32), jnp.ones(32, jnp.float32)
+    )
+    np.testing.assert_array_equal(out, jnp.zeros((32, 32), jnp.float32))
+
+
+def test_quant_matmul_extreme_values():
+    """Saturated int8 operands stay exact through the f32 carry."""
+    k = 64
+    xq = jnp.full((16, k), -128, jnp.int8)
+    wq = jnp.full((k, 16), 127, jnp.int8)
+    out = quant_matmul(
+        xq, wq, jnp.asarray([1.0], jnp.float32), jnp.ones(16, jnp.float32),
+        m_tile=16, n_tile=16, k_tile=32,
+    )
+    np.testing.assert_array_equal(out, jnp.full((16, 16), -128 * 127 * k, jnp.float32))

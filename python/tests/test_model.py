@@ -1,0 +1,144 @@
+"""L2 model tests: Table I accounting, decode/prefill consistency, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+# --- Table I cross-checks (paper's headline structural numbers) -----------
+
+
+@pytest.mark.parametrize(
+    "cfg,p_paper_b,macs_paper_t,kind",
+    [
+        (M.GPT2_XL, 1.48, 3.66, "MHA"),
+        (M.DS_R1D_Q15B, 1.31, 3.04, "GQA"),
+    ],
+)
+def test_table1_accounting(cfg, p_paper_b, macs_paper_t, kind):
+    p = M.param_count(cfg) / 1e9
+    macs = M.total_macs(cfg) / 1e12
+    assert abs(p - p_paper_b) < 0.01 * p_paper_b + 0.01, (p, p_paper_b)
+    assert abs(macs - macs_paper_t) < 0.01 * macs_paper_t + 0.01, (macs, macs_paper_t)
+    assert cfg.attention_kind == kind
+
+
+def test_kv_cache_ratio_mha_vs_gqa():
+    """GQA slashes KV bytes: the structural root of the paper's Fig. 5."""
+    kv_mha = M.kv_cache_bytes(M.GPT2_XL)
+    kv_gqa = M.kv_cache_bytes(M.DS_R1D_Q15B)
+    # GPT-2 XL: 2*48*2048*25*64 = 314.6 MB; DS: 2*28*2048*2*128 = 29.4 MB
+    assert kv_mha == 2 * 48 * 2048 * 1600
+    assert kv_gqa == 2 * 28 * 2048 * 256
+    assert kv_mha / kv_gqa > 10
+
+
+def test_attention_kind_classification():
+    assert M.TINY_MHA.attention_kind == "MHA"
+    assert M.TINY_GQA.attention_kind == "GQA"
+    mqa = M.ModelConfig(
+        name="mqa", n_layers=1, d_model=64, n_heads=4, n_kv_heads=1,
+        d_head=16, d_ff=128, ffn="gelu", norm="layernorm", max_seq=64,
+    )
+    assert mqa.attention_kind == "MQA"
+
+
+def test_bad_grouping_rejected():
+    with pytest.raises(ValueError, match="divisible"):
+        M.ModelConfig(
+            name="bad", n_layers=1, d_model=64, n_heads=5, n_kv_heads=2,
+            d_head=16, d_ff=128, ffn="gelu", norm="layernorm", max_seq=64,
+        )
+
+
+# --- functional consistency -------------------------------------------------
+
+
+@pytest.fixture(scope="module", params=["tiny-mha", "tiny-gqa"])
+def cfg(request):
+    return {"tiny-mha": M.TINY_MHA, "tiny-gqa": M.TINY_GQA}[request.param]
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_param_shapes(cfg, params):
+    L, D = cfg.n_layers, cfg.d_model
+    assert params["wqkv"].shape == (L, D, cfg.qkv_out_dim)
+    assert params["wo"].shape == (L, cfg.n_heads * cfg.d_head, D)
+    assert params["w2"].shape == (L, cfg.d_ff, D)
+    if cfg.ffn == "swiglu":
+        assert params["wg"].shape == (L, D, cfg.d_ff)
+        assert params["wu"].shape == (L, D, cfg.d_ff)
+    else:
+        assert params["w1"].shape == (L, D, cfg.d_ff)
+    if cfg.norm == "layernorm":
+        assert params["ln1_b"].shape == (L, D)
+
+
+def test_decode_step_shapes_and_cache_update(cfg, params):
+    L, S = cfg.n_layers, cfg.max_seq
+    Hkv, Dh = cfg.n_kv_heads, cfg.d_head
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, cfg.d_model), jnp.float32)
+    kc = jnp.zeros((L, S, Hkv, Dh), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    y, nk, nv = M.decode_step(cfg, params, x, kc, vc, jnp.int32(3))
+    assert y.shape == (1, cfg.d_model)
+    assert nk.shape == kc.shape and nv.shape == vc.shape
+    # only position 3 may change
+    changed_k = jnp.any(nk != 0, axis=(2, 3))  # [L, S]
+    assert bool(jnp.all(changed_k[:, 3]))
+    assert not bool(jnp.any(changed_k[:, :3])) and not bool(
+        jnp.any(changed_k[:, 4:])
+    )
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_prefill_matches_decode_loop(cfg, params):
+    """Prefill over m tokens == m sequential decode steps (same y, KV)."""
+    m = 8
+    xs = jax.random.normal(jax.random.PRNGKey(2), (m, cfg.d_model), jnp.float32)
+    ys_pre, k_pre, v_pre = M.prefill(cfg, params, xs)
+
+    L, S = cfg.n_layers, cfg.max_seq
+    kc = jnp.zeros((L, S, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    ys_dec = []
+    for t in range(m):
+        y, kc, vc = M.decode_step(cfg, params, xs[t : t + 1], kc, vc, jnp.int32(t))
+        ys_dec.append(y[0])
+    ys_dec = jnp.stack(ys_dec)
+    np.testing.assert_allclose(ys_dec, ys_pre, atol=5e-4, rtol=1e-4)
+    np.testing.assert_allclose(kc[:, :m], k_pre, atol=5e-5, rtol=1e-5)
+    np.testing.assert_allclose(vc[:, :m], v_pre, atol=5e-5, rtol=1e-5)
+
+
+def test_decode_is_causal_in_pos(cfg, params):
+    """Garbage beyond pos in the caches must not affect the output."""
+    L, S = cfg.n_layers, cfg.max_seq
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, cfg.d_model), jnp.float32)
+    kc = jax.random.normal(
+        jax.random.PRNGKey(4), (L, S, cfg.n_kv_heads, cfg.d_head), jnp.float32
+    )
+    vc = jax.random.normal(jax.random.PRNGKey(5), kc.shape, jnp.float32)
+    pos = 5
+    y1, _, _ = M.decode_step(cfg, params, x, kc, vc, jnp.int32(pos))
+    kc2 = kc.at[:, pos + 1 :].set(1e3)
+    vc2 = vc.at[:, pos + 1 :].set(-1e3)
+    y2, _, _ = M.decode_step(cfg, params, x, kc2, vc2, jnp.int32(pos))
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+
+def test_decode_deterministic(cfg, params):
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, cfg.d_model), jnp.float32)
+    L, S = cfg.n_layers, cfg.max_seq
+    kc = jnp.zeros((L, S, cfg.n_kv_heads, cfg.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    y1, _, _ = M.decode_step(cfg, params, x, kc, vc, jnp.int32(0))
+    y2, _, _ = M.decode_step(cfg, params, x, kc, vc, jnp.int32(0))
+    np.testing.assert_array_equal(y1, y2)

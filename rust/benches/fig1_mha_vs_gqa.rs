@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 1 (MHA vs GQA decode energy/latency) and time
+//! the end-to-end generation. Run: `cargo bench --bench fig1_mha_vs_gqa`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+
+fn main() {
+    let coord = Coordinator::new();
+    let (_stats, f1) = bench("fig1_mha_vs_gqa", default_iters(), || {
+        exp::fig1(&coord).expect("fig1")
+    });
+    print!("{}", figures::fig1(&f1));
+    assert!(f1.attn_energy_ratio() > 1.5, "GQA must win on attention energy");
+    assert!(f1.attn_latency_ratio() > 1.5, "GQA must win on attention latency");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Fig. 5 (time-resolved occupancy traces, both
+//! workloads at 128 MiB). Run: `cargo bench --bench fig5_occupancy`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+use trapti::util::MIB;
+
+fn main() {
+    let coord = Coordinator::new();
+    let (_stats, pair) = bench("fig5_occupancy", default_iters(), || {
+        exp::paired_prefill(&coord).expect("stage1 pair")
+    });
+    let (text, _, _) = figures::fig5(&pair);
+    print!("{text}");
+    println!(
+        "peak ratio MHA/GQA = {:.2}x (paper 2.72x); \
+         MHA {:.1} MiB (paper 107.3), GQA {:.1} MiB (paper 39.1)",
+        pair.peak_ratio(),
+        pair.mha.result.peak_needed() as f64 / MIB as f64,
+        pair.gqa.result.peak_needed() as f64 / MIB as f64,
+    );
+    assert!(pair.peak_ratio() > 1.8, "MHA must need substantially more SRAM");
+    assert!(pair.mha.result.feasible() && pair.gqa.result.feasible());
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 6 (per-op-class latency breakdown).
+//! Run: `cargo bench --bench fig6_latency_breakdown`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+use trapti::workload::OpClass;
+
+fn main() {
+    let coord = Coordinator::new();
+    let (_stats, pair) = bench("fig6_latency_breakdown", default_iters(), || {
+        exp::paired_prefill(&coord).expect("stage1 pair")
+    });
+    print!("{}", figures::fig6(&pair));
+    // The paper's observation: GPT-2 XL spends more non-compute time
+    // per unit of useful work. Metric: memory+idle cycles per TMAC.
+    let stalls_per_tmac = |r: &trapti::sim::SimResult| {
+        let mut mem = 0u64;
+        for c in OpClass::all() {
+            if let Some(b) = r.op_breakdown.get(c) {
+                mem += b.memory + b.idle;
+            }
+        }
+        mem as f64 / (r.total_macs as f64 / 1e12)
+    };
+    let mha = stalls_per_tmac(&pair.mha.result);
+    let gqa = stalls_per_tmac(&pair.gqa.result);
+    println!(
+        "memory+idle cycles per TMAC: MHA {:.2e} vs GQA {:.2e}",
+        mha, gqa
+    );
+    assert!(mha > gqa, "MHA must stall more per useful MAC");
+}

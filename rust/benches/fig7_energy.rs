@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 7 (on-chip energy breakdown + utilization).
+//! Run: `cargo bench --bench fig7_energy`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+
+fn main() {
+    let coord = Coordinator::new();
+    let (_stats, pair) = bench("fig7_energy", default_iters(), || {
+        exp::paired_prefill(&coord).expect("stage1 pair")
+    });
+    print!("{}", figures::fig7(&pair));
+    let e_mha = pair.mha.energy.on_chip_j();
+    let e_gqa = pair.gqa.energy.on_chip_j();
+    println!("on-chip energy: MHA {e_mha:.2} J (paper 78.47), GQA {e_gqa:.2} J (paper 40.52)");
+    assert!(e_mha > e_gqa, "MHA must consume more on-chip energy");
+    assert!(
+        pair.gqa.result.active_utilization() > pair.mha.result.active_utilization(),
+        "GQA must utilize the PEs better"
+    );
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 8 (bank activity under different alphas, DS at
+//! 64 MiB / B=4). Run: `cargo bench --bench fig8_bank_activity`.
+
+use trapti::banking::avg_active;
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+
+fn main() {
+    let coord = Coordinator::new();
+    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let (_stats, f8) = bench("fig8_bank_activity", default_iters(), || {
+        exp::fig8(&coord, &pair.gqa)
+    });
+    print!("{}", figures::fig8(&f8));
+    // Lower alpha -> more active banks on average (the figure's message).
+    let avgs: Vec<f64> = f8.timelines.iter().map(|t| avg_active(t)).collect();
+    for w in avgs.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9, "avg active must rise as alpha falls: {avgs:?}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 9 (energy-area scatter over all (C, B)
+//! candidates). Run: `cargo bench --bench fig9_tradeoff`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::figures;
+use trapti::util::bench::{bench, default_iters};
+
+fn main() {
+    let coord = Coordinator::new();
+    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let (_stats, t2) = bench("fig9_tradeoff", default_iters(), || {
+        exp::table2(&coord, &pair)
+    });
+    print!("{}", figures::fig9(&t2));
+    // DS-R1D must dominate: lower energy at comparable area (its reduced,
+    // more variable memory demand gates more).
+    let min_gqa = t2.gqa_points.iter().map(|p| p.eval.e_total_j()).fold(f64::MAX, f64::min);
+    let min_mha = t2.mha_points.iter().map(|p| p.eval.e_total_j()).fold(f64::MAX, f64::min);
+    println!("min energy: GQA {min_gqa:.2} J vs MHA {min_mha:.2} J");
+    assert!(min_gqa < min_mha, "GQA candidates must reach lower energy");
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Table II (banking energy/area sweep, both
+//! workloads, alpha = 0.9). Run: `cargo bench --bench table2_banking`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::tables;
+use trapti::util::bench::{bench, default_iters};
+use trapti::util::MIB;
+
+fn main() {
+    let coord = Coordinator::new();
+    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let (_stats, t2) = bench("table2_banking", default_iters(), || {
+        exp::table2(&coord, &pair)
+    });
+    for t in tables::table2(&t2) {
+        print!("{}", t.render());
+    }
+    println!("best dE anywhere: {:.1}% (paper: -61.3% at DS 128 MiB B=16)", t2.best_delta());
+    // Paper claims: banking reduces energy across all DS capacities with
+    // the optimum in the middle of the bank range, not at B=32.
+    for cap in [64 * MIB, 128 * MIB] {
+        let best = exp::Table2::best_banks_at(&t2.gqa_points, cap).unwrap();
+        assert!((2..=16).contains(&best), "best banks at {cap}: {best}");
+    }
+    assert!(t2.best_delta() < -40.0, "banking must cut energy substantially");
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Table III (multi-level hierarchy per-memory banking
+//! sweep). Run: `cargo bench --bench table3_multilevel`.
+
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::tables;
+use trapti::util::bench::{bench, default_iters};
+
+fn main() {
+    let coord = Coordinator::new();
+    let (_stats, t3) = bench("table3_multilevel", default_iters(), || {
+        exp::table3(&coord).expect("table3")
+    });
+    println!(
+        "multi-level: e2e {:.1} ms (paper 550), util {:.0}% (paper 57), \
+         on-chip {:.1} J (paper 73.4)",
+        t3.stage1.result.seconds() * 1e3,
+        t3.stage1.result.active_utilization() * 100.0,
+        t3.stage1.energy.on_chip_j(),
+    );
+    for t in tables::table3(&t3) {
+        print!("{}", t.render());
+    }
+    println!("best dE: {:.1}% (paper headline: -77.8%)", t3.best_delta());
+    assert_eq!(t3.per_memory.len(), 3, "shared + DM1 + DM2");
+    assert!(t3.best_delta() < -60.0, "multi-level gating must beat -60%");
+    assert!(t3.stage1.result.feasible());
+}

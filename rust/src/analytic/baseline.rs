@@ -1,0 +1,162 @@
+//! Aggregate-statistics baseline estimator (the prior-work comparator).
+//!
+//! Timeloop/MAESTRO-class DSE flows see only aggregate quantities — peak
+//! capacity and total access counts — not execution-aligned occupancy
+//! traces (paper §I, §II-C "Gap and motivation"). This module implements
+//! that estimator faithfully so the benefit of time-resolved analysis can
+//! be *measured*: the aggregate view must keep every bank on whenever the
+//! workload might need it, because without Δt_k segments it cannot prove
+//! any idle interval exceeds break-even.
+
+use crate::cacti::CactiModel;
+use crate::trace::AccessStats;
+
+/// What an aggregate-only flow knows about a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct AggregateView {
+    /// Peak bytes ever needed (reported by capacity planning).
+    pub peak_bytes: u64,
+    /// Total run time, cycles.
+    pub total_cycles: u64,
+    /// Total access counts.
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl AggregateView {
+    /// Collapse a full Stage-I result into the aggregate view (throwing
+    /// away exactly the information TRAPTI keeps).
+    pub fn from_stats(peak_bytes: u64, total_cycles: u64, stats: &AccessStats) -> Self {
+        Self {
+            peak_bytes,
+            total_cycles,
+            reads: stats.reads,
+            writes: stats.writes,
+        }
+    }
+}
+
+/// Aggregate-only energy estimate for a (C, B) candidate.
+///
+/// Dynamic energy is identical to Eq. 3 (access counts are aggregate
+/// data). Leakage, however, must assume the *static worst case*: all
+/// banks that could ever hold needed data stay on for the whole run —
+/// the peak-occupancy bank count, held for `total_cycles`. With no
+/// temporal information there is no sound basis to gate below the peak.
+#[derive(Debug, Clone, Copy)]
+pub struct AggregateEstimate {
+    pub e_dyn_j: f64,
+    pub e_leak_j: f64,
+    /// Banks the aggregate flow keeps powered (peak-based).
+    pub static_active_banks: u32,
+}
+
+impl AggregateEstimate {
+    pub fn e_total_j(&self) -> f64 {
+        self.e_dyn_j + self.e_leak_j
+    }
+}
+
+pub fn estimate(
+    cacti: &CactiModel,
+    view: &AggregateView,
+    capacity: u64,
+    banks: u32,
+    alpha: f64,
+    freq_ghz: f64,
+) -> AggregateEstimate {
+    let ch = cacti.characterize(capacity, banks);
+    let e_dyn = view.reads as f64 * ch.e_read_j + view.writes as f64 * ch.e_write_j;
+    let active = crate::banking::banks_required(view.peak_bytes, capacity, banks, alpha);
+    // Peak-driven static decision: `active` banks on for the whole run.
+    let seconds = view.total_cycles as f64 / (freq_ghz * 1e9);
+    let e_leak = ch.p_leak_bank_w * active as f64 * seconds;
+    AggregateEstimate {
+        e_dyn_j: e_dyn,
+        e_leak_j: e_leak,
+        static_active_banks: active,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::{evaluate, GatingPolicy};
+    use crate::trace::OccupancyTrace;
+    use crate::util::MIB;
+
+    /// Bursty trace: needed occupancy is at peak only 10% of the time.
+    fn bursty_trace(cycles: u64) -> (OccupancyTrace, AccessStats) {
+        let mut tr = OccupancyTrace::new("sram", 128 * MIB);
+        let mut t = 0;
+        while t < cycles {
+            tr.record(t, 100 * MIB, 0); // short burst at peak
+            tr.record(t + 100_000, 10 * MIB, 0); // long low phase
+            t += 1_000_000;
+        }
+        tr.finalize(cycles);
+        let stats = AccessStats {
+            reads: 1_000_000,
+            writes: 500_000,
+            ..Default::default()
+        };
+        (tr, stats)
+    }
+
+    #[test]
+    fn aggregate_cannot_gate_below_peak() {
+        let (tr, stats) = bursty_trace(100_000_000);
+        let cacti = CactiModel::default();
+        let view = AggregateView::from_stats(tr.peak_needed(), 100_000_000, &stats);
+        let agg = estimate(&cacti, &view, 128 * MIB, 8, 0.9, 1.0);
+        // Peak 100 MiB at 8 banks of 16 MiB, alpha 0.9 -> 7 banks pinned.
+        assert_eq!(agg.static_active_banks, 7);
+
+        // TRAPTI's trace-driven evaluation gates the low phases.
+        let trapti = evaluate(
+            &cacti, &tr, &stats, 128 * MIB, 8, 0.9,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        assert!(
+            trapti.e_leak_j < agg.e_leak_j * 0.55,
+            "time-resolved {} vs aggregate {} J",
+            trapti.e_leak_j,
+            agg.e_leak_j
+        );
+    }
+
+    #[test]
+    fn dynamic_energy_identical_to_eq3() {
+        // Aggregate flows do get Eq. 3 right — only leakage differs.
+        let (tr, stats) = bursty_trace(50_000_000);
+        let cacti = CactiModel::default();
+        let view = AggregateView::from_stats(tr.peak_needed(), 50_000_000, &stats);
+        let agg = estimate(&cacti, &view, 128 * MIB, 4, 0.9, 1.0);
+        let trapti = evaluate(
+            &cacti, &tr, &stats, 128 * MIB, 4, 0.9,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        assert!((agg.e_dyn_j - trapti.e_dyn_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_workload_closes_the_gap() {
+        // When occupancy is constant at peak, time resolution buys
+        // nothing — both estimators agree (sanity against over-claiming).
+        let mut tr = OccupancyTrace::new("sram", 128 * MIB);
+        tr.record(0, 100 * MIB, 0);
+        tr.finalize(10_000_000);
+        let stats = AccessStats { reads: 1000, writes: 1000, ..Default::default() };
+        let cacti = CactiModel::default();
+        let view = AggregateView::from_stats(tr.peak_needed(), 10_000_000, &stats);
+        let agg = estimate(&cacti, &view, 128 * MIB, 8, 0.9, 1.0);
+        let trapti = evaluate(
+            &cacti, &tr, &stats, 128 * MIB, 8, 0.9,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        // TRAPTI still gates the never-needed top bank(s); the pinned
+        // ones match the aggregate count.
+        let ratio = trapti.e_leak_j / agg.e_leak_j;
+        assert!(ratio > 0.95 && ratio <= 1.3, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Aggregate-statistics (Timeloop/MAESTRO-class) baseline estimator —
+//! the prior-work comparator that lacks time-resolved occupancy.
+
+pub mod baseline;
+
+pub use baseline::{estimate, AggregateEstimate, AggregateView};

@@ -1,0 +1,214 @@
+//! Mapping occupancy traces to bank activity (paper Eq. 1).
+//!
+//! `B_act(t) = clamp(ceil(o(t) / (alpha * C / B)), 0, B)` — occupied data
+//! is assumed packed contiguously across banks; the headroom factor
+//! `alpha` reserves per-bank slack for non-ideal placement (0.9 in the
+//! paper's conservative setting, 1.0 aggressive).
+
+use crate::trace::OccupancyTrace;
+use crate::util::ceil_div;
+
+/// Piecewise-constant bank-activity timeline segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActivitySegment {
+    pub t0: u64,
+    pub t1: u64,
+    /// Banks that must remain active during this segment.
+    pub active: u32,
+}
+
+impl ActivitySegment {
+    pub fn dt(&self) -> u64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Eq. 1 for a single occupancy value.
+pub fn banks_required(occupied: u64, capacity: u64, banks: u32, alpha: f64) -> u32 {
+    assert!(alpha > 0.0 && alpha <= 1.0, "alpha={alpha}");
+    assert!(banks >= 1);
+    if occupied == 0 {
+        return 0;
+    }
+    let usable_per_bank = (alpha * (capacity as f64 / banks as f64)).floor() as u64;
+    if usable_per_bank == 0 {
+        return banks;
+    }
+    ceil_div(occupied, usable_per_bank).min(banks as u64) as u32
+}
+
+/// What counts as "occupied" for Eq. 1.
+///
+/// The paper gates banks that hold no *needed* data; obsolete bytes are
+/// evictable for free, so they do not pin banks on (dropping them is part
+/// of entering the gated state). `NeededOnly` is therefore the paper's
+/// semantics; `NeededPlusObsolete` is provided for the ablation bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OccupancyBasis {
+    NeededOnly,
+    NeededPlusObsolete,
+}
+
+/// Translate an occupancy trace into the bank-activity timeline for a
+/// (C, B, alpha) candidate. Adjacent equal-activity segments coalesce.
+pub fn bank_activity(
+    trace: &OccupancyTrace,
+    capacity: u64,
+    banks: u32,
+    alpha: f64,
+    basis: OccupancyBasis,
+) -> Vec<ActivitySegment> {
+    let mut out: Vec<ActivitySegment> = Vec::new();
+    for seg in trace.segments() {
+        let occ = match basis {
+            OccupancyBasis::NeededOnly => seg.needed,
+            OccupancyBasis::NeededPlusObsolete => seg.occupied(),
+        };
+        let active = banks_required(occ, capacity, banks, alpha);
+        match out.last_mut() {
+            Some(last) if last.active == active && last.t1 == seg.t0 => {
+                last.t1 = seg.t1;
+            }
+            _ => out.push(ActivitySegment {
+                t0: seg.t0,
+                t1: seg.t1,
+                active,
+            }),
+        }
+    }
+    out
+}
+
+/// Time-weighted average active banks.
+pub fn avg_active(segments: &[ActivitySegment]) -> f64 {
+    let total: u64 = segments.iter().map(|s| s.dt()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let weighted: u128 = segments
+        .iter()
+        .map(|s| s.active as u128 * s.dt() as u128)
+        .sum();
+    weighted as f64 / total as f64
+}
+
+/// Idle intervals of one bank index `b` (0-based): maximal intervals
+/// where `active <= b` (banks pack low-to-high, so bank b is unused
+/// whenever fewer than b+1 banks are required).
+pub fn idle_intervals(segments: &[ActivitySegment], bank: u32) -> Vec<(u64, u64)> {
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for s in segments {
+        if s.active <= bank {
+            match out.last_mut() {
+                Some(last) if last.1 == s.t0 => last.1 = s.t1,
+                _ => out.push((s.t0, s.t1)),
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn trace(events: &[(u64, u64)], end: u64, cap: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", cap);
+        for &(t, needed) in events {
+            tr.record(t, needed, 0);
+        }
+        tr.finalize(end);
+        tr
+    }
+
+    #[test]
+    fn eq1_basic() {
+        // C=100, B=4 => 25/bank; alpha=1.0.
+        assert_eq!(banks_required(0, 100, 4, 1.0), 0);
+        assert_eq!(banks_required(1, 100, 4, 1.0), 1);
+        assert_eq!(banks_required(25, 100, 4, 1.0), 1);
+        assert_eq!(banks_required(26, 100, 4, 1.0), 2);
+        assert_eq!(banks_required(100, 100, 4, 1.0), 4);
+        // Over-capacity clamps to B.
+        assert_eq!(banks_required(1000, 100, 4, 1.0), 4);
+    }
+
+    #[test]
+    fn eq1_alpha_conservative() {
+        // alpha=0.9: usable 22/bank -> 23 bytes now needs 2 banks.
+        assert_eq!(banks_required(22, 100, 4, 0.9), 1);
+        assert_eq!(banks_required(23, 100, 4, 0.9), 2);
+        // Smaller alpha never decreases the requirement (Fig. 8).
+        for occ in [1u64, 10, 25, 50, 75, 100] {
+            assert!(
+                banks_required(occ, 100, 4, 0.9) >= banks_required(occ, 100, 4, 1.0),
+                "occ={occ}"
+            );
+        }
+    }
+
+    #[test]
+    fn activity_timeline_coalesces() {
+        let tr = trace(&[(10, 30), (20, 26), (30, 80)], 40, 100);
+        // B=4, alpha=1.0: 0..10 -> 0, 10..20 -> ceil(30/25)=2,
+        // 20..30 -> ceil(26/25)=2 (coalesce), 30..40 -> 4.
+        let act = bank_activity(&tr, 100, 4, 1.0, OccupancyBasis::NeededOnly);
+        assert_eq!(
+            act,
+            vec![
+                ActivitySegment { t0: 0, t1: 10, active: 0 },
+                ActivitySegment { t0: 10, t1: 30, active: 2 },
+                ActivitySegment { t0: 30, t1: 40, active: 4 },
+            ]
+        );
+        assert!((avg_active(&act) - (20.0 * 2.0 + 10.0 * 4.0) / 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_intervals_per_bank() {
+        let segs = vec![
+            ActivitySegment { t0: 0, t1: 10, active: 0 },
+            ActivitySegment { t0: 10, t1: 30, active: 2 },
+            ActivitySegment { t0: 30, t1: 40, active: 4 },
+            ActivitySegment { t0: 40, t1: 60, active: 1 },
+        ];
+        // Bank 0 idle only when active == 0.
+        assert_eq!(idle_intervals(&segs, 0), vec![(0, 10)]);
+        // Bank 2 idle when active <= 2: 0..30 (merged) and 40..60.
+        assert_eq!(idle_intervals(&segs, 2), vec![(0, 30), (40, 60)]);
+        // Bank 3 idle everywhere except 30..40.
+        assert_eq!(idle_intervals(&segs, 3), vec![(0, 30), (40, 60)]);
+    }
+
+    #[test]
+    fn obsolete_basis_needs_more_banks() {
+        let mut tr = OccupancyTrace::new("sram", 100);
+        tr.record(5, 20, 60);
+        tr.finalize(10);
+        let needed = bank_activity(&tr, 100, 4, 1.0, OccupancyBasis::NeededOnly);
+        let both = bank_activity(&tr, 100, 4, 1.0, OccupancyBasis::NeededPlusObsolete);
+        assert_eq!(needed.last().unwrap().active, 1);
+        assert_eq!(both.last().unwrap().active, 4);
+    }
+
+    #[test]
+    fn prop_activity_bounded_and_monotone_in_alpha() {
+        check("eq1-bounds", 200, |rng| {
+            let cap = rng.range(1, 1 << 30);
+            let banks = 1u32 << rng.below(6);
+            let occ = rng.below(cap * 2);
+            let a_hi = 0.5 + rng.f64() * 0.5;
+            let a_lo = a_hi * (0.5 + rng.f64() * 0.5);
+            let hi = banks_required(occ, cap, banks, a_hi);
+            let lo = banks_required(occ, cap, banks, a_lo);
+            assert!(hi <= banks && lo <= banks);
+            assert!(lo >= hi, "lower alpha must not reduce active banks");
+            if occ == 0 {
+                assert_eq!(hi, 0);
+            } else {
+                assert!(hi >= 1);
+            }
+        });
+    }
+}

@@ -1,0 +1,264 @@
+//! Stage-II energy evaluation of one banking + gating candidate
+//! (paper Eqs. 2-5).
+//!
+//! `E_tot = E_dyn + E_leak + E_sw` with
+//!   * `E_dyn  = N_R * E_R + N_W * E_W`           (Stage-I access counts)
+//!   * `E_leak = sum_k P_bank * B_act(k) * dt_k`  (+ ungated idle leak)
+//!   * `E_sw   = N_sw * E_sw_bank`                (break-even-filtered)
+
+use crate::cacti::{CactiModel, SramCharacterization};
+use crate::trace::{AccessStats, OccupancyTrace};
+
+use super::activity::{avg_active, bank_activity, idle_intervals, OccupancyBasis};
+use super::policy::GatingPolicy;
+
+/// Full evaluation of one (C, B, alpha, policy) candidate.
+#[derive(Debug, Clone)]
+pub struct BankingEval {
+    pub capacity: u64,
+    pub banks: u32,
+    pub alpha: f64,
+    pub policy: GatingPolicy,
+    /// Eq. 3 dynamic access energy, joules.
+    pub e_dyn_j: f64,
+    /// Eq. 4 leakage energy, joules (active + ungated idle).
+    pub e_leak_j: f64,
+    /// Eq. 5 switching overhead, joules.
+    pub e_sw_j: f64,
+    /// On<->off transitions actually taken.
+    pub n_switch: u64,
+    /// Time-weighted average active banks.
+    pub avg_active_banks: f64,
+    /// Fraction of total bank-time gated off.
+    pub gated_fraction: f64,
+    pub area_mm2: f64,
+    pub latency_cycles: u64,
+    pub characterization: SramCharacterization,
+}
+
+impl BankingEval {
+    /// Eq. 2.
+    pub fn e_total_j(&self) -> f64 {
+        self.e_dyn_j + self.e_leak_j + self.e_sw_j
+    }
+
+    /// Paper's ΔE% relative to a baseline evaluation.
+    pub fn delta_pct(&self, base: &BankingEval) -> f64 {
+        (self.e_total_j() - base.e_total_j()) / base.e_total_j() * 100.0
+    }
+}
+
+/// Evaluate one candidate against a Stage-I trace + access statistics.
+///
+/// `freq_ghz` converts trace cycles to seconds for leakage integration.
+pub fn evaluate(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    capacity: u64,
+    banks: u32,
+    alpha: f64,
+    policy: GatingPolicy,
+    freq_ghz: f64,
+) -> BankingEval {
+    let ch = cacti.characterize(capacity, banks);
+    let cyc_to_s = 1.0 / (freq_ghz * 1e9);
+    let end = trace.end_time().expect("trace must be finalized") as f64;
+
+    // Eq. 3 — dynamic energy from Stage-I access counts.
+    let e_dyn = stats.reads as f64 * ch.e_read_j + stats.writes as f64 * ch.e_write_j;
+
+    // Bank-activity timeline (Eq. 1).
+    let activity = bank_activity(trace, capacity, banks, alpha, OccupancyBasis::NeededOnly);
+    let avg = avg_active(&activity);
+
+    // Eq. 4 + Eq. 5 — walk each bank's idle intervals; leak while active
+    // or while idle-but-not-gated; pay 2 transitions per gated interval.
+    let mut gated_cycles: u128 = 0;
+    let mut n_switch = 0u64;
+    for bank in 0..banks {
+        for (t0, t1) in idle_intervals(&activity, bank) {
+            let dt = t1 - t0;
+            if policy.should_gate(dt, &ch, freq_ghz) {
+                gated_cycles += dt as u128;
+                n_switch += 2;
+            }
+        }
+    }
+    let total_bank_cycles = end as f64 * banks as f64;
+    // Acted-on idle time retains `idle_leak_factor` of nominal leakage
+    // (0 for true power gating, retention_factor for drowsy mode).
+    let retained = policy.idle_leak_factor();
+    let leak_cycles =
+        total_bank_cycles - gated_cycles as f64 * (1.0 - retained);
+    let e_leak = ch.p_leak_bank_w * leak_cycles * cyc_to_s;
+    // Drowsy transitions cost ~1% of a full sleep transition (no
+    // power-rail collapse, just a voltage step).
+    let per_switch = match policy {
+        GatingPolicy::Drowsy { .. } => ch.e_switch_j * 0.01,
+        _ => ch.e_switch_j,
+    };
+    let e_sw = n_switch as f64 * per_switch;
+
+    BankingEval {
+        capacity,
+        banks,
+        alpha,
+        policy,
+        e_dyn_j: e_dyn,
+        e_leak_j: e_leak,
+        e_sw_j: e_sw,
+        n_switch,
+        avg_active_banks: avg,
+        gated_fraction: if total_bank_cycles > 0.0 {
+            gated_cycles as f64 / total_bank_cycles
+        } else {
+            0.0
+        },
+        area_mm2: ch.area_mm2,
+        latency_cycles: ch.latency_cycles,
+        characterization: ch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    /// A DS-like synthetic trace: low occupancy with periodic release.
+    fn synth_trace(cap: u64, occ: u64, period: u64, cycles: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", cap);
+        let mut t = 0;
+        while t < cycles {
+            tr.record(t, occ, 0);
+            tr.record(t + period / 2, occ / 4, 0);
+            t += period;
+        }
+        tr.finalize(cycles);
+        tr
+    }
+
+    fn stats(reads: u64, writes: u64) -> AccessStats {
+        AccessStats {
+            reads,
+            writes,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn unbanked_ungated_is_pure_leak_plus_dyn() {
+        let cacti = CactiModel::default();
+        let tr = synth_trace(128 * MIB, 30 * MIB, 1_000_000, 100_000_000);
+        let st = stats(1_000_000, 500_000);
+        let ev = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
+        let ch = cacti.characterize(128 * MIB, 1);
+        let want_leak = ch.p_leak_bank_w * 0.1; // 100M cycles = 0.1 s
+        assert!((ev.e_leak_j - want_leak).abs() / want_leak < 1e-9);
+        assert_eq!(ev.n_switch, 0);
+        assert_eq!(ev.e_sw_j, 0.0);
+        assert!(ev.e_dyn_j > 0.0);
+    }
+
+    #[test]
+    fn banking_plus_gating_reduces_energy() {
+        // The paper's core Table II claim.
+        let cacti = CactiModel::default();
+        let tr = synth_trace(128 * MIB, 30 * MIB, 1_000_000, 100_000_000);
+        let st = stats(10_000_000, 5_000_000);
+        let base = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
+        let b8 = evaluate(
+            &cacti, &tr, &st, 128 * MIB, 8, 0.9,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        assert!(
+            b8.e_total_j() < base.e_total_j() * 0.7,
+            "B=8 gated {} vs B=1 {}",
+            b8.e_total_j(),
+            base.e_total_j()
+        );
+        assert!(b8.gated_fraction > 0.3);
+        assert!(b8.n_switch > 0);
+    }
+
+    #[test]
+    fn gating_never_worse_than_none_at_same_banking() {
+        // Break-even filtering guarantees gating only helps.
+        let cacti = CactiModel::default();
+        let tr = synth_trace(64 * MIB, 20 * MIB, 500_000, 50_000_000);
+        let st = stats(1_000_000, 1_000_000);
+        for &b in &[2u32, 4, 8, 16] {
+            let none = evaluate(&cacti, &tr, &st, 64 * MIB, b, 0.9, GatingPolicy::None, 1.0);
+            let agg = evaluate(
+                &cacti, &tr, &st, 64 * MIB, b, 0.9,
+                GatingPolicy::Aggressive, 1.0,
+            );
+            assert!(
+                agg.e_total_j() <= none.e_total_j() + 1e-12,
+                "B={b}: gating made it worse"
+            );
+        }
+    }
+
+    #[test]
+    fn conservative_gates_less_than_aggressive() {
+        let cacti = CactiModel::default();
+        let tr = synth_trace(64 * MIB, 20 * MIB, 200_000, 50_000_000);
+        let st = stats(1_000_000, 1_000_000);
+        let agg = evaluate(
+            &cacti, &tr, &st, 64 * MIB, 8, 1.0,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        let cons = evaluate(
+            &cacti, &tr, &st, 64 * MIB, 8, 0.9,
+            GatingPolicy::conservative(), 1.0,
+        );
+        assert!(cons.gated_fraction <= agg.gated_fraction);
+        assert!(cons.n_switch <= agg.n_switch);
+    }
+
+    #[test]
+    fn lower_alpha_more_active_banks() {
+        // Fig. 8's message.
+        let cacti = CactiModel::default();
+        let tr = synth_trace(64 * MIB, 30 * MIB, 500_000, 50_000_000);
+        let st = stats(1, 1);
+        let a10 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 1.0, GatingPolicy::Aggressive, 1.0);
+        let a05 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 0.5, GatingPolicy::Aggressive, 1.0);
+        assert!(a05.avg_active_banks >= a10.avg_active_banks);
+        assert!(a05.e_leak_j >= a10.e_leak_j);
+    }
+
+    #[test]
+    fn drowsy_sits_between_none_and_full_gating() {
+        let cacti = CactiModel::default();
+        let tr = synth_trace(64 * MIB, 20 * MIB, 200_000, 50_000_000);
+        let st = stats(1_000_000, 1_000_000);
+        let none = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::None, 1.0);
+        let drowsy = evaluate(
+            &cacti, &tr, &st, 64 * MIB, 8, 0.9,
+            GatingPolicy::drowsy(), 1.0,
+        );
+        let full = evaluate(
+            &cacti, &tr, &st, 64 * MIB, 8, 0.9,
+            GatingPolicy::Aggressive, 1.0,
+        );
+        assert!(drowsy.e_leak_j < none.e_leak_j);
+        assert!(drowsy.e_leak_j > full.e_leak_j);
+        // Drowsy acts on more intervals (no break-even filter).
+        assert!(drowsy.n_switch >= full.n_switch);
+    }
+
+    #[test]
+    fn delta_pct_matches_definition() {
+        let cacti = CactiModel::default();
+        let tr = synth_trace(64 * MIB, 10 * MIB, 500_000, 50_000_000);
+        let st = stats(100, 100);
+        let a = evaluate(&cacti, &tr, &st, 64 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
+        let b = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::Aggressive, 1.0);
+        let d = b.delta_pct(&a);
+        assert!((d - (b.e_total_j() - a.e_total_j()) / a.e_total_j() * 100.0).abs() < 1e-12);
+        assert!(d < 0.0, "banking+gating should be negative ΔE");
+    }
+}

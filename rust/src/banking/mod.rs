@@ -1,0 +1,15 @@
+//! Stage II: offline SRAM banking and power-gating exploration driven by
+//! Stage-I occupancy traces (paper §III-B, Eqs. 1-5).
+
+pub mod activity;
+pub mod energy;
+pub mod policy;
+pub mod sweep;
+
+pub use activity::{
+    avg_active, bank_activity, banks_required, idle_intervals, ActivitySegment,
+    OccupancyBasis,
+}; 
+pub use energy::{evaluate, BankingEval};
+pub use policy::GatingPolicy;
+pub use sweep::{sweep, SweepPoint, SweepSpec};

@@ -1,0 +1,150 @@
+//! Power-gating policies (paper Fig. 3, Stage II): decide, per idle
+//! interval of a bank, whether to gate it off.
+//!
+//! Gating an interval of duration `dt` saves `P_leak_bank * dt` but costs
+//! one off+on transition pair (`2 * E_switch`) and a wake-up latency; the
+//! standard break-even criterion (paper §II-B, [14][15]) gates only when
+//! the saving exceeds the cost.
+
+use crate::cacti::SramCharacterization;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GatingPolicy {
+    /// No power gating: every bank leaks for the whole run (the Table II
+    /// baseline against which ΔE is reported at each B... and the only
+    /// option at B=1).
+    None,
+    /// Gate every idle interval that passes break-even (alpha = 1.0 in
+    /// the paper's aggressive setting — alpha is applied upstream in the
+    /// activity mapping; the policy itself is identical).
+    Aggressive,
+    /// Reserve headroom *and* skip short idle intervals: gate only
+    /// intervals at least `min_idle_factor` times the break-even
+    /// duration, avoiding rapid on/off thrash on short dips.
+    Conservative { min_idle_factor: f64 },
+    /// Drowsy retention (paper §II-B, Flautner et al. [12]): idle banks
+    /// drop to a reduced-leakage state that RETAINS data — leakage
+    /// scales by `retention_factor` (~0.25 at 45 nm) instead of
+    /// vanishing, but transitions are cheap enough to take on *every*
+    /// idle interval (no break-even constraint) and wake-up is a single
+    /// cycle. The paper lists richer low-power-mode models as future
+    /// work; this implements that extension.
+    Drowsy { retention_factor: f64 },
+}
+
+impl GatingPolicy {
+    pub fn conservative() -> Self {
+        GatingPolicy::Conservative {
+            min_idle_factor: 4.0,
+        }
+    }
+
+    pub fn drowsy() -> Self {
+        GatingPolicy::Drowsy {
+            retention_factor: 0.25,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GatingPolicy::None => "no-gating",
+            GatingPolicy::Aggressive => "aggressive",
+            GatingPolicy::Conservative { .. } => "conservative",
+            GatingPolicy::Drowsy { .. } => "drowsy",
+        }
+    }
+
+    /// Fraction of nominal leakage an idle interval still pays when this
+    /// policy acts on it (0.0 = fully gated, 1.0 = no action).
+    pub fn idle_leak_factor(&self) -> f64 {
+        match *self {
+            GatingPolicy::Drowsy { retention_factor } => retention_factor,
+            GatingPolicy::None => 1.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Break-even idle duration in cycles for this SRAM organization:
+    /// gate iff `P_leak * dt > 2 * E_switch`, i.e.
+    /// `dt > 2 * E_switch / P_leak` (plus wake-up latency, which must be
+    /// hidden inside the interval).
+    pub fn break_even_cycles(ch: &SramCharacterization, freq_ghz: f64) -> u64 {
+        if ch.p_leak_bank_w <= 0.0 {
+            return u64::MAX;
+        }
+        let seconds = 2.0 * ch.e_switch_j / ch.p_leak_bank_w;
+        let cycles = seconds * freq_ghz * 1e9;
+        (cycles.ceil() as u64).saturating_add(ch.wake_cycles)
+    }
+
+    /// Should an idle interval of `dt` cycles be gated?
+    pub fn should_gate(&self, dt: u64, ch: &SramCharacterization, freq_ghz: f64) -> bool {
+        let be = Self::break_even_cycles(ch, freq_ghz);
+        match *self {
+            GatingPolicy::None => false,
+            GatingPolicy::Aggressive => dt > be,
+            GatingPolicy::Conservative { min_idle_factor } => {
+                dt as f64 > be as f64 * min_idle_factor
+            }
+            // Drowsy entry/exit is ~free: act on any idle interval
+            // longer than its one-cycle wake-up.
+            GatingPolicy::Drowsy { .. } => dt > 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cacti::CactiModel;
+    use crate::util::MIB;
+
+    fn ch() -> SramCharacterization {
+        CactiModel::default().characterize(64 * MIB, 8)
+    }
+
+    #[test]
+    fn break_even_is_finite_and_sane() {
+        let be = GatingPolicy::break_even_cycles(&ch(), 1.0);
+        // ~2*1.6uJ / 2.2W = ~1.5us -> ~1500 cycles + wake.
+        assert!(be > 100 && be < 100_000, "be={be}");
+    }
+
+    #[test]
+    fn none_never_gates() {
+        assert!(!GatingPolicy::None.should_gate(u64::MAX / 2, &ch(), 1.0));
+    }
+
+    #[test]
+    fn aggressive_gates_past_break_even() {
+        let be = GatingPolicy::break_even_cycles(&ch(), 1.0);
+        assert!(!GatingPolicy::Aggressive.should_gate(be, &ch(), 1.0));
+        assert!(GatingPolicy::Aggressive.should_gate(be + 1, &ch(), 1.0));
+    }
+
+    #[test]
+    fn conservative_requires_longer_idles() {
+        let be = GatingPolicy::break_even_cycles(&ch(), 1.0);
+        let cons = GatingPolicy::conservative();
+        assert!(!cons.should_gate(be * 2, &ch(), 1.0));
+        assert!(cons.should_gate(be * 5, &ch(), 1.0));
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(GatingPolicy::None.label(), "no-gating");
+        assert_eq!(GatingPolicy::Aggressive.label(), "aggressive");
+        assert_eq!(GatingPolicy::conservative().label(), "conservative");
+        assert_eq!(GatingPolicy::drowsy().label(), "drowsy");
+    }
+
+    #[test]
+    fn drowsy_acts_on_short_intervals_but_retains_leakage() {
+        let d = GatingPolicy::drowsy();
+        let be = GatingPolicy::break_even_cycles(&ch(), 1.0);
+        assert!(d.should_gate(be / 10, &ch(), 1.0), "no break-even gate");
+        assert!((d.idle_leak_factor() - 0.25).abs() < 1e-12);
+        assert_eq!(GatingPolicy::Aggressive.idle_leak_factor(), 0.0);
+        assert_eq!(GatingPolicy::None.idle_leak_factor(), 1.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Stage-II sweep harness: evaluate the full (capacity x banks x alpha x
+//! policy) grid against a Stage-I trace — the generator behind Table II,
+//! Table III, Fig. 8 and Fig. 9.
+
+use crate::cacti::CactiModel;
+use crate::trace::{AccessStats, OccupancyTrace};
+
+use super::energy::{evaluate, BankingEval};
+use super::policy::GatingPolicy;
+
+/// Sweep grid specification. The paper's §IV-C setting is
+/// `capacities = {peak..128 MiB step 16}`, `banks = {1,2,4,8,16,32}`,
+/// `alpha = 0.9`, conservative-vs-aggressive policies.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub capacities: Vec<u64>,
+    pub banks: Vec<u32>,
+    pub alphas: Vec<f64>,
+    pub policies: Vec<GatingPolicy>,
+}
+
+impl SweepSpec {
+    /// The paper's Table II grid for a workload with the given minimum
+    /// feasible capacity (16 MiB steps up to 128 MiB).
+    pub fn paper_grid(min_capacity: u64) -> Self {
+        use crate::util::MIB;
+        let mut capacities = Vec::new();
+        let mut c = min_capacity.div_ceil(16 * MIB) * 16 * MIB;
+        while c <= 128 * MIB {
+            capacities.push(c);
+            c += 16 * MIB;
+        }
+        Self {
+            capacities,
+            banks: vec![1, 2, 4, 8, 16, 32],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        }
+    }
+
+    pub fn points(&self) -> usize {
+        self.capacities.len() * self.banks.len() * self.alphas.len() * self.policies.len()
+    }
+}
+
+/// One grid point with its evaluation and the B=1 reference at the same
+/// capacity/alpha/policy (for the paper's ΔE/ΔA columns).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub eval: BankingEval,
+    /// Energy of the unbanked (B=1, ungated) reference at this capacity.
+    pub base_e_j: f64,
+    pub base_area_mm2: f64,
+}
+
+impl SweepPoint {
+    pub fn delta_e_pct(&self) -> f64 {
+        (self.eval.e_total_j() - self.base_e_j) / self.base_e_j * 100.0
+    }
+
+    pub fn delta_a_pct(&self) -> f64 {
+        (self.eval.area_mm2 - self.base_area_mm2) / self.base_area_mm2 * 100.0
+    }
+}
+
+/// Run the sweep. The trace is capacity-agnostic (occupancy depends on
+/// the schedule, not the candidate banking), exactly the decoupling the
+/// paper's two-stage design exploits. Candidates whose capacity is below
+/// the trace's peak needed bytes are skipped (infeasible).
+pub fn sweep(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    spec: &SweepSpec,
+    freq_ghz: f64,
+) -> Vec<SweepPoint> {
+    let peak = trace.peak_needed();
+    let mut out = Vec::with_capacity(spec.points());
+    for &cap in &spec.capacities {
+        if cap < peak {
+            continue; // infeasible: schedule would change (write-backs)
+        }
+        for &alpha in &spec.alphas {
+            for &policy in &spec.policies {
+                // B=1 ungated reference for ΔE/ΔA (paper Table II).
+                let base = evaluate(
+                    cacti,
+                    trace,
+                    stats,
+                    cap,
+                    1,
+                    alpha,
+                    GatingPolicy::None,
+                    freq_ghz,
+                );
+                let base_e = base.e_total_j();
+                let base_a = base.area_mm2;
+                for &banks in &spec.banks {
+                    let eval = if banks == 1 {
+                        base.clone()
+                    } else {
+                        evaluate(cacti, trace, stats, cap, banks, alpha, policy, freq_ghz)
+                    };
+                    out.push(SweepPoint {
+                        eval,
+                        base_e_j: base_e,
+                        base_area_mm2: base_a,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    fn synth_trace(cap: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", cap);
+        let mut t = 0;
+        while t < 100_000_000 {
+            tr.record(t, 35 * MIB, 0);
+            tr.record(t + 400_000, 8 * MIB, 0);
+            t += 800_000;
+        }
+        tr.finalize(100_000_000);
+        tr
+    }
+
+    fn stats() -> AccessStats {
+        AccessStats {
+            reads: 50_000_000,
+            writes: 20_000_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn paper_grid_shape() {
+        let spec = SweepSpec::paper_grid(48 * MIB);
+        assert_eq!(
+            spec.capacities,
+            vec![48, 64, 80, 96, 112, 128]
+                .into_iter()
+                .map(|c| c * MIB)
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(spec.banks, vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(spec.points(), 36);
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_references_b1() {
+        let tr = synth_trace(128 * MIB);
+        let pts = sweep(
+            &CactiModel::default(),
+            &tr,
+            &stats(),
+            &SweepSpec::paper_grid(48 * MIB),
+            1.0,
+        );
+        assert_eq!(pts.len(), 36);
+        for p in &pts {
+            if p.eval.banks == 1 {
+                assert!((p.delta_e_pct()).abs() < 1e-9);
+                assert!((p.delta_a_pct()).abs() < 1e-9);
+            }
+        }
+        // The Table II qualitative claim: at every capacity the best bank
+        // count gives a substantial reduction, and it is > 1 bank.
+        for &cap in &[48 * MIB, 128 * MIB] {
+            let best = pts
+                .iter()
+                .filter(|p| p.eval.capacity == cap)
+                .min_by(|a, b| a.eval.e_total_j().total_cmp(&b.eval.e_total_j()))
+                .unwrap();
+            assert!(best.eval.banks >= 4, "best banks at {cap}: {}", best.eval.banks);
+            assert!(best.delta_e_pct() < -20.0, "ΔE={}", best.delta_e_pct());
+        }
+    }
+
+    #[test]
+    fn infeasible_capacities_skipped() {
+        let tr = synth_trace(128 * MIB); // peak 35 MiB
+        let spec = SweepSpec {
+            capacities: vec![16 * MIB, 64 * MIB],
+            banks: vec![1, 4],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        assert!(pts.iter().all(|p| p.eval.capacity == 64 * MIB));
+    }
+
+    #[test]
+    fn area_monotone_in_banks_at_fixed_capacity() {
+        let tr = synth_trace(128 * MIB);
+        let pts = sweep(
+            &CactiModel::default(),
+            &tr,
+            &stats(),
+            &SweepSpec::paper_grid(64 * MIB),
+            1.0,
+        );
+        for w in pts
+            .iter()
+            .filter(|p| p.eval.capacity == 64 * MIB)
+            .collect::<Vec<_>>()
+            .windows(2)
+        {
+            assert!(w[1].eval.area_mm2 >= w[0].eval.area_mm2);
+        }
+    }
+}

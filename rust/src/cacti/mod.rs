@@ -1,0 +1,10 @@
+//! CACTI-style analytical SRAM characterization (45 nm itrs-hp),
+//! calibrated against the paper's CACTI 7 outputs. Supplies per-access
+//! energies, per-bank leakage, transition costs, area, and latency to
+//! Stage II and the Stage-I latency model.
+
+pub mod model;
+pub mod tech;
+
+pub use model::{CactiModel, SramCharacterization};
+pub use tech::TechParams;

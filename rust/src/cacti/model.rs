@@ -1,0 +1,183 @@
+//! CACTI-shaped analytical SRAM characterization.
+//!
+//! For a banked SRAM of total capacity `C` split into `B` equal banks,
+//! produces the quantities Stage II consumes (paper §III-B.1): per-access
+//! read/write energy, per-bank leakage power, bank sleep-transition
+//! energy, total area, and access latency. Functional forms follow
+//! CACTI's structure (bitline energy grows with per-bank capacity,
+//! H-tree routing with bank count, leakage with total cells); the
+//! coefficients are calibrated against the paper's CACTI 7 numbers.
+
+use crate::util::MIB;
+
+use super::tech::TechParams;
+
+/// Characterization of one (capacity, banks) SRAM organization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramCharacterization {
+    pub capacity: u64,
+    pub banks: u32,
+    /// Energy per read access (one interface word), joules.
+    pub e_read_j: f64,
+    /// Energy per write access, joules.
+    pub e_write_j: f64,
+    /// Leakage power of ONE bank, watts.
+    pub p_leak_bank_w: f64,
+    /// Energy of one on<->off bank transition, joules.
+    pub e_switch_j: f64,
+    /// Wake-up latency, cycles.
+    pub wake_cycles: u64,
+    /// Total area, mm^2.
+    pub area_mm2: f64,
+    /// Access latency, cycles.
+    pub latency_cycles: u64,
+}
+
+impl SramCharacterization {
+    /// Leakage power with all banks on, watts.
+    pub fn p_leak_total_w(&self) -> f64 {
+        self.p_leak_bank_w * self.banks as f64
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct CactiModel {
+    pub tech: TechParams,
+}
+
+impl CactiModel {
+    pub fn new(tech: TechParams) -> Self {
+        Self { tech }
+    }
+
+    /// Characterize a (C, B) organization. `banks` must be a power of two
+    /// >= 1 (CACTI's constraint, and the paper's sweep set).
+    pub fn characterize(&self, capacity: u64, banks: u32) -> SramCharacterization {
+        assert!(banks >= 1 && banks.is_power_of_two(), "banks={banks}");
+        assert!(capacity > 0);
+        let t = &self.tech;
+        let c_mib = capacity as f64 / MIB as f64;
+        let bank_mib = c_mib / banks as f64;
+
+        let e_read_nj =
+            t.e0_nj + t.kc_nj_per_mib * bank_mib + t.kb_nj * (banks as f64).sqrt();
+        // CACTI writes cost slightly more than reads (full bitline swing).
+        let e_write_nj = e_read_nj * 1.1;
+
+        let p_leak_bank = t.pm_w_per_mib * bank_mib + t.pb_w;
+        let e_switch_nj = t.esw_nj_per_mib * bank_mib;
+
+        let area = t.a0_mm2
+            + t.am_mm2_per_mib * c_mib
+            + t.ab_mm2 * c_mib * (banks as f64).log2();
+
+        let latency = (t.l0_cycles
+            + t.l1_cycles_per_sqrt_mib * bank_mib.sqrt()
+            + t.lb_cycles * (banks as f64).sqrt())
+        .max(1.0)
+        .round() as u64;
+
+        SramCharacterization {
+            capacity,
+            banks,
+            e_read_j: e_read_nj * 1e-9,
+            e_write_j: e_write_nj * 1e-9,
+            p_leak_bank_w: p_leak_bank,
+            e_switch_j: e_switch_nj * 1e-9,
+            wake_cycles: t.wake_cycles,
+            area_mm2: area,
+            latency_cycles: latency,
+        }
+    }
+
+    /// Unbanked access latency at a capacity — the Stage-I memory
+    /// latency model (paper: 32 ns @ 128 MiB, 22 ns @ 64 MiB).
+    pub fn latency_cycles(&self, capacity: u64) -> u64 {
+        self.characterize(capacity, 1).latency_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn model() -> CactiModel {
+        CactiModel::default()
+    }
+
+    #[test]
+    fn paper_latencies() {
+        // §IV-A: 32 ns @ 128 MiB; §IV-B: 22 ns @ 64 MiB.
+        let m = model();
+        assert_eq!(m.latency_cycles(128 * MIB), 32);
+        assert_eq!(m.latency_cycles(64 * MIB), 22);
+    }
+
+    #[test]
+    fn smaller_banks_cheaper_access() {
+        let m = model();
+        let b1 = m.characterize(128 * MIB, 1);
+        let b8 = m.characterize(128 * MIB, 8);
+        assert!(b8.e_read_j < b1.e_read_j);
+        // But routing overhead eventually pushes cost back up.
+        let b256 = m.characterize(128 * MIB, 256);
+        assert!(b256.e_read_j > b8.e_read_j);
+    }
+
+    #[test]
+    fn total_leakage_grows_mildly_with_banks() {
+        let m = model();
+        let b1 = m.characterize(128 * MIB, 1);
+        let b16 = m.characterize(128 * MIB, 16);
+        // All-on leakage: banking adds peripheral overhead only.
+        assert!(b16.p_leak_total_w() > b1.p_leak_total_w());
+        assert!(b16.p_leak_total_w() < b1.p_leak_total_w() * 1.15);
+        // One bank of 16 leaks about 1/16th of the array.
+        assert!(b16.p_leak_bank_w < b1.p_leak_bank_w / 8.0);
+    }
+
+    #[test]
+    fn area_grows_with_capacity_and_banks() {
+        let m = model();
+        let a48 = m.characterize(48 * MIB, 1).area_mm2;
+        let a128 = m.characterize(128 * MIB, 1).area_mm2;
+        assert!(a128 > a48 * 2.0);
+        let a128b32 = m.characterize(128 * MIB, 32).area_mm2;
+        assert!(a128b32 > a128);
+        // Paper Table II: B=32 adds ~16% over B=1 at 128 MiB.
+        let overhead = a128b32 / a128;
+        assert!(overhead > 1.05 && overhead < 1.35, "overhead={overhead}");
+    }
+
+    #[test]
+    fn writes_cost_more_than_reads() {
+        let c = model().characterize(64 * MIB, 4);
+        assert!(c.e_write_j > c.e_read_j);
+    }
+
+    #[test]
+    #[should_panic(expected = "banks=3")]
+    fn non_power_of_two_rejected() {
+        model().characterize(64 * MIB, 3);
+    }
+
+    #[test]
+    fn prop_characterization_positive_and_monotone() {
+        check("cacti-positive", 100, |rng| {
+            let m = model();
+            let c = rng.range(1, 256) * MIB;
+            let b = 1u32 << rng.below(7);
+            let ch = m.characterize(c, b);
+            assert!(ch.e_read_j > 0.0);
+            assert!(ch.p_leak_bank_w > 0.0);
+            assert!(ch.area_mm2 > 0.0);
+            assert!(ch.latency_cycles >= 1);
+            assert!(ch.e_switch_j >= 0.0);
+            // Doubling capacity at fixed banks increases area & leakage.
+            let ch2 = m.characterize(2 * c, b);
+            assert!(ch2.area_mm2 > ch.area_mm2);
+            assert!(ch2.p_leak_bank_w > ch.p_leak_bank_w);
+        });
+    }
+}

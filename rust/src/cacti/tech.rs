@@ -1,0 +1,98 @@
+//! 45 nm itrs-hp technology constants for the analytical SRAM model.
+//!
+//! The paper characterizes SRAM candidates with CACTI 7 at 45 nm using
+//! the `itrs-hp` (high-performance, high-leakage) device model. CACTI
+//! itself is not available in this environment, so `model.rs` implements
+//! a CACTI-shaped analytical model whose coefficients are *calibrated
+//! against the paper's own Table II / Table III outputs* (which are
+//! CACTI numbers) — see DESIGN.md's substitution table and
+//! EXPERIMENTS.md §Calibration for the fit.
+
+/// Calibratable coefficient set. Defaults reproduce the paper's Table II
+/// trends under the Stage-I access counts of this repository's simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TechParams {
+    // --- dynamic access energy: E_acc(C,B) = e0 + kc*(C/B) + kb*sqrt(B) [nJ]
+    /// Base energy per (64 B word) access, nJ.
+    pub e0_nj: f64,
+    /// Wordline/bitline scaling with per-bank capacity, nJ per MiB.
+    pub kc_nj_per_mib: f64,
+    /// Inter-bank H-tree routing overhead, nJ per sqrt(bank).
+    pub kb_nj: f64,
+
+    // --- leakage: P_bank(C,B) = pm*(C/B) + pb [W]
+    /// Cell-array leakage per MiB (itrs-hp is leakage-dominated).
+    pub pm_w_per_mib: f64,
+    /// Per-bank peripheral leakage, W.
+    pub pb_w: f64,
+
+    // --- power gating
+    /// Sleep-transistor transition energy per bank, nJ per MiB of bank.
+    pub esw_nj_per_mib: f64,
+    /// Wake-up latency per transition, cycles (ns at 1 GHz).
+    pub wake_cycles: u64,
+
+    // --- area: A(C,B) = a0 + am*C + ab*C*log2(B) [mm^2]
+    pub a0_mm2: f64,
+    pub am_mm2_per_mib: f64,
+    /// Banking area overhead per MiB per log2(bank) (H-tree + periphery).
+    pub ab_mm2: f64,
+
+    // --- access latency: L(C,B) = max(1, l0 + l1*sqrt(C/B) + lb*sqrt(B)) [cycles]
+    pub l0_cycles: f64,
+    pub l1_cycles_per_sqrt_mib: f64,
+    pub lb_cycles: f64,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        Self::itrs_hp_45nm()
+    }
+}
+
+impl TechParams {
+    /// Calibrated 45 nm itrs-hp parameters (EXPERIMENTS.md §Calibration).
+    pub fn itrs_hp_45nm() -> Self {
+        // Fitted against the paper's Table II (CACTI 7, 45 nm itrs-hp)
+        // using this simulator's Stage-I access counts and run times —
+        // derivation in EXPERIMENTS.md §Calibration. The DS-R1D B=1
+        // column reproduces to <1%:
+        //   E(C) = N_eff*(e0 + kc*C) + pm*C*T
+        //   DS: 913e6 accesses, T=0.208 s -> e0=2.7 nJ, kc=0.054 nJ/MiB,
+        //   pm=0.792 W/MiB (leakage-dominated, as itrs-hp must be).
+        Self {
+            e0_nj: 2.7,
+            kc_nj_per_mib: 0.054,
+            kb_nj: 1.65,
+            pm_w_per_mib: 0.792,
+            pb_w: 0.05,
+            esw_nj_per_mib: 200.0,
+            wake_cycles: 100,
+            a0_mm2: 49.06,
+            am_mm2_per_mib: 16.78,
+            ab_mm2: 0.5, // area overhead: +ab * C_MiB * log2(B)
+            l0_cycles: -2.14,
+            l1_cycles_per_sqrt_mib: 3.018,
+            lb_cycles: 0.4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_itrs_hp() {
+        assert_eq!(TechParams::default(), TechParams::itrs_hp_45nm());
+    }
+
+    #[test]
+    fn leakage_dominates_as_itrs_hp_should() {
+        // At 128 MiB the leakage power must be tens of watts (HP devices)
+        // — this is what makes power gating worth 50-80% (Table II).
+        let p = TechParams::itrs_hp_45nm();
+        let total_leak = p.pm_w_per_mib * 128.0 + p.pb_w;
+        assert!(total_leak > 20.0 && total_leak < 150.0, "{total_leak} W");
+    }
+}

@@ -1,0 +1,134 @@
+//! Experiment-file loader: maps a `configs/*.toml` file onto a model
+//! preset, an accelerator configuration (preset + overrides), and a
+//! Stage-II sweep spec — the launcher-facing config surface.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::banking::{GatingPolicy, SweepSpec};
+use crate::workload::{preset, ModelPreset};
+
+use super::parse::{parse_bytes, Config, Value};
+use super::{named, AccelConfig};
+
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub model: ModelPreset,
+    pub accel: AccelConfig,
+    pub sweep: SweepSpec,
+}
+
+pub fn load(path: &Path) -> Result<Experiment> {
+    from_config(&Config::load(path)?)
+}
+
+pub fn from_config(cfg: &Config) -> Result<Experiment> {
+    let model_name = cfg.str("workload")?;
+    let model = preset(model_name)
+        .ok_or_else(|| anyhow!("unknown workload preset `{model_name}`"))?;
+
+    let accel_name = cfg.str_or("accelerator.preset", "baseline");
+    let mut accel =
+        named(accel_name).ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+    if let Ok(cap) = cfg.bytes("accelerator.sram_capacity") {
+        accel.on_chip[0].capacity = cap;
+    }
+    if let Ok(p) = cfg.u64("accelerator.sram_ports") {
+        accel.on_chip[0].ports = p as u32;
+    }
+    if let Ok(l) = cfg.u64("accelerator.sram_latency_ns") {
+        accel.on_chip[0].latency_cycles = l;
+    }
+    if let Ok(cap) = cfg.bytes("accelerator.dram_capacity") {
+        accel.dram.capacity = cap;
+    }
+    if let Ok(p) = cfg.u64("accelerator.dram_ports") {
+        accel.dram.ports = p as u32;
+    }
+    if let Ok(l) = cfg.u64("accelerator.dram_latency_ns") {
+        accel.dram.latency_cycles = l;
+    }
+    if let Ok(s) = cfg.u64("compute.subops") {
+        accel.sched.subops = s as u32;
+    }
+    accel.validate()?;
+
+    let banks = cfg
+        .u64_array("stage2.banks")
+        .unwrap_or_else(|_| vec![1, 2, 4, 8, 16, 32])
+        .into_iter()
+        .map(|b| b as u32)
+        .collect();
+    let capacities = match cfg.get("stage2.capacities") {
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .ok_or_else(|| anyhow!("capacities must be size strings"))
+                    .and_then(parse_bytes)
+            })
+            .collect::<Result<Vec<_>>>()?,
+        _ => vec![accel.on_chip[0].capacity],
+    };
+    let policy = match cfg.str_or("stage2.policy", "aggressive") {
+        "aggressive" => GatingPolicy::Aggressive,
+        "conservative" => GatingPolicy::conservative(),
+        "none" => GatingPolicy::None,
+        other => anyhow::bail!("unknown gating policy `{other}`"),
+    };
+    Ok(Experiment {
+        model,
+        accel,
+        sweep: SweepSpec {
+            capacities,
+            banks,
+            alphas: vec![cfg.f64_or("stage2.alpha", 0.9)],
+            policies: vec![policy],
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    #[test]
+    fn loads_repo_config_files() {
+        for name in ["configs/baseline.toml", "configs/multilevel.toml"] {
+            let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(name);
+            let e = load(&path).unwrap_or_else(|err| panic!("{name}: {err:#}"));
+            assert!(!e.sweep.banks.is_empty());
+            assert!(!e.sweep.capacities.is_empty());
+            e.accel.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::parse(
+            r#"
+workload = "tiny-gqa"
+[accelerator]
+preset = "tiny"
+sram_capacity = "8MiB"
+[stage2]
+alpha = 0.75
+banks = [1, 2]
+"#,
+        )
+        .unwrap();
+        let e = from_config(&cfg).unwrap();
+        assert_eq!(e.model.name, "tiny-gqa");
+        assert_eq!(e.accel.on_chip[0].capacity, 8 * MIB);
+        assert_eq!(e.sweep.alphas, vec![0.75]);
+        assert_eq!(e.sweep.banks, vec![1, 2]);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let cfg = Config::parse("workload = \"nope\"").unwrap();
+        assert!(from_config(&cfg).is_err());
+    }
+}

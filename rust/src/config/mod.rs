@@ -1,0 +1,218 @@
+//! Accelerator / simulation configuration.
+//!
+//! Mirrors the paper's §IV-A experimental setup: four 128x128 systolic
+//! arrays at 1 GHz (one 8-bit MAC per PE per cycle), per-array row/column
+//! FIFOs (128 lanes x 256 entries), a shared on-chip SRAM (128 MiB,
+//! 512-bit interface, 4 ports, 32 ns) and off-chip DRAM (2 GiB, 2 ports,
+//! 80 ns). `subops = 4` decomposes large matmuls across the arrays.
+//!
+//! Configs load from a small TOML-subset file format (`parse` module) or
+//! from the named presets here.
+
+pub mod experiment;
+pub mod parse;
+pub mod presets;
+
+pub use experiment::{load as load_experiment, Experiment};
+pub use presets::{baseline, multilevel, named, tiny};
+
+/// Systolic-array compute subsystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SaConfig {
+    /// PE rows per array (128 in the paper's template).
+    pub rows: u32,
+    /// PE columns per array.
+    pub cols: u32,
+    /// Number of identical arrays (4).
+    pub count: u32,
+    /// Clock in GHz (1.0); cycles below are in this clock domain.
+    pub freq_ghz: f64,
+}
+
+impl SaConfig {
+    /// Peak MAC throughput across all arrays, MAC/s.
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.rows as f64 * self.cols as f64 * self.count as f64 * self.freq_ghz * 1e9
+    }
+
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_ghz * 1e9)
+    }
+}
+
+/// Row/column FIFO stacks feeding each array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FifoConfig {
+    /// Lanes per FIFO (matches the array edge: 128).
+    pub lanes: u32,
+    /// Depth in elements per lane (256).
+    pub depth: u32,
+}
+
+/// One memory component (shared SRAM, dedicated memory, or DRAM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemConfig {
+    pub name: String,
+    pub capacity: u64,
+    /// Physical ports; each serves one transfer at a time.
+    pub ports: u32,
+    /// Interface width in bytes per cycle per port (512-bit = 64 B).
+    pub bytes_per_cycle: u32,
+    /// Access latency in cycles (1 GHz: 1 cycle = 1 ns).
+    pub latency_cycles: u64,
+}
+
+impl MemConfig {
+    /// Aggregate bandwidth in bytes/cycle.
+    pub fn bandwidth(&self) -> u64 {
+        self.ports as u64 * self.bytes_per_cycle as u64
+    }
+}
+
+/// Scheduler behavior (TransInferSim-style in-order issue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    /// Sub-operation decomposition factor (paper: subops = 4).
+    pub subops: u32,
+    /// In-order issue window, in ops: an op may only be dispatched when
+    /// fewer than `issue_window` graph-order predecessors are still
+    /// incomplete. Bounds how far execution runs ahead (and therefore
+    /// how many transient tensors pile up).
+    pub issue_window: usize,
+    /// Issue window in schedule *stages* (layers for prefill,
+    /// token-layers for decode): an op may issue only while its stage is
+    /// within `window_stages` of the earliest incomplete op's stage.
+    /// This is TransInferSim's layer-synchronized plan semantics and the
+    /// knob that bounds per-layer transient pile-up model-independently.
+    pub window_stages: u32,
+    /// Weight prefetch lookahead, in ops ahead of the issue watermark.
+    pub weight_prefetch_ops: usize,
+    /// Bandwidth of the memory-path engine executing softmax / norm /
+    /// element-wise ops (bytes per cycle). These ops run on a dedicated
+    /// near-memory unit rather than reserving the SRAM data ports, so
+    /// their throughput (vs. matmul issue rate) sets how fast attention
+    /// transients retire — the emergent mechanism behind the MHA/GQA
+    /// occupancy gap (EXPERIMENTS.md §Calibration).
+    pub mem_path_bytes_per_cycle: u32,
+    /// When true, weights are fetched into the shared SRAM once and stay
+    /// resident (models small enough to fit on chip — the Fig. 1 matched
+    /// pair). When false (default), the weight-stationary arrays stream
+    /// weights DRAM -> PE registers and SRAM never holds them.
+    pub weight_resident: bool,
+}
+
+/// Which memory each of the `SaConfig::count` arrays streams from, for
+/// multi-level hierarchies (Fig. 10). `mem_of_sa[i]` indexes
+/// `AccelConfig::on_chip`; single-memory setups use all zeros.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub mem_of_sa: Vec<u8>,
+}
+
+/// Full accelerator configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    pub name: String,
+    pub sa: SaConfig,
+    pub fifo: FifoConfig,
+    /// On-chip memories; index 0 is the shared SRAM (DRAM-facing).
+    pub on_chip: Vec<MemConfig>,
+    pub dram: MemConfig,
+    pub sched: SchedConfig,
+    pub topology: Topology,
+}
+
+impl AccelConfig {
+    pub fn shared_sram(&self) -> &MemConfig {
+        &self.on_chip[0]
+    }
+
+    /// Validate internal consistency (fail loudly before simulating).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.sa.count > 0 && self.sa.rows > 0 && self.sa.cols > 0);
+        ensure!(!self.on_chip.is_empty(), "need at least the shared SRAM");
+        ensure!(
+            self.topology.mem_of_sa.len() == self.sa.count as usize,
+            "topology must map every systolic array to a memory"
+        );
+        for &m in &self.topology.mem_of_sa {
+            ensure!(
+                (m as usize) < self.on_chip.len(),
+                "SA mapped to unknown memory {m}"
+            );
+        }
+        for m in self.on_chip.iter().chain(std::iter::once(&self.dram)) {
+            ensure!(m.capacity > 0 && m.ports > 0 && m.bytes_per_cycle > 0);
+        }
+        ensure!(self.sched.subops >= 1);
+        ensure!(self.sched.issue_window >= 1);
+        Ok(())
+    }
+
+    /// Clone with a different shared-SRAM capacity (+latency), for the
+    /// Stage-I sizing loop and the Stage-II capacity sweeps.
+    pub fn with_sram_capacity(&self, capacity: u64, latency_cycles: u64) -> Self {
+        let mut c = self.clone();
+        c.on_chip[0].capacity = capacity;
+        c.on_chip[0].latency_cycles = latency_cycles;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_paper_setup() {
+        let c = baseline();
+        c.validate().unwrap();
+        assert_eq!(c.sa.count, 4);
+        assert_eq!(c.sa.rows, 128);
+        // Peak 65.5 TMAC/s (paper §IV-A).
+        assert!((c.sa.peak_macs_per_s() / 1e12 - 65.536).abs() < 0.01);
+        assert_eq!(c.shared_sram().capacity, 128 * crate::util::MIB);
+        assert_eq!(c.shared_sram().latency_cycles, 32);
+        assert_eq!(c.shared_sram().ports, 4);
+        assert_eq!(c.shared_sram().bytes_per_cycle, 64);
+        assert_eq!(c.dram.capacity, 2 * crate::util::GIB);
+        assert_eq!(c.dram.latency_cycles, 80);
+        assert_eq!(c.sched.subops, 4);
+    }
+
+    #[test]
+    fn multilevel_has_three_memories() {
+        let c = multilevel();
+        c.validate().unwrap();
+        assert_eq!(c.on_chip.len(), 3);
+        // Two SAs on DM1, two on DM2 (Fig. 10).
+        assert_eq!(c.topology.mem_of_sa, vec![1, 1, 2, 2]);
+        for m in &c.on_chip {
+            assert_eq!(m.capacity, 64 * crate::util::MIB);
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_topology() {
+        let mut c = baseline();
+        c.topology.mem_of_sa = vec![0, 0, 9, 0];
+        assert!(c.validate().is_err());
+        c.topology.mem_of_sa = vec![0];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn with_sram_capacity_swaps_only_shared() {
+        let c = baseline().with_sram_capacity(64 * crate::util::MIB, 22);
+        assert_eq!(c.shared_sram().capacity, 64 * crate::util::MIB);
+        assert_eq!(c.shared_sram().latency_cycles, 22);
+        assert_eq!(c.dram, baseline().dram);
+    }
+
+    #[test]
+    fn cycles_to_seconds() {
+        let c = baseline();
+        assert!((c.sa.cycles_to_seconds(1_000_000_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,346 @@
+//! Minimal TOML-subset parser for experiment config files (no `toml`
+//! crate offline).
+//!
+//! Supported grammar (sufficient for `configs/*.toml`):
+//!
+//! ```toml
+//! # comment
+//! [section]            # or [section.sub]
+//! key = 42             # integer
+//! cap = "128MiB"       # sizes as quoted strings with units
+//! ratio = 0.9          # float
+//! name = "gpt2-xl"     # string
+//! flag = true          # bool
+//! banks = [1, 2, 4]    # arrays of ints/floats/strings
+//! ```
+//!
+//! Values keep their section-qualified key (`section.key`). Lookup
+//! helpers convert with descriptive errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::{GIB, KIB, MIB};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: flat map of `section.key` -> value.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value for `{key}`", lineno + 1))?;
+            if values.insert(full_key.clone(), parsed).is_some() {
+                bail!("line {}: duplicate key `{full_key}`", lineno + 1);
+            }
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("config: missing string `{key}`"))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64> {
+        let v = self
+            .get(key)
+            .and_then(Value::as_i64)
+            .ok_or_else(|| anyhow!("config: missing integer `{key}`"))?;
+        u64::try_from(v).map_err(|_| anyhow!("config: `{key}` must be >= 0"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow!("config: missing number `{key}`"))
+    }
+
+    /// Byte size: integer, or string with KiB/MiB/GiB suffix.
+    pub fn bytes(&self, key: &str) -> Result<u64> {
+        match self.get(key) {
+            Some(Value::Int(v)) if *v >= 0 => Ok(*v as u64),
+            Some(Value::Str(s)) => parse_bytes(s),
+            _ => bail!("config: missing byte size `{key}`"),
+        }
+    }
+
+    pub fn u64_array(&self, key: &str) -> Result<Vec<u64>> {
+        match self.get(key) {
+            Some(Value::Array(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .and_then(|i| u64::try_from(i).ok())
+                        .ok_or_else(|| anyhow!("config: `{key}` must be unsigned ints"))
+                })
+                .collect(),
+            _ => bail!("config: missing array `{key}`"),
+        }
+    }
+
+    /// Keys with defaults.
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.u64(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.f64(key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+}
+
+/// Parse sizes like "128MiB", "2 GiB", "512KiB", "64".
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("GiB") {
+        (p, GIB)
+    } else if let Some(p) = s.strip_suffix("MiB") {
+        (p, MIB)
+    } else if let Some(p) = s.strip_suffix("KiB") {
+        (p, KIB)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (s, 1)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| anyhow!("bad byte size `{s}`: {e}"))?;
+    if v < 0.0 {
+        bail!("negative byte size `{s}`");
+    }
+    Ok((v * mult as f64).round() as u64)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is preserved.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+/// Split on commas not nested in strings (arrays of strings may contain
+/// commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+workload = "gpt2-xl"       # model preset
+
+[accelerator]
+preset = "baseline"
+sram_capacity = "128MiB"
+ports = 4
+
+[stage2]
+alpha = 0.9
+banks = [1, 2, 4, 8, 16, 32]
+capacities = ["48MiB", "64MiB"]
+gate = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("workload").unwrap(), "gpt2-xl");
+        assert_eq!(c.str("accelerator.preset").unwrap(), "baseline");
+        assert_eq!(c.bytes("accelerator.sram_capacity").unwrap(), 128 * MIB);
+        assert_eq!(c.u64("accelerator.ports").unwrap(), 4);
+        assert!((c.f64("stage2.alpha").unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(
+            c.u64_array("stage2.banks").unwrap(),
+            vec![1, 2, 4, 8, 16, 32]
+        );
+        assert_eq!(c.get("stage2.gate").unwrap(), &Value::Bool(true));
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(parse_bytes("64").unwrap(), 64);
+        assert_eq!(parse_bytes("64B").unwrap(), 64);
+        assert_eq!(parse_bytes("2KiB").unwrap(), 2048);
+        assert_eq!(parse_bytes("1.5 MiB").unwrap(), 3 * MIB / 2);
+        assert_eq!(parse_bytes("2GiB").unwrap(), 2 * GIB);
+        assert!(parse_bytes("-2MiB").is_err());
+        assert!(parse_bytes("xMiB").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = [1,").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let c = Config::parse("k = \"a#b\" # trailing").unwrap();
+        assert_eq!(c.str("k").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.u64_or("missing", 7), 7);
+        assert_eq!(c.str_or("missing", "x"), "x");
+        assert!((c.f64_or("missing", 0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn string_arrays() {
+        let c = Config::parse("caps = [\"48MiB\", \"64MiB\"]").unwrap();
+        if let Some(Value::Array(items)) = c.get("caps") {
+            assert_eq!(items.len(), 2);
+            assert_eq!(items[0].as_str().unwrap(), "48MiB");
+        } else {
+            panic!("expected array");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Named accelerator presets matching the paper's evaluated setups.
+
+use crate::util::{GIB, MIB};
+
+use super::{
+    AccelConfig, FifoConfig, MemConfig, SaConfig, SchedConfig, Topology,
+};
+
+fn sa_default() -> SaConfig {
+    SaConfig {
+        rows: 128,
+        cols: 128,
+        count: 4,
+        freq_ghz: 1.0,
+    }
+}
+
+fn fifo_default() -> FifoConfig {
+    FifoConfig {
+        lanes: 128,
+        depth: 256,
+    }
+}
+
+fn sched_default() -> SchedConfig {
+    SchedConfig {
+        subops: 4,
+        // Calibrated in EXPERIMENTS.md §Calibration: wide enough that a
+        // full MHA attention stage (25 head chains, 3 ops each) can run
+        // ahead, as the paper's GPT-2 XL trace implies.
+        issue_window: 80,
+        window_stages: 1,
+        weight_prefetch_ops: 8,
+        mem_path_bytes_per_cycle: 122,
+        weight_resident: false,
+    }
+}
+
+/// The paper's baseline: single shared 128 MiB SRAM (512-bit, 4 ports,
+/// 32 ns), 2 GiB DRAM (2 ports, 80 ns), 4x 128x128 SAs at 1 GHz.
+pub fn baseline() -> AccelConfig {
+    AccelConfig {
+        name: "baseline-128MiB".into(),
+        sa: sa_default(),
+        fifo: fifo_default(),
+        on_chip: vec![MemConfig {
+            name: "sram".into(),
+            capacity: 128 * MIB,
+            ports: 4,
+            bytes_per_cycle: 64, // 512-bit interface
+            latency_cycles: 32,  // 32 ns at 1 GHz
+        }],
+        dram: MemConfig {
+            name: "dram".into(),
+            capacity: 2 * GIB,
+            ports: 2,
+            bytes_per_cycle: 64,
+            latency_cycles: 80,
+        },
+        sched: sched_default(),
+        topology: Topology {
+            mem_of_sa: vec![0, 0, 0, 0],
+        },
+    }
+}
+
+/// §IV-D multi-level hierarchy: shared SRAM + two dedicated memories
+/// (each attached to a pair of SAs), all 64 MiB. The shared SRAM fetches
+/// from DRAM and backs the dedicated memories (Fig. 10).
+pub fn multilevel() -> AccelConfig {
+    let mem = |name: &str| MemConfig {
+        name: name.into(),
+        capacity: 64 * MIB,
+        ports: 4,
+        bytes_per_cycle: 64,
+        latency_cycles: 22, // CACTI latency at 64 MiB (paper §IV-B)
+    };
+    AccelConfig {
+        name: "multilevel-3x64MiB".into(),
+        sa: sa_default(),
+        fifo: fifo_default(),
+        on_chip: vec![mem("sram"), mem("dm1"), mem("dm2")],
+        dram: baseline().dram,
+        sched: sched_default(),
+        topology: Topology {
+            mem_of_sa: vec![1, 1, 2, 2],
+        },
+    }
+}
+
+/// Scaled-down template for unit/integration tests and the tiny
+/// functional models: one 2x 32x32 SA accelerator with a 4 MiB SRAM.
+pub fn tiny() -> AccelConfig {
+    AccelConfig {
+        name: "tiny-test".into(),
+        sa: SaConfig {
+            rows: 32,
+            cols: 32,
+            count: 2,
+            freq_ghz: 1.0,
+        },
+        fifo: FifoConfig {
+            lanes: 32,
+            depth: 64,
+        },
+        on_chip: vec![MemConfig {
+            name: "sram".into(),
+            capacity: 4 * MIB,
+            ports: 2,
+            bytes_per_cycle: 32,
+            latency_cycles: 8,
+        }],
+        dram: MemConfig {
+            name: "dram".into(),
+            capacity: GIB,
+            ports: 2,
+            bytes_per_cycle: 32,
+            latency_cycles: 40,
+        },
+        sched: SchedConfig {
+            subops: 2,
+            issue_window: 48,
+            window_stages: 1,
+            weight_prefetch_ops: 4,
+            mem_path_bytes_per_cycle: 122,
+            weight_resident: false,
+        },
+        topology: Topology {
+            mem_of_sa: vec![0, 0],
+        },
+    }
+}
+
+/// Preset lookup for the CLI / config files.
+pub fn named(name: &str) -> Option<AccelConfig> {
+    match name {
+        "baseline" | "baseline-128MiB" => Some(baseline()),
+        "multilevel" | "multilevel-3x64MiB" => Some(multilevel()),
+        "tiny" | "tiny-test" => Some(tiny()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_validate() {
+        for p in [baseline(), multilevel(), tiny()] {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn named_lookup() {
+        assert!(named("baseline").is_some());
+        assert!(named("multilevel").is_some());
+        assert!(named("tiny").is_some());
+        assert!(named("xyz").is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Coordinator: the L3 orchestration layer tying Stage I (cycle-level
+//! simulation) to Stage II (banking/power-gating exploration) and the
+//! functional PJRT runtime — the programmatic face of the whole TRAPTI
+//! flow (Fig. 3), used by the CLI, the examples, and the benches.
+
+pub mod experiments;
+
+use anyhow::Result;
+
+use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSpec};
+use crate::cacti::CactiModel;
+use crate::config::AccelConfig;
+use crate::energy::{energy_breakdown, EnergyBreakdown, EnergyParams};
+use crate::memory::{size_memory, SizingResult};
+use crate::sim::{simulate, SimResult};
+use crate::util::MIB;
+use crate::workload::{build_workload, ModelPreset, Workload, WorkloadGraph};
+
+/// Shared context: CACTI characterization + energy coefficients.
+pub struct Coordinator {
+    pub cacti: CactiModel,
+    pub energy: EnergyParams,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self {
+            cacti: CactiModel::default(),
+            energy: EnergyParams::default(),
+        }
+    }
+}
+
+/// Stage-I output bundle for one workload.
+pub struct Stage1 {
+    pub graph: WorkloadGraph,
+    pub result: SimResult,
+    pub energy: EnergyBreakdown,
+}
+
+impl Coordinator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the workload graph and run Stage I on `accel`.
+    pub fn stage1(
+        &self,
+        model: &ModelPreset,
+        workload: Workload,
+        accel: &AccelConfig,
+    ) -> Result<Stage1> {
+        let graph = build_workload(model, workload)?;
+        let result = simulate(&graph, accel)?;
+        let energy = energy_breakdown(&result, accel, &self.cacti, &self.energy);
+        Ok(Stage1 {
+            graph,
+            result,
+            energy,
+        })
+    }
+
+    /// Stage-I sizing loop (16 MiB steps, CACTI latency model).
+    pub fn size(
+        &self,
+        model: &ModelPreset,
+        workload: Workload,
+        accel: &AccelConfig,
+    ) -> Result<SizingResult> {
+        let graph = build_workload(model, workload)?;
+        let cacti = self.cacti.clone();
+        size_memory(&graph, accel, 16 * MIB, &move |cap| {
+            cacti.latency_cycles(cap)
+        })
+    }
+
+    /// Stage-II sweep over a Stage-I result's shared-SRAM trace.
+    pub fn stage2(
+        &self,
+        stage1: &Stage1,
+        spec: &SweepSpec,
+        freq_ghz: f64,
+    ) -> Vec<SweepPoint> {
+        sweep(
+            &self.cacti,
+            stage1.result.sram_trace(),
+            &stage1.result.stats,
+            spec,
+            freq_ghz,
+        )
+    }
+
+    /// Stage-II sweep for every on-chip memory of a multi-level run
+    /// (Table III evaluates shared SRAM, DM1, DM2 independently).
+    pub fn stage2_per_memory(
+        &self,
+        stage1: &Stage1,
+        spec: &SweepSpec,
+        freq_ghz: f64,
+    ) -> Vec<(String, Vec<SweepPoint>)> {
+        stage1
+            .result
+            .traces
+            .iter()
+            .enumerate()
+            .map(|(i, tr)| {
+                (
+                    tr.memory.clone(),
+                    sweep(
+                        &self.cacti,
+                        tr,
+                        &stage1.result.per_mem_stats[i],
+                        spec,
+                        freq_ghz,
+                    ),
+                )
+            })
+            .collect()
+    }
+
+    /// The paper's default Stage-II grid for a trace (16 MiB steps from
+    /// the workload's required capacity up to 128 MiB, B in {1..32},
+    /// alpha = 0.9, aggressive gating).
+    pub fn paper_spec(&self, stage1: &Stage1) -> SweepSpec {
+        SweepSpec::paper_grid(stage1.result.peak_needed())
+    }
+}
+
+/// Convenience re-exports for callers.
+pub use crate::banking::OccupancyBasis;
+pub type Policy = GatingPolicy;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny;
+    use crate::workload::TINY_GQA;
+
+    #[test]
+    fn stage1_then_stage2_composes() {
+        let coord = Coordinator::new();
+        let s1 = coord
+            .stage1(&TINY_GQA, Workload::Prefill { seq: 64 }, &tiny())
+            .unwrap();
+        assert!(s1.result.feasible());
+        assert!(s1.energy.total_j() > 0.0);
+        let spec = SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB],
+            banks: vec![1, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        let points = coord.stage2(&s1, &spec, 1.0);
+        assert!(!points.is_empty());
+        // At toy scale dynamic energy can dominate, so banking need not
+        // win overall — but gating must find idle intervals and reduce
+        // *leakage* energy relative to the unbanked reference.
+        let best = points
+            .iter()
+            .filter(|p| p.eval.banks > 1)
+            .min_by(|a, b| a.eval.e_leak_j.total_cmp(&b.eval.e_leak_j))
+            .unwrap();
+        let base = points.iter().find(|p| p.eval.banks == 1).unwrap();
+        assert!(best.eval.gated_fraction > 0.0, "no idle intervals found");
+        assert!(best.eval.e_leak_j < base.eval.e_leak_j);
+    }
+
+    #[test]
+    fn sizing_composes_with_cacti_latency() {
+        let coord = Coordinator::new();
+        let r = coord
+            .size(&TINY_GQA, Workload::Prefill { seq: 64 }, &tiny())
+            .unwrap();
+        assert!(r.verify.feasible());
+        assert_eq!(r.required_capacity % (16 * MIB), 0);
+    }
+}

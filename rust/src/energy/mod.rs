@@ -1,0 +1,5 @@
+//! Accelerator-level energy accounting (Fig. 7 breakdowns).
+
+pub mod accel;
+
+pub use accel::{energy_breakdown, EnergyBreakdown, EnergyParams};

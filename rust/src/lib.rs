@@ -1,0 +1,33 @@
+//! # TRAPTI — Time-Resolved Analysis for SRAM Banking and Power Gating
+//!
+//! Reproduction of *"TRAPTI: Time-Resolved Analysis for SRAM Banking and
+//! Power Gating Optimization in Embedded Transformer Inference"* as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Stage I** ([`sim`], [`memory`], [`trace`], [`workload`]): a
+//!   TransInferSim-equivalent discrete-event, cycle-level simulator of
+//!   Transformer inference on a systolic-array accelerator, producing
+//!   time-resolved SRAM occupancy traces and access statistics.
+//! * **Stage II** ([`cacti`], [`banking`]): offline exploration of banked
+//!   SRAM organizations and power-gating policies driven by the Stage-I
+//!   trace (Eqs. 1-5 of the paper).
+//! * **Functional layer** ([`runtime`]): AOT-compiled JAX/Pallas decode
+//!   models (HLO text in `artifacts/`) executed through PJRT — Python is
+//!   never on the request path.
+//!
+//! Entry points: the `repro` binary (CLI), [`coordinator::Coordinator`]
+//! (programmatic), and `examples/`.
+
+pub mod analytic;
+pub mod banking;
+pub mod cacti;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod memory;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workload;

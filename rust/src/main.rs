@@ -1,0 +1,474 @@
+//! `repro` — TRAPTI command-line launcher.
+//!
+//! Every paper experiment is a subcommand; reports print to stdout and
+//! are mirrored as text/CSV under `reports/`. No external CLI crate is
+//! available offline, so argument parsing is a small in-tree affair.
+//!
+//! ```text
+//! repro report <exp>      # table1|fig1|fig5|fig6|fig7|fig8|fig9|
+//!                         # table2|table3|sizing|headline|all
+//! repro simulate [--model gpt2-xl] [--accel baseline] [--seq 2048]
+//!                [--decode PROMPT:GEN] [--save-trace FILE]
+//! repro bank --trace FILE [--alpha 0.9] [--banks 1,2,4,8,16,32]
+//!            [--capacities 48,64,... (MiB)]
+//! repro e2e [--model tiny-gqa] [--steps 64]    # functional PJRT decode
+//! repro baseline-compare                        # vs aggregate-DSE flow
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use trapti::analytic;
+use trapti::banking::{evaluate, GatingPolicy};
+use trapti::config::{named, parse::parse_bytes};
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::report::{figures, tables};
+use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
+use trapti::trace::{load_trace, save_trace, trace_to_csv};
+use trapti::util::MIB;
+use trapti::workload::{preset, Workload};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+}
+
+fn reports_dir() -> PathBuf {
+    let dir = PathBuf::from("reports");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+fn emit(name: &str, text: &str) -> Result<()> {
+    println!("{text}");
+    let path = reports_dir().join(format!("{name}.txt"));
+    std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+    eprintln!("[saved {}]", path.display());
+    Ok(())
+}
+
+fn emit_csv(name: &str, csv: &str) -> Result<()> {
+    let path = reports_dir().join(format!("{name}.csv"));
+    std::fs::write(&path, csv)?;
+    eprintln!("[saved {}]", path.display());
+    Ok(())
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "report" => report(&args),
+        "simulate" => simulate_cmd(&args),
+        "bank" => bank_cmd(&args),
+        "e2e" => e2e_cmd(&args),
+        "baseline-compare" => baseline_compare(),
+        "ablate" => ablate(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `repro help`)"),
+    }
+}
+
+const HELP: &str = "\
+TRAPTI reproduction CLI — see README.md.
+
+  repro report <exp>       regenerate a paper table/figure
+                           (table1 fig1 fig5 fig6 fig7 fig8 fig9
+                            table2 table3 sizing headline all)
+  repro simulate           Stage-I run (--model, --accel, --seq,
+                           --decode P:G, --save-trace FILE)
+  repro bank               Stage-II sweep over a saved trace
+                           (--trace FILE --alpha --banks --capacities)
+  repro e2e                functional PJRT decode (--model, --steps)
+  repro baseline-compare   TRAPTI vs aggregate-statistics DSE
+  repro ablate             gating-policy sensitivity study (the paper's
+                           future-work item: none / aggressive /
+                           conservative / drowsy x alpha)
+";
+
+fn report(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("report needs an experiment name"))?;
+    let coord = Coordinator::new();
+    let all = which == "all";
+
+    if which == "table1" || all {
+        emit("table1", &tables::table1().render())?;
+    }
+    if which == "fig1" || all {
+        let f = exp::fig1(&coord)?;
+        emit("fig1", &figures::fig1(&f))?;
+    }
+    // The prefill pair backs fig5/6/7/8/9 + table2: run once, reuse.
+    if ["fig5", "fig6", "fig7", "fig8", "fig9", "table2", "headline"]
+        .contains(&which)
+        || all
+    {
+        let pair = exp::paired_prefill(&coord)?;
+        if which == "fig5" || all {
+            let (text, csv_m, csv_g) = figures::fig5(&pair);
+            emit("fig5", &text)?;
+            emit_csv("fig5_gpt2_xl_trace", &csv_m)?;
+            emit_csv("fig5_ds_r1d_trace", &csv_g)?;
+        }
+        if which == "fig6" || all {
+            emit("fig6", &figures::fig6(&pair))?;
+        }
+        if which == "fig7" || all {
+            emit("fig7", &figures::fig7(&pair))?;
+        }
+        if which == "fig8" || all {
+            let f8 = exp::fig8(&coord, &pair.gqa);
+            emit("fig8", &figures::fig8(&f8))?;
+        }
+        if ["fig9", "table2", "headline"].contains(&which) || all {
+            let t2 = exp::table2(&coord, &pair);
+            if which == "table2" || all {
+                let text = tables::table2(&t2)
+                    .iter()
+                    .map(|t| t.render())
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                emit("table2", &text)?;
+            }
+            if which == "fig9" || all {
+                emit("fig9", &figures::fig9(&t2))?;
+                emit_csv("fig9_points", &figures::fig9_csv(&t2))?;
+            }
+            if which == "headline" || all {
+                let t3 = exp::table3(&coord)?;
+                let h = exp::headline(&coord)?;
+                let text = format!(
+                    "TRAPTI headline numbers (paper in parentheses)\n\
+                     peak SRAM utilization ratio MHA/GQA: {:.2}x (2.72x)\n\
+                     end-to-end time ratio MHA/GQA:       {:.2}x (1.89x)\n\
+                     best Table II  dE: {:.1}% (-61.3%)\n\
+                     best Table III dE: {:.1}% (-77.8%, the 78% claim)\n\
+                     GQA extra banking benefit vs MHA: {:.1} pp (~20)\n",
+                    h.peak_ratio,
+                    h.time_ratio,
+                    h.table2_best_delta,
+                    t3.best_delta(),
+                    h.gqa_extra_benefit_pct,
+                );
+                emit("headline", &text)?;
+            }
+        }
+    }
+    if which == "table3" || all {
+        let t3 = exp::table3(&coord)?;
+        let mut text = format!(
+            "Multi-level run: e2e {:.1} ms (paper 550 ms), util {:.0}% \
+             (paper 57%), on-chip {:.1} J (paper 73.4 J)\n\n",
+            t3.stage1.result.seconds() * 1e3,
+            t3.stage1.result.active_utilization() * 100.0,
+            t3.stage1.energy.on_chip_j(),
+        );
+        for t in tables::table3(&t3) {
+            text.push_str(&t.render());
+            text.push('\n');
+        }
+        emit("table3", &text)?;
+    }
+    if which == "sizing" || all {
+        let s = exp::sizing(&coord)?;
+        emit("sizing", &tables::sizing_table(&s).render())?;
+    }
+    if !all
+        && ![
+            "table1", "fig1", "fig5", "fig6", "fig7", "fig8", "fig9", "table2",
+            "table3", "sizing", "headline",
+        ]
+        .contains(&which)
+    {
+        bail!("unknown experiment `{which}`");
+    }
+    Ok(())
+}
+
+fn parse_workload(args: &Args) -> Result<Workload> {
+    if let Some(d) = args.flag("decode") {
+        let (p, g) = d
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--decode wants PROMPT:GEN"))?;
+        Ok(Workload::Decode {
+            prompt: p.parse()?,
+            gen: g.parse()?,
+        })
+    } else {
+        Ok(Workload::Prefill {
+            seq: args.flag_or("seq", "2048").parse()?,
+        })
+    }
+}
+
+fn simulate_cmd(args: &Args) -> Result<()> {
+    // --config FILE loads model + accelerator (+ sweep) from TOML;
+    // individual flags override nothing in that case for clarity.
+    let (model, accel) = if let Some(path) = args.flag("config") {
+        let e = trapti::config::load_experiment(Path::new(path))?;
+        (e.model, e.accel)
+    } else {
+        let model_name = args.flag_or("model", "gpt2-xl");
+        let model = preset(&model_name)
+            .ok_or_else(|| anyhow!("unknown model `{model_name}`"))?;
+        let accel_name = args.flag_or("accel", "baseline");
+        let accel = named(&accel_name)
+            .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+        (model, accel)
+    };
+    let wl = parse_workload(args)?;
+    let coord = Coordinator::new();
+    let s1 = coord.stage1(&model, wl, &accel)?;
+    println!("{}", s1.graph.summary());
+    println!(
+        "cycles={} ({:.1} ms)  peak needed={:.1} MiB  occupied peak={:.1} MiB",
+        s1.result.total_cycles,
+        s1.result.seconds() * 1e3,
+        s1.result.peak_needed() as f64 / MIB as f64,
+        s1.result.sram_trace().peak_occupied() as f64 / MIB as f64,
+    );
+    println!(
+        "active PE util={:.1}%  e2e util={:.1}%  feasible={}  on-chip E={:.2} J",
+        s1.result.active_utilization() * 100.0,
+        s1.result.e2e_utilization() * 100.0,
+        s1.result.feasible(),
+        s1.energy.on_chip_j(),
+    );
+    println!(
+        "SRAM reads={} writes={}  DRAM rd={:.2} GB wr={:.2} GB  writebacks={}",
+        s1.result.stats.reads,
+        s1.result.stats.writes,
+        s1.result.stats.dram_read_bytes as f64 / 1e9,
+        s1.result.stats.dram_write_bytes as f64 / 1e9,
+        s1.result.stats.writebacks,
+    );
+    if let Some(path) = args.flag("save-trace") {
+        save_trace(s1.result.sram_trace(), Path::new(path))?;
+        println!("trace saved to {path}");
+    }
+    if args.flag("csv").is_some() {
+        emit_csv("trace", &trace_to_csv(s1.result.sram_trace()))?;
+    }
+    Ok(())
+}
+
+fn bank_cmd(args: &Args) -> Result<()> {
+    let trace_path = args
+        .flag("trace")
+        .ok_or_else(|| anyhow!("bank needs --trace FILE (from simulate --save-trace)"))?;
+    let trace = load_trace(Path::new(trace_path))?;
+    let alpha: f64 = args.flag_or("alpha", "0.9").parse()?;
+    let banks: Vec<u32> = args
+        .flag_or("banks", "1,2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    let capacities: Vec<u64> = match args.flag("capacities") {
+        Some(list) => list
+            .split(',')
+            .map(|s| parse_bytes(&format!("{}MiB", s.trim())))
+            .collect::<Result<_>>()?,
+        None => vec![trace.capacity],
+    };
+    let coord = Coordinator::new();
+    // Reads/writes are not stored in the trace file; accept flags.
+    let stats = trapti::trace::AccessStats {
+        reads: args.flag_or("reads", "0").parse()?,
+        writes: args.flag_or("writes", "0").parse()?,
+        ..Default::default()
+    };
+    println!(
+        "{:>9} {:>5} {:>12} {:>10} {:>8} {:>9} {:>10}",
+        "C[MiB]", "B", "E_total[J]", "dE%", "avgBact", "gated%", "area[mm2]"
+    );
+    for &cap in &capacities {
+        let base = evaluate(
+            &coord.cacti, &trace, &stats, cap, 1, alpha,
+            GatingPolicy::None, 1.0,
+        );
+        for &b in &banks {
+            let ev = if b == 1 {
+                base.clone()
+            } else {
+                evaluate(
+                    &coord.cacti, &trace, &stats, cap, b, alpha,
+                    GatingPolicy::Aggressive, 1.0,
+                )
+            };
+            println!(
+                "{:>9} {:>5} {:>12.3} {:>10.1} {:>8.2} {:>9.1} {:>10.1}",
+                cap / MIB,
+                b,
+                ev.e_total_j(),
+                ev.delta_pct(&base),
+                ev.avg_active_banks,
+                ev.gated_fraction * 100.0,
+                ev.area_mm2,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn e2e_cmd(args: &Args) -> Result<()> {
+    let model = args.flag_or("model", "tiny-gqa");
+    let steps: usize = args.flag_or("steps", "64").parse()?;
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let mut rt = Runtime::new(manifest)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut sess = DecodeSession::new(&mut rt, &model, 42)?;
+    let t0 = std::time::Instant::now();
+    let mags = sess.generate(&mut rt, steps, 7)?;
+    let dt = t0.elapsed();
+    println!(
+        "{model}: generated {steps} tokens in {:.1} ms ({:.2} ms/token)",
+        dt.as_secs_f64() * 1e3,
+        dt.as_secs_f64() * 1e3 / steps as f64
+    );
+    println!(
+        "activation magnitude curve: first={:.3} mid={:.3} last={:.3}",
+        mags[0],
+        mags[steps / 2],
+        mags[steps - 1]
+    );
+    Ok(())
+}
+
+/// Policy-sensitivity ablation (paper future work): compare gating
+/// policies and alphas on both workloads' traces at 128 MiB / B=8.
+fn ablate() -> Result<()> {
+    let coord = Coordinator::new();
+    let pair = exp::paired_prefill(&coord)?;
+    let policies = [
+        GatingPolicy::None,
+        GatingPolicy::Aggressive,
+        GatingPolicy::conservative(),
+        GatingPolicy::drowsy(),
+    ];
+    println!(
+        "{:>10} {:>13} {:>6} {:>11} {:>10} {:>10} {:>9} {:>9}",
+        "workload", "policy", "alpha", "E_total[J]", "E_leak[J]", "E_sw[mJ]",
+        "gated%", "switches"
+    );
+    for (label, s1) in [("gpt2-xl", &pair.mha), ("ds-r1d", &pair.gqa)] {
+        for policy in policies {
+            for alpha in [1.0, 0.9, 0.75] {
+                let ev = evaluate(
+                    &coord.cacti,
+                    s1.result.sram_trace(),
+                    &s1.result.stats,
+                    128 * MIB,
+                    8,
+                    alpha,
+                    policy,
+                    1.0,
+                );
+                println!(
+                    "{label:>10} {:>13} {alpha:>6} {:>11.2} {:>10.2} {:>10.3} {:>8.1}% {:>9}",
+                    policy.label(),
+                    ev.e_total_j(),
+                    ev.e_leak_j,
+                    ev.e_sw_j * 1e3,
+                    ev.gated_fraction * 100.0,
+                    ev.n_switch,
+                );
+            }
+        }
+    }
+    println!(
+        "
+Full power gating wins when idle intervals clear break-even;
+         drowsy retention recovers most of the saving with single-cycle
+         wake-up (latency-critical designs); conservative trades a small
+         energy give-back for fewer transitions."
+    );
+    Ok(())
+}
+
+fn baseline_compare() -> Result<()> {
+    let coord = Coordinator::new();
+    let pair = exp::paired_prefill(&coord)?;
+    println!(
+        "{:>10} {:>8} {:>5} {:>14} {:>14} {:>8}",
+        "workload", "C[MiB]", "B", "TRAPTI E_lk[J]", "aggreg E_lk[J]", "saving"
+    );
+    for (label, s1) in [("gpt2-xl", &pair.mha), ("ds-r1d", &pair.gqa)] {
+        let trace = s1.result.sram_trace();
+        let cap = 128 * MIB;
+        for b in [4u32, 8, 16] {
+            let trapti_ev = evaluate(
+                &coord.cacti, trace, &s1.result.stats, cap, b, 0.9,
+                GatingPolicy::Aggressive, 1.0,
+            );
+            let view = analytic::AggregateView::from_stats(
+                trace.peak_needed(),
+                s1.result.total_cycles,
+                &s1.result.stats,
+            );
+            let agg = analytic::estimate(&coord.cacti, &view, cap, b, 0.9, 1.0);
+            println!(
+                "{label:>10} {:>8} {b:>5} {:>14.2} {:>14.2} {:>7.0}%",
+                cap / MIB,
+                trapti_ev.e_leak_j,
+                agg.e_leak_j,
+                (1.0 - trapti_ev.e_leak_j / agg.e_leak_j) * 100.0
+            );
+        }
+    }
+    println!(
+        "\nThe aggregate (Timeloop/MAESTRO-class) flow sees only peak capacity\n\
+         and total access counts, so it must keep peak-occupancy banks on for\n\
+         the whole run; TRAPTI's time-resolved trace licenses gating the\n\
+         idle intervals — the saving column is the paper's core motivation."
+    );
+    Ok(())
+}

@@ -1,0 +1,328 @@
+//! Multi-memory system: shared SRAM (+ optional dedicated memories) over
+//! DRAM, with transfer routing and timing.
+//!
+//! Single-memory setups route everything through `on_chip[0]`. The
+//! Fig. 10 multi-level hierarchy attaches SAs to dedicated memories; data
+//! produced near one SA pair and consumed by the other hops
+//! `dm -> shared -> dm'`, which is exactly the coordination overhead the
+//! paper's §IV-D measures.
+
+use anyhow::Result;
+
+use crate::config::AccelConfig;
+use crate::trace::AccessStats;
+use crate::workload::{TensorId, TensorInfo, TensorKind};
+
+use super::port::PortTimer;
+use super::sram::SramModel;
+
+fn kind_label(k: TensorKind) -> &'static str {
+    k.label()
+}
+
+#[derive(Debug, Clone)]
+pub struct MemorySystem {
+    pub on_chip: Vec<SramModel>,
+    pub dram: PortTimer,
+    pub dram_stats: AccessStats,
+    mem_of_sa: Vec<u8>,
+    /// See `SchedConfig::weight_resident`.
+    weight_resident: bool,
+}
+
+/// Outcome of ensuring a tensor is readable from a memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FetchOutcome {
+    /// Cycle at which the data is available in the destination memory.
+    pub ready_at: u64,
+    /// True if any off-chip (DRAM) transfer was involved.
+    pub from_dram: bool,
+    /// Bytes moved (0 if already resident).
+    pub moved_bytes: u64,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: &AccelConfig) -> Self {
+        Self {
+            on_chip: cfg.on_chip.iter().map(SramModel::new).collect(),
+            dram: PortTimer::new(&cfg.dram),
+            dram_stats: AccessStats::default(),
+            mem_of_sa: cfg.topology.mem_of_sa.clone(),
+            weight_resident: cfg.sched.weight_resident,
+        }
+    }
+
+    /// Memory index the given systolic array streams from.
+    pub fn mem_for_sa(&self, sa: usize) -> usize {
+        self.mem_of_sa[sa] as usize
+    }
+
+    pub fn shared(&self) -> &SramModel {
+        &self.on_chip[0]
+    }
+
+    pub fn shared_mut(&mut self) -> &mut SramModel {
+        &mut self.on_chip[0]
+    }
+
+    /// Where is this tensor currently resident (first hit)?
+    fn find_resident(&self, t: TensorId) -> Option<usize> {
+        self.on_chip.iter().position(|m| m.contains(t))
+    }
+
+    /// Ensure `tensor` is resident in memory `dst` by `now`, fetching
+    /// from a sibling memory or DRAM as needed. Charges transfer time on
+    /// every traversed port and traffic to the stats.
+    pub fn ensure_resident(
+        &mut self,
+        now: u64,
+        tensor: &TensorInfo,
+        dst: usize,
+    ) -> Result<FetchOutcome> {
+        let t = tensor.id;
+        let bytes = tensor.bytes;
+        let kind = kind_label(tensor.kind);
+
+        // Weights never occupy SRAM unless `weight_resident` (small
+        // models): the weight-stationary arrays stream them DRAM -> FIFO
+        // -> PE registers (charged at dispatch on the DRAM ports by the
+        // engine). See DESIGN.md §5.
+        if tensor.kind == TensorKind::Weight && !self.weight_resident {
+            return Ok(FetchOutcome {
+                ready_at: now,
+                from_dram: false,
+                moved_bytes: 0,
+            });
+        }
+
+        if self.on_chip[dst].contains(t) {
+            self.on_chip[dst].touch(t);
+            return Ok(FetchOutcome {
+                ready_at: now,
+                from_dram: false,
+                moved_bytes: 0,
+            });
+        }
+
+        match self.find_resident(t) {
+            // On-chip elsewhere: hop src -> (shared) -> dst.
+            Some(src) => {
+                let mut ready = now;
+                let mut hops: Vec<usize> = Vec::new();
+                if src != 0 && dst != 0 {
+                    hops.push(0); // dm -> shared -> dm'
+                }
+                hops.push(dst);
+                let mut cur = src;
+                for next in hops {
+                    // Read from cur, write into next.
+                    let rd = self.on_chip[cur].ports.transfer(ready, bytes);
+                    let word = self.on_chip[cur].cfg.bytes_per_cycle;
+                    self.on_chip[cur].stats.sram_read(bytes, word, kind);
+                    let wr = self.on_chip[next].ports.transfer(rd.end, bytes);
+                    self.alloc_with_writeback(now, next, tensor)?;
+                    let word = self.on_chip[next].cfg.bytes_per_cycle;
+                    self.on_chip[next].stats.sram_write(bytes, word, kind);
+                    ready = wr.end;
+                    // The staging copy in shared stays resident (backup
+                    // storage, Fig. 10) and retires with the tensor's
+                    // global liveness (complete_op -> mark_obsolete).
+                    cur = next;
+                }
+                Ok(FetchOutcome {
+                    ready_at: ready,
+                    from_dram: false,
+                    moved_bytes: bytes,
+                })
+            }
+            // Off-chip: DRAM -> shared (-> dst).
+            None => {
+                let dr = self.dram.transfer(now, bytes);
+                self.dram_stats.dram_read(bytes);
+                self.alloc_with_writeback(now, 0, tensor)?;
+                let word = self.on_chip[0].cfg.bytes_per_cycle;
+                self.on_chip[0].stats.sram_write(bytes, word, kind);
+                let mut ready = dr.end;
+                if dst != 0 {
+                    let rd = self.on_chip[0].ports.transfer(ready, bytes);
+                    self.on_chip[0].stats.sram_read(bytes, word, kind);
+                    self.alloc_with_writeback(now, dst, tensor)?;
+                    let word_d = self.on_chip[dst].cfg.bytes_per_cycle;
+                    self.on_chip[dst].stats.sram_write(bytes, word_d, kind);
+                    ready = rd.end;
+                }
+                Ok(FetchOutcome {
+                    ready_at: ready,
+                    from_dram: true,
+                    moved_bytes: bytes,
+                })
+            }
+        }
+    }
+
+    /// Allocate space for an op output in `dst` (no data transfer; the
+    /// bytes are written by the op's drain phase, charged separately).
+    pub fn allocate_output(
+        &mut self,
+        now: u64,
+        tensor: &TensorInfo,
+        dst: usize,
+    ) -> Result<()> {
+        if self.on_chip[dst].contains(tensor.id) {
+            self.on_chip[dst].touch(tensor.id);
+            // In-place updates (KV append) keep the tensor needed.
+            self.on_chip[dst].mark_needed(now, tensor.id);
+            return Ok(());
+        }
+        self.alloc_with_writeback(now, dst, tensor)?;
+        Ok(())
+    }
+
+    fn alloc_with_writeback(
+        &mut self,
+        now: u64,
+        mem: usize,
+        tensor: &TensorInfo,
+    ) -> Result<()> {
+        let outcome = self.on_chip[mem].allocate(
+            now,
+            tensor.id,
+            tensor.bytes,
+            kind_label(tensor.kind),
+        )?;
+        // Write-backs stream to DRAM off the critical path: reserve DRAM
+        // port time (they do consume bandwidth) but don't block the
+        // caller.
+        for &(_victim, bytes) in &outcome.writebacks {
+            self.dram.transfer(now, bytes);
+            self.dram_stats.dram_write(bytes);
+        }
+        Ok(())
+    }
+
+    /// Mark a tensor obsolete in every memory holding it.
+    pub fn mark_obsolete(&mut self, now: u64, t: TensorId) {
+        for m in &mut self.on_chip {
+            m.mark_obsolete(now, t);
+        }
+    }
+
+    /// Is the tensor resident anywhere on-chip?
+    pub fn resident_anywhere(&self, t: TensorId) -> bool {
+        self.find_resident(t).is_some()
+    }
+
+    pub fn finalize(&mut self, end: u64) {
+        for m in &mut self.on_chip {
+            m.finalize(end);
+        }
+    }
+
+    /// Aggregate access stats across all on-chip memories + DRAM counts.
+    pub fn total_stats(&self) -> AccessStats {
+        let mut s = AccessStats::default();
+        for m in &self.on_chip {
+            s.merge(&m.stats);
+        }
+        s.merge(&self.dram_stats);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{baseline, multilevel};
+    use crate::workload::{TensorInfo, TensorKind};
+
+    fn tensor(id: u32, bytes: u64) -> TensorInfo {
+        TensorInfo {
+            id: TensorId(id),
+            name: format!("t{id}"),
+            bytes,
+            kind: TensorKind::Activation,
+            layer: 0,
+            producer: None,
+            consumers: vec![],
+            affinity: None,
+        }
+    }
+
+    #[test]
+    fn dram_fetch_lands_in_shared() {
+        let mut ms = MemorySystem::new(&baseline());
+        let t = tensor(0, 1 << 20);
+        let out = ms.ensure_resident(0, &t, 0).unwrap();
+        assert!(out.from_dram);
+        assert!(out.ready_at > 0);
+        assert!(ms.shared().contains(t.id));
+        assert_eq!(ms.dram_stats.dram_read_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn second_access_is_free() {
+        let mut ms = MemorySystem::new(&baseline());
+        let t = tensor(0, 4096);
+        ms.ensure_resident(0, &t, 0).unwrap();
+        let out = ms.ensure_resident(100, &t, 0).unwrap();
+        assert_eq!(out.ready_at, 100);
+        assert!(!out.from_dram);
+        assert_eq!(out.moved_bytes, 0);
+    }
+
+    #[test]
+    fn multilevel_fetch_stages_through_shared() {
+        let mut ms = MemorySystem::new(&multilevel());
+        let t = tensor(0, 4096);
+        let out = ms.ensure_resident(0, &t, 1).unwrap();
+        assert!(out.from_dram);
+        assert!(ms.on_chip[1].contains(t.id));
+        // Shared keeps a backup copy (Fig. 10); it stays needed until
+        // the tensor's global liveness retires it.
+        assert!(ms.on_chip[0].contains(t.id));
+        assert_eq!(ms.on_chip[0].needed_bytes(), 4096);
+        ms.mark_obsolete(10, t.id);
+        assert_eq!(ms.on_chip[0].needed_bytes(), 0);
+        assert!(ms.on_chip[0].obsolete_bytes() > 0);
+        assert_eq!(ms.on_chip[1].needed_bytes(), 0);
+    }
+
+    #[test]
+    fn cross_dm_hop_charges_both_paths() {
+        let mut ms = MemorySystem::new(&multilevel());
+        let t = tensor(0, 4096);
+        ms.ensure_resident(0, &t, 1).unwrap();
+        let shared_reads_before = ms.on_chip[0].stats.reads;
+        let out = ms.ensure_resident(1000, &t, 2).unwrap();
+        assert!(!out.from_dram, "hop must stay on-chip");
+        assert!(ms.on_chip[2].contains(t.id));
+        // The shared SRAM holds a backup copy after the first fetch; the
+        // hop reads from it (nearest source) rather than from DM1.
+        assert!(
+            ms.on_chip[0].stats.reads > shared_reads_before,
+            "backup copy in shared must be read"
+        );
+        assert!(out.ready_at > 1000, "hop takes time");
+    }
+
+    #[test]
+    fn output_allocation_in_place_update() {
+        let mut ms = MemorySystem::new(&baseline());
+        let t = tensor(0, 4096);
+        ms.allocate_output(0, &t, 0).unwrap();
+        ms.shared_mut().mark_obsolete(5, t.id);
+        // KV-append style re-write flips it back to needed.
+        ms.allocate_output(10, &t, 0).unwrap();
+        assert_eq!(ms.shared().needed_bytes(), 4096);
+    }
+
+    #[test]
+    fn total_stats_aggregates() {
+        let mut ms = MemorySystem::new(&multilevel());
+        let t = tensor(0, 4096);
+        ms.ensure_resident(0, &t, 1).unwrap();
+        let total = ms.total_stats();
+        assert!(total.writes > 0);
+        assert_eq!(total.dram_read_bytes, 4096);
+    }
+}

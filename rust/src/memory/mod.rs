@@ -1,0 +1,13 @@
+//! On-chip/off-chip memory models: SRAM residency with needed/obsolete
+//! tracking and LRU eviction, port-level transfer timing, multi-level
+//! hierarchies, and the Stage-I capacity sizing loop.
+
+pub mod hierarchy;
+pub mod port;
+pub mod sizing;
+pub mod sram;
+
+pub use hierarchy::{FetchOutcome, MemorySystem};
+pub use port::{PortTimer, Transfer};
+pub use sizing::{size_memory, SizingResult};
+pub use sram::{AllocOutcome, SramModel};

@@ -1,0 +1,444 @@
+//! On-chip SRAM residency model: tensor tracking with needed/obsolete
+//! states, LRU victim selection (obsolete preferred), capacity-induced
+//! write-backs, and occupancy-trace recording.
+//!
+//! This implements the paper's Stage-I §A.3 semantics exactly:
+//!
+//! * tensors are *needed* while future ops will read them, *obsolete*
+//!   afterwards;
+//! * obsolete data lingers (it costs nothing) until eviction pressure;
+//! * the LRU policy picks victims among obsolete tensors first — evicting
+//!   them is free; when only needed data remains, the model writes it
+//!   back to DRAM (counted, because the sizing loop must eliminate it).
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::MemConfig;
+use crate::trace::{AccessStats, OccupancyTrace};
+use crate::workload::TensorId;
+
+use super::port::PortTimer;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Needed,
+    Obsolete,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    bytes: u64,
+    state: State,
+    /// LRU stamp (logical use counter, not cycles: ties are impossible).
+    stamp: u64,
+    kind: &'static str,
+}
+
+/// Result of making room for an allocation.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AllocOutcome {
+    /// Needed tensors written back to DRAM to make room (capacity
+    /// violation — Stage-I sizing must drive this to zero).
+    pub writebacks: Vec<(TensorId, u64)>,
+    /// Obsolete tensors dropped (free).
+    pub dropped: Vec<TensorId>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SramModel {
+    pub cfg: MemConfig,
+    /// Dense residency map indexed by TensorId (ids are dense u32s from
+    /// the graph builder); ~5x faster than a HashMap in the event loop
+    /// (EXPERIMENTS.md §Perf L3-1).
+    entries: Vec<Option<Entry>>,
+    /// LRU index: (stamp, id) per state. BTreeSet gives O(log n) oldest.
+    lru_needed: BTreeSet<(u64, TensorId)>,
+    lru_obsolete: BTreeSet<(u64, TensorId)>,
+    needed_bytes: u64,
+    obsolete_bytes: u64,
+    stamp: u64,
+    pub trace: OccupancyTrace,
+    pub stats: AccessStats,
+    pub ports: PortTimer,
+    /// Needed-bytes-by-kind snapshot at the moment of peak needed bytes
+    /// (diagnostics for calibration and the Fig. 5 decomposition).
+    pub peak_composition: Vec<(&'static str, u64)>,
+    peak_needed_seen: u64,
+}
+
+impl SramModel {
+    pub fn new(cfg: &MemConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            entries: Vec::new(),
+            lru_needed: BTreeSet::new(),
+            lru_obsolete: BTreeSet::new(),
+            needed_bytes: 0,
+            obsolete_bytes: 0,
+            stamp: 0,
+            trace: OccupancyTrace::new(&cfg.name, cfg.capacity),
+            stats: AccessStats::default(),
+            ports: PortTimer::new(cfg),
+            peak_composition: Vec::new(),
+            peak_needed_seen: 0,
+        }
+    }
+
+    pub fn contains(&self, t: TensorId) -> bool {
+        self.entries
+            .get(t.0 as usize)
+            .is_some_and(Option::is_some)
+    }
+
+    #[inline]
+    fn slot(&mut self, t: TensorId) -> &mut Option<Entry> {
+        let idx = t.0 as usize;
+        if idx >= self.entries.len() {
+            self.entries.resize(idx + 1, None);
+        }
+        &mut self.entries[idx]
+    }
+
+    pub fn needed_bytes(&self) -> u64 {
+        self.needed_bytes
+    }
+
+    pub fn obsolete_bytes(&self) -> u64 {
+        self.obsolete_bytes
+    }
+
+    pub fn occupied(&self) -> u64 {
+        self.needed_bytes + self.obsolete_bytes
+    }
+
+    fn record(&mut self, now: u64) {
+        self.trace.record(now, self.needed_bytes, self.obsolete_bytes);
+        if self.needed_bytes > self.peak_needed_seen {
+            self.peak_needed_seen = self.needed_bytes;
+            let mut by_kind: std::collections::BTreeMap<&'static str, u64> =
+                Default::default();
+            for e in self.entries.iter().flatten() {
+                if e.state == State::Needed {
+                    *by_kind.entry(e.kind).or_default() += e.bytes;
+                }
+            }
+            self.peak_composition = by_kind.into_iter().collect();
+        }
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.stamp += 1;
+        self.stamp
+    }
+
+    /// Allocate `bytes` for tensor `t` (not currently resident), evicting
+    /// as required. Returns what had to be evicted; the caller charges
+    /// write-back traffic/time to DRAM.
+    pub fn allocate(
+        &mut self,
+        now: u64,
+        t: TensorId,
+        bytes: u64,
+        kind: &'static str,
+    ) -> Result<AllocOutcome> {
+        if self.contains(t) {
+            bail!("tensor {t} already resident in {}", self.cfg.name);
+        }
+        if bytes > self.cfg.capacity {
+            bail!(
+                "tensor {t} ({bytes} B) exceeds {} capacity {}",
+                self.cfg.name,
+                self.cfg.capacity
+            );
+        }
+        let mut out = AllocOutcome::default();
+        while self.occupied() + bytes > self.cfg.capacity {
+            // LRU among obsolete first (free), then needed (write-back).
+            if let Some(&(stamp, victim)) = self.lru_obsolete.iter().next() {
+                let e = self.slot(victim).take().expect("indexed");
+                self.lru_obsolete.remove(&(stamp, victim));
+                self.obsolete_bytes -= e.bytes;
+                self.stats.evictions_obsolete += 1;
+                out.dropped.push(victim);
+            } else if let Some(&(stamp, victim)) = self.lru_needed.iter().next() {
+                let e = self.slot(victim).take().expect("indexed");
+                self.lru_needed.remove(&(stamp, victim));
+                self.needed_bytes -= e.bytes;
+                self.stats.writeback(e.bytes);
+                out.writebacks.push((victim, e.bytes));
+            } else {
+                bail!("cannot fit tensor {t}: memory empty but too small");
+            }
+        }
+        let stamp = self.bump();
+        *self.slot(t) = Some(Entry {
+            bytes,
+            state: State::Needed,
+            stamp,
+            kind,
+        });
+        self.lru_needed.insert((stamp, t));
+        self.needed_bytes += bytes;
+        self.record(now);
+        Ok(out)
+    }
+
+    /// Refresh LRU recency on access.
+    pub fn touch(&mut self, t: TensorId) {
+        let stamp = self.bump();
+        if let Some(e) = self
+            .entries
+            .get_mut(t.0 as usize)
+            .and_then(Option::as_mut)
+        {
+            let old = (e.stamp, t);
+            e.stamp = stamp;
+            match e.state {
+                State::Needed => {
+                    self.lru_needed.remove(&old);
+                    self.lru_needed.insert((stamp, t));
+                }
+                State::Obsolete => {
+                    self.lru_obsolete.remove(&old);
+                    self.lru_obsolete.insert((stamp, t));
+                }
+            }
+        }
+    }
+
+    /// Transition a tensor to obsolete (last consumer finished). No-op if
+    /// not resident (it may have been written back).
+    pub fn mark_obsolete(&mut self, now: u64, t: TensorId) {
+        if let Some(e) = self
+            .entries
+            .get_mut(t.0 as usize)
+            .and_then(Option::as_mut)
+        {
+            if e.state == State::Needed {
+                e.state = State::Obsolete;
+                self.lru_needed.remove(&(e.stamp, t));
+                self.lru_obsolete.insert((e.stamp, t));
+                let bytes = e.bytes;
+                self.needed_bytes -= bytes;
+                self.obsolete_bytes += bytes;
+                self.record(now);
+            }
+        }
+    }
+
+    /// Transition back to needed (a written-back tensor refetched, or an
+    /// obsolete one that gains a new consumer in decode loops).
+    pub fn mark_needed(&mut self, now: u64, t: TensorId) {
+        if let Some(e) = self
+            .entries
+            .get_mut(t.0 as usize)
+            .and_then(Option::as_mut)
+        {
+            if e.state == State::Obsolete {
+                e.state = State::Needed;
+                self.lru_obsolete.remove(&(e.stamp, t));
+                self.lru_needed.insert((e.stamp, t));
+                let bytes = e.bytes;
+                self.obsolete_bytes -= bytes;
+                self.needed_bytes += bytes;
+                self.record(now);
+            }
+        }
+    }
+
+    /// Kind label of a resident tensor (traffic attribution).
+    pub fn kind_of(&self, t: TensorId) -> Option<&'static str> {
+        self.entries
+            .get(t.0 as usize)
+            .and_then(Option::as_ref)
+            .map(|e| e.kind)
+    }
+
+    /// Close the trace at the end of the run.
+    pub fn finalize(&mut self, end: u64) {
+        self.trace.finalize(end);
+    }
+
+    /// Internal-consistency check used by tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<()> {
+        use anyhow::ensure;
+        let needed: u64 = self
+            .entries
+            .iter()
+            .flatten()
+            .filter(|e| e.state == State::Needed)
+            .map(|e| e.bytes)
+            .sum();
+        let obsolete: u64 = self
+            .entries
+            .iter()
+            .flatten()
+            .filter(|e| e.state == State::Obsolete)
+            .map(|e| e.bytes)
+            .sum();
+        ensure!(needed == self.needed_bytes, "needed counter drift");
+        ensure!(obsolete == self.obsolete_bytes, "obsolete counter drift");
+        ensure!(
+            self.lru_needed.len() + self.lru_obsolete.len()
+                == self.entries.iter().flatten().count(),
+            "LRU index size mismatch"
+        );
+        ensure!(
+            self.occupied() <= self.cfg.capacity,
+            "over capacity: {} > {}",
+            self.occupied(),
+            self.cfg.capacity
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn mk(capacity: u64) -> SramModel {
+        SramModel::new(&MemConfig {
+            name: "sram".into(),
+            capacity,
+            ports: 2,
+            bytes_per_cycle: 64,
+            latency_cycles: 4,
+        })
+    }
+
+    fn tid(i: u32) -> TensorId {
+        TensorId(i)
+    }
+
+    #[test]
+    fn allocate_tracks_needed() {
+        let mut m = mk(1000);
+        m.allocate(5, tid(0), 400, "act").unwrap();
+        assert_eq!(m.needed_bytes(), 400);
+        assert_eq!(m.obsolete_bytes(), 0);
+        assert!(m.contains(tid(0)));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn obsolete_preferred_over_needed() {
+        let mut m = mk(1000);
+        m.allocate(0, tid(0), 400, "act").unwrap(); // older
+        m.allocate(1, tid(1), 400, "act").unwrap();
+        m.mark_obsolete(2, tid(1)); // newer but obsolete
+        let out = m.allocate(3, tid(2), 300, "act").unwrap();
+        // Must drop the obsolete tid(1) even though tid(0) is older LRU.
+        assert_eq!(out.dropped, vec![tid(1)]);
+        assert!(out.writebacks.is_empty());
+        assert!(m.contains(tid(0)));
+        assert_eq!(m.stats.evictions_obsolete, 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn needed_writeback_when_no_obsolete() {
+        let mut m = mk(1000);
+        m.allocate(0, tid(0), 600, "kv").unwrap();
+        m.allocate(1, tid(1), 300, "act").unwrap();
+        let out = m.allocate(2, tid(2), 500, "act").unwrap();
+        // LRU needed victim is tid(0).
+        assert_eq!(out.writebacks, vec![(tid(0), 600)]);
+        assert!(!m.stats.capacity_feasible());
+        assert_eq!(m.stats.writeback_bytes, 600);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn touch_updates_lru_order() {
+        let mut m = mk(1000);
+        m.allocate(0, tid(0), 400, "act").unwrap();
+        m.allocate(1, tid(1), 400, "act").unwrap();
+        m.touch(tid(0)); // tid(1) becomes LRU victim
+        let out = m.allocate(2, tid(2), 400, "act").unwrap();
+        assert_eq!(out.writebacks, vec![(tid(1), 400)]);
+    }
+
+    #[test]
+    fn oversized_tensor_rejected() {
+        let mut m = mk(100);
+        assert!(m.allocate(0, tid(0), 200, "act").is_err());
+    }
+
+    #[test]
+    fn double_allocate_rejected() {
+        let mut m = mk(1000);
+        m.allocate(0, tid(0), 100, "act").unwrap();
+        assert!(m.allocate(1, tid(0), 100, "act").is_err());
+    }
+
+    #[test]
+    fn trace_records_transitions() {
+        let mut m = mk(1000);
+        m.allocate(5, tid(0), 300, "act").unwrap();
+        m.mark_obsolete(9, tid(0));
+        m.finalize(12);
+        let segs: Vec<_> = m.trace.segments().collect();
+        assert_eq!(segs.len(), 3);
+        assert_eq!((segs[1].needed, segs[1].obsolete), (300, 0));
+        assert_eq!((segs[2].needed, segs[2].obsolete), (0, 300));
+        assert_eq!(m.trace.peak_needed(), 300);
+    }
+
+    #[test]
+    fn mark_needed_round_trip() {
+        let mut m = mk(1000);
+        m.allocate(0, tid(0), 100, "kv").unwrap();
+        m.mark_obsolete(1, tid(0));
+        m.mark_needed(2, tid(0));
+        assert_eq!(m.needed_bytes(), 100);
+        assert_eq!(m.obsolete_bytes(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_invariants_under_random_ops() {
+        check("sram-invariants", 60, |rng| {
+            let cap = rng.range(1_000, 100_000);
+            let mut m = mk(cap);
+            let mut live: Vec<TensorId> = Vec::new();
+            let mut next_id = 0u32;
+            let mut now = 0u64;
+            for _ in 0..rng.range(10, 300) {
+                now += rng.below(20);
+                match rng.below(4) {
+                    0 | 1 => {
+                        let bytes = rng.range(1, cap / 4 + 1);
+                        let t = TensorId(next_id);
+                        next_id += 1;
+                        let out = m.allocate(now, t, bytes, "act").unwrap();
+                        for (wb, _) in &out.writebacks {
+                            live.retain(|x| x != wb);
+                        }
+                        for d in &out.dropped {
+                            live.retain(|x| x != d);
+                        }
+                        live.push(t);
+                    }
+                    2 => {
+                        if let Some(&t) = live.first() {
+                            m.mark_obsolete(now, t);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = rng.below(live.len() as u64) as usize;
+                            m.touch(live[idx]);
+                        }
+                    }
+                }
+                m.check_invariants().unwrap();
+            }
+            m.finalize(now + 1);
+            m.trace.validate().unwrap();
+        });
+    }
+}

@@ -1,0 +1,271 @@
+//! Paper-style figure generators: ASCII plots for terminals + CSV series
+//! for external plotting. One function per figure of the paper.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::experiments::{Fig1, Fig8, PairedStage1};
+use crate::coordinator::Stage1;
+use crate::sim::SimResult;
+use crate::trace::trace_to_csv;
+use crate::util::table::{AsciiPlot, Table};
+use crate::util::MIB;
+use crate::workload::OpClass;
+
+/// Fig. 1 — normalized energy/latency bars (MHA vs GQA decode).
+pub fn fig1(f: &Fig1) -> String {
+    let mut t = Table::new(
+        "Fig. 1 — MHA vs GQA at similar parameter count (decode)",
+        &["Metric", "GPT-2 XL (MHA)", "DS-R1D (GQA)", "MHA/GQA", "paper"],
+    );
+    t.row(vec![
+        "On-chip energy [J]".into(),
+        format!("{:.2}", f.mha_energy_j),
+        format!("{:.2}", f.gqa_energy_j),
+        format!("{:.2}x", f.energy_ratio()),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "Latency [ms]".into(),
+        format!("{:.1}", f.mha_seconds * 1e3),
+        format!("{:.1}", f.gqa_seconds * 1e3),
+        format!("{:.2}x", f.latency_ratio()),
+        "-".into(),
+    ]);
+    t.row(vec![
+        "Attention energy [J]".into(),
+        format!("{:.2}", f.mha_attn_energy_j),
+        format!("{:.2}", f.gqa_attn_energy_j),
+        format!("{:.2}x", f.attn_energy_ratio()),
+        "2.89x".into(),
+    ]);
+    t.row(vec![
+        "Attention latency [Mcyc]".into(),
+        format!("{:.1}", f.mha_attn_cycles as f64 / 1e6),
+        format!("{:.1}", f.gqa_attn_cycles as f64 / 1e6),
+        format!("{:.2}x", f.attn_latency_ratio()),
+        "3.14x".into(),
+    ]);
+    t.render()
+}
+
+/// Fig. 5 — time-resolved occupancy traces, plot + stats + CSV.
+pub fn fig5(pair: &PairedStage1) -> (String, String, String) {
+    let render = |s1: &Stage1, label: &str, paper_peak: f64, paper_ms: f64| {
+        let tr = s1.result.sram_trace();
+        let pts_needed: Vec<(f64, f64)> = tr
+            .downsample(400)
+            .iter()
+            .map(|s| (s.t as f64 / 1e6, s.needed as f64 / MIB as f64))
+            .collect();
+        let pts_occ: Vec<(f64, f64)> = tr
+            .downsample(400)
+            .iter()
+            .map(|s| (s.t as f64 / 1e6, (s.needed + s.obsolete) as f64 / MIB as f64))
+            .collect();
+        let plot = AsciiPlot::new(&format!(
+            "Fig. 5 ({label}): peak needed {:.1} MiB (paper {paper_peak}), \
+             end-to-end {:.1} ms (paper {paper_ms})",
+            tr.peak_needed() as f64 / MIB as f64,
+            s1.result.seconds() * 1e3,
+        ))
+        .series("needed", pts_needed)
+        .series("needed+obsolete", pts_occ)
+        .labels("t [Mcycles]", "MiB");
+        plot.render()
+    };
+    let text = format!(
+        "{}\n{}",
+        render(&pair.mha, "GPT-2 XL / MHA", 107.3, 593.9),
+        render(&pair.gqa, "DS-R1D / GQA", 39.1, 313.6),
+    );
+    (
+        text,
+        trace_to_csv(pair.mha.result.sram_trace()),
+        trace_to_csv(pair.gqa.result.sram_trace()),
+    )
+}
+
+/// Fig. 6 — per-operation latency breakdown table for one workload.
+pub fn fig6_half(result: &SimResult, label: &str) -> Table {
+    let mut t = Table::new(
+        &format!("Fig. 6 ({label}) — per-op-class latency breakdown [Mcycles]"),
+        &["Op class", "Compute", "Memory", "Idle", "Mem+Idle %", "Count"],
+    );
+    for class in OpClass::all() {
+        let Some(b) = result.op_breakdown.get(class) else {
+            continue;
+        };
+        let total = b.total().max(1);
+        t.row(vec![
+            class.label().into(),
+            format!("{:.2}", b.compute as f64 / 1e6),
+            format!("{:.2}", b.memory as f64 / 1e6),
+            format!("{:.2}", b.idle as f64 / 1e6),
+            format!("{:.0}%", (b.memory + b.idle) as f64 / total as f64 * 100.0),
+            b.count.to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn fig6(pair: &PairedStage1) -> String {
+    format!(
+        "{}\n{}",
+        fig6_half(&pair.mha.result, "GPT-2 XL / MHA").render(),
+        fig6_half(&pair.gqa.result, "DS-R1D / GQA").render()
+    )
+}
+
+/// Fig. 7 — on-chip energy breakdown + utilization.
+pub fn fig7(pair: &PairedStage1) -> String {
+    let mut t = Table::new(
+        "Fig. 7 — on-chip energy breakdown (128 MiB shared SRAM)",
+        &["Component [J]", "GPT-2 XL (MHA)", "DS-R1D (GQA)"],
+    );
+    let rows: Vec<(&str, fn(&Stage1) -> f64)> = vec![
+        ("PE dynamic", |s| s.energy.pe_dynamic_j),
+        ("PE static", |s| s.energy.pe_static_j),
+        ("FIFO static", |s| s.energy.fifo_static_j),
+        ("SRAM dynamic", |s| s.energy.sram_dynamic_j),
+        ("SRAM leakage", |s| s.energy.sram_leakage_j),
+    ];
+    for (name, f) in rows {
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", f(&pair.mha)),
+            format!("{:.2}", f(&pair.gqa)),
+        ]);
+    }
+    t.row(vec![
+        "Total on-chip".into(),
+        format!("{:.2} (paper 78.47)", pair.mha.energy.on_chip_j()),
+        format!("{:.2} (paper 40.52)", pair.gqa.energy.on_chip_j()),
+    ]);
+    t.row(vec![
+        "Active PE utilization".into(),
+        format!(
+            "{:.0}% (paper 38%)",
+            pair.mha.result.active_utilization() * 100.0
+        ),
+        format!(
+            "{:.0}% (paper 77%)",
+            pair.gqa.result.active_utilization() * 100.0
+        ),
+    ]);
+    t.render()
+}
+
+/// Fig. 8 — bank-activity timelines under different alphas.
+pub fn fig8(f: &Fig8) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Fig. 8 — DS-R1D @ 64 MiB, B=4: active banks over time per alpha \
+         (trace peak {:.1} MiB)",
+        f.trace_peak as f64 / MIB as f64
+    );
+    for (alpha, tl) in f.alphas.iter().zip(&f.timelines) {
+        let total: u64 = tl.iter().map(|s| s.dt()).sum();
+        let avg = crate::banking::avg_active(tl);
+        let gate_time: u64 = tl
+            .iter()
+            .map(|s| s.dt() * (4 - s.active.min(4)) as u64)
+            .sum();
+        let _ = writeln!(
+            out,
+            "  alpha={alpha:<4} avg active={avg:.2}/4  \
+             idle bank-time={:.0}%  segments={}",
+            gate_time as f64 / (total as f64 * 4.0) * 100.0,
+            tl.len()
+        );
+        let pts: Vec<(f64, f64)> = tl
+            .iter()
+            .map(|s| (s.t0 as f64 / 1e6, s.active as f64))
+            .collect();
+        let plot = AsciiPlot::new(&format!("  activity timeline (alpha={alpha})"))
+            .series("B_act", pts)
+            .labels("t [Mcycles]", "banks");
+        let mut p = plot;
+        p.height = 6;
+        out.push_str(&p.render());
+    }
+    out
+}
+
+/// Fig. 9 — energy/area scatter CSV (both workloads, all (C,B) points).
+pub fn fig9_csv(t2: &crate::coordinator::experiments::Table2) -> String {
+    let mut out = String::from("workload,capacity_mib,banks,energy_j,area_mm2\n");
+    for (label, pts) in [("gpt2-xl", &t2.mha_points), ("ds-r1d", &t2.gqa_points)] {
+        for p in pts.iter() {
+            let _ = writeln!(
+                out,
+                "{label},{},{},{:.3},{:.1}",
+                p.eval.capacity / MIB,
+                p.eval.banks,
+                p.eval.e_total_j(),
+                p.eval.area_mm2
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 9 — ASCII scatter.
+pub fn fig9(t2: &crate::coordinator::experiments::Table2) -> String {
+    let series = |pts: &[crate::banking::SweepPoint]| -> Vec<(f64, f64)> {
+        pts.iter()
+            .map(|p| (p.eval.area_mm2, p.eval.e_total_j()))
+            .collect()
+    };
+    AsciiPlot::new("Fig. 9 — energy vs area across (C, B) candidates (alpha=0.9)")
+        .series("GPT-2 XL", series(&t2.mha_points))
+        .series("DS-R1D", series(&t2.gqa_points))
+        .labels("area [mm2]", "E [J]")
+        .render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny;
+    use crate::coordinator::Coordinator;
+    use crate::workload::{Workload, TINY_GQA, TINY_MHA};
+
+    fn tiny_pair() -> PairedStage1 {
+        let coord = Coordinator::new();
+        let accel = tiny();
+        let wl = Workload::Prefill { seq: 64 };
+        PairedStage1 {
+            mha: coord.stage1(&TINY_MHA, wl, &accel).unwrap(),
+            gqa: coord.stage1(&TINY_GQA, wl, &accel).unwrap(),
+            accel,
+        }
+    }
+
+    #[test]
+    fn fig5_renders_and_exports_csv() {
+        let pair = tiny_pair();
+        let (text, csv_mha, csv_gqa) = fig5(&pair);
+        assert!(text.contains("Fig. 5"));
+        assert!(text.contains("peak needed"));
+        assert!(csv_mha.starts_with("t_cycles,"));
+        assert!(csv_gqa.lines().count() > 2);
+    }
+
+    #[test]
+    fn fig6_contains_all_present_classes() {
+        let pair = tiny_pair();
+        let s = fig6(&pair);
+        for label in ["QKV proj", "Attn score", "Softmax", "FFN matmul"] {
+            assert!(s.contains(label), "missing {label}");
+        }
+    }
+
+    #[test]
+    fn fig7_totals_are_sums() {
+        let pair = tiny_pair();
+        let s = fig7(&pair);
+        assert!(s.contains("Total on-chip"));
+        assert!(s.contains("paper 78.47"));
+    }
+}

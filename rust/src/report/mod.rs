@@ -1,0 +1,5 @@
+//! Report layer: renders experiment results as paper-style tables,
+//! ASCII figures, and CSV series (written under `reports/` by the CLI).
+
+pub mod figures;
+pub mod tables;

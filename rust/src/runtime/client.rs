@@ -1,0 +1,261 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (jax >= 0.5 serialized protos are
+//! rejected by xla_extension 0.5.1 — see aot.py / DESIGN.md).
+//!
+//! Python never runs here: artifacts are self-contained after
+//! `make artifacts`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, Entry, Manifest};
+
+/// A host-side tensor value passed to / returned from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(vec![v])
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub entry: Entry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            self.cache.insert(name.to_string(), Executable { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact with positional inputs (manifest order).
+    /// Returns outputs in manifest order.
+    pub fn execute(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.load(name)?;
+        let exe = &self.cache[name];
+        let entry = &exe.entry;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "artifact `{name}` expects {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (val, spec) in inputs.iter().zip(&entry.inputs) {
+            if val.len() != spec.elements() {
+                bail!(
+                    "input `{}` of `{name}`: expected {} elements, got {}",
+                    spec.name,
+                    spec.elements(),
+                    val.len()
+                );
+            }
+            let lit = match (val, &spec.dtype) {
+                (Value::F32(v), DType::F32) => {
+                    let l = xla::Literal::vec1(v);
+                    if spec.shape.is_empty() {
+                        l.reshape(&[])?
+                    } else {
+                        l.reshape(&spec.dims_i64())?
+                    }
+                }
+                (Value::I32(v), DType::I32) => {
+                    let l = xla::Literal::vec1(v);
+                    if spec.shape.is_empty() {
+                        l.reshape(&[])?
+                    } else {
+                        l.reshape(&spec.dims_i64())?
+                    }
+                }
+                (v, d) => bail!(
+                    "input `{}` of `{name}`: value/dtype mismatch ({:?} vs {:?})",
+                    spec.name,
+                    std::mem::discriminant(v),
+                    d
+                ),
+            };
+            literals.push(lit);
+        }
+        let result = exe.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "artifact `{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+            let v = match spec.dtype {
+                DType::F32 => Value::F32(lit.to_vec::<f32>()?),
+                DType::I32 => Value::I32(lit.to_vec::<i32>()?),
+                DType::I8 => bail!("i8 outputs not supported"),
+            };
+            if v.len() != spec.elements() {
+                bail!(
+                    "output `{}` of `{name}`: expected {} elements, got {}",
+                    spec.name,
+                    spec.elements(),
+                    v.len()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::default_artifact_dir;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::new(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn matmul_artifact_numerics() {
+        let Some(mut rt) = runtime() else { return };
+        // x = I (128), w = counting matrix: out == w.
+        let n = 128usize;
+        let mut x = vec![0f32; n * n];
+        for i in 0..n {
+            x[i * n + i] = 1.0;
+        }
+        let w: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+        let out = rt
+            .execute("matmul_f32_128", &[Value::F32(x), Value::F32(w.clone())])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].as_f32().unwrap();
+        for (a, b) in got.iter().zip(&w) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attention_artifact_masks_padding() {
+        let Some(mut rt) = runtime() else { return };
+        let (h, hkv, dh, s) = (4usize, 2usize, 32usize, 128usize);
+        let q = vec![0.1f32; h * dh];
+        let k: Vec<f32> = (0..s * hkv * dh).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+        let mut v = vec![0f32; s * hkv * dh];
+        // Valid region: constant 2.0; padded region: garbage.
+        for t in 0..s {
+            for j in 0..hkv * dh {
+                v[t * hkv * dh + j] = if t < 10 { 2.0 } else { 1e6 };
+            }
+        }
+        let mask: Vec<f32> = (0..s)
+            .map(|t| if t < 10 { 0.0 } else { -1e30 })
+            .collect();
+        let out = rt
+            .execute(
+                "attn_decode_gqa",
+                &[Value::F32(q), Value::F32(k), Value::F32(v), Value::F32(mask)],
+            )
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        // Convex combination of constant-2.0 values == 2.0 everywhere.
+        for x in got {
+            assert!((x - 2.0).abs() < 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn input_arity_checked() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt.execute("matmul_f32_128", &[]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn input_shape_checked() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt
+            .execute(
+                "matmul_f32_128",
+                &[Value::F32(vec![0.0; 3]), Value::F32(vec![0.0; 128 * 128])],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("elements"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` records, per AOT entry, the positional input
+//! order with shapes/dtypes and the declared outputs, so the runtime
+//! never guesses pytree flattening. Parsed with the in-tree JSON parser.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "int8" => Ok(DType::I8),
+            other => bail!("unsupported dtype `{other}`"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Shape as i64 (what `Literal::reshape` wants).
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model name, kind, ...).
+    pub meta_kind: String,
+    pub meta_model: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let root = parse(text)?;
+        let entries_obj = root
+            .expect("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("`entries` must be an object"))?;
+        let mut entries = Vec::new();
+        for (name, e) in entries_obj {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.expect(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("`{key}` must be an array"))?
+                    .iter()
+                    .map(|io| {
+                        let shape = io
+                            .expect("shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape must be array"))?
+                            .iter()
+                            .map(|d| {
+                                d.as_u64()
+                                    .map(|v| v as usize)
+                                    .ok_or_else(|| anyhow!("bad dim"))
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(TensorSpec {
+                            name: io
+                                .expect("name")?
+                                .as_str()
+                                .ok_or_else(|| anyhow!("name must be string"))?
+                                .to_string(),
+                            shape,
+                            dtype: DType::parse(
+                                io.expect("dtype")?
+                                    .as_str()
+                                    .ok_or_else(|| anyhow!("dtype must be string"))?,
+                            )?,
+                        })
+                    })
+                    .collect()
+            };
+            let meta = e.expect("meta")?;
+            entries.push(Entry {
+                name: name.clone(),
+                file: PathBuf::from(
+                    e.expect("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file must be string"))?,
+                ),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+                meta_kind: meta
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                meta_model: meta
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .map(String::from),
+            });
+        }
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("no artifact entry `{name}`"))
+    }
+
+    pub fn hlo_path(&self, e: &Entry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+/// Default artifact directory: `$CARGO_MANIFEST_DIR/artifacts` when run
+/// in-tree, else `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    let in_tree = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if in_tree.exists() {
+        in_tree
+    } else {
+        PathBuf::from("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "neg_inf": -1e30,
+      "entries": {
+        "matmul_f32_128": {
+          "file": "matmul_f32_128.hlo.txt",
+          "inputs": [
+            {"name": "x", "shape": [128, 128], "dtype": "float32"},
+            {"name": "w", "shape": [128, 128], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"name": "out", "shape": [128, 128], "dtype": "float32"}
+          ],
+          "meta": {"kind": "kernel"}
+        },
+        "decode_tiny_gqa": {
+          "file": "decode_tiny_gqa.hlo.txt",
+          "inputs": [
+            {"name": "x", "shape": [1, 128], "dtype": "float32"},
+            {"name": "pos", "shape": [], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"name": "y", "shape": [1, 128], "dtype": "float32"}
+          ],
+          "meta": {"kind": "decode", "model": "tiny-gqa"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("matmul_f32_128").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![128, 128]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.inputs[0].elements(), 128 * 128);
+        let d = m.entry("decode_tiny_gqa").unwrap();
+        assert_eq!(d.meta_model.as_deref(), Some("tiny-gqa"));
+        assert_eq!(d.inputs[1].dtype, DType::I32);
+        assert_eq!(d.inputs[1].elements(), 1, "scalar counts one element");
+    }
+
+    #[test]
+    fn unknown_entry_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_when_present() {
+        let dir = default_artifact_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entry("decode_tiny_gqa").is_ok());
+            assert!(m.entry("decode_tiny_mha").is_ok());
+            for e in &m.entries {
+                assert!(m.hlo_path(e).exists(), "{} missing", e.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Functional runtime: PJRT loading/execution of the AOT artifacts and
+//! the host-side decode session driver. Python never runs here.
+
+pub mod client;
+pub mod manifest;
+pub mod model_exec;
+
+pub use client::{Executable, Runtime, Value};
+pub use manifest::{default_artifact_dir, DType, Entry, Manifest, TensorSpec};
+pub use model_exec::{DecodeSession, TINY_MAX_SEQ};

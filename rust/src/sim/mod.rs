@@ -1,0 +1,12 @@
+//! Stage-I cycle-level discrete-event simulator (TransInferSim
+//! equivalent): systolic-array timing, in-order windowed scheduling with
+//! subop decomposition, port-contended memory streaming, and occupancy
+//! trace extraction.
+
+pub mod engine;
+pub mod stats;
+pub mod systolic;
+
+pub use engine::{simulate, Simulator};
+pub use stats::{OpBreakdown, SimResult};
+pub use systolic::{matmul_efficiency, matmul_timing, split_subops, MatmulTiming};

@@ -1,0 +1,130 @@
+//! Simulation results: end-to-end timing, per-op-class breakdowns
+//! (Fig. 6), utilization (Fig. 7), traces and access statistics.
+
+use std::collections::BTreeMap;
+
+use crate::config::AccelConfig;
+use crate::trace::{AccessStats, OccupancyTrace};
+use crate::workload::OpClass;
+
+/// Per-op-class latency decomposition (the paper's Fig. 6 bars).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpBreakdown {
+    /// Pure compute cycles (systolic tile schedule / stream beats),
+    /// normalized per parallel subop (elapsed-equivalent).
+    pub compute: u64,
+    /// Cycles waiting on memory: input fetches + streaming-bandwidth
+    /// stalls beyond pure compute.
+    pub memory: u64,
+    /// Cycles between dependency readiness and dispatch (queueing for a
+    /// systolic array / issue window).
+    pub idle: u64,
+    pub count: u64,
+}
+
+impl OpBreakdown {
+    pub fn total(&self) -> u64 {
+        self.compute + self.memory + self.idle
+    }
+}
+
+/// Complete Stage-I output for one run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub workload: String,
+    pub accel: String,
+    /// End-to-end cycles (= ns at 1 GHz).
+    pub total_cycles: u64,
+    /// One occupancy trace per on-chip memory (index 0 = shared SRAM).
+    pub traces: Vec<OccupancyTrace>,
+    /// Aggregated access statistics (all on-chip memories + DRAM).
+    pub stats: AccessStats,
+    /// Per-memory statistics.
+    pub per_mem_stats: Vec<AccessStats>,
+    pub op_breakdown: BTreeMap<OpClass, OpBreakdown>,
+    pub total_macs: u64,
+    /// Sum of busy cycles across all systolic arrays.
+    pub sa_busy_cycles: u64,
+    /// PEs per array x arrays (for utilization math).
+    pub peak_macs_per_cycle: u64,
+    pub freq_ghz: f64,
+    /// Number of systolic arrays (busy cycles are counted per array).
+    pub arrays: u64,
+}
+
+impl SimResult {
+    pub fn seconds(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Shared-SRAM trace (the paper's single-memory analyses).
+    pub fn sram_trace(&self) -> &OccupancyTrace {
+        &self.traces[0]
+    }
+
+    pub fn peak_needed(&self) -> u64 {
+        self.sram_trace().peak_needed()
+    }
+
+    /// Average PE utilization while arrays are busy — the "compute
+    /// efficiency" sense of the paper's Fig. 7 (38% vs 77%).
+    pub fn active_utilization(&self) -> f64 {
+        if self.sa_busy_cycles == 0 {
+            return 0.0;
+        }
+        // peak_macs_per_cycle covers all arrays; sa_busy_cycles sums per
+        // array, so normalize by arrays via the per-array peak.
+        self.total_macs as f64 / (self.sa_busy_cycles as f64 * self.per_sa_peak())
+    }
+
+    /// End-to-end utilization: MACs / (elapsed x full peak).
+    pub fn e2e_utilization(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.total_macs as f64
+            / (self.total_cycles as f64 * self.peak_macs_per_cycle as f64)
+    }
+
+    fn per_sa_peak(&self) -> f64 {
+        // peak_macs_per_cycle = rows*cols*count; busy cycles are counted
+        // per array, so one busy cycle can retire rows*cols MACs.
+        self.peak_macs_per_cycle as f64 / self.num_arrays() as f64
+    }
+
+    fn num_arrays(&self) -> u64 {
+        self.arrays
+    }
+
+    pub fn feasible(&self) -> bool {
+        self.stats.capacity_feasible()
+    }
+}
+
+/// Builder-side helper so the engine fills `SimResult` coherently.
+pub fn new_result(
+    workload: &str,
+    cfg: &AccelConfig,
+    total_cycles: u64,
+    traces: Vec<OccupancyTrace>,
+    stats: AccessStats,
+    per_mem_stats: Vec<AccessStats>,
+    op_breakdown: BTreeMap<OpClass, OpBreakdown>,
+    total_macs: u64,
+    sa_busy_cycles: u64,
+) -> SimResult {
+    SimResult {
+        workload: workload.to_string(),
+        accel: cfg.name.clone(),
+        total_cycles,
+        traces,
+        stats,
+        per_mem_stats,
+        op_breakdown,
+        total_macs,
+        sa_busy_cycles,
+        peak_macs_per_cycle: cfg.sa.rows as u64 * cfg.sa.cols as u64 * cfg.sa.count as u64,
+        freq_ghz: cfg.sa.freq_ghz,
+        arrays: cfg.sa.count as u64,
+    }
+}

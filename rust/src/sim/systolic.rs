@@ -1,0 +1,169 @@
+//! Systolic-array timing model.
+//!
+//! A `rows x cols` weight-stationary array computes a matmul as a grid of
+//! `rows x cols` output tiles. Each tile streams the shared dimension `k`
+//! through the row/column FIFOs: `k` beats of useful work plus pipeline
+//! fill (`rows`) and drain (`cols`) plus an inter-tile FIFO refill bubble
+//! bounded by the feeding memory's access latency.
+//!
+//! This closed-form per-tile cost is what makes attention score ops
+//! (small k = head dim) intrinsically inefficient on a 128x128 array —
+//! the mechanism behind GPT-2 XL's low PE utilization in the paper's
+//! Fig. 7 (Dh=64 fills half the array pipeline) versus DeepSeek's Dh=128.
+
+use crate::config::SaConfig;
+
+/// Timing of one matmul on ONE systolic array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatmulTiming {
+    /// Output tiles in the m and n directions.
+    pub tiles_m: u64,
+    pub tiles_n: u64,
+    /// Cycles per output tile (fill + k + drain + refill bubble).
+    pub cycles_per_tile: u64,
+    /// Total cycles if executed on a single array.
+    pub total_cycles: u64,
+}
+
+impl MatmulTiming {
+    pub fn tiles(&self) -> u64 {
+        self.tiles_m * self.tiles_n
+    }
+}
+
+/// Cycle cost of `[m,k] x [k,n]` on one array of `sa`, fed by a memory
+/// with `mem_latency` cycles access time (the inter-tile refill bubble).
+pub fn matmul_timing(sa: &SaConfig, m: u32, k: u32, n: u32, mem_latency: u64) -> MatmulTiming {
+    let tiles_m = (m as u64).div_ceil(sa.rows as u64);
+    let tiles_n = (n as u64).div_ceil(sa.cols as u64);
+    // Fill/drain span the full array even for partial tiles (the pipeline
+    // must still traverse all PEs).
+    let cycles_per_tile = k as u64 + sa.rows as u64 + sa.cols as u64 + mem_latency;
+    MatmulTiming {
+        tiles_m,
+        tiles_n,
+        cycles_per_tile,
+        total_cycles: tiles_m * tiles_n * cycles_per_tile,
+    }
+}
+
+/// MAC efficiency on one array: useful MACs / (cycles * PEs). This is
+/// the quantity the §Perf L1 analysis reports as MXU utilization.
+pub fn matmul_efficiency(sa: &SaConfig, m: u32, k: u32, n: u32, mem_latency: u64) -> f64 {
+    let t = matmul_timing(sa, m, k, n, mem_latency);
+    let macs = m as f64 * k as f64 * n as f64;
+    let pe = (sa.rows * sa.cols) as f64;
+    macs / (t.total_cycles as f64 * pe)
+}
+
+/// Split a matmul into `subops` sub-operations along its widest output
+/// dimension (the paper's `subops=4` decomposition across the four SAs).
+/// Returns per-subop (m, k, n) chunks; fewer than `subops` when the op is
+/// too small to split.
+pub fn split_subops(m: u32, k: u32, n: u32, subops: u32) -> Vec<(u32, u32, u32)> {
+    let split_dim = |dim: u32, parts: u32| -> Vec<u32> {
+        let parts = parts.min(dim).max(1);
+        let base = dim / parts;
+        let rem = dim % parts;
+        (0..parts)
+            .map(|i| base + u32::from(i < rem))
+            .filter(|&c| c > 0)
+            .collect()
+    };
+    if m >= n {
+        split_dim(m, subops).into_iter().map(|c| (c, k, n)).collect()
+    } else {
+        split_dim(n, subops).into_iter().map(|c| (m, k, c)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn sa() -> SaConfig {
+        SaConfig {
+            rows: 128,
+            cols: 128,
+            count: 4,
+            freq_ghz: 1.0,
+        }
+    }
+
+    #[test]
+    fn single_tile_cost() {
+        let t = matmul_timing(&sa(), 128, 128, 128, 32);
+        assert_eq!(t.tiles(), 1);
+        assert_eq!(t.cycles_per_tile, 128 + 128 + 128 + 32);
+        assert_eq!(t.total_cycles, 416);
+    }
+
+    #[test]
+    fn partial_tiles_round_up() {
+        let t = matmul_timing(&sa(), 1, 1600, 6400, 32);
+        assert_eq!(t.tiles_m, 1);
+        assert_eq!(t.tiles_n, 50);
+    }
+
+    #[test]
+    fn small_k_is_inefficient() {
+        // GPT-2 XL attention scores: k = Dh = 64 -> low efficiency;
+        // DeepSeek's Dh = 128 does better per tile.
+        let e64 = matmul_efficiency(&sa(), 2048, 64, 2048, 32);
+        let e128 = matmul_efficiency(&sa(), 2048, 128, 2048, 32);
+        let e_proj = matmul_efficiency(&sa(), 2048, 1600, 1600, 32);
+        assert!(e64 < 0.25, "e64={e64}");
+        assert!(e128 > e64);
+        assert!(e_proj > 0.8, "projections should run near peak: {e_proj}");
+    }
+
+    #[test]
+    fn split_along_widest() {
+        let s = split_subops(2048, 64, 512, 4);
+        assert_eq!(s, vec![(512, 64, 512); 4]);
+        let s = split_subops(128, 64, 2048, 4);
+        assert_eq!(s, vec![(128, 64, 512); 4]);
+    }
+
+    #[test]
+    fn split_tiny_ops_degenerate() {
+        let s = split_subops(1, 64, 2, 4);
+        assert_eq!(s.len(), 2); // n=2 can only split two ways
+        let s = split_subops(1, 64, 1, 4);
+        assert_eq!(s, vec![(1, 64, 1)]);
+    }
+
+    #[test]
+    fn prop_split_preserves_work() {
+        check("subop-split-preserves-macs", 200, |rng| {
+            let (m, k, n) = (
+                rng.range(1, 4096) as u32,
+                rng.range(1, 4096) as u32,
+                rng.range(1, 4096) as u32,
+            );
+            let subops = rng.range(1, 8) as u32;
+            let parts = split_subops(m, k, n, subops);
+            let macs: u64 = parts
+                .iter()
+                .map(|&(pm, pk, pn)| pm as u64 * pk as u64 * pn as u64)
+                .sum();
+            assert_eq!(macs, m as u64 * k as u64 * n as u64);
+            assert!(parts.len() <= subops as usize);
+        });
+    }
+
+    #[test]
+    fn prop_efficiency_bounded() {
+        check("sa-efficiency-in-unit-interval", 100, |rng| {
+            let e = matmul_efficiency(
+                &sa(),
+                rng.range(1, 8192) as u32,
+                rng.range(1, 8192) as u32,
+                rng.range(1, 8192) as u32,
+                rng.range(0, 100),
+            );
+            assert!(e > 0.0 && e <= 1.0, "e={e}");
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Memory access statistics — the second Stage-I output (paper
+//! Stage-I §A.4): read/write counts feeding Eq. 3's dynamic energy, plus
+//! traffic/eviction accounting for the sizing loop.
+
+use std::collections::BTreeMap;
+
+/// Access-granularity note: the simulator issues whole-tensor transfers;
+/// counts here are in *interface words* (one access = one
+/// `bytes_per_cycle`-wide beat, 64 B on the 512-bit SRAM port), which is
+/// what CACTI's per-access energy corresponds to.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AccessStats {
+    /// SRAM read accesses (interface words).
+    pub reads: u64,
+    /// SRAM write accesses (interface words).
+    pub writes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// Evictions of obsolete data (free, no traffic).
+    pub evictions_obsolete: u64,
+    /// Capacity-induced write-backs of *needed* data (the condition the
+    /// Stage-I sizing loop eliminates).
+    pub writebacks: u64,
+    pub writeback_bytes: u64,
+    /// Refetches of previously written-back tensors.
+    pub refetches: u64,
+    /// DRAM traffic.
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// Per tensor-kind byte traffic (reporting).
+    pub by_kind: BTreeMap<&'static str, KindStats>,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KindStats {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+impl AccessStats {
+    /// Record an SRAM read of `bytes` with the interface width `word`.
+    pub fn sram_read(&mut self, bytes: u64, word: u32, kind: &'static str) {
+        self.reads += bytes.div_ceil(word as u64);
+        self.read_bytes += bytes;
+        self.by_kind.entry(kind).or_default().read_bytes += bytes;
+    }
+
+    pub fn sram_write(&mut self, bytes: u64, word: u32, kind: &'static str) {
+        self.writes += bytes.div_ceil(word as u64);
+        self.write_bytes += bytes;
+        self.by_kind.entry(kind).or_default().write_bytes += bytes;
+    }
+
+    pub fn dram_read(&mut self, bytes: u64) {
+        self.dram_read_bytes += bytes;
+    }
+
+    pub fn dram_write(&mut self, bytes: u64) {
+        self.dram_write_bytes += bytes;
+    }
+
+    pub fn writeback(&mut self, bytes: u64) {
+        self.writebacks += 1;
+        self.writeback_bytes += bytes;
+        self.dram_write_bytes += bytes;
+    }
+
+    /// True when the run needed no capacity-induced write-backs — the
+    /// feasibility condition of the Stage-I sizing loop.
+    pub fn capacity_feasible(&self) -> bool {
+        self.writebacks == 0
+    }
+
+    pub fn merge(&mut self, other: &AccessStats) {
+        self.reads += other.reads;
+        self.writes += other.writes;
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+        self.evictions_obsolete += other.evictions_obsolete;
+        self.writebacks += other.writebacks;
+        self.writeback_bytes += other.writeback_bytes;
+        self.refetches += other.refetches;
+        self.dram_read_bytes += other.dram_read_bytes;
+        self.dram_write_bytes += other.dram_write_bytes;
+        for (k, v) in &other.by_kind {
+            let e = self.by_kind.entry(k).or_default();
+            e.read_bytes += v.read_bytes;
+            e.write_bytes += v.write_bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_rounding() {
+        let mut s = AccessStats::default();
+        s.sram_read(65, 64, "act"); // 65 bytes = 2 x 64B beats
+        assert_eq!(s.reads, 2);
+        assert_eq!(s.read_bytes, 65);
+        s.sram_write(64, 64, "act");
+        assert_eq!(s.writes, 1);
+    }
+
+    #[test]
+    fn feasibility() {
+        let mut s = AccessStats::default();
+        assert!(s.capacity_feasible());
+        s.writeback(100);
+        assert!(!s.capacity_feasible());
+        assert_eq!(s.dram_write_bytes, 100);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = AccessStats::default();
+        a.sram_read(128, 64, "weight");
+        let mut b = AccessStats::default();
+        b.sram_read(64, 64, "weight");
+        b.sram_write(64, 64, "kv");
+        a.merge(&b);
+        assert_eq!(a.reads, 3);
+        assert_eq!(a.by_kind["weight"].read_bytes, 192);
+        assert_eq!(a.by_kind["kv"].write_bytes, 64);
+    }
+}

@@ -1,0 +1,146 @@
+//! Trace (de)serialization: JSON for tooling, CSV for plotting.
+//!
+//! Stage II can run entirely offline from a saved trace (`repro simulate
+//! --save-trace` -> `repro bank --trace`), decoupling the expensive
+//! simulation from the cheap exploration exactly as the paper's two-stage
+//! flow prescribes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::occupancy::OccupancyTrace;
+
+pub fn trace_to_json(tr: &OccupancyTrace) -> Json {
+    Json::obj(vec![
+        ("memory", Json::str(tr.memory.clone())),
+        ("capacity", Json::num(tr.capacity as f64)),
+        (
+            "end_time",
+            tr.end_time()
+                .map(|t| Json::num(t as f64))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "samples",
+            Json::arr(tr.samples().iter().map(|s| {
+                Json::arr([
+                    Json::num(s.t as f64),
+                    Json::num(s.needed as f64),
+                    Json::num(s.obsolete as f64),
+                ])
+            })),
+        ),
+    ])
+}
+
+pub fn trace_from_json(j: &Json) -> Result<OccupancyTrace> {
+    let memory = j
+        .expect("memory")?
+        .as_str()
+        .ok_or_else(|| anyhow!("memory must be a string"))?;
+    let capacity = j
+        .expect("capacity")?
+        .as_u64()
+        .ok_or_else(|| anyhow!("capacity must be u64"))?;
+    let mut tr = OccupancyTrace::new(memory, capacity);
+    let samples = j
+        .expect("samples")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("samples must be an array"))?;
+    for s in samples {
+        let trip = s.as_arr().ok_or_else(|| anyhow!("sample must be array"))?;
+        if trip.len() != 3 {
+            return Err(anyhow!("sample must have 3 fields"));
+        }
+        let get = |i: usize| -> Result<u64> {
+            trip[i]
+                .as_u64()
+                .ok_or_else(|| anyhow!("sample field {i} must be u64"))
+        };
+        tr.record(get(0)?, get(1)?, get(2)?);
+    }
+    if let Some(end) = j.expect("end_time")?.as_u64() {
+        tr.finalize(end);
+    }
+    tr.validate()?;
+    Ok(tr)
+}
+
+pub fn save_trace(tr: &OccupancyTrace, path: &Path) -> Result<()> {
+    std::fs::write(path, trace_to_json(tr).to_string_compact())
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+pub fn load_trace(path: &Path) -> Result<OccupancyTrace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace from {}", path.display()))?;
+    trace_from_json(&parse(&text)?)
+}
+
+/// CSV rows `t_cycles,needed,obsolete,free` (Fig. 5's stacked regions).
+pub fn trace_to_csv(tr: &OccupancyTrace) -> String {
+    let mut out = String::from("t_cycles,needed_bytes,obsolete_bytes,free_bytes\n");
+    for s in tr.samples() {
+        let free = tr.capacity.saturating_sub(s.needed + s.obsolete);
+        out.push_str(&format!("{},{},{},{}\n", s.t, s.needed, s.obsolete, free));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", 1 << 20);
+        tr.record(10, 100, 0);
+        tr.record(20, 500, 50);
+        tr.record(30, 200, 350);
+        tr.finalize(40);
+        tr
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let tr = sample_trace();
+        let j = trace_to_json(&tr);
+        let back = trace_from_json(&j).unwrap();
+        assert_eq!(back.memory, tr.memory);
+        assert_eq!(back.capacity, tr.capacity);
+        assert_eq!(back.samples(), tr.samples());
+        assert_eq!(back.end_time(), tr.end_time());
+        assert_eq!(back.peak_needed(), 500);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("trapti-test-trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        let tr = sample_trace();
+        save_trace(&tr, &path).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(back.samples(), tr.samples());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_includes_free_column() {
+        let csv = trace_to_csv(&sample_trace());
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines[0], "t_cycles,needed_bytes,obsolete_bytes,free_bytes");
+        assert_eq!(lines.len(), 5); // header + t=0 + 3 samples
+        assert!(lines[2].starts_with("10,100,0,"));
+    }
+
+    #[test]
+    fn rejects_corrupt_json() {
+        assert!(trace_from_json(&parse("{}").unwrap()).is_err());
+        let bad = parse(r#"{"memory":"m","capacity":10,"end_time":5,"samples":[[0,99,99]]}"#)
+            .unwrap();
+        assert!(trace_from_json(&bad).is_err(), "over-capacity must fail");
+    }
+}

@@ -1,0 +1,10 @@
+//! Stage-I artifacts: time-resolved occupancy traces and memory access
+//! statistics, with (de)serialization so Stage II can run fully offline.
+
+pub mod access;
+pub mod io;
+pub mod occupancy;
+
+pub use access::{AccessStats, KindStats};
+pub use io::{load_trace, save_trace, trace_from_json, trace_to_csv, trace_to_json};
+pub use occupancy::{OccupancyTrace, Sample, Segment};

@@ -1,0 +1,305 @@
+//! Time-resolved SRAM occupancy trace — the key Stage-I artifact.
+//!
+//! The trace is piecewise-constant: a sample `(t, needed, obsolete)`
+//! holds from `t` until the next sample. Stage II consumes the segments
+//! (Δt_k of the paper's Eq. 4) directly; peak queries back the paper's
+//! Fig. 5 annotations and the sizing loop.
+
+use anyhow::{ensure, Result};
+
+/// One change-point of the occupancy state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sample {
+    /// Time in cycles.
+    pub t: u64,
+    /// Bytes of resident tensors still required by future ops.
+    pub needed: u64,
+    /// Bytes of resident tensors with no remaining consumers (evictable
+    /// without correctness impact).
+    pub obsolete: u64,
+}
+
+impl Sample {
+    pub fn occupied(&self) -> u64 {
+        self.needed + self.obsolete
+    }
+}
+
+/// A piecewise-constant segment `[t0, t1)` (the paper's Δt_k).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub t0: u64,
+    pub t1: u64,
+    pub needed: u64,
+    pub obsolete: u64,
+}
+
+impl Segment {
+    pub fn dt(&self) -> u64 {
+        self.t1 - self.t0
+    }
+
+    pub fn occupied(&self) -> u64 {
+        self.needed + self.obsolete
+    }
+}
+
+/// Occupancy trace of one memory over a simulated run.
+#[derive(Debug, Clone)]
+pub struct OccupancyTrace {
+    /// Memory name (e.g. "sram", "dm1").
+    pub memory: String,
+    /// Memory capacity in bytes (the Fig. 5 "free" region is
+    /// `capacity - needed - obsolete`).
+    pub capacity: u64,
+    samples: Vec<Sample>,
+    /// End-of-run time (set by `finalize`); last sample extends to here.
+    end_time: Option<u64>,
+}
+
+impl OccupancyTrace {
+    pub fn new(memory: &str, capacity: u64) -> Self {
+        Self {
+            memory: memory.to_string(),
+            capacity,
+            samples: vec![Sample {
+                t: 0,
+                needed: 0,
+                obsolete: 0,
+            }],
+            end_time: None,
+        }
+    }
+
+    /// Record state at time `t` (monotonic non-decreasing). Consecutive
+    /// identical states coalesce; same-time updates overwrite (only the
+    /// final state at an instant is observable).
+    pub fn record(&mut self, t: u64, needed: u64, obsolete: u64) {
+        let last = self.samples.last_mut().expect("never empty");
+        debug_assert!(t >= last.t, "time went backwards: {t} < {}", last.t);
+        if last.t == t {
+            last.needed = needed;
+            last.obsolete = obsolete;
+            // Coalesce with predecessor if the overwrite undid the change.
+            if self.samples.len() >= 2 {
+                let prev = self.samples[self.samples.len() - 2];
+                let cur = *self.samples.last().unwrap();
+                if prev.needed == cur.needed && prev.obsolete == cur.obsolete {
+                    self.samples.pop();
+                }
+            }
+        } else if last.needed != needed || last.obsolete != obsolete {
+            self.samples.push(Sample {
+                t,
+                needed,
+                obsolete,
+            });
+        }
+    }
+
+    /// Close the trace at the run's end time.
+    pub fn finalize(&mut self, end: u64) {
+        let last_t = self.samples.last().unwrap().t;
+        assert!(end >= last_t, "finalize before last sample");
+        self.end_time = Some(end);
+    }
+
+    pub fn end_time(&self) -> Option<u64> {
+        self.end_time
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Iterate piecewise-constant segments. Requires `finalize`.
+    pub fn segments(&self) -> impl Iterator<Item = Segment> + '_ {
+        let end = self.end_time.expect("trace not finalized");
+        self.samples.iter().enumerate().filter_map(move |(i, s)| {
+            let t1 = self
+                .samples
+                .get(i + 1)
+                .map(|n| n.t)
+                .unwrap_or(end);
+            (t1 > s.t).then_some(Segment {
+                t0: s.t,
+                t1,
+                needed: s.needed,
+                obsolete: s.obsolete,
+            })
+        })
+    }
+
+    /// Peak bytes of *needed* data — the paper's "peak required capacity".
+    pub fn peak_needed(&self) -> u64 {
+        self.samples.iter().map(|s| s.needed).max().unwrap_or(0)
+    }
+
+    /// Peak total occupancy (needed + obsolete).
+    pub fn peak_occupied(&self) -> u64 {
+        self.samples.iter().map(|s| s.occupied()).max().unwrap_or(0)
+    }
+
+    /// Time-weighted average needed bytes.
+    pub fn avg_needed(&self) -> f64 {
+        let end = self.end_time.expect("trace not finalized");
+        if end == 0 {
+            return 0.0;
+        }
+        let sum: u128 = self
+            .segments()
+            .map(|seg| seg.needed as u128 * seg.dt() as u128)
+            .sum();
+        sum as f64 / end as f64
+    }
+
+    /// Integral of occupancy over time, byte-cycles (for the analytic
+    /// baseline comparison).
+    pub fn needed_byte_cycles(&self) -> u128 {
+        self.segments()
+            .map(|seg| seg.needed as u128 * seg.dt() as u128)
+            .sum()
+    }
+
+    /// Validate invariants: monotonic time, occupancy within capacity.
+    pub fn validate(&self) -> Result<()> {
+        for w in self.samples.windows(2) {
+            ensure!(w[0].t < w[1].t, "non-monotonic samples");
+            ensure!(
+                w[0].needed != w[1].needed || w[0].obsolete != w[1].obsolete,
+                "uncoalesced duplicate sample at t={}",
+                w[1].t
+            );
+        }
+        for s in &self.samples {
+            ensure!(
+                s.occupied() <= self.capacity,
+                "occupancy {} exceeds capacity {} at t={}",
+                s.occupied(),
+                self.capacity,
+                s.t
+            );
+        }
+        Ok(())
+    }
+
+    /// Downsample to at most `n` evenly spaced points (plotting).
+    pub fn downsample(&self, n: usize) -> Vec<Sample> {
+        if self.samples.len() <= n || n < 2 {
+            return self.samples.clone();
+        }
+        let end = self.end_time.unwrap_or(self.samples.last().unwrap().t);
+        let mut out = Vec::with_capacity(n);
+        let mut idx = 0;
+        for i in 0..n {
+            let t = end * i as u64 / (n as u64 - 1);
+            while idx + 1 < self.samples.len() && self.samples[idx + 1].t <= t {
+                idx += 1;
+            }
+            let s = self.samples[idx];
+            out.push(Sample {
+                t,
+                needed: s.needed,
+                obsolete: s.obsolete,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn mk(events: &[(u64, u64, u64)], end: u64) -> OccupancyTrace {
+        let mut t = OccupancyTrace::new("sram", 1000);
+        for &(ti, n, o) in events {
+            t.record(ti, n, o);
+        }
+        t.finalize(end);
+        t
+    }
+
+    #[test]
+    fn coalesces_identical_states() {
+        let t = mk(&[(5, 10, 0), (7, 10, 0), (9, 20, 0)], 10);
+        assert_eq!(t.samples().len(), 3); // t=0, t=5, t=9
+    }
+
+    #[test]
+    fn same_time_overwrites() {
+        let t = mk(&[(5, 10, 0), (5, 30, 2)], 10);
+        assert_eq!(t.samples().len(), 2);
+        assert_eq!(t.samples()[1], Sample { t: 5, needed: 30, obsolete: 2 });
+    }
+
+    #[test]
+    fn overwrite_back_to_previous_coalesces() {
+        let t = mk(&[(5, 10, 0), (5, 0, 0)], 10);
+        assert_eq!(t.samples().len(), 1, "no-op change must disappear");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn segments_cover_run_exactly() {
+        let t = mk(&[(5, 10, 0), (9, 20, 4)], 12);
+        let segs: Vec<_> = t.segments().collect();
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0], Segment { t0: 0, t1: 5, needed: 0, obsolete: 0 });
+        assert_eq!(segs[1], Segment { t0: 5, t1: 9, needed: 10, obsolete: 0 });
+        assert_eq!(segs[2], Segment { t0: 9, t1: 12, needed: 20, obsolete: 4 });
+        let total: u64 = segs.iter().map(|s| s.dt()).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn peaks_and_average() {
+        let t = mk(&[(2, 100, 0), (4, 50, 60), (8, 0, 0)], 10);
+        assert_eq!(t.peak_needed(), 100);
+        assert_eq!(t.peak_occupied(), 110);
+        // avg = (0*2 + 100*2 + 50*4 + 0*2)/10 = 40
+        assert!((t.avg_needed() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_over_capacity() {
+        let mut t = OccupancyTrace::new("sram", 100);
+        t.record(1, 90, 20);
+        t.finalize(2);
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn downsample_preserves_endpoints() {
+        let t = mk(&[(10, 5, 0), (20, 9, 1), (30, 2, 2)], 100);
+        // 4 samples > n=3: actually downsampled.
+        let d = t.downsample(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].t, 0);
+        assert_eq!(d[2].t, 100);
+        assert_eq!(d[2].needed, 2);
+        // n >= samples: passthrough.
+        assert_eq!(t.downsample(10).len(), t.samples().len());
+    }
+
+    #[test]
+    fn prop_random_traces_consistent() {
+        check("occupancy-invariants", 100, |rng: &mut Rng| {
+            let mut tr = OccupancyTrace::new("m", u64::MAX);
+            let mut t = 0;
+            for _ in 0..rng.range(1, 200) {
+                t += rng.range(0, 50);
+                tr.record(t, rng.below(1 << 30), rng.below(1 << 30));
+            }
+            tr.finalize(t + rng.range(0, 10));
+            tr.validate().unwrap();
+            // Segment Δt sums to end time.
+            let total: u64 = tr.segments().map(|s| s.dt()).sum();
+            assert_eq!(total, tr.end_time().unwrap());
+            // avg <= peak.
+            assert!(tr.avg_needed() <= tr.peak_needed() as f64 + 1e-9);
+        });
+    }
+}

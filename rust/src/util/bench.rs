@@ -1,0 +1,90 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each bench target (rust/benches/*.rs, `harness = false`) regenerates
+//! one paper table/figure through `coordinator::experiments` and times
+//! the end-to-end generation with warmup + repeated measurement,
+//! reporting mean / min / max / stddev like criterion's summary line.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<28} iters={:<3} mean={:>10.3?} min={:>10.3?} \
+             max={:>10.3?} stddev={:>9.3?}",
+            self.name, self.iters, self.mean, self.min, self.max, self.stddev
+        );
+    }
+}
+
+/// Time `f` with one warmup run and `iters` measured runs. The closure's
+/// output is returned from the *last* run so benches can render the
+/// regenerated table after timing.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> (BenchResult, T) {
+    assert!(iters >= 1);
+    let _warmup = f();
+    let mut samples = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed());
+        last = Some(out);
+    }
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters as u32;
+    let min = *samples.iter().min().unwrap();
+    let max = *samples.iter().max().unwrap();
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / iters as f64;
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        min,
+        max,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    };
+    result.report();
+    (result, last.expect("iters >= 1"))
+}
+
+/// Iteration count from `TRAPTI_BENCH_ITERS` (default 3; CI may use 1).
+pub fn default_iters() -> usize {
+    std::env::var("TRAPTI_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_output_and_stats() {
+        let (r, out) = bench("noop", 5, || 42);
+        assert_eq!(out, 42);
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean && r.mean <= r.max + Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn default_iters_floor() {
+        assert!(default_iters() >= 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! Self-contained substrate utilities (the offline environment provides no
+//! serde/clap/rand/proptest, so the crate carries minimal equivalents).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

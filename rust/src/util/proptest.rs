@@ -1,0 +1,79 @@
+//! Minimal property-testing harness (no proptest crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases`
+//! independently seeded deterministic RNGs. On failure it reports the
+//! failing seed so the case replays exactly with `replay(seed, f)`.
+//! No shrinking — generators here are kept small and structured so raw
+//! failing seeds are already debuggable.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` deterministic seeds; panic with the failing seed on
+/// the first property violation (assert inside `f`).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        // Spread seeds so adjacent cases are decorrelated.
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property `{name}` failed at case {case} (replay seed \
+                 {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let err = std::panic::catch_unwind(|| {
+            check("always-fails", 3, |rng| {
+                let v = rng.below(10);
+                assert!(v > 100, "v={v} not > 100");
+            });
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("always-fails"), "{msg}");
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut first = None;
+        check("record", 1, |rng| {
+            first = Some(rng.next_u64());
+        });
+        let seed = 0xC0FFEE ^ 0u64;
+        replay(seed, |rng| {
+            assert_eq!(rng.next_u64(), first.unwrap());
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! Plain-text table and ASCII line-plot rendering for paper-style reports.
+//!
+//! The `repro report <exp>` subcommands print tables whose rows mirror the
+//! paper's Tables I-III and series that mirror Figs. 1-9; this module is
+//! their shared presentation layer (plus CSV emission for plotting).
+
+use std::fmt::Write as _;
+
+/// Column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table `{}`",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "{}", self.title);
+        }
+        let _ = writeln!(out, "{sep}");
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                let _ = write!(line, "| {:>w$} ", cells[i], w = widths[i]);
+            }
+            line + "|"
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// ASCII line plot of one or more named series sharing an x axis.
+/// Good enough to eyeball the occupancy traces (Fig. 5/8) in a terminal;
+/// exact values go to CSV alongside.
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+    pub y_label: String,
+    pub x_label: String,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            width: 100,
+            height: 20,
+            series: Vec::new(),
+            y_label: String::new(),
+            x_label: String::new(),
+        }
+    }
+
+    pub fn series(mut self, name: &str, pts: Vec<(f64, f64)>) -> Self {
+        self.series.push((name.to_string(), pts));
+        self
+    }
+
+    pub fn labels(mut self, x: &str, y: &str) -> Self {
+        self.x_label = x.to_string();
+        self.y_label = y.to_string();
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let marks = ['*', 'o', '+', 'x', '#', '@'];
+        let all: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, pts)| pts.iter().copied())
+            .collect();
+        if all.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (0.0f64, f64::NEG_INFINITY);
+        for &(x, y) in &all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if (xmax - xmin).abs() < f64::EPSILON {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < f64::EPSILON {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            let mark = marks[si % marks.len()];
+            // Step-interpolate between points so piecewise-constant traces
+            // (occupancy) render as filled lines, not sparse dots.
+            for w in pts.windows(2).chain(std::iter::once(&pts[pts.len() - 1..])) {
+                let (x0, y0) = w[0];
+                let x1 = w.get(1).map(|p| p.0).unwrap_or(x0);
+                let c0 = (((x0 - xmin) / (xmax - xmin)) * (self.width - 1) as f64)
+                    .round() as usize;
+                let c1 = (((x1 - xmin) / (xmax - xmin)) * (self.width - 1) as f64)
+                    .round() as usize;
+                let r = ((1.0 - (y0 - ymin) / (ymax - ymin))
+                    * (self.height - 1) as f64)
+                    .round() as usize;
+                for c in c0..=c1.min(self.width - 1) {
+                    grid[r.min(self.height - 1)][c] = mark;
+                }
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+            .collect();
+        let _ = writeln!(out, "  [{}]   y: {}", legend.join("  "), self.y_label);
+        for (i, row) in grid.iter().enumerate() {
+            let yv = ymax - (ymax - ymin) * i as f64 / (self.height - 1) as f64;
+            let _ = writeln!(out, "{:>10.1} |{}", yv, row.iter().collect::<String>());
+        }
+        let _ = writeln!(
+            out,
+            "{:>10} +{}",
+            "",
+            "-".repeat(self.width)
+        );
+        let _ = writeln!(
+            out,
+            "{:>10}  {:<.1}{:>w$.1}   x: {}",
+            "",
+            xmin,
+            xmax,
+            self.x_label,
+            w = self.width - format!("{xmin:.1}").len()
+        );
+        out
+    }
+}
+
+/// Human-readable byte size (MiB with 1 decimal, matching paper style).
+pub fn fmt_mib(bytes: u64) -> String {
+    format!("{:.1} MiB", bytes as f64 / (1024.0 * 1024.0))
+}
+
+/// Format a signed percentage delta like the paper's ΔE/ΔA columns.
+pub fn fmt_delta_pct(new: f64, base: f64) -> String {
+    if base == 0.0 {
+        return "n/a".into();
+    }
+    let pct = (new - base) / base * 100.0;
+    format!("{:+.1}", pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("| 100 |"));
+        assert!(s.lines().all(|l| l.len() <= 20));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("T", &["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("\"a,b\",c"));
+        assert!(csv.contains("\"x\"\"y\""));
+    }
+
+    #[test]
+    fn plot_renders_without_panic() {
+        let p = AsciiPlot::new("demo")
+            .series("s", vec![(0.0, 0.0), (1.0, 5.0), (2.0, 3.0)])
+            .labels("t", "occ");
+        let s = p.render();
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_mib(107 * 1024 * 1024 + 300 * 1024), "107.3 MiB");
+        assert_eq!(fmt_delta_pct(90.0, 100.0), "-10.0");
+        assert_eq!(fmt_delta_pct(110.0, 100.0), "+10.0");
+        assert_eq!(fmt_delta_pct(1.0, 0.0), "n/a");
+    }
+}

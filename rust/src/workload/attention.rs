@@ -1,0 +1,426 @@
+//! Attention-block graph builders (MHA / GQA / MQA, prefill and decode).
+//!
+//! Tensor sizes are bytes at 1 byte/element (uniform 8-bit operands,
+//! paper §IV-A). Positional-encoding ops are omitted per the paper
+//! ("element-wise and do not materially affect the SRAM occupancy
+//! trends"), consistently for both models.
+
+use super::graph::GraphBuilder;
+use super::models::ModelPreset;
+use super::op::OpKind;
+use super::tensor::{TensorId, TensorKind};
+
+/// Per-layer tensors the attention block produces/uses.
+pub struct AttnBlockOut {
+    /// Residual-stream output of the attention sub-block.
+    pub out: TensorId,
+    /// Key cache tensor for this layer.
+    pub k_cache: TensorId,
+    /// Value cache tensor for this layer.
+    pub v_cache: TensorId,
+}
+
+/// Build the prefill attention sub-block for `layer`:
+/// norm -> qkv -> per-head (score -> softmax -> ctx) -> out-proj -> add.
+///
+/// Per-head score/prob matrices are MxM at 1 byte: the dominant transient
+/// for MHA (25 heads x 4 MiB at M=2048 for GPT-2 XL). K/V are written
+/// once per layer as whole-layer cache tensors (M x Hkv x Dh each).
+pub fn build_prefill_attention(
+    b: &mut GraphBuilder,
+    m: &ModelPreset,
+    layer: u16,
+    seq: u32,
+    x: TensorId,
+) -> AttnBlockOut {
+    let d = m.d_model;
+    // Attention scores/probabilities are kept at 16-bit internal
+    // precision (int8 MAC outputs accumulate in int32 and softmax runs on
+    // 16-bit fixed point before re-quantization — standard for 8-bit
+    // accelerators; DESIGN.md §5). Hence 2 bytes per score element.
+    let mm = 2 * seq as u64 * seq as u64;
+
+    // Pre-norm.
+    let w_ln1 = b.tensor(
+        format!("w.ln1.l{layer}"),
+        2 * d as u64,
+        TensorKind::Weight,
+        layer,
+    );
+    let x_n = b.tensor(
+        format!("xn1.l{layer}"),
+        seq as u64 * d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    b.op(
+        format!("norm:ln1.l{layer}"),
+        layer,
+        OpKind::Norm {
+            elems: seq as u64 * d as u64,
+        },
+        vec![x, w_ln1],
+        vec![x_n],
+    );
+
+    // Fused QKV projection writing q + per-layer K/V cache tensors.
+    let w_qkv = b.tensor(
+        format!("w.qkv.l{layer}"),
+        d as u64 * m.qkv_out_dim() as u64,
+        TensorKind::Weight,
+        layer,
+    );
+    let q = b.tensor(
+        format!("q.l{layer}"),
+        seq as u64 * (m.heads * m.d_head) as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    let kv_bytes = seq as u64 * (m.kv_heads * m.d_head) as u64;
+    let k_cache = b.tensor(format!("k.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
+    let v_cache = b.tensor(format!("v.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
+    b.op(
+        format!("qkv:l{layer}"),
+        layer,
+        OpKind::MatMul {
+            m: seq,
+            k: d,
+            n: m.qkv_out_dim(),
+        },
+        vec![x_n, w_qkv],
+        vec![q, k_cache, v_cache],
+    );
+
+    // Per-head attention. Query head h reads KV head h / group.
+    let mut ctx_heads = Vec::with_capacity(m.heads as usize);
+    for h in 0..m.heads {
+        let s = b.tensor(
+            format!("s.l{layer}.h{h}"),
+            mm,
+            TensorKind::Score,
+            layer,
+        );
+        b.op(
+            format!("score:l{layer}.h{h}"),
+            layer,
+            OpKind::MatMul {
+                m: seq,
+                k: m.d_head,
+                n: seq,
+            },
+            vec![q, k_cache],
+            vec![s],
+        );
+        // Softmax is fused in place: probabilities overwrite the score
+        // matrix (read+write same tensor), so each head carries ONE MxM
+        // transient from score production until context consumption.
+        b.op(
+            format!("softmax:l{layer}.h{h}"),
+            layer,
+            OpKind::Softmax {
+                rows: seq,
+                cols: seq,
+            },
+            vec![s],
+            vec![s],
+        );
+        let c = b.tensor(
+            format!("c.l{layer}.h{h}"),
+            seq as u64 * m.d_head as u64,
+            TensorKind::Activation,
+            layer,
+        );
+        b.op(
+            format!("ctx:l{layer}.h{h}"),
+            layer,
+            OpKind::MatMul {
+                m: seq,
+                k: seq,
+                n: m.d_head,
+            },
+            vec![s, v_cache],
+            vec![c],
+        );
+        ctx_heads.push(c);
+    }
+
+    // Output projection over the concatenated heads.
+    let w_o = b.tensor(
+        format!("w.o.l{layer}"),
+        (m.heads * m.d_head) as u64 * d as u64,
+        TensorKind::Weight,
+        layer,
+    );
+    let attn_out = b.tensor(
+        format!("attn.l{layer}"),
+        seq as u64 * d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    let mut proj_reads = ctx_heads;
+    proj_reads.push(w_o);
+    b.op(
+        format!("proj:l{layer}"),
+        layer,
+        OpKind::MatMul {
+            m: seq,
+            k: m.heads * m.d_head,
+            n: d,
+        },
+        proj_reads,
+        vec![attn_out],
+    );
+
+    // Residual add.
+    let x1 = b.tensor(
+        format!("x1.l{layer}"),
+        seq as u64 * d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    b.op(
+        format!("add:res1.l{layer}"),
+        layer,
+        OpKind::Elementwise {
+            elems: seq as u64 * d as u64,
+            inputs: 2,
+        },
+        vec![x, attn_out],
+        vec![x1],
+    );
+
+    AttnBlockOut {
+        out: x1,
+        k_cache,
+        v_cache,
+    }
+}
+
+/// Build one decode-step attention sub-block (single token at position
+/// `pos`, KV caches updated in place). Head-batched op granularity:
+/// score is one `[H, Dh] x [Dh, ctx]` matmul per layer (TransInferSim
+/// groups per-token per-layer work; per-head splitting at m=1 would only
+/// add scheduling noise).
+#[allow(clippy::too_many_arguments)]
+pub fn build_decode_attention(
+    b: &mut GraphBuilder,
+    m: &ModelPreset,
+    layer: u16,
+    pos: u32,
+    x: TensorId,
+    w: &DecodeLayerWeights,
+    k_cache: TensorId,
+    v_cache: TensorId,
+) -> TensorId {
+    let d = m.d_model;
+    let ctx = pos + 1;
+
+    let x_n = b.tensor(
+        format!("xn1.l{layer}.t{pos}"),
+        d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    b.op(
+        format!("norm:ln1.l{layer}.t{pos}"),
+        layer,
+        OpKind::Norm { elems: d as u64 },
+        vec![x, w.ln1],
+        vec![x_n],
+    );
+
+    let qkv = b.tensor(
+        format!("qkv.l{layer}.t{pos}"),
+        m.qkv_out_dim() as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    b.op(
+        format!("qkv:l{layer}.t{pos}"),
+        layer,
+        OpKind::MatMul {
+            m: 1,
+            k: d,
+            n: m.qkv_out_dim(),
+        },
+        vec![x_n, w.qkv],
+        vec![qkv],
+    );
+
+    // KV append: in-place update of the persistent caches.
+    b.op(
+        format!("kvapp:l{layer}.t{pos}"),
+        layer,
+        OpKind::Elementwise {
+            elems: 2 * (m.kv_heads * m.d_head) as u64,
+            inputs: 2,
+        },
+        vec![qkv, k_cache, v_cache],
+        vec![k_cache, v_cache],
+    );
+
+    // Attention per KV-head group: each group's score op streams that
+    // group's K slice (Dh x ctx) through the array, so total KV traffic
+    // is Hkv * Dh * ctx — exactly what GQA divides by H/Hkv and the
+    // source of the paper's Fig. 1 energy/latency gap.
+    let group = m.heads / m.kv_heads;
+    let mut ctx_heads = Vec::with_capacity(m.kv_heads as usize);
+    for g in 0..m.kv_heads {
+        let sg = b.tensor(
+            format!("s.l{layer}.t{pos}.g{g}"),
+            2 * group as u64 * ctx as u64, // 16-bit internals
+            TensorKind::Score,
+            layer,
+        );
+        b.op(
+            format!("score:l{layer}.t{pos}.g{g}"),
+            layer,
+            OpKind::MatMul {
+                m: group,
+                k: m.d_head,
+                n: ctx,
+            },
+            vec![qkv, k_cache],
+            vec![sg],
+        );
+        b.op(
+            format!("softmax:l{layer}.t{pos}.g{g}"),
+            layer,
+            OpKind::Softmax {
+                rows: group,
+                cols: ctx,
+            },
+            vec![sg],
+            vec![sg],
+        );
+        let cg = b.tensor(
+            format!("c.l{layer}.t{pos}.g{g}"),
+            (group * m.d_head) as u64,
+            TensorKind::Activation,
+            layer,
+        );
+        b.op(
+            format!("ctx:l{layer}.t{pos}.g{g}"),
+            layer,
+            OpKind::MatMul {
+                m: group,
+                k: ctx,
+                n: m.d_head,
+            },
+            vec![sg, v_cache],
+            vec![cg],
+        );
+        ctx_heads.push(cg);
+    }
+
+    let attn_out = b.tensor(
+        format!("attn.l{layer}.t{pos}"),
+        d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    let mut proj_reads = ctx_heads;
+    proj_reads.push(w.out);
+    b.op(
+        format!("proj:l{layer}.t{pos}"),
+        layer,
+        OpKind::MatMul {
+            m: 1,
+            k: m.heads * m.d_head,
+            n: d,
+        },
+        proj_reads,
+        vec![attn_out],
+    );
+
+    let x1 = b.tensor(
+        format!("x1.l{layer}.t{pos}"),
+        d as u64,
+        TensorKind::Activation,
+        layer,
+    );
+    b.op(
+        format!("add:res1.l{layer}.t{pos}"),
+        layer,
+        OpKind::Elementwise {
+            elems: d as u64,
+            inputs: 2,
+        },
+        vec![x, attn_out],
+        vec![x1],
+    );
+    x1
+}
+
+/// Weight tensors shared across decode steps for one layer (fetched once,
+/// reused every token — unlike prefill where each weight has one use).
+pub struct DecodeLayerWeights {
+    pub ln1: TensorId,
+    pub qkv: TensorId,
+    pub out: TensorId,
+    pub ln2: TensorId,
+    pub ffn: Vec<TensorId>,
+}
+
+impl DecodeLayerWeights {
+    pub fn declare(b: &mut GraphBuilder, m: &ModelPreset, layer: u16) -> Self {
+        let d = m.d_model as u64;
+        let ln1 = b.tensor(format!("w.ln1.l{layer}"), 2 * d, TensorKind::Weight, layer);
+        let qkv = b.tensor(
+            format!("w.qkv.l{layer}"),
+            d * m.qkv_out_dim() as u64,
+            TensorKind::Weight,
+            layer,
+        );
+        let out = b.tensor(
+            format!("w.o.l{layer}"),
+            (m.heads * m.d_head) as u64 * d,
+            TensorKind::Weight,
+            layer,
+        );
+        let ln2 = b.tensor(format!("w.ln2.l{layer}"), 2 * d, TensorKind::Weight, layer);
+        let ffn = match m.ffn {
+            super::models::FfnKind::Gelu => vec![
+                b.tensor(
+                    format!("w.ff1.l{layer}"),
+                    d * m.d_ff as u64,
+                    TensorKind::Weight,
+                    layer,
+                ),
+                b.tensor(
+                    format!("w.ff2.l{layer}"),
+                    m.d_ff as u64 * d,
+                    TensorKind::Weight,
+                    layer,
+                ),
+            ],
+            super::models::FfnKind::SwiGlu => vec![
+                b.tensor(
+                    format!("w.ffg.l{layer}"),
+                    d * m.d_ff as u64,
+                    TensorKind::Weight,
+                    layer,
+                ),
+                b.tensor(
+                    format!("w.ffu.l{layer}"),
+                    d * m.d_ff as u64,
+                    TensorKind::Weight,
+                    layer,
+                ),
+                b.tensor(
+                    format!("w.ff2.l{layer}"),
+                    m.d_ff as u64 * d,
+                    TensorKind::Weight,
+                    layer,
+                ),
+            ],
+        };
+        Self {
+            ln1,
+            qkv,
+            out,
+            ln2,
+            ffn,
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Workload graph: the structural description TransInferSim-style
+//! simulation consumes (operation types, tensor dimensions, dependencies).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::op::{Op, OpKind};
+use super::tensor::{OpId, TensorId, TensorInfo, TensorKind};
+
+/// How KV-cache tensors' liveness is treated (DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvResidency {
+    /// KV of layer i is obsolete once layer i's attention consumed it
+    /// (single forward pass analysis — the paper's Fig. 5 setting).
+    PerLayer,
+    /// KV stays needed until the end of the run (decode-ready semantics).
+    Persistent,
+}
+
+/// A complete workload: tensors + ops in (construction = program) order.
+/// Ops are issued by the scheduler in graph order subject to dataflow
+/// readiness, mirroring TransInferSim's execution-plan construction.
+#[derive(Debug, Clone)]
+pub struct WorkloadGraph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<Op>,
+    pub kv_residency: KvResidency,
+}
+
+impl WorkloadGraph {
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0 as usize]
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.0 as usize]
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    /// Non-embedding parameter bytes (Table I's P at 1 byte/param).
+    pub fn weight_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Weight)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn kv_bytes(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::KvCache)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// Validate structural invariants. Called by builders' tests and by
+    /// the simulator before execution (corrupt graphs fail loudly).
+    pub fn validate(&self) -> Result<()> {
+        for (i, t) in self.tensors.iter().enumerate() {
+            ensure!(t.id.0 as usize == i, "tensor id/index mismatch at {i}");
+            ensure!(t.bytes > 0, "zero-size tensor {}", t.name);
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            ensure!(op.id.0 as usize == i, "op id/index mismatch at {i}");
+            ensure!(!op.writes.is_empty(), "op {} writes nothing", op.name);
+            for &tid in op.reads.iter().chain(&op.writes) {
+                ensure!(
+                    (tid.0 as usize) < self.tensors.len(),
+                    "op {} references unknown tensor {tid}",
+                    op.name
+                );
+            }
+        }
+        // Producer precedes consumers (graph order == valid topo order);
+        // in-place updates (read+write same id) are allowed and keep the
+        // original producer.
+        for t in &self.tensors {
+            if let Some(p) = t.producer {
+                for &c in &t.consumers {
+                    let in_place_update = self.ops[c.0 as usize]
+                        .writes
+                        .contains(&t.id);
+                    if c.0 < p.0 && !in_place_update {
+                        bail!(
+                            "tensor {} consumed by {c} before produced by {p}",
+                            t.name
+                        );
+                    }
+                }
+            }
+        }
+        // Consumer back-links match op reads.
+        let mut counts: HashMap<TensorId, usize> = HashMap::new();
+        for op in &self.ops {
+            for &r in &op.reads {
+                *counts.entry(r).or_default() += 1;
+            }
+        }
+        for t in &self.tensors {
+            let expect = counts.get(&t.id).copied().unwrap_or(0);
+            ensure!(
+                t.consumers.len() == expect,
+                "tensor {} consumer backlinks {} != reads {}",
+                t.name,
+                t.consumers.len(),
+                expect
+            );
+        }
+        Ok(())
+    }
+
+    /// Summary line used by the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ops, {} tensors, {:.2} T MACs, {:.1} MiB weights, \
+             {:.1} MiB KV",
+            self.name,
+            self.ops.len(),
+            self.tensors.len(),
+            self.total_macs() as f64 / 1e12,
+            self.weight_bytes() as f64 / (1 << 20) as f64,
+            self.kv_bytes() as f64 / (1 << 20) as f64,
+        )
+    }
+}
+
+/// Incremental builder keeping producer/consumer links consistent.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    name: String,
+    tensors: Vec<TensorInfo>,
+    ops: Vec<Op>,
+    kv_residency: KvResidency,
+    stage: u32,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, kv_residency: KvResidency) -> Self {
+        Self {
+            name: name.to_string(),
+            tensors: Vec::new(),
+            ops: Vec::new(),
+            kv_residency,
+            stage: 0,
+        }
+    }
+
+    /// Set the schedule stage for subsequently added ops (monotonic;
+    /// builders bump it at layer / token boundaries).
+    pub fn set_stage(&mut self, stage: u32) {
+        debug_assert!(stage >= self.stage, "stages must be monotonic");
+        self.stage = stage;
+    }
+
+    /// Declare a tensor; producer is attached when an op writes it.
+    pub fn tensor(
+        &mut self,
+        name: impl Into<String>,
+        bytes: u64,
+        kind: TensorKind,
+        layer: u16,
+    ) -> TensorId {
+        let id = TensorId(self.tensors.len() as u32);
+        self.tensors.push(TensorInfo {
+            id,
+            name: name.into(),
+            bytes,
+            kind,
+            layer,
+            producer: None,
+            consumers: Vec::new(),
+            affinity: None,
+        });
+        id
+    }
+
+    /// Set memory affinity (multi-level hierarchies, Fig. 10).
+    pub fn set_affinity(&mut self, t: TensorId, mem: u8) {
+        self.tensors[t.0 as usize].affinity = Some(mem);
+    }
+
+    /// Append an op; wires producer/consumer links.
+    pub fn op(
+        &mut self,
+        name: impl Into<String>,
+        layer: u16,
+        kind: OpKind,
+        reads: Vec<TensorId>,
+        writes: Vec<TensorId>,
+    ) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        // Unknown ids are tolerated here and rejected by finish()'s
+        // validate() with a proper error (builders never panic).
+        for &r in &reads {
+            if let Some(t) = self.tensors.get_mut(r.0 as usize) {
+                t.consumers.push(id);
+            }
+        }
+        for &w in &writes {
+            if let Some(t) = self.tensors.get_mut(w.0 as usize) {
+                // First writer is the producer; later writers are in-place
+                // updates (KV append) and must also read the tensor.
+                if t.producer.is_none() && !reads.contains(&w) {
+                    t.producer = Some(id);
+                }
+            }
+        }
+        self.ops.push(Op {
+            id,
+            name: name.into(),
+            layer,
+            stage: self.stage,
+            kind,
+            reads,
+            writes,
+        });
+        id
+    }
+
+    pub fn finish(self) -> Result<WorkloadGraph> {
+        let g = WorkloadGraph {
+            name: self.name,
+            tensors: self.tensors,
+            ops: self.ops,
+            kv_residency: self.kv_residency,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn tiny_graph() -> WorkloadGraph {
+        let mut b = GraphBuilder::new("tiny", KvResidency::PerLayer);
+        let x = b.tensor("x", 64, TensorKind::Activation, 0);
+        let w = b.tensor("w", 128, TensorKind::Weight, 0);
+        let y = b.tensor("y", 64, TensorKind::Activation, 0);
+        b.op(
+            "ffn:mm",
+            0,
+            OpKind::MatMul { m: 8, k: 8, n: 8 },
+            vec![x, w],
+            vec![y],
+        );
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn builder_wires_links() {
+        let g = tiny_graph();
+        assert_eq!(g.tensor(TensorId(2)).producer, Some(OpId(0)));
+        assert_eq!(g.tensor(TensorId(0)).consumers, vec![OpId(0)]);
+        assert!(g.tensor(TensorId(0)).is_input());
+        assert_eq!(g.total_macs(), 512);
+        assert_eq!(g.weight_bytes(), 128);
+    }
+
+    #[test]
+    fn validate_rejects_unknown_tensor() {
+        let mut b = GraphBuilder::new("bad", KvResidency::PerLayer);
+        let x = b.tensor("x", 8, TensorKind::Activation, 0);
+        b.op(
+            "e",
+            0,
+            OpKind::Elementwise { elems: 8, inputs: 1 },
+            vec![x],
+            vec![TensorId(99)],
+        );
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_writeless_op() {
+        let mut b = GraphBuilder::new("bad", KvResidency::PerLayer);
+        let x = b.tensor("x", 8, TensorKind::Activation, 0);
+        b.op(
+            "e",
+            0,
+            OpKind::Elementwise { elems: 8, inputs: 1 },
+            vec![x],
+            vec![],
+        );
+        assert!(b.finish().is_err());
+    }
+
+    #[test]
+    fn in_place_update_keeps_first_producer() {
+        let mut b = GraphBuilder::new("kv", KvResidency::Persistent);
+        let q = b.tensor("q", 8, TensorKind::Activation, 0);
+        let kv = b.tensor("kv", 64, TensorKind::KvCache, 0);
+        let o1 = b.op(
+            "kvapp:0",
+            0,
+            OpKind::Elementwise { elems: 8, inputs: 1 },
+            vec![q],
+            vec![kv],
+        );
+        let q2 = b.tensor("q2", 8, TensorKind::Activation, 0);
+        b.op(
+            "kvapp:1",
+            0,
+            OpKind::Elementwise { elems: 8, inputs: 2 },
+            vec![q2, kv],
+            vec![kv],
+        );
+        let g = b.finish().unwrap();
+        assert_eq!(g.tensor(kv).producer, Some(o1));
+        assert_eq!(g.kv_bytes(), 64);
+    }
+
+    #[test]
+    fn random_chain_graphs_validate() {
+        check("random-chains-validate", 50, |rng| {
+            let mut b = GraphBuilder::new("chain", KvResidency::PerLayer);
+            let n = rng.range(1, 20) as usize;
+            let mut prev = b.tensor("in", rng.range(1, 4096), TensorKind::Activation, 0);
+            for i in 0..n {
+                let w = b.tensor(
+                    format!("w{i}"),
+                    rng.range(1, 4096),
+                    TensorKind::Weight,
+                    i as u16,
+                );
+                let out = b.tensor(
+                    format!("a{i}"),
+                    rng.range(1, 4096),
+                    TensorKind::Activation,
+                    i as u16,
+                );
+                b.op(
+                    format!("ffn:mm{i}"),
+                    i as u16,
+                    OpKind::MatMul {
+                        m: rng.range(1, 256) as u32,
+                        k: rng.range(1, 256) as u32,
+                        n: rng.range(1, 256) as u32,
+                    },
+                    vec![prev, w],
+                    vec![out],
+                );
+                prev = out;
+            }
+            let g = b.finish().unwrap();
+            assert_eq!(g.ops.len(), n);
+            g.validate().unwrap();
+        });
+    }
+}

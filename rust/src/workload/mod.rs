@@ -1,0 +1,23 @@
+//! Workload layer: structural transformer descriptions (ops, tensor
+//! dimensions, dependencies) consumed by the Stage-I simulator.
+//!
+//! The paper provides workloads to TransInferSim as structural graphs;
+//! this module is that substrate: model presets (Table I), attention
+//! block builders (MHA/GQA/MQA, Fig. 2), and whole-model prefill/decode
+//! graph construction.
+
+pub mod attention;
+pub mod builder;
+pub mod graph;
+pub mod models;
+pub mod op;
+pub mod tensor;
+
+pub use builder::{build_decode, build_prefill, build_workload, Workload};
+pub use graph::{GraphBuilder, KvResidency, WorkloadGraph};
+pub use models::{
+    all_presets, preset, AttnKind, FfnKind, ModelPreset, NormKind, DS_R1D_Q15B,
+    GPT2_XL, TINY_GQA, TINY_MHA,
+};
+pub use op::{Op, OpClass, OpKind};
+pub use tensor::{OpId, TensorId, TensorInfo, TensorKind};

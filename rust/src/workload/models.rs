@@ -1,0 +1,277 @@
+//! Model presets (the paper's Table I) and structural accounting.
+//!
+//! These mirror `python/compile/model.py::ModelConfig` exactly — the
+//! pytest suite checks the Python side against Table I and
+//! `rust/tests/` checks this side against the same numbers, so the
+//! performance model (here) and the functional model (JAX) can never
+//! silently diverge.
+
+/// FFN flavor (paper Table I "FFN Type").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnKind {
+    /// Two matmuls with GELU (GPT-2 family).
+    Gelu,
+    /// Gate + up + down matmuls with SiLU gating (Qwen/Llama family).
+    SwiGlu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NormKind {
+    LayerNorm,
+    RmsNorm,
+}
+
+/// Attention family (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnKind {
+    Mha,
+    Gqa,
+    Mqa,
+}
+
+/// Structural description of a decoder-only transformer (Table I row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub layers: u16,
+    pub d_model: u32,
+    pub heads: u32,
+    pub kv_heads: u32,
+    pub d_head: u32,
+    pub d_ff: u32,
+    pub ffn: FfnKind,
+    pub norm: NormKind,
+}
+
+impl ModelPreset {
+    pub fn attn_kind(&self) -> AttnKind {
+        if self.kv_heads == self.heads {
+            AttnKind::Mha
+        } else if self.kv_heads == 1 {
+            AttnKind::Mqa
+        } else {
+            AttnKind::Gqa
+        }
+    }
+
+    /// Output width of the fused QKV projection.
+    pub fn qkv_out_dim(&self) -> u32 {
+        (self.heads + 2 * self.kv_heads) * self.d_head
+    }
+
+    /// Non-embedding parameter count (Table I column P).
+    pub fn param_count(&self) -> u64 {
+        let d = self.d_model as u64;
+        let qkv = d * self.qkv_out_dim() as u64;
+        let out = (self.heads * self.d_head) as u64 * d;
+        let ffn = match self.ffn {
+            FfnKind::Gelu => 2 * d * self.d_ff as u64,
+            FfnKind::SwiGlu => 3 * d * self.d_ff as u64,
+        };
+        let norms = match self.norm {
+            NormKind::LayerNorm => 4 * d,
+            NormKind::RmsNorm => 2 * d,
+        };
+        self.layers as u64 * (qkv + out + ffn + norms)
+    }
+
+    /// Total matmul MACs for a causal pass over `seq` tokens
+    /// (Table I column MACs at seq = 2048).
+    pub fn total_macs(&self, seq: u64) -> u64 {
+        let d = self.d_model as u64;
+        let qkv = d * self.qkv_out_dim() as u64;
+        let out = (self.heads * self.d_head) as u64 * d;
+        let ffn = match self.ffn {
+            FfnKind::Gelu => 2 * d * self.d_ff as u64,
+            FfnKind::SwiGlu => 3 * d * self.d_ff as u64,
+        };
+        let proj = seq * (qkv + out + ffn);
+        let attn = 2 * self.heads as u64 * seq * seq * self.d_head as u64;
+        self.layers as u64 * (proj + attn)
+    }
+
+    /// KV-cache bytes at `seq` tokens (8-bit operands).
+    pub fn kv_cache_bytes(&self, seq: u64) -> u64 {
+        2 * self.layers as u64 * seq * (self.kv_heads * self.d_head) as u64
+    }
+
+    /// Per-layer weight bytes (8-bit).
+    pub fn layer_weight_bytes(&self) -> u64 {
+        self.param_count() / self.layers as u64
+    }
+}
+
+/// GPT-2 XL (MHA): L=48, D=1600, Dff=6400, H=25 -> P=1.48 B, 3.66 T MACs.
+pub const GPT2_XL: ModelPreset = ModelPreset {
+    name: "gpt2-xl",
+    layers: 48,
+    d_model: 1600,
+    heads: 25,
+    kv_heads: 25,
+    d_head: 64,
+    d_ff: 6400,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+};
+
+/// DeepSeek-R1-Distill-Qwen-1.5B (GQA): L=28, D=1536, Dff=8960, H=12,
+/// Hkv=2 -> P=1.31 B, 3.04 T MACs.
+pub const DS_R1D_Q15B: ModelPreset = ModelPreset {
+    name: "ds-r1d-qwen-1.5b",
+    layers: 28,
+    d_model: 1536,
+    heads: 12,
+    kv_heads: 2,
+    d_head: 128,
+    d_ff: 8960,
+    ffn: FfnKind::SwiGlu,
+    norm: NormKind::RmsNorm,
+};
+
+/// Tiny MHA config — matches `python/compile/model.py::TINY_MHA`; the
+/// functional artifact `decode_tiny_mha.hlo.txt` implements this model.
+pub const TINY_MHA: ModelPreset = ModelPreset {
+    name: "tiny-mha",
+    layers: 2,
+    d_model: 128,
+    heads: 4,
+    kv_heads: 4,
+    d_head: 32,
+    d_ff: 256,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+};
+
+/// Tiny GQA config — matches `python/compile/model.py::TINY_GQA`.
+pub const TINY_GQA: ModelPreset = ModelPreset {
+    name: "tiny-gqa",
+    layers: 2,
+    d_model: 128,
+    heads: 4,
+    kv_heads: 2,
+    d_head: 32,
+    d_ff: 256,
+    ffn: FfnKind::SwiGlu,
+    norm: NormKind::RmsNorm,
+};
+
+/// Fig. 1 matched pair: GPT-2-small-scale models with identical
+/// parameter count and computational complexity, differing only in the
+/// attention mechanism (MHA vs GQA). Small enough that weights stay
+/// SRAM-resident (`SchedConfig::weight_resident`), so decode traffic is
+/// dominated by the KV cache — the regime the paper's Fig. 1 compares.
+pub const FIG1_MHA: ModelPreset = ModelPreset {
+    name: "fig1-mha-124m",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    kv_heads: 12,
+    d_head: 64,
+    d_ff: 3072,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+};
+
+/// GQA twin: Hkv = 2; Dff enlarged by 640 so the parameter count matches
+/// FIG1_MHA exactly (the saved 2*(H-Hkv)*Dh*D of KV projection equals
+/// the added 2*D*640 of FFN width).
+pub const FIG1_GQA: ModelPreset = ModelPreset {
+    name: "fig1-gqa-124m",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    kv_heads: 2,
+    d_head: 64,
+    d_ff: 3712,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+};
+
+/// Look up a preset by name (CLI / config files).
+pub fn preset(name: &str) -> Option<ModelPreset> {
+    match name {
+        "gpt2-xl" => Some(GPT2_XL),
+        "ds-r1d-qwen-1.5b" | "ds-r1d" | "deepseek" => Some(DS_R1D_Q15B),
+        "tiny-mha" => Some(TINY_MHA),
+        "tiny-gqa" => Some(TINY_GQA),
+        "fig1-mha" | "fig1-mha-124m" => Some(FIG1_MHA),
+        "fig1-gqa" | "fig1-gqa-124m" => Some(FIG1_GQA),
+        _ => None,
+    }
+}
+
+pub fn all_presets() -> Vec<ModelPreset> {
+    vec![GPT2_XL, DS_R1D_Q15B, TINY_MHA, TINY_GQA]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_gpt2_xl() {
+        let p = GPT2_XL.param_count() as f64 / 1e9;
+        let macs = GPT2_XL.total_macs(2048) as f64 / 1e12;
+        assert!((p - 1.48).abs() < 0.01, "P={p}");
+        assert!((macs - 3.66).abs() < 0.01, "MACs={macs}");
+        assert_eq!(GPT2_XL.attn_kind(), AttnKind::Mha);
+    }
+
+    #[test]
+    fn table1_ds_r1d() {
+        let p = DS_R1D_Q15B.param_count() as f64 / 1e9;
+        let macs = DS_R1D_Q15B.total_macs(2048) as f64 / 1e12;
+        assert!((p - 1.31).abs() < 0.01, "P={p}");
+        assert!((macs - 3.04).abs() < 0.01, "MACs={macs}");
+        assert_eq!(DS_R1D_Q15B.attn_kind(), AttnKind::Gqa);
+    }
+
+    #[test]
+    fn kv_cache_mha_vs_gqa() {
+        // GPT-2 XL: 2*48*2048*1600 B = 300 MiB; DS: 2*28*2048*256 = 28 MiB.
+        assert_eq!(GPT2_XL.kv_cache_bytes(2048), 2 * 48 * 2048 * 1600);
+        assert_eq!(DS_R1D_Q15B.kv_cache_bytes(2048), 2 * 28 * 2048 * 256);
+        let ratio = GPT2_XL.kv_cache_bytes(2048) as f64
+            / DS_R1D_Q15B.kv_cache_bytes(2048) as f64;
+        assert!(ratio > 10.0, "GQA must slash KV footprint, got {ratio}");
+    }
+
+    #[test]
+    fn tiny_presets_match_python() {
+        // Shapes mirrored in python/compile/model.py; keep in sync.
+        assert_eq!(TINY_MHA.qkv_out_dim(), (4 + 8) * 32);
+        assert_eq!(TINY_GQA.qkv_out_dim(), (4 + 4) * 32);
+        assert_eq!(TINY_GQA.attn_kind(), AttnKind::Gqa);
+        assert_eq!(TINY_MHA.attn_kind(), AttnKind::Mha);
+    }
+
+    #[test]
+    fn fig1_pair_is_parameter_matched() {
+        // "similar parameter count and computational complexity" —
+        // exact match by construction.
+        assert_eq!(FIG1_MHA.param_count(), FIG1_GQA.param_count());
+        let m = FIG1_MHA.total_macs(2048) as f64;
+        let g = FIG1_GQA.total_macs(2048) as f64;
+        assert!((m / g - 1.0).abs() < 0.01, "MACs {m} vs {g}");
+        // And the KV footprint differs by H/Hkv = 6x.
+        assert_eq!(
+            FIG1_MHA.kv_cache_bytes(2048),
+            6 * FIG1_GQA.kv_cache_bytes(2048)
+        );
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(preset("gpt2-xl").unwrap(), GPT2_XL);
+        assert_eq!(preset("deepseek").unwrap(), DS_R1D_Q15B);
+        assert!(preset("nope").is_none());
+        assert_eq!(all_presets().len(), 4);
+    }
+
+    #[test]
+    fn mqa_classification() {
+        let mut m = TINY_MHA.clone();
+        m.kv_heads = 1;
+        assert_eq!(m.attn_kind(), AttnKind::Mqa);
+    }
+}

@@ -1,0 +1,193 @@
+//! Operation descriptors for the workload graph.
+
+use super::tensor::{OpId, TensorId};
+
+/// What an op computes. Dimensions determine systolic-array timing (for
+/// matmuls) or streamed bytes (for memory-path ops); see `sim::systolic`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Dense matmul `[m, k] x [k, n]` executed on the systolic arrays.
+    MatMul { m: u32, k: u32, n: u32 },
+    /// Row-wise softmax over `[rows, cols]`; executed on the memory path
+    /// (the accelerator template has no dedicated vector unit, so
+    /// element-wise work streams SRAM<->SRAM through the ports).
+    Softmax { rows: u32, cols: u32 },
+    /// LayerNorm / RMSNorm over `elems` elements (memory path).
+    Norm { elems: u64 },
+    /// Generic element-wise op (residual add, GELU, SiLU-mul, KV append);
+    /// memory path. `inputs` counts streamed operands.
+    Elementwise { elems: u64, inputs: u8 },
+}
+
+impl OpKind {
+    /// Multiply-accumulate count (the paper's MACs column counts matmul
+    /// work only; element-wise ops contribute traffic, not MACs).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            OpKind::MatMul { m, k, n } => m as u64 * k as u64 * n as u64,
+            _ => 0,
+        }
+    }
+
+    /// True if this op occupies a systolic array (vs the memory path).
+    pub fn uses_systolic_array(&self) -> bool {
+        matches!(self, OpKind::MatMul { .. })
+    }
+
+    /// Bytes streamed through memory during execution (operands read +
+    /// result written), at 1 byte/element. For matmuls this is the
+    /// FIFO-fed streaming traffic assuming no inter-tile reuse beyond
+    /// the FIFO capacity (see `sim::systolic` for the tile schedule).
+    pub fn streamed_bytes(&self) -> u64 {
+        match *self {
+            OpKind::MatMul { m, k, n } => {
+                // Per 128x128 output tile: k column-bytes + k row-bytes per
+                // lane (x128 lanes each) streamed; output written once.
+                let tiles_m = (m as u64).div_ceil(128);
+                let tiles_n = (n as u64).div_ceil(128);
+                let per_tile_stream = 2 * k as u64 * 128;
+                tiles_m * tiles_n * per_tile_stream + m as u64 * n as u64
+            }
+            OpKind::Softmax { rows, cols } => {
+                // Two passes (max+exp-sum, then normalize) read + one write.
+                3 * rows as u64 * cols as u64
+            }
+            OpKind::Norm { elems } => 3 * elems,
+            OpKind::Elementwise { elems, inputs } => (inputs as u64 + 1) * elems,
+        }
+    }
+}
+
+/// One operation in the workload graph.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub layer: u16,
+    /// Monotonic schedule stage (prefill: layer index; decode:
+    /// token*layers + layer). The scheduler's in-order issue window is
+    /// expressed in stages — TransInferSim's layer-synchronized
+    /// execution-plan semantics.
+    pub stage: u32,
+    pub kind: OpKind,
+    /// Tensors read (dataflow deps; duplicates not allowed).
+    pub reads: Vec<TensorId>,
+    /// Tensors written. Multi-write tensors (KV append) are modeled as
+    /// read+write of the same id.
+    pub writes: Vec<TensorId>,
+}
+
+impl Op {
+    pub fn macs(&self) -> u64 {
+        self.kind.macs()
+    }
+}
+
+/// Coarse phase used in the Fig. 6 per-operation-type breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    QkvProj,
+    AttnScore,
+    AttnSoftmax,
+    AttnContext,
+    OutProj,
+    FfnMatMul,
+    NormOp,
+    ElementwiseOp,
+    KvAppend,
+}
+
+impl OpClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::QkvProj => "QKV proj",
+            OpClass::AttnScore => "Attn score",
+            OpClass::AttnSoftmax => "Softmax",
+            OpClass::AttnContext => "Attn context",
+            OpClass::OutProj => "Out proj",
+            OpClass::FfnMatMul => "FFN matmul",
+            OpClass::NormOp => "Norm",
+            OpClass::ElementwiseOp => "Elementwise",
+            OpClass::KvAppend => "KV append",
+        }
+    }
+
+    pub fn all() -> &'static [OpClass] {
+        &[
+            OpClass::QkvProj,
+            OpClass::AttnScore,
+            OpClass::AttnSoftmax,
+            OpClass::AttnContext,
+            OpClass::OutProj,
+            OpClass::FfnMatMul,
+            OpClass::NormOp,
+            OpClass::ElementwiseOp,
+            OpClass::KvAppend,
+        ]
+    }
+
+    /// Classify by op name prefix (builders name ops `class:detail`).
+    pub fn of(op: &Op) -> OpClass {
+        let prefix = op.name.split(':').next().unwrap_or("");
+        match prefix {
+            "qkv" => OpClass::QkvProj,
+            "score" => OpClass::AttnScore,
+            "softmax" => OpClass::AttnSoftmax,
+            "ctx" => OpClass::AttnContext,
+            "proj" => OpClass::OutProj,
+            "ffn" => OpClass::FfnMatMul,
+            "norm" => OpClass::NormOp,
+            "kvapp" => OpClass::KvAppend,
+            _ => OpClass::ElementwiseOp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_macs() {
+        let k = OpKind::MatMul { m: 4, k: 5, n: 6 };
+        assert_eq!(k.macs(), 120);
+        assert!(k.uses_systolic_array());
+    }
+
+    #[test]
+    fn memory_ops_have_no_macs() {
+        assert_eq!(OpKind::Softmax { rows: 10, cols: 10 }.macs(), 0);
+        assert_eq!(OpKind::Norm { elems: 100 }.macs(), 0);
+        assert_eq!(OpKind::Elementwise { elems: 10, inputs: 2 }.macs(), 0);
+    }
+
+    #[test]
+    fn streamed_bytes_matmul_counts_tiles() {
+        // 128x128x128: one tile, 2*128*128 streamed + 128*128 written.
+        let k = OpKind::MatMul { m: 128, k: 128, n: 128 };
+        assert_eq!(k.streamed_bytes(), 2 * 128 * 128 + 128 * 128);
+        // Partial tiles round up.
+        let k2 = OpKind::MatMul { m: 1, k: 128, n: 129 };
+        assert_eq!(k2.streamed_bytes(), 2 * 2 * 128 * 128 + 129);
+    }
+
+    #[test]
+    fn elementwise_streams_inputs_plus_output() {
+        let k = OpKind::Elementwise { elems: 100, inputs: 2 };
+        assert_eq!(k.streamed_bytes(), 300);
+    }
+
+    #[test]
+    fn classify_by_name() {
+        let op = Op {
+            id: OpId(0),
+            name: "score:l3.h7".into(),
+            layer: 3,
+            stage: 3,
+            kind: OpKind::MatMul { m: 1, k: 1, n: 1 },
+            reads: vec![],
+            writes: vec![],
+        };
+        assert_eq!(OpClass::of(&op), OpClass::AttnScore);
+    }
+}

@@ -1,0 +1,113 @@
+//! Tensor descriptors for the workload graph.
+//!
+//! Stage I simulates *structure*, not values: a tensor is a name, a byte
+//! size (8-bit operands throughout, per the paper's §IV-A), a kind (which
+//! drives residency policy and reporting), and producer/consumer links
+//! that define dataflow dependencies and liveness.
+
+use std::fmt;
+
+/// Index into `WorkloadGraph::tensors`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+impl fmt::Display for TensorId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Index into `WorkloadGraph::ops`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+impl fmt::Display for OpId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "op{}", self.0)
+    }
+}
+
+/// Classification used for residency policy, eviction preference
+/// reporting, and the Fig. 5 needed/obsolete decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Model weights: initially DRAM-resident, fetched on demand,
+    /// obsolete after their (single, in a forward pass) consumer.
+    Weight,
+    /// Intermediate activation: produced on-chip, obsolete after last
+    /// consumer.
+    Activation,
+    /// Key/value cache entries. Residency depends on
+    /// [`KvResidency`](crate::workload::graph::KvResidency): per-layer
+    /// (prefill analysis) or persistent (decode-ready semantics).
+    KvCache,
+    /// Attention score matrix (pre-softmax). The dominant transient for
+    /// MHA workloads (the paper's Fig. 5 left).
+    Score,
+    /// Post-softmax probabilities.
+    Prob,
+    /// Final model output; pinned needed until end of run.
+    Output,
+}
+
+impl TensorKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TensorKind::Weight => "weight",
+            TensorKind::Activation => "act",
+            TensorKind::KvCache => "kv",
+            TensorKind::Score => "score",
+            TensorKind::Prob => "prob",
+            TensorKind::Output => "out",
+        }
+    }
+}
+
+/// One tensor in the workload graph.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    /// Footprint in bytes (8-bit quantized operands => bytes == elements).
+    pub bytes: u64,
+    pub kind: TensorKind,
+    /// Transformer layer index (u16::MAX for graph-global tensors).
+    pub layer: u16,
+    /// Producing op; `None` for graph inputs (weights, embeddings) that
+    /// start DRAM-resident.
+    pub producer: Option<OpId>,
+    /// Ops that read this tensor (filled by the graph builder).
+    pub consumers: Vec<OpId>,
+    /// For multi-level hierarchies: preferred memory id (None = shared).
+    pub affinity: Option<u8>,
+}
+
+impl TensorInfo {
+    pub fn is_input(&self) -> bool {
+        self.producer.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(TensorId(3).to_string(), "t3");
+        assert_eq!(OpId(7).to_string(), "op7");
+    }
+
+    #[test]
+    fn kind_labels_unique() {
+        use TensorKind::*;
+        let labels: Vec<_> = [Weight, Activation, KvCache, Score, Prob, Output]
+            .iter()
+            .map(|k| k.label())
+            .collect();
+        let mut dedup = labels.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(labels.len(), dedup.len());
+    }
+}

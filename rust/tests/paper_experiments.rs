@@ -1,0 +1,231 @@
+//! Full-scale integration tests: the paper's headline claims must hold
+//! on the real Table I workloads at M=2048 (run in release for speed:
+//! `cargo test --release --test paper_experiments`; debug works too,
+//! just slower).
+
+use trapti::banking::{evaluate, GatingPolicy, SweepSpec};
+use trapti::config::baseline;
+use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::util::MIB;
+use trapti::workload::Workload;
+
+fn coord() -> Coordinator {
+    Coordinator::new()
+}
+
+#[test]
+fn fig5_peak_utilization_gap() {
+    let pair = exp::paired_prefill(&coord()).unwrap();
+    // Paper: 107.3 vs 39.1 MiB (2.72x). Calibrated reproduction: 95.5 vs
+    // 41.5 (2.30x) — assert the shape with generous bands.
+    let mha = pair.mha.result.peak_needed() as f64 / MIB as f64;
+    let gqa = pair.gqa.result.peak_needed() as f64 / MIB as f64;
+    assert!((80.0..=120.0).contains(&mha), "MHA peak {mha} MiB");
+    assert!((30.0..=50.0).contains(&gqa), "GQA peak {gqa} MiB");
+    assert!(pair.peak_ratio() > 2.0, "peak ratio {}", pair.peak_ratio());
+    // Both fit the 128 MiB baseline without capacity write-backs.
+    assert!(pair.mha.result.feasible());
+    assert!(pair.gqa.result.feasible());
+}
+
+#[test]
+fn fig5_time_gap() {
+    let pair = exp::paired_prefill(&coord()).unwrap();
+    // Paper: 593.9 vs 313.6 ms (1.89x); ours: 320.6 vs 208.2 (1.54x).
+    assert!(
+        pair.time_ratio() > 1.3,
+        "GQA must be substantially faster: {}",
+        pair.time_ratio()
+    );
+    let mha_ms = pair.mha.result.seconds() * 1e3;
+    let gqa_ms = pair.gqa.result.seconds() * 1e3;
+    assert!((200.0..=700.0).contains(&mha_ms), "{mha_ms} ms");
+    assert!((150.0..=400.0).contains(&gqa_ms), "{gqa_ms} ms");
+}
+
+#[test]
+fn fig7_utilization_and_energy_order() {
+    let pair = exp::paired_prefill(&coord()).unwrap();
+    // GQA runs closer to compute capability (paper 77% vs 38%).
+    assert!(
+        pair.gqa.result.active_utilization()
+            > pair.mha.result.active_utilization()
+    );
+    // And consumes less on-chip energy (paper 40.52 vs 78.47 J).
+    assert!(pair.gqa.energy.on_chip_j() < pair.mha.energy.on_chip_j());
+    // Magnitudes in the paper's regime (tens of joules).
+    let e = pair.mha.energy.on_chip_j();
+    assert!((30.0..=120.0).contains(&e), "MHA on-chip {e} J");
+}
+
+#[test]
+fn sizing_matches_paper_capacities() {
+    let s = exp::sizing(&coord()).unwrap();
+    // Paper: GPT-2 XL -> 112 MiB, DS -> 48 MiB (16 MiB rounding).
+    assert_eq!(s.gqa_required, 48 * MIB, "DS required capacity");
+    assert!(
+        s.mha_required >= 96 * MIB && s.mha_required <= 112 * MIB,
+        "GPT-2 required {} MiB",
+        s.mha_required / MIB
+    );
+    // DS at 64 MiB: negligible latency change (paper: -1.48 ms).
+    assert!(s.gqa_64mib_delta_s.abs() < 0.01, "{}", s.gqa_64mib_delta_s);
+}
+
+#[test]
+fn table2_banking_reduces_energy_with_sweet_spot() {
+    let c = coord();
+    let pair = exp::paired_prefill(&c).unwrap();
+    let t2 = exp::table2(&c, &pair);
+    // Best bank count lands in the interior (paper: B in {8,16}).
+    for cap in [64 * MIB, 96 * MIB, 128 * MIB] {
+        let best = exp::Table2::best_banks_at(&t2.gqa_points, cap).unwrap();
+        assert!(
+            (2..=16).contains(&best),
+            "GQA best banks at {} MiB: {best}",
+            cap / MIB
+        );
+    }
+    // DS reductions grow with capacity headroom (paper: -30.4% .. -61.3%).
+    let best_at = |cap: u64| {
+        t2.gqa_points
+            .iter()
+            .filter(|p| p.eval.capacity == cap)
+            .map(|p| p.delta_e_pct())
+            .fold(f64::INFINITY, f64::min)
+    };
+    let d48 = best_at(48 * MIB);
+    let d128 = best_at(128 * MIB);
+    assert!(d128 < d48, "more headroom must help: {d48} vs {d128}");
+    assert!(d128 < -45.0, "DS@128 best {d128}%");
+    // GQA benefits more than MHA at matched capacity (paper's claim).
+    let mha_d128 = t2
+        .mha_points
+        .iter()
+        .filter(|p| p.eval.capacity == 128 * MIB)
+        .map(|p| p.delta_e_pct())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        d128 <= mha_d128 + 1.0,
+        "GQA {d128}% should beat MHA {mha_d128}%"
+    );
+}
+
+#[test]
+fn fig8_alpha_monotonicity_at_full_scale() {
+    let c = coord();
+    let pair = exp::paired_prefill(&c).unwrap();
+    let f8 = exp::fig8(&c, &pair.gqa);
+    let avgs: Vec<f64> = f8
+        .timelines
+        .iter()
+        .map(|t| trapti::banking::avg_active(t))
+        .collect();
+    // alphas = [1.0, 0.9, 0.75, 0.5]: average active banks must not
+    // decrease as alpha falls.
+    for w in avgs.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9, "{avgs:?}");
+    }
+    // At B=4 / 64 MiB the DS trace must leave gate-eligible time.
+    assert!(avgs[1] < 4.0, "some banks must be idle at alpha=0.9");
+}
+
+#[test]
+fn table3_multilevel_headline() {
+    let t3 = exp::table3(&coord()).unwrap();
+    // Paper: multi-level run is slower & hungrier than single-level
+    // (550 ms, 73.4 J) with per-memory peaks near 34-38 MiB.
+    let ms = t3.stage1.result.seconds() * 1e3;
+    assert!((300.0..=700.0).contains(&ms), "{ms} ms");
+    assert!(t3.stage1.result.feasible(), "64 MiB DMs must suffice");
+    for tr in &t3.stage1.result.traces[1..] {
+        let peak = tr.peak_needed() as f64 / MIB as f64;
+        assert!((10.0..=60.0).contains(&peak), "{}: {peak} MiB", tr.memory);
+    }
+    // The headline: up to ~78% SRAM energy reduction (ours overshoots on
+    // the staging-only shared SRAM; DMs land in the paper's band).
+    assert!(t3.best_delta() < -70.0, "best dE {}", t3.best_delta());
+}
+
+#[test]
+fn switching_overhead_negligible() {
+    // Paper §IV-C: "switching overhead had a negligible impact".
+    let c = coord();
+    let pair = exp::paired_prefill(&c).unwrap();
+    let ev = evaluate(
+        &c.cacti,
+        pair.gqa.result.sram_trace(),
+        &pair.gqa.result.stats,
+        128 * MIB,
+        16,
+        0.9,
+        GatingPolicy::Aggressive,
+        1.0,
+    );
+    assert!(
+        ev.e_sw_j < 0.01 * ev.e_total_j(),
+        "switching {} J vs total {} J",
+        ev.e_sw_j,
+        ev.e_total_j()
+    );
+}
+
+#[test]
+fn trace_reuse_equals_inline_stage2() {
+    // The two-stage decoupling: Stage II over a saved+reloaded trace
+    // must give identical numbers to the inline evaluation.
+    let c = coord();
+    let s1 = c
+        .stage1(
+            &trapti::workload::DS_R1D_Q15B,
+            Workload::Prefill { seq: 2048 },
+            &baseline(),
+        )
+        .unwrap();
+    let dir = std::env::temp_dir().join("trapti-trace-roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.trace.json");
+    trapti::trace::save_trace(s1.result.sram_trace(), &path).unwrap();
+    let reloaded = trapti::trace::load_trace(&path).unwrap();
+    let spec = SweepSpec::paper_grid(s1.result.peak_needed());
+    let inline = trapti::banking::sweep(
+        &c.cacti, s1.result.sram_trace(), &s1.result.stats, &spec, 1.0,
+    );
+    let from_file =
+        trapti::banking::sweep(&c.cacti, &reloaded, &s1.result.stats, &spec, 1.0);
+    assert_eq!(inline.len(), from_file.len());
+    for (a, b) in inline.iter().zip(&from_file) {
+        assert!((a.eval.e_total_j() - b.eval.e_total_j()).abs() < 1e-12);
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn aggregate_baseline_cannot_see_gating_opportunities() {
+    // The gap-and-motivation claim, measured at full scale.
+    let c = coord();
+    let pair = exp::paired_prefill(&c).unwrap();
+    let s1 = &pair.gqa;
+    let view = trapti::analytic::AggregateView::from_stats(
+        s1.result.peak_needed(),
+        s1.result.total_cycles,
+        &s1.result.stats,
+    );
+    let agg = trapti::analytic::estimate(&c.cacti, &view, 128 * MIB, 16, 0.9, 1.0);
+    let trapti_ev = evaluate(
+        &c.cacti,
+        s1.result.sram_trace(),
+        &s1.result.stats,
+        128 * MIB,
+        16,
+        0.9,
+        GatingPolicy::Aggressive,
+        1.0,
+    );
+    assert!(
+        trapti_ev.e_leak_j < agg.e_leak_j,
+        "time resolution must beat peak-pinned leakage: {} vs {}",
+        trapti_ev.e_leak_j,
+        agg.e_leak_j
+    );
+}
