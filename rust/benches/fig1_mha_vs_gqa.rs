@@ -1,14 +1,14 @@
 //! Bench: regenerate Fig. 1 (MHA vs GQA decode energy/latency) and time
 //! the end-to-end generation. Run: `cargo bench --bench fig1_mha_vs_gqa`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 
 fn main() {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let (_stats, f1) = bench("fig1_mha_vs_gqa", default_iters(), || {
-        exp::fig1(&coord).expect("fig1")
+        exp::fig1(&ctx).expect("fig1")
     });
     print!("{}", figures::fig1(&f1));
     assert!(f1.attn_energy_ratio() > 1.5, "GQA must win on attention energy");

@@ -1,15 +1,15 @@
 //! Bench: regenerate Fig. 5 (time-resolved occupancy traces, both
 //! workloads at 128 MiB). Run: `cargo bench --bench fig5_occupancy`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 use trapti::util::MIB;
 
 fn main() {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let (_stats, pair) = bench("fig5_occupancy", default_iters(), || {
-        exp::paired_prefill(&coord).expect("stage1 pair")
+        exp::paired_prefill(&ctx).expect("stage1 pair")
     });
     let (text, _, _) = figures::fig5(&pair);
     print!("{text}");

@@ -1,15 +1,15 @@
 //! Bench: regenerate Fig. 6 (per-op-class latency breakdown).
 //! Run: `cargo bench --bench fig6_latency_breakdown`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 use trapti::workload::OpClass;
 
 fn main() {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let (_stats, pair) = bench("fig6_latency_breakdown", default_iters(), || {
-        exp::paired_prefill(&coord).expect("stage1 pair")
+        exp::paired_prefill(&ctx).expect("stage1 pair")
     });
     print!("{}", figures::fig6(&pair));
     // The paper's observation: GPT-2 XL spends more non-compute time

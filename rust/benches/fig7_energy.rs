@@ -1,14 +1,14 @@
 //! Bench: regenerate Fig. 7 (on-chip energy breakdown + utilization).
 //! Run: `cargo bench --bench fig7_energy`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 
 fn main() {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let (_stats, pair) = bench("fig7_energy", default_iters(), || {
-        exp::paired_prefill(&coord).expect("stage1 pair")
+        exp::paired_prefill(&ctx).expect("stage1 pair")
     });
     print!("{}", figures::fig7(&pair));
     let e_mha = pair.mha.energy.on_chip_j();

@@ -1,16 +1,16 @@
 //! Bench: regenerate Fig. 8 (bank activity under different alphas, DS at
 //! 64 MiB / B=4). Run: `cargo bench --bench fig8_bank_activity`.
 
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::banking::avg_active;
-use trapti::coordinator::{experiments as exp, Coordinator};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 
 fn main() {
-    let coord = Coordinator::new();
-    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let ctx = ApiContext::new();
+    let pair = exp::paired_prefill(&ctx).expect("stage1 pair");
     let (_stats, f8) = bench("fig8_bank_activity", default_iters(), || {
-        exp::fig8(&coord, &pair.gqa)
+        exp::fig8(&pair.gqa)
     });
     print!("{}", figures::fig8(&f8));
     // Lower alpha -> more active banks on average (the figure's message).

@@ -1,15 +1,15 @@
 //! Bench: regenerate Fig. 9 (energy-area scatter over all (C, B)
 //! candidates). Run: `cargo bench --bench fig9_tradeoff`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::bench::{bench, default_iters};
 
 fn main() {
-    let coord = Coordinator::new();
-    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let ctx = ApiContext::new();
+    let pair = exp::paired_prefill(&ctx).expect("stage1 pair");
     let (_stats, t2) = bench("fig9_tradeoff", default_iters(), || {
-        exp::table2(&coord, &pair)
+        exp::table2(&ctx, &pair)
     });
     print!("{}", figures::fig9(&t2));
     // DS-R1D must dominate: lower energy at comparable area (its reduced,

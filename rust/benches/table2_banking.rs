@@ -1,16 +1,16 @@
 //! Bench: regenerate Table II (banking energy/area sweep, both
 //! workloads, alpha = 0.9). Run: `cargo bench --bench table2_banking`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::tables;
 use trapti::util::bench::{bench, default_iters};
 use trapti::util::MIB;
 
 fn main() {
-    let coord = Coordinator::new();
-    let pair = exp::paired_prefill(&coord).expect("stage1 pair");
+    let ctx = ApiContext::new();
+    let pair = exp::paired_prefill(&ctx).expect("stage1 pair");
     let (_stats, t2) = bench("table2_banking", default_iters(), || {
-        exp::table2(&coord, &pair)
+        exp::table2(&ctx, &pair)
     });
     for t in tables::table2(&t2) {
         print!("{}", t.render());

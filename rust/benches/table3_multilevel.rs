@@ -1,14 +1,14 @@
 //! Bench: regenerate Table III (multi-level hierarchy per-memory banking
 //! sweep). Run: `cargo bench --bench table3_multilevel`.
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::tables;
 use trapti::util::bench::{bench, default_iters};
 
 fn main() {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let (_stats, t3) = bench("table3_multilevel", default_iters(), || {
-        exp::table3(&coord).expect("table3")
+        exp::table3(&ctx).expect("table3")
     });
     println!(
         "multi-level: e2e {:.1} ms (paper 550), util {:.0}% (paper 57), \

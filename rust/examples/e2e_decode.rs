@@ -6,21 +6,23 @@
 //!    tokens with a host-side KV cache, logging the activation-magnitude
 //!    curve (the serving analogue of a loss curve).
 //! 2. **Performance path** — Stage-I-simulates the *same* decode
-//!    workload shape on the paper's accelerator and reports
-//!    latency/throughput.
+//!    workload shape on the paper's accelerator through `trapti::api`
+//!    and reports latency/throughput.
 //! 3. **Optimization path** — Stage II picks the best banked SRAM with
 //!    power gating for that workload.
 //!
-//! Requires `make artifacts` (build-time Python; never on this path).
+//! Requires `make artifacts` (build-time Python; never on this path)
+//! and a build with the real `xla` crate (offline builds link a stub —
+//! see rust/src/runtime/xla_stub.rs).
 //!
 //! Run: `cargo run --release --example e2e_decode`
 
+use trapti::api::{ApiContext, ExperimentSpec};
 use trapti::banking::{GatingPolicy, SweepSpec};
 use trapti::config::tiny;
-use trapti::coordinator::Coordinator;
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
 use trapti::util::MIB;
-use trapti::workload::{Workload, TINY_GQA};
+use trapti::workload::TINY_GQA;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. functional decode through PJRT ---------------------------
@@ -44,16 +46,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- 2. performance model of the same workload shape -------------
-    let coord = Coordinator::new();
-    let accel = tiny();
-    let s1 = coord.stage1(
-        &TINY_GQA,
-        Workload::Decode {
-            prompt: 32,
-            gen: steps as u32,
-        },
-        &accel,
-    )?;
+    let ctx = ApiContext::new();
+    let s1 = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .decode(32, steps as u32)
+        .accel(tiny())
+        .sweep(SweepSpec {
+            capacities: vec![MIB, 2 * MIB, 4 * MIB],
+            banks: vec![1, 2, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        })
+        .build()?
+        .run_stage1(&ctx)?;
     println!(
         "\nperformance model: {} ops, {:.3} ms simulated \
          ({:.1} us/token), peak SRAM {:.2} MiB",
@@ -64,24 +69,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3. Stage-II optimization for this workload -------------------
-    let spec = SweepSpec {
-        capacities: vec![MIB, 2 * MIB, 4 * MIB],
-        banks: vec![1, 2, 4, 8],
-        alphas: vec![0.9],
-        policies: vec![GatingPolicy::Aggressive],
-    };
-    let points = coord.stage2(&s1, &spec, accel.sa.freq_ghz);
-    let best = points
-        .iter()
-        .min_by(|a, b| a.eval.e_total_j().total_cmp(&b.eval.e_total_j()))
-        .expect("sweep non-empty");
+    let s2 = s1.stage2(&ctx);
+    let best = s2.best().expect("sweep non-empty");
     println!(
         "stage II: best organization C={} MiB, B={} -> {:.1}% SRAM energy \
          vs unbanked ({} candidates evaluated)",
         best.eval.capacity / MIB,
         best.eval.banks,
         best.delta_e_pct(),
-        points.len(),
+        s2.shared().len(),
     );
     println!("\nall three layers compose: OK");
     Ok(())

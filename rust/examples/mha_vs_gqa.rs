@@ -1,22 +1,23 @@
 //! MHA vs GQA comparison — the paper's central narrative (Figs. 1, 5-7):
 //! same accelerator, two attention mechanisms, radically different
-//! on-chip memory behavior.
+//! on-chip memory behavior. Both Stage-I runs execute as one parallel
+//! batch through `trapti::api::experiments`.
 //!
 //! Run: `cargo run --release --example mha_vs_gqa`
 
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext};
 use trapti::report::figures;
 use trapti::util::MIB;
 
 fn main() -> anyhow::Result<()> {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
 
     // Decode-phase motivation (Fig. 1): a parameter-matched pair.
-    let f1 = exp::fig1(&coord)?;
+    let f1 = exp::fig1(&ctx)?;
     print!("{}", figures::fig1(&f1));
 
     // Prefill at M=2048 on the 128 MiB baseline (Figs. 5-7).
-    let pair = exp::paired_prefill(&coord)?;
+    let pair = exp::paired_prefill(&ctx)?;
     println!(
         "\npeak needed: MHA {:.1} MiB vs GQA {:.1} MiB -> {:.2}x \
          (paper 107.3 vs 39.1 = 2.72x)",

@@ -1,26 +1,29 @@
 //! Multi-level on-chip hierarchy (paper §IV-D, Fig. 10, Table III):
 //! shared SRAM + two dedicated memories attached to SA pairs, with the
 //! non-optimized placement that produces cross-memory data hopping.
+//! Runs through `trapti::api` (single-level reference + multi-level
+//! Table III with defensive per-memory sweeps).
 //!
 //! Run: `cargo run --release --example multilevel_hierarchy`
 
-use trapti::config::{baseline, multilevel};
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext, ExperimentSpec};
+use trapti::config::baseline;
 use trapti::report::tables;
 use trapti::util::MIB;
-use trapti::workload::{Workload, DS_R1D_Q15B};
+use trapti::workload::DS_R1D_Q15B;
 
 fn main() -> anyhow::Result<()> {
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
 
     // Single-level reference.
-    let single = coord.stage1(
-        &DS_R1D_Q15B,
-        Workload::Prefill { seq: 2048 },
-        &baseline(),
-    )?;
+    let single = ExperimentSpec::builder()
+        .model(DS_R1D_Q15B)
+        .prefill(2048)
+        .accel(baseline())
+        .build()?
+        .run_stage1(&ctx)?;
     // Multi-level run.
-    let t3 = exp::table3(&coord)?;
+    let t3 = exp::table3(&ctx)?;
     let multi = &t3.stage1;
 
     println!("DS-R1D Q-1.5B prefill, single vs multi-level hierarchy:");
@@ -47,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         multi.energy.on_chip_j(),
     );
     println!("\nper-memory peak needed bytes:");
-    for tr in &multi.result.traces {
+    for tr in multi.traces() {
         println!(
             "  {:>6}: {:>6.1} MiB (paper: sram 34.1, dm1 35.5, dm2 37.7)",
             tr.memory,

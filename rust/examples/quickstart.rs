@@ -1,5 +1,5 @@
-//! Quickstart: the complete TRAPTI two-stage flow on one workload in
-//! ~40 lines of user code.
+//! Quickstart: the complete TRAPTI two-stage flow through `trapti::api`
+//! — spec builder, Stage-I run, typed Stage-II handle.
 //!
 //! Stage I simulates DeepSeek-R1-Distill-Qwen-1.5B prefill (M=2048) on
 //! the paper's baseline accelerator and extracts the time-resolved SRAM
@@ -8,18 +8,29 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use trapti::api::{ApiContext, ExperimentSpec};
 use trapti::banking::{GatingPolicy, SweepSpec};
-use trapti::config::baseline;
-use trapti::coordinator::Coordinator;
 use trapti::util::MIB;
-use trapti::workload::{Workload, DS_R1D_Q15B};
+use trapti::workload::DS_R1D_Q15B;
 
 fn main() -> anyhow::Result<()> {
-    let coord = Coordinator::new();
-    let accel = baseline();
+    let ctx = ApiContext::new();
+
+    // --- Spec: model x workload x accelerator x sweep grid -------------
+    let spec = ExperimentSpec::builder()
+        .model(DS_R1D_Q15B)
+        .prefill(2048) // baseline accelerator is the default
+        .sweep(SweepSpec {
+            capacities: vec![48 * MIB, 64 * MIB, 128 * MIB],
+            banks: vec![1, 4, 8, 16],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        })
+        .build()?;
+    println!("spec {:016x}", spec.content_hash());
 
     // --- Stage I: cycle-level simulation + occupancy trace ------------
-    let s1 = coord.stage1(&DS_R1D_Q15B, Workload::Prefill { seq: 2048 }, &accel)?;
+    let s1 = spec.run_stage1(&ctx)?;
     println!("{}", s1.graph.summary());
     println!(
         "Stage I: {:.1} ms simulated, peak needed {:.1} MiB, \
@@ -31,18 +42,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- Stage II: banking + power-gating exploration ------------------
-    let spec = SweepSpec {
-        capacities: vec![48 * MIB, 64 * MIB, 128 * MIB],
-        banks: vec![1, 4, 8, 16],
-        alphas: vec![0.9],
-        policies: vec![GatingPolicy::Aggressive],
-    };
+    // (typed handle: only obtainable from a Stage-I run, reading the
+    // occupancy trace through a borrowed view).
+    let s2 = s1.stage2(&ctx);
     println!("\nStage II (alpha=0.9, aggressive gating):");
     println!(
         "{:>8} {:>6} {:>12} {:>8} {:>12}",
         "C[MiB]", "banks", "E_total[J]", "dE%", "area[mm2]"
     );
-    for p in coord.stage2(&s1, &spec, accel.sa.freq_ghz) {
+    for p in s2.shared() {
         println!(
             "{:>8} {:>6} {:>12.2} {:>8.1} {:>12.1}",
             p.eval.capacity / MIB,

@@ -1,0 +1,303 @@
+//! `BatchRunner`: execute many [`ExperimentSpec`]s concurrently.
+//!
+//! The ROADMAP's north star is serving many scenarios fast: a grid of
+//! (model × workload × accelerator × sweep) specs runs as one parallel
+//! batch across OS threads, with results memoized by
+//! [`ExperimentSpec::content_hash`] so duplicated specs (common in
+//! sweep grids that share a baseline) simulate exactly once. Simulation
+//! is deterministic, so the batch output is byte-identical to a naive
+//! sequential loop — `run_sequential` exists precisely to assert that.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::banking::SweepPoint;
+use crate::util::MIB;
+
+use super::spec::ExperimentSpec;
+use super::stage::{ApiContext, Stage1Run};
+
+/// Shared per-unique-spec outcome (Stage I always; Stage II iff the
+/// spec carries a sweep grid).
+#[derive(Clone)]
+struct Computed {
+    stage1: Arc<Stage1Run>,
+    sweep: Arc<Vec<(String, Vec<SweepPoint>)>>,
+}
+
+/// One batch entry's results. Duplicated input specs share the same
+/// `Arc`s (memoization) — compare with [`Arc::ptr_eq`].
+#[derive(Clone)]
+pub struct BatchResult {
+    pub spec: ExperimentSpec,
+    /// The spec's content hash (memoization key).
+    pub hash: u64,
+    pub stage1: Arc<Stage1Run>,
+    /// Stage-II evaluations per memory; empty when the spec had no
+    /// sweep grid.
+    pub sweep: Arc<Vec<(String, Vec<SweepPoint>)>>,
+}
+
+impl BatchResult {
+    /// Deterministic text report (stable field order and float
+    /// formatting), suitable for byte-for-byte comparison between
+    /// parallel and sequential executions.
+    pub fn report(&self) -> String {
+        let r = &self.stage1.result;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "=== {} {:?} on {} [spec {:016x}] ===\n",
+            self.spec.model.name, self.spec.workload, self.spec.accel.name, self.hash
+        ));
+        out.push_str(&format!(
+            "stage1: cycles={} time_ms={:.6} peak_needed_mib={:.6} feasible={} \
+             reads={} writes={} on_chip_j={:.9}\n",
+            r.total_cycles,
+            r.seconds() * 1e3,
+            r.peak_needed() as f64 / MIB as f64,
+            r.feasible(),
+            r.stats.reads,
+            r.stats.writes,
+            self.stage1.energy.on_chip_j(),
+        ));
+        for (mem, points) in self.sweep.iter() {
+            for p in points {
+                out.push_str(&format!(
+                    "stage2 {mem}: C_mib={} B={} alpha={:.3} policy={} \
+                     e_total_j={:.9} delta_e_pct={:.6} area_mm2={:.6}\n",
+                    p.eval.capacity / MIB,
+                    p.eval.banks,
+                    p.eval.alpha,
+                    p.eval.policy.label(),
+                    p.eval.e_total_j(),
+                    p.delta_e_pct(),
+                    p.eval.area_mm2,
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Parallel, memoizing executor over experiment specs.
+pub struct BatchRunner {
+    ctx: ApiContext,
+    threads: usize,
+    derive_sweep: bool,
+}
+
+impl Default for BatchRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchRunner {
+    pub fn new() -> Self {
+        Self::with_context(ApiContext::default())
+    }
+
+    pub fn with_context(ctx: ApiContext) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self {
+            ctx,
+            threads,
+            derive_sweep: false,
+        }
+    }
+
+    /// Cap the worker-thread count (>= 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Run Stage II for *every* spec, deriving the paper grid from the
+    /// Stage-I peak when a spec carries no explicit sweep. Keeps the
+    /// sweep inside the batch's parallelism and memoization instead of
+    /// leaving it to a serial post-pass.
+    pub fn derive_sweep(mut self, yes: bool) -> Self {
+        self.derive_sweep = yes;
+        self
+    }
+
+    pub fn context(&self) -> &ApiContext {
+        &self.ctx
+    }
+
+    /// Execute all `specs`, deduplicated by content hash, across up to
+    /// `self.threads` worker threads. Output order matches input order;
+    /// duplicated specs share `Arc`s with their first occurrence.
+    pub fn run(&self, specs: &[ExperimentSpec]) -> Result<Vec<BatchResult>> {
+        for s in specs {
+            s.validate()?;
+        }
+        // Dedupe, preserving first-seen order (hash + structural
+        // equality, so a hash collision cannot alias two specs).
+        let mut unique: Vec<(u64, &ExperimentSpec)> = Vec::new();
+        let mut index_of: Vec<usize> = Vec::with_capacity(specs.len());
+        for s in specs {
+            let h = s.content_hash();
+            match unique.iter().position(|&(uh, us)| uh == h && us == s) {
+                Some(i) => index_of.push(i),
+                None => {
+                    unique.push((h, s));
+                    index_of.push(unique.len() - 1);
+                }
+            }
+        }
+
+        let n = unique.len();
+        let slots: Vec<Mutex<Option<Result<Computed>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.threads.min(n.max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let outcome = self.compute(unique[i].1);
+                    *slots[i].lock().expect("slot poisoned") = Some(outcome);
+                });
+            }
+        });
+
+        let mut computed: Vec<Computed> = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let outcome = slot
+                .into_inner()
+                .expect("slot poisoned")
+                .ok_or_else(|| anyhow!("batch worker never completed spec {i}"))?;
+            computed.push(outcome?);
+        }
+
+        Ok(index_of
+            .into_iter()
+            .zip(specs)
+            .map(|(u, s)| BatchResult {
+                spec: s.clone(),
+                hash: unique[u].0,
+                stage1: computed[u].stage1.clone(),
+                sweep: computed[u].sweep.clone(),
+            })
+            .collect())
+    }
+
+    /// Naive reference executor: one spec after another, no threads, no
+    /// memoization. `run` must produce byte-identical reports.
+    pub fn run_sequential(&self, specs: &[ExperimentSpec]) -> Result<Vec<BatchResult>> {
+        specs
+            .iter()
+            .map(|s| {
+                let c = self.compute(s)?;
+                Ok(BatchResult {
+                    spec: s.clone(),
+                    hash: s.content_hash(),
+                    stage1: c.stage1,
+                    sweep: c.sweep,
+                })
+            })
+            .collect()
+    }
+
+    fn compute(&self, spec: &ExperimentSpec) -> Result<Computed> {
+        let s1 = spec.run_stage1(&self.ctx)?;
+        let sweep = if spec.sweep.is_some() || self.derive_sweep {
+            let s2 = s1.stage2(&self.ctx);
+            Arc::new(s2.per_memory)
+        } else {
+            Arc::new(Vec::new())
+        };
+        Ok(Computed {
+            stage1: Arc::new(s1),
+            sweep,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::{GatingPolicy, SweepSpec};
+    use crate::config::tiny;
+    use crate::workload::{TINY_GQA, TINY_MHA};
+
+    fn spec(model: crate::workload::ModelPreset, seq: u32) -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .model(model)
+            .prefill(seq)
+            .accel(tiny())
+            .sweep(SweepSpec {
+                capacities: vec![2 * MIB, 4 * MIB],
+                banks: vec![1, 4],
+                alphas: vec![0.9],
+                policies: vec![GatingPolicy::Aggressive],
+            })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn memoizes_duplicate_specs() {
+        let specs = vec![spec(TINY_GQA, 64), spec(TINY_MHA, 64), spec(TINY_GQA, 64)];
+        let out = BatchRunner::new().threads(2).run(&specs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(Arc::ptr_eq(&out[0].stage1, &out[2].stage1), "memoized");
+        assert!(Arc::ptr_eq(&out[0].sweep, &out[2].sweep));
+        assert!(!Arc::ptr_eq(&out[0].stage1, &out[1].stage1));
+        assert_eq!(out[0].hash, out[2].hash);
+        assert_ne!(out[0].hash, out[1].hash);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_byte_for_byte() {
+        let specs = vec![spec(TINY_GQA, 64), spec(TINY_MHA, 48), spec(TINY_GQA, 64)];
+        let runner = BatchRunner::new().threads(2);
+        let par: Vec<String> =
+            runner.run(&specs).unwrap().iter().map(|r| r.report()).collect();
+        let seq: Vec<String> = runner
+            .run_sequential(&specs)
+            .unwrap()
+            .iter()
+            .map(|r| r.report())
+            .collect();
+        assert_eq!(par, seq);
+        assert!(par[0].contains("stage2"), "sweep points rendered");
+    }
+
+    #[test]
+    fn derive_sweep_fills_in_paper_grid() {
+        let mut sp = spec(TINY_GQA, 64);
+        sp.sweep = None;
+        // Without the knob: Stage I only.
+        let plain = BatchRunner::new().run(std::slice::from_ref(&sp)).unwrap();
+        assert!(plain[0].sweep.is_empty());
+        // With it: the paper grid derived from the Stage-I peak.
+        let derived = BatchRunner::new()
+            .derive_sweep(true)
+            .run(std::slice::from_ref(&sp))
+            .unwrap();
+        assert_eq!(derived[0].sweep.len(), 1);
+        assert!(!derived[0].sweep[0].1.is_empty(), "grid never empty");
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let out = BatchRunner::new().run(&[]).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn invalid_spec_fails_fast() {
+        let mut bad = spec(TINY_GQA, 64);
+        bad.workload = crate::workload::Workload::Prefill { seq: 0 };
+        assert!(BatchRunner::new().run(&[bad]).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! `trapti::api` — the typed, composable entry point for the whole
+//! TRAPTI flow.
+//!
+//! The pipeline is spec → stage handles → (optionally) parallel batch:
+//!
+//! 1. **[`ExperimentSpec`]** (via [`ExperimentSpec::builder`]) describes
+//!    one scenario — model, workload, accelerator, optional Stage-II
+//!    sweep grid — validates on `build()`, and exposes a stable
+//!    [`ExperimentSpec::content_hash`] used for memoization.
+//! 2. **[`Stage1Run`]** executes the cycle-level simulation and owns
+//!    the occupancy traces; **[`Stage2Run`]** (obtainable only from a
+//!    `&Stage1Run`, over borrowed trace views) evaluates banking and
+//!    power-gating candidates. Illegal orderings (Stage II before
+//!    Stage I) are unrepresentable. Streaming-only runs
+//!    ([`ExperimentSpec::stream_stage1`] + a [`trace::TraceSink`])
+//!    return a [`Stage1Summary`] with no Stage-II surface at all.
+//! 3. **[`BatchRunner`]** executes many specs concurrently across
+//!    threads, memoized by spec hash — a grid of scenarios runs as one
+//!    parallel batch with byte-identical results to a sequential loop.
+//!
+//! The paper's figure/table runners live in [`experiments`]; the
+//! legacy `coordinator::Coordinator` is a thin deprecated shim over
+//! this module.
+//!
+//! ```no_run
+//! use trapti::api::{ApiContext, ExperimentSpec};
+//! use trapti::workload::DS_R1D_Q15B;
+//!
+//! let ctx = ApiContext::new();
+//! let spec = ExperimentSpec::builder()
+//!     .model(DS_R1D_Q15B)
+//!     .prefill(2048)
+//!     .build()
+//!     .unwrap();
+//! let s1 = spec.run_stage1(&ctx).unwrap();
+//! let s2 = s1.stage2(&ctx); // paper grid derived from the peak
+//! println!("best dE = {:.1}%", s2.best_delta_pct());
+//! ```
+//!
+//! [`trace::TraceSink`]: crate::trace::TraceSink
+
+pub mod batch;
+pub mod experiments;
+pub mod spec;
+pub mod stage;
+
+pub use batch::{BatchResult, BatchRunner};
+pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};
+pub use stage::{ApiContext, Stage1Run, Stage1Summary, Stage2Run};

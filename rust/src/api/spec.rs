@@ -1,0 +1,437 @@
+//! `ExperimentSpec`: the validated, hashable description of one TRAPTI
+//! scenario (model × workload × accelerator × optional Stage-II grid).
+//!
+//! A spec is pure data — building one runs nothing. `run_stage1` (see
+//! [`super::stage`]) turns it into results; [`super::BatchRunner`]
+//! executes many concurrently, memoized by [`ExperimentSpec::content_hash`].
+
+use anyhow::{bail, ensure, Result};
+
+use crate::banking::{GatingPolicy, SweepSpec};
+use crate::config::{baseline, AccelConfig};
+use crate::workload::{FfnKind, ModelPreset, NormKind, Workload};
+
+/// One fully-specified experiment. Construct via [`ExperimentSpec::builder`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    pub model: ModelPreset,
+    pub workload: Workload,
+    pub accel: AccelConfig,
+    /// Stage-II sweep grid. `None` means "derive the paper grid from the
+    /// Stage-I peak" when Stage II is requested.
+    pub sweep: Option<SweepSpec>,
+}
+
+impl ExperimentSpec {
+    pub fn builder() -> ExperimentSpecBuilder {
+        ExperimentSpecBuilder::default()
+    }
+
+    /// Frequency used for Stage-II cycle→seconds conversion.
+    pub fn freq_ghz(&self) -> f64 {
+        self.accel.sa.freq_ghz
+    }
+
+    /// Stable 64-bit content hash (FNV-1a over a canonical field
+    /// serialization). Two specs hash equal iff every semantic field is
+    /// equal — builder call order cannot matter because the hash is
+    /// computed on the built value. Used as the `BatchRunner`
+    /// memoization key.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.str("trapti-spec-v1");
+
+        // Model (full structural fields, so custom presets hash too).
+        h.str(self.model.name);
+        h.u64(self.model.layers as u64);
+        h.u64(self.model.d_model as u64);
+        h.u64(self.model.heads as u64);
+        h.u64(self.model.kv_heads as u64);
+        h.u64(self.model.d_head as u64);
+        h.u64(self.model.d_ff as u64);
+        h.u64(match self.model.ffn {
+            FfnKind::Gelu => 0,
+            FfnKind::SwiGlu => 1,
+        });
+        h.u64(match self.model.norm {
+            NormKind::LayerNorm => 0,
+            NormKind::RmsNorm => 1,
+        });
+
+        // Workload.
+        match self.workload {
+            Workload::Prefill { seq } => {
+                h.u64(0);
+                h.u64(seq as u64);
+            }
+            Workload::Decode { prompt, gen } => {
+                h.u64(1);
+                h.u64(prompt as u64);
+                h.u64(gen as u64);
+            }
+        }
+
+        // Accelerator.
+        h.str(&self.accel.name);
+        h.u64(self.accel.sa.rows as u64);
+        h.u64(self.accel.sa.cols as u64);
+        h.u64(self.accel.sa.count as u64);
+        h.f64(self.accel.sa.freq_ghz);
+        h.u64(self.accel.fifo.lanes as u64);
+        h.u64(self.accel.fifo.depth as u64);
+        h.u64(self.accel.on_chip.len() as u64);
+        for m in self.accel.on_chip.iter().chain(std::iter::once(&self.accel.dram)) {
+            h.str(&m.name);
+            h.u64(m.capacity);
+            h.u64(m.ports as u64);
+            h.u64(m.bytes_per_cycle as u64);
+            h.u64(m.latency_cycles);
+        }
+        h.u64(self.accel.sched.subops as u64);
+        h.u64(self.accel.sched.issue_window as u64);
+        h.u64(self.accel.sched.window_stages as u64);
+        h.u64(self.accel.sched.weight_prefetch_ops as u64);
+        h.u64(self.accel.sched.mem_path_bytes_per_cycle as u64);
+        h.u64(self.accel.sched.weight_resident as u64);
+        h.u64(self.accel.topology.mem_of_sa.len() as u64);
+        for &m in &self.accel.topology.mem_of_sa {
+            h.u64(m as u64);
+        }
+
+        // Sweep.
+        match &self.sweep {
+            None => h.u64(0),
+            Some(s) => {
+                h.u64(1);
+                h.u64(s.capacities.len() as u64);
+                for &c in &s.capacities {
+                    h.u64(c);
+                }
+                h.u64(s.banks.len() as u64);
+                for &b in &s.banks {
+                    h.u64(b as u64);
+                }
+                h.u64(s.alphas.len() as u64);
+                for &a in &s.alphas {
+                    h.f64(a);
+                }
+                h.u64(s.policies.len() as u64);
+                for p in &s.policies {
+                    hash_policy(&mut h, p);
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Validate every field; called by the builder and by `BatchRunner`
+    /// on externally-constructed specs.
+    pub fn validate(&self) -> Result<()> {
+        let m = &self.model;
+        ensure!(m.layers >= 1, "model `{}` has zero layers", m.name);
+        ensure!(
+            m.d_model >= 1 && m.d_ff >= 1 && m.d_head >= 1,
+            "model `{}` has a zero dimension",
+            m.name
+        );
+        ensure!(
+            m.heads >= 1 && m.kv_heads >= 1,
+            "model `{}` has zero heads",
+            m.name
+        );
+        ensure!(
+            m.heads % m.kv_heads == 0,
+            "model `{}`: heads ({}) must be divisible by kv_heads ({})",
+            m.name,
+            m.heads,
+            m.kv_heads
+        );
+        match self.workload {
+            Workload::Prefill { seq } => {
+                ensure!(seq >= 1, "prefill needs seq >= 1 (got {seq})");
+            }
+            Workload::Decode { gen, .. } => {
+                ensure!(gen >= 1, "decode needs gen >= 1 (got {gen})");
+            }
+        }
+        self.accel.validate()?;
+        if let Some(s) = &self.sweep {
+            validate_sweep(s)?;
+        }
+        Ok(())
+    }
+}
+
+/// Reject sweep grids the Stage-II evaluator cannot process (empty axes
+/// would silently produce zero points; non-power-of-two bank counts
+/// would panic inside the CACTI characterization).
+pub fn validate_sweep(s: &SweepSpec) -> Result<()> {
+    ensure!(!s.capacities.is_empty(), "sweep grid has no capacities");
+    ensure!(!s.banks.is_empty(), "sweep grid has no bank counts");
+    ensure!(!s.alphas.is_empty(), "sweep grid has no alphas");
+    ensure!(!s.policies.is_empty(), "sweep grid has no gating policies");
+    for &c in &s.capacities {
+        ensure!(c > 0, "sweep capacity must be > 0");
+    }
+    for &b in &s.banks {
+        ensure!(
+            b >= 1 && b.is_power_of_two(),
+            "bank count {b} must be a power of two >= 1 (CACTI constraint)"
+        );
+    }
+    for &a in &s.alphas {
+        ensure!(
+            a > 0.0 && a <= 1.0,
+            "alpha {a} must be in (0, 1]"
+        );
+    }
+    Ok(())
+}
+
+fn hash_policy(h: &mut Fnv, p: &GatingPolicy) {
+    match *p {
+        GatingPolicy::None => h.u64(0),
+        GatingPolicy::Aggressive => h.u64(1),
+        GatingPolicy::Conservative { min_idle_factor } => {
+            h.u64(2);
+            h.f64(min_idle_factor);
+        }
+        GatingPolicy::Drowsy { retention_factor } => {
+            h.u64(3);
+            h.f64(retention_factor);
+        }
+    }
+}
+
+/// Builder for [`ExperimentSpec`]; `build()` validates.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentSpecBuilder {
+    model: Option<ModelPreset>,
+    workload: Option<Workload>,
+    accel: Option<AccelConfig>,
+    sweep: Option<SweepSpec>,
+}
+
+impl ExperimentSpecBuilder {
+    pub fn model(mut self, model: ModelPreset) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Shorthand for `.workload(Workload::Prefill { seq })`.
+    pub fn prefill(self, seq: u32) -> Self {
+        self.workload(Workload::Prefill { seq })
+    }
+
+    /// Shorthand for `.workload(Workload::Decode { prompt, gen })`.
+    pub fn decode(self, prompt: u32, gen: u32) -> Self {
+        self.workload(Workload::Decode { prompt, gen })
+    }
+
+    /// Accelerator configuration; defaults to the paper baseline
+    /// (`config::baseline()`) when omitted.
+    pub fn accel(mut self, accel: AccelConfig) -> Self {
+        self.accel = Some(accel);
+        self
+    }
+
+    /// Stage-II sweep grid. Omit to derive the paper grid from the
+    /// Stage-I peak at Stage-II time.
+    pub fn sweep(mut self, sweep: SweepSpec) -> Self {
+        self.sweep = Some(sweep);
+        self
+    }
+
+    pub fn build(self) -> Result<ExperimentSpec> {
+        let Some(model) = self.model else {
+            bail!("ExperimentSpec: model not set");
+        };
+        let Some(workload) = self.workload else {
+            bail!("ExperimentSpec: workload not set (use .prefill/.decode)");
+        };
+        let spec = ExperimentSpec {
+            model,
+            workload,
+            accel: self.accel.unwrap_or_else(baseline),
+            sweep: self.sweep,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// FNV-1a, 64-bit: tiny, dependency-free, stable across platforms.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny;
+    use crate::util::MIB;
+    use crate::workload::TINY_GQA;
+
+    fn base() -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_accel_to_baseline() {
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .build()
+            .unwrap();
+        assert_eq!(spec.accel.name, "baseline-128MiB");
+    }
+
+    #[test]
+    fn builder_rejects_missing_fields() {
+        assert!(ExperimentSpec::builder().prefill(64).build().is_err());
+        assert!(ExperimentSpec::builder().model(TINY_GQA).build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_seq_and_gen() {
+        let err = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("seq >= 1"), "{err}");
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .decode(16, 0)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_empty_and_invalid_sweep_grids() {
+        let empty_banks = SweepSpec {
+            capacities: vec![4 * MIB],
+            banks: vec![],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .sweep(empty_banks)
+            .build()
+            .is_err());
+
+        let bad_banks = SweepSpec {
+            capacities: vec![4 * MIB],
+            banks: vec![3],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .sweep(bad_banks)
+            .build()
+            .is_err());
+
+        let bad_alpha = SweepSpec {
+            capacities: vec![4 * MIB],
+            banks: vec![4],
+            alphas: vec![1.5],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .sweep(bad_alpha)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_rejects_indivisible_heads() {
+        let mut m = TINY_GQA.clone();
+        m.kv_heads = 3; // 4 % 3 != 0
+        assert!(ExperimentSpec::builder().model(m).prefill(64).build().is_err());
+    }
+
+    #[test]
+    fn hash_stable_across_builder_field_order() {
+        let a = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        let b = ExperimentSpec::builder()
+            .accel(tiny())
+            .prefill(64)
+            .model(TINY_GQA)
+            .build()
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn hash_distinguishes_semantic_changes() {
+        let a = base();
+        let mut b = base();
+        b.workload = Workload::Prefill { seq: 65 };
+        assert_ne!(a.content_hash(), b.content_hash());
+
+        let mut c = base();
+        c.accel.on_chip[0].capacity += 1;
+        assert_ne!(a.content_hash(), c.content_hash());
+
+        let mut d = base();
+        d.sweep = Some(SweepSpec::paper_grid(32 * MIB));
+        assert_ne!(a.content_hash(), d.content_hash());
+    }
+
+    #[test]
+    fn hash_is_deterministic_across_clones() {
+        let a = base();
+        let b = a.clone();
+        assert_eq!(a.content_hash(), b.content_hash());
+    }
+}

@@ -1,0 +1,393 @@
+//! Typed stage handles: `ExperimentSpec` → [`Stage1Run`] → [`Stage2Run`].
+//!
+//! The handle types encode the paper's two-stage flow in the type
+//! system: a `Stage2Run` can only be obtained from a `&Stage1Run` (and
+//! borrows it), so "sweep before simulate" is unrepresentable, and the
+//! Stage-II evaluator reads the occupancy trace through a borrowed view
+//! instead of cloning it. Streaming-only runs return a
+//! [`Stage1Summary`], which deliberately has *no* Stage-II methods —
+//! its traces were never materialized.
+
+use anyhow::Result;
+
+use crate::banking::{sweep, SweepPoint, SweepSpec};
+use crate::cacti::CactiModel;
+use crate::energy::{energy_breakdown, EnergyBreakdown, EnergyParams};
+use crate::memory::{size_memory, SizingResult};
+use crate::sim::{simulate, simulate_with, SimOptions, SimResult};
+use crate::trace::{OccupancyTrace, TraceSink};
+use crate::util::MIB;
+use crate::workload::{build_workload, WorkloadGraph};
+
+use super::spec::ExperimentSpec;
+
+/// Shared measurement context: CACTI characterization + energy
+/// coefficients. One context serves any number of runs (it is `Sync`,
+/// so `BatchRunner` shares it across threads).
+#[derive(Debug, Clone, Default)]
+pub struct ApiContext {
+    pub cacti: CactiModel,
+    pub energy: EnergyParams,
+}
+
+impl ApiContext {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Stage-I output bundle: the built workload graph, the cycle-level
+/// simulation result (with materialized occupancy traces), and the
+/// Fig. 7 energy breakdown.
+#[derive(Debug, Clone)]
+pub struct Stage1Run {
+    pub spec: ExperimentSpec,
+    pub graph: WorkloadGraph,
+    pub result: SimResult,
+    pub energy: EnergyBreakdown,
+}
+
+/// Stage-I output of a streaming run (`ExperimentSpec::stream_stage1`):
+/// timing, stats and energy, but **no** materialized traces — occupancy
+/// went to the caller's `TraceSink`. Consequently there are no Stage-II
+/// methods on this type, and the inner `SimResult` is private: its
+/// trace-derived accessors (`peak_needed`, `sram_trace`, …) would
+/// silently report empty traces on a streaming run, so the summary only
+/// exposes the queries that remain meaningful. Peaks/averages live in
+/// the caller's sink (e.g. `trace::OnlineStatsSink`).
+#[derive(Debug, Clone)]
+pub struct Stage1Summary {
+    pub spec: ExperimentSpec,
+    pub graph: WorkloadGraph,
+    pub energy: EnergyBreakdown,
+    result: SimResult,
+}
+
+impl Stage1Summary {
+    pub fn total_cycles(&self) -> u64 {
+        self.result.total_cycles
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.result.seconds()
+    }
+
+    /// Aggregated access statistics (all on-chip memories + DRAM).
+    pub fn stats(&self) -> &crate::trace::AccessStats {
+        &self.result.stats
+    }
+
+    pub fn feasible(&self) -> bool {
+        self.result.feasible()
+    }
+
+    pub fn active_utilization(&self) -> f64 {
+        self.result.active_utilization()
+    }
+
+    pub fn e2e_utilization(&self) -> f64 {
+        self.result.e2e_utilization()
+    }
+
+    /// Escape hatch: the raw `SimResult`. Its `traces` were **not**
+    /// materialized — trace-derived queries on it return 0/empty.
+    pub fn into_result(self) -> SimResult {
+        self.result
+    }
+}
+
+impl ExperimentSpec {
+    /// Execute Stage I (build graph → simulate → energy breakdown).
+    pub fn run_stage1(&self, ctx: &ApiContext) -> Result<Stage1Run> {
+        self.validate()?;
+        let graph = build_workload(&self.model, self.workload)?;
+        let result = simulate(&graph, &self.accel)?;
+        let energy = energy_breakdown(&result, &self.accel, &ctx.cacti, &ctx.energy);
+        Ok(Stage1Run {
+            spec: self.clone(),
+            graph,
+            result,
+            energy,
+        })
+    }
+
+    /// Execute Stage I streaming occupancy into `sink` without
+    /// materializing traces (O(1) trace memory).
+    pub fn stream_stage1(
+        &self,
+        ctx: &ApiContext,
+        sink: &mut dyn TraceSink,
+    ) -> Result<Stage1Summary> {
+        self.validate()?;
+        let graph = build_workload(&self.model, self.workload)?;
+        let result = simulate_with(
+            &graph,
+            &self.accel,
+            SimOptions {
+                sink: Some(sink),
+                materialize: false,
+            },
+        )?;
+        let energy = energy_breakdown(&result, &self.accel, &ctx.cacti, &ctx.energy);
+        Ok(Stage1Summary {
+            spec: self.clone(),
+            graph,
+            energy,
+            result,
+        })
+    }
+
+    /// Stage-I memory sizing loop (16 MiB steps, CACTI latency model —
+    /// the paper's §IV-B blue loop in Fig. 3).
+    pub fn size_memory(&self, ctx: &ApiContext) -> Result<SizingResult> {
+        self.validate()?;
+        let graph = build_workload(&self.model, self.workload)?;
+        let cacti = ctx.cacti.clone();
+        size_memory(&graph, &self.accel, 16 * MIB, &move |cap| {
+            cacti.latency_cycles(cap)
+        })
+    }
+}
+
+impl Stage1Run {
+    /// Borrowed view of the shared-SRAM occupancy trace.
+    pub fn trace(&self) -> &OccupancyTrace {
+        self.result.sram_trace()
+    }
+
+    /// Borrowed views of every on-chip memory's trace (index 0 = shared).
+    pub fn traces(&self) -> &[OccupancyTrace] {
+        &self.result.traces
+    }
+
+    /// The paper's default Stage-II grid for this run (16 MiB capacity
+    /// steps from the observed peak up to 128 MiB, B ∈ {1..32}, α = 0.9,
+    /// aggressive gating).
+    pub fn paper_sweep(&self) -> SweepSpec {
+        SweepSpec::paper_grid(self.result.peak_needed())
+    }
+
+    /// The sweep grid this run will use: the spec's, or the derived
+    /// paper grid when the spec left it open.
+    fn effective_sweep(&self) -> SweepSpec {
+        self.spec
+            .sweep
+            .clone()
+            .unwrap_or_else(|| self.paper_sweep())
+    }
+
+    /// Stage II over the shared-SRAM trace with the run's aggregate
+    /// access statistics (Table II semantics).
+    pub fn stage2(&self, ctx: &ApiContext) -> Stage2Run<'_> {
+        let spec = self.effective_sweep();
+        self.stage2_with(ctx, &spec)
+    }
+
+    /// Stage II over the shared-SRAM trace with an explicit grid.
+    pub fn stage2_with(&self, ctx: &ApiContext, spec: &SweepSpec) -> Stage2Run<'_> {
+        let trace = self.result.sram_trace();
+        let points = sweep(
+            &ctx.cacti,
+            trace,
+            &self.result.stats,
+            spec,
+            self.spec.freq_ghz(),
+        );
+        Stage2Run {
+            stage1: self,
+            spec: spec.clone(),
+            per_memory: vec![(trace.memory.clone(), points)],
+        }
+    }
+
+    /// Stage II independently per on-chip memory (Table III evaluates
+    /// shared SRAM, DM1, DM2 separately). Traces zip *defensively* with
+    /// their per-memory statistics: a length mismatch evaluates the
+    /// common prefix instead of panicking.
+    pub fn stage2_per_memory(&self, ctx: &ApiContext) -> Stage2Run<'_> {
+        let spec = self.effective_sweep();
+        self.stage2_per_memory_with(ctx, &spec)
+    }
+
+    /// Per-memory Stage II with an explicit grid.
+    pub fn stage2_per_memory_with(
+        &self,
+        ctx: &ApiContext,
+        spec: &SweepSpec,
+    ) -> Stage2Run<'_> {
+        let per_memory = self
+            .result
+            .traces
+            .iter()
+            .zip(self.result.per_mem_stats.iter())
+            .map(|(tr, st)| {
+                (
+                    tr.memory.clone(),
+                    sweep(&ctx.cacti, tr, st, spec, self.spec.freq_ghz()),
+                )
+            })
+            .collect();
+        Stage2Run {
+            stage1: self,
+            spec: spec.clone(),
+            per_memory,
+        }
+    }
+}
+
+/// Stage-II output: sweep evaluations grouped per memory, borrowing the
+/// Stage-I run they were derived from.
+#[derive(Debug, Clone)]
+pub struct Stage2Run<'a> {
+    pub stage1: &'a Stage1Run,
+    pub spec: SweepSpec,
+    /// `(memory name, evaluated grid points)` — one entry for
+    /// shared-SRAM sweeps, one per on-chip memory for per-memory sweeps.
+    pub per_memory: Vec<(String, Vec<SweepPoint>)>,
+}
+
+impl Stage2Run<'_> {
+    /// Points of the shared SRAM (first memory).
+    pub fn shared(&self) -> &[SweepPoint] {
+        self.per_memory
+            .first()
+            .map(|(_, pts)| pts.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// All points across all memories.
+    pub fn points(&self) -> impl Iterator<Item = &SweepPoint> + '_ {
+        self.per_memory.iter().flat_map(|(_, pts)| pts.iter())
+    }
+
+    /// Lowest-energy candidate anywhere.
+    pub fn best(&self) -> Option<&SweepPoint> {
+        self.points()
+            .min_by(|a, b| a.eval.e_total_j().total_cmp(&b.eval.e_total_j()))
+    }
+
+    /// Best ΔE% anywhere (the paper's headline metric; negative = win).
+    pub fn best_delta_pct(&self) -> f64 {
+        self.points()
+            .map(|p| p.delta_e_pct())
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::GatingPolicy;
+    use crate::config::{multilevel, tiny};
+    use crate::workload::TINY_GQA;
+
+    fn small_grid() -> SweepSpec {
+        SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB],
+            banks: vec![1, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        }
+    }
+
+    fn tiny_spec() -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .sweep(small_grid())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn stage1_then_stage2_composes() {
+        let ctx = ApiContext::new();
+        let s1 = tiny_spec().run_stage1(&ctx).unwrap();
+        assert!(s1.result.feasible());
+        assert!(s1.energy.total_j() > 0.0);
+        let s2 = s1.stage2(&ctx);
+        assert!(!s2.shared().is_empty());
+        // Gating must find idle intervals and cut leakage vs B=1.
+        let best = s2
+            .points()
+            .filter(|p| p.eval.banks > 1)
+            .min_by(|a, b| a.eval.e_leak_j.total_cmp(&b.eval.e_leak_j))
+            .unwrap();
+        let base = s2.points().find(|p| p.eval.banks == 1).unwrap();
+        assert!(best.eval.gated_fraction > 0.0, "no idle intervals found");
+        assert!(best.eval.e_leak_j < base.eval.e_leak_j);
+    }
+
+    #[test]
+    fn stage2_matches_direct_sweep() {
+        // The handle path must be numerically identical to calling the
+        // Stage-II evaluator directly (what Coordinator::stage2 did).
+        let ctx = ApiContext::new();
+        let s1 = tiny_spec().run_stage1(&ctx).unwrap();
+        let direct = sweep(
+            &ctx.cacti,
+            s1.result.sram_trace(),
+            &s1.result.stats,
+            &small_grid(),
+            s1.spec.freq_ghz(),
+        );
+        let s2 = s1.stage2(&ctx);
+        assert_eq!(s2.shared().len(), direct.len());
+        for (a, b) in s2.shared().iter().zip(&direct) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+        }
+    }
+
+    #[test]
+    fn stage2_per_memory_zips_defensively() {
+        let ctx = ApiContext::new();
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(multilevel())
+            .sweep(small_grid())
+            .build()
+            .unwrap();
+        let mut s1 = spec.run_stage1(&ctx).unwrap();
+        assert_eq!(s1.result.traces.len(), 3);
+        let full = s1.stage2_per_memory(&ctx);
+        assert_eq!(full.per_memory.len(), 3);
+
+        // Divergent lengths (e.g. a deserialized result missing stats)
+        // must evaluate the common prefix, not panic.
+        s1.result.per_mem_stats.truncate(1);
+        let partial = s1.stage2_per_memory(&ctx);
+        assert_eq!(partial.per_memory.len(), 1);
+        assert_eq!(partial.per_memory[0].0, "sram");
+    }
+
+    #[test]
+    fn streaming_summary_matches_materialized_run() {
+        use crate::trace::OnlineStatsSink;
+        let ctx = ApiContext::new();
+        let spec = tiny_spec();
+        let s1 = spec.run_stage1(&ctx).unwrap();
+        let mut stats = OnlineStatsSink::new();
+        let summary = spec.stream_stage1(&ctx, &mut stats).unwrap();
+        assert_eq!(summary.total_cycles(), s1.result.total_cycles);
+        assert_eq!(summary.stats(), &s1.result.stats);
+        assert!(summary.feasible());
+        // The online sink observed the real peak...
+        assert_eq!(
+            stats.shared().unwrap().peak_needed(),
+            s1.result.peak_needed()
+        );
+        // ...while the raw result's traces were never materialized
+        // (escape hatch documents this).
+        assert_eq!(summary.into_result().sram_trace().samples().len(), 1);
+    }
+
+    #[test]
+    fn sizing_composes_with_cacti_latency() {
+        let ctx = ApiContext::new();
+        let r = tiny_spec().size_memory(&ctx).unwrap();
+        assert!(r.verify.feasible());
+        assert_eq!(r.required_capacity % (16 * MIB), 0);
+    }
+}

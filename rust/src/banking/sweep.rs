@@ -11,7 +11,7 @@ use super::policy::GatingPolicy;
 /// Sweep grid specification. The paper's §IV-C setting is
 /// `capacities = {peak..128 MiB step 16}`, `banks = {1,2,4,8,16,32}`,
 /// `alpha = 0.9`, conservative-vs-aggressive policies.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
     pub capacities: Vec<u64>,
     pub banks: Vec<u32>,
@@ -21,14 +21,20 @@ pub struct SweepSpec {
 
 impl SweepSpec {
     /// The paper's Table II grid for a workload with the given minimum
-    /// feasible capacity (16 MiB steps up to 128 MiB).
+    /// feasible capacity (16 MiB steps up to 128 MiB). Workloads whose
+    /// peak already exceeds 128 MiB get a single-point grid at their
+    /// rounded-up peak, so the grid is never empty.
     pub fn paper_grid(min_capacity: u64) -> Self {
         use crate::util::MIB;
         let mut capacities = Vec::new();
-        let mut c = min_capacity.div_ceil(16 * MIB) * 16 * MIB;
+        let start = min_capacity.div_ceil(16 * MIB).max(1) * 16 * MIB;
+        let mut c = start;
         while c <= 128 * MIB {
             capacities.push(c);
             c += 16 * MIB;
+        }
+        if capacities.is_empty() {
+            capacities.push(start);
         }
         Self {
             capacities,
@@ -150,6 +156,17 @@ mod tests {
         );
         assert_eq!(spec.banks, vec![1, 2, 4, 8, 16, 32]);
         assert_eq!(spec.points(), 36);
+    }
+
+    #[test]
+    fn paper_grid_never_empty() {
+        // Peaks beyond 128 MiB fall back to a single rounded-up point;
+        // a zero peak starts at one 16 MiB step.
+        let big = SweepSpec::paper_grid(300 * MIB);
+        assert_eq!(big.capacities, vec![304 * MIB]);
+        assert!(big.points() > 0);
+        let zero = SweepSpec::paper_grid(0);
+        assert_eq!(zero.capacities.first(), Some(&(16 * MIB)));
     }
 
     #[test]

@@ -1,348 +1,9 @@
-//! Per-experiment runners: one function per table/figure of the paper.
+//! Legacy path for the per-experiment runners.
 //!
-//! Both the `repro report <exp>` CLI and the criterion-style benches call
-//! these, so the numbers in reports and benches can never diverge. Each
-//! returns a structured result that `report::{tables,figures}` renders.
+//! The figure/table runners moved to [`crate::api::experiments`] as part
+//! of the `trapti::api` migration (they now take an
+//! [`crate::api::ApiContext`] and run paired Stage-I simulations as one
+//! parallel batch). This module re-exports them so older
+//! `coordinator::experiments::*` paths keep resolving.
 
-use anyhow::Result;
-
-use crate::banking::{
-    bank_activity, ActivitySegment, GatingPolicy, OccupancyBasis, SweepPoint,
-    SweepSpec,
-};
-use crate::config::{baseline, multilevel, AccelConfig};
-use crate::util::MIB;
-use crate::workload::{ModelPreset, Workload, DS_R1D_Q15B, GPT2_XL};
-
-use super::{Coordinator, Stage1};
-
-/// The paper's sequence length (§IV-A).
-pub const PAPER_SEQ: u32 = 2048;
-/// Decode setting for the Fig. 1 motivation (prompt + generated tokens).
-pub const FIG1_PROMPT: u32 = 512;
-pub const FIG1_GEN: u32 = 128;
-
-/// Fig. 1 — MHA vs GQA normalized energy and latency in decode.
-///
-/// Two views: the *whole-model* decode (which on this template is
-/// weight-restreaming-bound, compressing the MHA/GQA gap) and the
-/// *attention subsystem* (score/softmax/context/KV traffic), which is
-/// what GQA actually changes and matches the paper's 2.89x/3.14x regime.
-pub struct Fig1 {
-    pub mha_energy_j: f64,
-    pub gqa_energy_j: f64,
-    pub mha_seconds: f64,
-    pub gqa_seconds: f64,
-    /// Attention-subsystem elapsed cycles (compute + memory).
-    pub mha_attn_cycles: u64,
-    pub gqa_attn_cycles: u64,
-    /// Attention-subsystem energy (traffic + MACs + time-share leakage).
-    pub mha_attn_energy_j: f64,
-    pub gqa_attn_energy_j: f64,
-}
-
-impl Fig1 {
-    /// Whole-model ratios.
-    pub fn energy_ratio(&self) -> f64 {
-        self.mha_energy_j / self.gqa_energy_j
-    }
-
-    pub fn latency_ratio(&self) -> f64 {
-        self.mha_seconds / self.gqa_seconds
-    }
-
-    /// Attention-subsystem ratios (paper: 2.89x energy, 3.14x latency).
-    pub fn attn_energy_ratio(&self) -> f64 {
-        self.mha_attn_energy_j / self.gqa_attn_energy_j
-    }
-
-    pub fn attn_latency_ratio(&self) -> f64 {
-        self.mha_attn_cycles as f64 / self.gqa_attn_cycles as f64
-    }
-}
-
-fn attention_view(coord: &Coordinator, s1: &Stage1) -> (u64, f64) {
-    use crate::workload::OpClass;
-    let attn_classes = [
-        OpClass::AttnScore,
-        OpClass::AttnSoftmax,
-        OpClass::AttnContext,
-        OpClass::KvAppend,
-    ];
-    let cycles: u64 = attn_classes
-        .iter()
-        .filter_map(|c| s1.result.op_breakdown.get(c))
-        .map(|b| b.compute + b.memory)
-        .sum();
-    // Attention traffic & MACs from the graph; energy apportioned from
-    // the Fig. 7 components by share.
-    let (mut attn_stream, mut total_stream) = (0u64, 0u64);
-    let (mut attn_macs, mut total_macs) = (0u64, 0u64);
-    for op in &s1.graph.ops {
-        let b = op.kind.streamed_bytes();
-        let m = op.macs();
-        total_stream += b;
-        total_macs += m;
-        if attn_classes.contains(&OpClass::of(op)) {
-            attn_stream += b;
-            attn_macs += m;
-        }
-    }
-    let stream_share = attn_stream as f64 / total_stream.max(1) as f64;
-    let mac_share = attn_macs as f64 / total_macs.max(1) as f64;
-    let time_share = cycles as f64 / (s1.result.total_cycles.max(1) as f64);
-    let e = s1.energy.sram_dynamic_j * stream_share
-        + s1.energy.pe_dynamic_j * mac_share
-        + (s1.energy.sram_leakage_j + s1.energy.pe_static_j + s1.energy.fifo_static_j)
-            * time_share;
-    let _ = coord;
-    (cycles, e)
-}
-
-pub fn fig1(coord: &Coordinator) -> Result<Fig1> {
-    // Matched ~85M-parameter pair with SRAM-resident weights: the
-    // regime where decode cost is attention/KV-bound (see FIG1_* docs).
-    let mut accel = baseline();
-    accel.sched.weight_resident = true;
-    let wl = Workload::Decode {
-        prompt: FIG1_PROMPT,
-        gen: FIG1_GEN,
-    };
-    let mha = coord.stage1(&crate::workload::models::FIG1_MHA, wl, &accel)?;
-    let gqa = coord.stage1(&crate::workload::models::FIG1_GQA, wl, &accel)?;
-    let (mha_ac, mha_ae) = attention_view(coord, &mha);
-    let (gqa_ac, gqa_ae) = attention_view(coord, &gqa);
-    Ok(Fig1 {
-        mha_energy_j: mha.energy.on_chip_j(),
-        gqa_energy_j: gqa.energy.on_chip_j(),
-        mha_seconds: mha.result.seconds(),
-        gqa_seconds: gqa.result.seconds(),
-        mha_attn_cycles: mha_ac,
-        gqa_attn_cycles: gqa_ac,
-        mha_attn_energy_j: mha_ae,
-        gqa_attn_energy_j: gqa_ae,
-    })
-}
-
-/// Fig. 5 + Fig. 6 + Fig. 7 all come from the same two Stage-I runs
-/// (both workloads, prefill 2048, 128 MiB shared SRAM).
-pub struct PairedStage1 {
-    pub mha: Stage1,
-    pub gqa: Stage1,
-    pub accel: AccelConfig,
-}
-
-pub fn paired_prefill(coord: &Coordinator) -> Result<PairedStage1> {
-    let accel = baseline();
-    let wl = Workload::Prefill { seq: PAPER_SEQ };
-    Ok(PairedStage1 {
-        mha: coord.stage1(&GPT2_XL, wl, &accel)?,
-        gqa: coord.stage1(&DS_R1D_Q15B, wl, &accel)?,
-        accel,
-    })
-}
-
-impl PairedStage1 {
-    /// The paper's headline peak-utilization ratio (2.72x).
-    pub fn peak_ratio(&self) -> f64 {
-        self.mha.result.peak_needed() as f64 / self.gqa.result.peak_needed() as f64
-    }
-
-    /// End-to-end time ratio (paper: 593.9/313.6 = 1.89x).
-    pub fn time_ratio(&self) -> f64 {
-        self.mha.result.seconds() / self.gqa.result.seconds()
-    }
-}
-
-/// §IV-B sizing results for both workloads (peak -> 16 MiB-step capacity)
-/// plus the DS 64 MiB latency-delta check.
-pub struct Sizing {
-    pub mha_peak: u64,
-    pub mha_required: u64,
-    pub gqa_peak: u64,
-    pub gqa_required: u64,
-    /// DS at 64 MiB vs 128 MiB: latency delta seconds (paper: -1.48 ms,
-    /// from the faster 22 ns SRAM).
-    pub gqa_64mib_delta_s: f64,
-}
-
-pub fn sizing(coord: &Coordinator) -> Result<Sizing> {
-    let accel = baseline();
-    let wl = Workload::Prefill { seq: PAPER_SEQ };
-    let mha = coord.size(&GPT2_XL, wl, &accel)?;
-    let gqa = coord.size(&DS_R1D_Q15B, wl, &accel)?;
-    let gqa_128 = coord.stage1(&DS_R1D_Q15B, wl, &accel)?;
-    let accel_64 = accel.with_sram_capacity(64 * MIB, coord.cacti.latency_cycles(64 * MIB));
-    let gqa_64 = coord.stage1(&DS_R1D_Q15B, wl, &accel_64)?;
-    Ok(Sizing {
-        mha_peak: mha.peak_needed,
-        mha_required: mha.required_capacity,
-        gqa_peak: gqa.peak_needed,
-        gqa_required: gqa.required_capacity,
-        gqa_64mib_delta_s: gqa_64.result.seconds() - gqa_128.result.seconds(),
-    })
-}
-
-/// Fig. 8 — bank activity timeline for DS at 64 MiB, B=4, several alphas.
-pub struct Fig8 {
-    pub alphas: Vec<f64>,
-    pub timelines: Vec<Vec<ActivitySegment>>,
-    pub trace_peak: u64,
-}
-
-pub fn fig8(coord: &Coordinator, gqa: &Stage1) -> Fig8 {
-    let alphas = vec![1.0, 0.9, 0.75, 0.5];
-    let trace = gqa.result.sram_trace();
-    let timelines = alphas
-        .iter()
-        .map(|&a| bank_activity(trace, 64 * MIB, 4, a, OccupancyBasis::NeededOnly))
-        .collect();
-    Fig8 {
-        alphas,
-        timelines,
-        trace_peak: trace.peak_needed(),
-    }
-}
-
-/// Table II — banking sweeps for both workloads at alpha = 0.9.
-pub struct Table2 {
-    pub gqa_points: Vec<SweepPoint>,
-    pub mha_points: Vec<SweepPoint>,
-}
-
-pub fn table2(coord: &Coordinator, pair: &PairedStage1) -> Table2 {
-    let freq = pair.accel.sa.freq_ghz;
-    let gqa_spec = SweepSpec::paper_grid(pair.gqa.result.peak_needed());
-    let mha_spec = SweepSpec::paper_grid(pair.mha.result.peak_needed());
-    Table2 {
-        gqa_points: coord.stage2(&pair.gqa, &gqa_spec, freq),
-        mha_points: coord.stage2(&pair.mha, &mha_spec, freq),
-    }
-}
-
-impl Table2 {
-    /// Best ΔE% anywhere (the paper's "up to 78%" headline is the best
-    /// Table III cell; Table II's best is DS 128 MiB B=16 at -61.3%).
-    pub fn best_delta(&self) -> f64 {
-        self.gqa_points
-            .iter()
-            .chain(&self.mha_points)
-            .map(|p| p.delta_e_pct())
-            .fold(f64::INFINITY, f64::min)
-    }
-
-    /// Best bank count per capacity for a workload's points.
-    pub fn best_banks_at(points: &[SweepPoint], capacity: u64) -> Option<u32> {
-        points
-            .iter()
-            .filter(|p| p.eval.capacity == capacity)
-            .min_by(|a, b| a.eval.e_total_j().total_cmp(&b.eval.e_total_j()))
-            .map(|p| p.eval.banks)
-    }
-}
-
-/// Table III / §IV-D — multi-level hierarchy run + per-memory sweeps.
-pub struct Table3 {
-    pub stage1: Stage1,
-    /// (memory name, sweep points at {48, 64} MiB).
-    pub per_memory: Vec<(String, Vec<SweepPoint>)>,
-}
-
-pub fn table3(coord: &Coordinator) -> Result<Table3> {
-    let accel = multilevel();
-    let stage1 = coord.stage1(
-        &DS_R1D_Q15B,
-        Workload::Prefill { seq: PAPER_SEQ },
-        &accel,
-    )?;
-    let spec = SweepSpec {
-        capacities: vec![48 * MIB, 64 * MIB],
-        banks: vec![1, 4, 8, 16],
-        alphas: vec![0.9],
-        policies: vec![GatingPolicy::Aggressive],
-    };
-    let per_memory = coord.stage2_per_memory(&stage1, &spec, accel.sa.freq_ghz);
-    Ok(Table3 {
-        stage1,
-        per_memory,
-    })
-}
-
-impl Table3 {
-    /// Best ΔE% across all memories — the paper's 78% headline
-    /// (shared SRAM, 64 MiB, B=16: -77.8%).
-    pub fn best_delta(&self) -> f64 {
-        self.per_memory
-            .iter()
-            .flat_map(|(_, pts)| pts.iter().map(|p| p.delta_e_pct()))
-            .fold(f64::INFINITY, f64::min)
-    }
-}
-
-/// Headline numbers pulled together for `repro report headline`.
-pub struct Headline {
-    pub peak_ratio: f64,
-    pub time_ratio: f64,
-    pub table2_best_delta: f64,
-    pub table3_best_delta: f64,
-    /// GQA's best ΔE minus MHA's best ΔE (paper: GQA benefits ~20% more).
-    pub gqa_extra_benefit_pct: f64,
-}
-
-pub fn headline(coord: &Coordinator) -> Result<Headline> {
-    let pair = paired_prefill(coord)?;
-    let t2 = table2(coord, &pair);
-    let t3 = table3(coord)?;
-    let gqa_best = t2
-        .gqa_points
-        .iter()
-        .map(|p| p.delta_e_pct())
-        .fold(f64::INFINITY, f64::min);
-    let mha_best = t2
-        .mha_points
-        .iter()
-        .map(|p| p.delta_e_pct())
-        .fold(f64::INFINITY, f64::min);
-    Ok(Headline {
-        peak_ratio: pair.peak_ratio(),
-        time_ratio: pair.time_ratio(),
-        table2_best_delta: t2.best_delta(),
-        table3_best_delta: t3.best_delta(),
-        gqa_extra_benefit_pct: mha_best - gqa_best,
-    })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Full-scale experiment tests live in rust/tests/paper_experiments.rs
-    // (release-mode integration); here we only pin cheap invariants.
-
-    #[test]
-    fn constants_match_paper() {
-        assert_eq!(PAPER_SEQ, 2048);
-    }
-
-    #[test]
-    fn fig8_alphas_cover_paper_range() {
-        let coord = Coordinator::new();
-        let accel = crate::config::tiny();
-        let s1 = coord
-            .stage1(
-                &crate::workload::TINY_GQA,
-                Workload::Prefill { seq: 64 },
-                &accel,
-            )
-            .unwrap();
-        let f8 = fig8(&coord, &s1);
-        assert_eq!(f8.alphas, vec![1.0, 0.9, 0.75, 0.5]);
-        assert_eq!(f8.timelines.len(), 4);
-        // Lower alpha -> no fewer active banks at any time.
-        for (lo, hi) in f8.timelines[3].iter().zip(&f8.timelines[0]) {
-            if lo.t0 == hi.t0 {
-                assert!(lo.active >= hi.active);
-            }
-        }
-    }
-}
+pub use crate::api::experiments::*;

@@ -1,22 +1,36 @@
-//! Coordinator: the L3 orchestration layer tying Stage I (cycle-level
-//! simulation) to Stage II (banking/power-gating exploration) and the
-//! functional PJRT runtime — the programmatic face of the whole TRAPTI
-//! flow (Fig. 3), used by the CLI, the examples, and the benches.
+//! Legacy orchestration shim.
+//!
+//! The `Coordinator` was the original ad-hoc programmatic surface
+//! (loose `stage1`/`stage2`/`size` methods). It is now a thin
+//! **deprecated** wrapper over [`crate::api`] — the typed pipeline
+//! (`ExperimentSpec` → `Stage1Run` → `Stage2Run`, plus `BatchRunner`
+//! for parallel grids). New code should use `trapti::api` directly; the
+//! CLI, benches, examples and tests already do.
+
+#![allow(deprecated)]
 
 pub mod experiments;
 
 use anyhow::Result;
 
+use crate::api::{ApiContext, ExperimentSpec};
 use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSpec};
 use crate::cacti::CactiModel;
 use crate::config::AccelConfig;
-use crate::energy::{energy_breakdown, EnergyBreakdown, EnergyParams};
-use crate::memory::{size_memory, SizingResult};
-use crate::sim::{simulate, SimResult};
-use crate::util::MIB;
-use crate::workload::{build_workload, ModelPreset, Workload, WorkloadGraph};
+use crate::energy::EnergyParams;
+use crate::memory::SizingResult;
+use crate::workload::{ModelPreset, Workload};
+
+/// Stage-I output bundle — now the api type (same `graph` / `result` /
+/// `energy` fields, plus the originating `spec`).
+pub type Stage1 = crate::api::Stage1Run;
 
 /// Shared context: CACTI characterization + energy coefficients.
+#[deprecated(
+    since = "0.1.0",
+    note = "use `trapti::api` — ExperimentSpec::builder() → run_stage1 → \
+            stage2 (or BatchRunner for parallel grids)"
+)]
 pub struct Coordinator {
     pub cacti: CactiModel,
     pub energy: EnergyParams,
@@ -31,16 +45,28 @@ impl Default for Coordinator {
     }
 }
 
-/// Stage-I output bundle for one workload.
-pub struct Stage1 {
-    pub graph: WorkloadGraph,
-    pub result: SimResult,
-    pub energy: EnergyBreakdown,
-}
-
 impl Coordinator {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    fn ctx(&self) -> ApiContext {
+        ApiContext {
+            cacti: self.cacti.clone(),
+            energy: self.energy.clone(),
+        }
+    }
+
+    fn spec(
+        model: &ModelPreset,
+        workload: Workload,
+        accel: &AccelConfig,
+    ) -> Result<ExperimentSpec> {
+        ExperimentSpec::builder()
+            .model(model.clone())
+            .workload(workload)
+            .accel(accel.clone())
+            .build()
     }
 
     /// Build the workload graph and run Stage I on `accel`.
@@ -50,14 +76,7 @@ impl Coordinator {
         workload: Workload,
         accel: &AccelConfig,
     ) -> Result<Stage1> {
-        let graph = build_workload(model, workload)?;
-        let result = simulate(&graph, accel)?;
-        let energy = energy_breakdown(&result, accel, &self.cacti, &self.energy);
-        Ok(Stage1 {
-            graph,
-            result,
-            energy,
-        })
+        Self::spec(model, workload, accel)?.run_stage1(&self.ctx())
     }
 
     /// Stage-I sizing loop (16 MiB steps, CACTI latency model).
@@ -67,11 +86,7 @@ impl Coordinator {
         workload: Workload,
         accel: &AccelConfig,
     ) -> Result<SizingResult> {
-        let graph = build_workload(model, workload)?;
-        let cacti = self.cacti.clone();
-        size_memory(&graph, accel, 16 * MIB, &move |cap| {
-            cacti.latency_cycles(cap)
-        })
+        Self::spec(model, workload, accel)?.size_memory(&self.ctx())
     }
 
     /// Stage-II sweep over a Stage-I result's shared-SRAM trace.
@@ -92,6 +107,8 @@ impl Coordinator {
 
     /// Stage-II sweep for every on-chip memory of a multi-level run
     /// (Table III evaluates shared SRAM, DM1, DM2 independently).
+    /// Traces zip defensively with their per-memory statistics — a
+    /// length mismatch evaluates the common prefix instead of panicking.
     pub fn stage2_per_memory(
         &self,
         stage1: &Stage1,
@@ -102,17 +119,11 @@ impl Coordinator {
             .result
             .traces
             .iter()
-            .enumerate()
-            .map(|(i, tr)| {
+            .zip(stage1.result.per_mem_stats.iter())
+            .map(|(tr, st)| {
                 (
                     tr.memory.clone(),
-                    sweep(
-                        &self.cacti,
-                        tr,
-                        &stage1.result.per_mem_stats[i],
-                        spec,
-                        freq_ghz,
-                    ),
+                    sweep(&self.cacti, tr, st, spec, freq_ghz),
                 )
             })
             .collect()
@@ -133,45 +144,59 @@ pub type Policy = GatingPolicy;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::tiny;
+    use crate::config::{multilevel, tiny};
+    use crate::util::MIB;
     use crate::workload::TINY_GQA;
 
+    fn small_grid() -> SweepSpec {
+        SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB],
+            banks: vec![1, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        }
+    }
+
     #[test]
-    fn stage1_then_stage2_composes() {
+    fn shim_matches_api_numbers() {
         let coord = Coordinator::new();
         let s1 = coord
             .stage1(&TINY_GQA, Workload::Prefill { seq: 64 }, &tiny())
             .unwrap();
         assert!(s1.result.feasible());
-        assert!(s1.energy.total_j() > 0.0);
-        let spec = SweepSpec {
-            capacities: vec![2 * MIB, 4 * MIB],
-            banks: vec![1, 4, 8],
-            alphas: vec![0.9],
-            policies: vec![GatingPolicy::Aggressive],
-        };
-        let points = coord.stage2(&s1, &spec, 1.0);
-        assert!(!points.is_empty());
-        // At toy scale dynamic energy can dominate, so banking need not
-        // win overall — but gating must find idle intervals and reduce
-        // *leakage* energy relative to the unbanked reference.
-        let best = points
-            .iter()
-            .filter(|p| p.eval.banks > 1)
-            .min_by(|a, b| a.eval.e_leak_j.total_cmp(&b.eval.e_leak_j))
+
+        let api_s1 = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap()
+            .run_stage1(&ApiContext::new())
             .unwrap();
-        let base = points.iter().find(|p| p.eval.banks == 1).unwrap();
-        assert!(best.eval.gated_fraction > 0.0, "no idle intervals found");
-        assert!(best.eval.e_leak_j < base.eval.e_leak_j);
+        assert_eq!(s1.result.total_cycles, api_s1.result.total_cycles);
+        assert_eq!(s1.result.stats, api_s1.result.stats);
+
+        let pts = coord.stage2(&s1, &small_grid(), 1.0);
+        let api_pts = api_s1.stage2_with(&ApiContext::new(), &small_grid());
+        assert_eq!(pts.len(), api_pts.shared().len());
+        for (a, b) in pts.iter().zip(api_pts.shared()) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+        }
     }
 
     #[test]
-    fn sizing_composes_with_cacti_latency() {
+    fn stage2_per_memory_survives_length_mismatch() {
         let coord = Coordinator::new();
-        let r = coord
-            .size(&TINY_GQA, Workload::Prefill { seq: 64 }, &tiny())
+        let mut s1 = coord
+            .stage1(&TINY_GQA, Workload::Prefill { seq: 64 }, &multilevel())
             .unwrap();
-        assert!(r.verify.feasible());
-        assert_eq!(r.required_capacity % (16 * MIB), 0);
+        assert_eq!(s1.result.traces.len(), 3);
+        let full = coord.stage2_per_memory(&s1, &small_grid(), 1.0);
+        assert_eq!(full.len(), 3);
+        // Divergent lengths must not panic (the old implementation
+        // indexed per_mem_stats[i] and did).
+        s1.result.per_mem_stats.truncate(2);
+        let partial = coord.stage2_per_memory(&s1, &small_grid(), 1.0);
+        assert_eq!(partial.len(), 2);
     }
 }

@@ -2,23 +2,67 @@
 //!
 //! Reproduction of *"TRAPTI: Time-Resolved Analysis for SRAM Banking and
 //! Power Gating Optimization in Embedded Transformer Inference"* as a
-//! three-layer Rust + JAX + Pallas stack:
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! ## The two-stage flow
 //!
 //! * **Stage I** ([`sim`], [`memory`], [`trace`], [`workload`]): a
 //!   TransInferSim-equivalent discrete-event, cycle-level simulator of
 //!   Transformer inference on a systolic-array accelerator, producing
-//!   time-resolved SRAM occupancy traces and access statistics.
+//!   time-resolved SRAM occupancy traces and access statistics. Traces
+//!   can be materialized ([`trace::OccupancyTrace`]) or streamed to
+//!   O(1)-memory consumers via [`trace::TraceSink`].
 //! * **Stage II** ([`cacti`], [`banking`]): offline exploration of banked
 //!   SRAM organizations and power-gating policies driven by the Stage-I
-//!   trace (Eqs. 1-5 of the paper).
+//!   trace (Eqs. 1–5 of the paper).
 //! * **Functional layer** ([`runtime`]): AOT-compiled JAX/Pallas decode
 //!   models (HLO text in `artifacts/`) executed through PJRT — Python is
-//!   never on the request path.
+//!   never on the request path. Offline builds link an API-compatible
+//!   stub (`runtime::xla_stub`).
 //!
-//! Entry points: the `repro` binary (CLI), [`coordinator::Coordinator`]
-//! (programmatic), and `examples/`.
+//! ## Entry points
+//!
+//! **[`api`] is the programmatic surface**: build an
+//! [`api::ExperimentSpec`], run it into an [`api::Stage1Run`], derive an
+//! [`api::Stage2Run`] over borrowed trace views, or execute a whole grid
+//! of specs concurrently with [`api::BatchRunner`] (memoized by spec
+//! content hash). The paper's figures/tables are one call away in
+//! [`api::experiments`].
+//!
+//! ```no_run
+//! use trapti::api::{ApiContext, BatchRunner, ExperimentSpec};
+//! use trapti::workload::{DS_R1D_Q15B, GPT2_XL};
+//!
+//! let ctx = ApiContext::new();
+//! // One scenario, two typed stages.
+//! let s1 = ExperimentSpec::builder()
+//!     .model(DS_R1D_Q15B)
+//!     .prefill(2048)
+//!     .build()
+//!     .unwrap()
+//!     .run_stage1(&ctx)
+//!     .unwrap();
+//! println!("peak needed: {} bytes", s1.result.peak_needed());
+//! let s2 = s1.stage2(&ctx);
+//! println!("best dE: {:.1}%", s2.best_delta_pct());
+//!
+//! // Or a whole grid of scenarios as one parallel, memoized batch.
+//! let specs = vec![
+//!     ExperimentSpec::builder().model(GPT2_XL).prefill(2048).build().unwrap(),
+//!     ExperimentSpec::builder().model(DS_R1D_Q15B).prefill(2048).build().unwrap(),
+//! ];
+//! for r in BatchRunner::new().run(&specs).unwrap() {
+//!     print!("{}", r.report());
+//! }
+//! ```
+//!
+//! Other entry points: the `repro` binary (CLI — see `docs/API.md`),
+//! `examples/` (`cargo run --release --example quickstart`), and the
+//! paper benches (`cargo bench`). [`coordinator::Coordinator`] remains
+//! as a thin deprecated shim over [`api`] for older call sites.
 
 pub mod analytic;
+pub mod api;
 pub mod banking;
 pub mod cacti;
 pub mod config;

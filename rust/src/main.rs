@@ -3,12 +3,15 @@
 //! Every paper experiment is a subcommand; reports print to stdout and
 //! are mirrored as text/CSV under `reports/`. No external CLI crate is
 //! available offline, so argument parsing is a small in-tree affair.
+//! All subcommands run through `trapti::api` (see docs/API.md for the
+//! full flag reference).
 //!
 //! ```text
 //! repro report <exp>      # table1|fig1|fig5|fig6|fig7|fig8|fig9|
 //!                         # table2|table3|sizing|headline|all
 //! repro simulate [--model gpt2-xl] [--accel baseline] [--seq 2048]
 //!                [--decode PROMPT:GEN] [--save-trace FILE]
+//! repro batch [--models gpt2-xl,ds-r1d] [--seq 2048] [--threads N]
 //! repro bank --trace FILE [--alpha 0.9] [--banks 1,2,4,8,16,32]
 //!            [--capacities 48,64,... (MiB)]
 //! repro e2e [--model tiny-gqa] [--steps 64]    # functional PJRT decode
@@ -21,9 +24,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use trapti::analytic;
+use trapti::api::{experiments as exp, ApiContext, BatchRunner, ExperimentSpec};
 use trapti::banking::{evaluate, GatingPolicy};
 use trapti::config::{named, parse::parse_bytes};
-use trapti::coordinator::{experiments as exp, Coordinator};
 use trapti::report::{figures, tables};
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
 use trapti::trace::{load_trace, save_trace, trace_to_csv};
@@ -102,6 +105,7 @@ fn run(raw: &[String]) -> Result<()> {
     match cmd {
         "report" => report(&args),
         "simulate" => simulate_cmd(&args),
+        "batch" => batch_cmd(&args),
         "bank" => bank_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
@@ -115,13 +119,16 @@ fn run(raw: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "\
-TRAPTI reproduction CLI — see README.md.
+TRAPTI reproduction CLI — see README.md and docs/API.md.
 
   repro report <exp>       regenerate a paper table/figure
                            (table1 fig1 fig5 fig6 fig7 fig8 fig9
                             table2 table3 sizing headline all)
   repro simulate           Stage-I run (--model, --accel, --seq,
-                           --decode P:G, --save-trace FILE)
+                           --decode P:G, --save-trace FILE, --config F)
+  repro batch              run several scenarios as one parallel,
+                           memoized batch (--models A,B,.. --seq
+                           --accel --threads N --decode P:G)
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
   repro e2e                functional PJRT decode (--model, --steps)
@@ -137,14 +144,14 @@ fn report(args: &Args) -> Result<()> {
         .get(1)
         .map(String::as_str)
         .ok_or_else(|| anyhow!("report needs an experiment name"))?;
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     let all = which == "all";
 
     if which == "table1" || all {
         emit("table1", &tables::table1().render())?;
     }
     if which == "fig1" || all {
-        let f = exp::fig1(&coord)?;
+        let f = exp::fig1(&ctx)?;
         emit("fig1", &figures::fig1(&f))?;
     }
     // The prefill pair backs fig5/6/7/8/9 + table2: run once, reuse.
@@ -152,7 +159,7 @@ fn report(args: &Args) -> Result<()> {
         .contains(&which)
         || all
     {
-        let pair = exp::paired_prefill(&coord)?;
+        let pair = exp::paired_prefill(&ctx)?;
         if which == "fig5" || all {
             let (text, csv_m, csv_g) = figures::fig5(&pair);
             emit("fig5", &text)?;
@@ -166,11 +173,11 @@ fn report(args: &Args) -> Result<()> {
             emit("fig7", &figures::fig7(&pair))?;
         }
         if which == "fig8" || all {
-            let f8 = exp::fig8(&coord, &pair.gqa);
+            let f8 = exp::fig8(&pair.gqa);
             emit("fig8", &figures::fig8(&f8))?;
         }
         if ["fig9", "table2", "headline"].contains(&which) || all {
-            let t2 = exp::table2(&coord, &pair);
+            let t2 = exp::table2(&ctx, &pair);
             if which == "table2" || all {
                 let text = tables::table2(&t2)
                     .iter()
@@ -184,8 +191,8 @@ fn report(args: &Args) -> Result<()> {
                 emit_csv("fig9_points", &figures::fig9_csv(&t2))?;
             }
             if which == "headline" || all {
-                let t3 = exp::table3(&coord)?;
-                let h = exp::headline(&coord)?;
+                let t3 = exp::table3(&ctx)?;
+                let h = exp::headline(&ctx)?;
                 let text = format!(
                     "TRAPTI headline numbers (paper in parentheses)\n\
                      peak SRAM utilization ratio MHA/GQA: {:.2}x (2.72x)\n\
@@ -204,7 +211,7 @@ fn report(args: &Args) -> Result<()> {
         }
     }
     if which == "table3" || all {
-        let t3 = exp::table3(&coord)?;
+        let t3 = exp::table3(&ctx)?;
         let mut text = format!(
             "Multi-level run: e2e {:.1} ms (paper 550 ms), util {:.0}% \
              (paper 57%), on-chip {:.1} J (paper 73.4 J)\n\n",
@@ -219,7 +226,7 @@ fn report(args: &Args) -> Result<()> {
         emit("table3", &text)?;
     }
     if which == "sizing" || all {
-        let s = exp::sizing(&coord)?;
+        let s = exp::sizing(&ctx)?;
         emit("sizing", &tables::sizing_table(&s).render())?;
     }
     if !all
@@ -253,9 +260,15 @@ fn parse_workload(args: &Args) -> Result<Workload> {
 fn simulate_cmd(args: &Args) -> Result<()> {
     // --config FILE loads model + accelerator (+ sweep) from TOML;
     // individual flags override nothing in that case for clarity.
-    let (model, accel) = if let Some(path) = args.flag("config") {
+    let wl = parse_workload(args)?;
+    let spec = if let Some(path) = args.flag("config") {
         let e = trapti::config::load_experiment(Path::new(path))?;
-        (e.model, e.accel)
+        ExperimentSpec::builder()
+            .model(e.model)
+            .workload(wl)
+            .accel(e.accel)
+            .sweep(e.sweep)
+            .build()?
     } else {
         let model_name = args.flag_or("model", "gpt2-xl");
         let model = preset(&model_name)
@@ -263,18 +276,22 @@ fn simulate_cmd(args: &Args) -> Result<()> {
         let accel_name = args.flag_or("accel", "baseline");
         let accel = named(&accel_name)
             .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
-        (model, accel)
+        ExperimentSpec::builder()
+            .model(model)
+            .workload(wl)
+            .accel(accel)
+            .build()?
     };
-    let wl = parse_workload(args)?;
-    let coord = Coordinator::new();
-    let s1 = coord.stage1(&model, wl, &accel)?;
+    let ctx = ApiContext::new();
+    let s1 = spec.run_stage1(&ctx)?;
     println!("{}", s1.graph.summary());
+    println!("spec hash: {:016x}", s1.spec.content_hash());
     println!(
         "cycles={} ({:.1} ms)  peak needed={:.1} MiB  occupied peak={:.1} MiB",
         s1.result.total_cycles,
         s1.result.seconds() * 1e3,
         s1.result.peak_needed() as f64 / MIB as f64,
-        s1.result.sram_trace().peak_occupied() as f64 / MIB as f64,
+        s1.trace().peak_occupied() as f64 / MIB as f64,
     );
     println!(
         "active PE util={:.1}%  e2e util={:.1}%  feasible={}  on-chip E={:.2} J",
@@ -292,11 +309,70 @@ fn simulate_cmd(args: &Args) -> Result<()> {
         s1.result.stats.writebacks,
     );
     if let Some(path) = args.flag("save-trace") {
-        save_trace(s1.result.sram_trace(), Path::new(path))?;
+        save_trace(s1.trace(), Path::new(path))?;
         println!("trace saved to {path}");
     }
     if args.flag("csv").is_some() {
-        emit_csv("trace", &trace_to_csv(s1.result.sram_trace()))?;
+        emit_csv("trace", &trace_to_csv(s1.trace()))?;
+    }
+    Ok(())
+}
+
+/// Run several scenarios as one parallel batch (BatchRunner): every
+/// model in `--models` on the same workload/accelerator, memoized by
+/// spec hash, then a Stage-II paper-grid summary per scenario.
+fn batch_cmd(args: &Args) -> Result<()> {
+    let wl = parse_workload(args)?;
+    let accel_name = args.flag_or("accel", "baseline");
+    let accel = named(&accel_name)
+        .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+    let models = args.flag_or("models", "gpt2-xl,ds-r1d");
+    let mut specs = Vec::new();
+    for name in models.split(',') {
+        let name = name.trim();
+        let model = preset(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+        specs.push(
+            ExperimentSpec::builder()
+                .model(model)
+                .workload(wl)
+                .accel(accel.clone())
+                .build()?,
+        );
+    }
+    // derive_sweep keeps Stage II inside the batch's parallelism and
+    // memoization (paper grid derived from each run's Stage-I peak).
+    let mut runner = BatchRunner::new().derive_sweep(true);
+    if let Some(t) = args.flag("threads") {
+        runner = runner.threads(t.parse()?);
+    }
+    let t0 = std::time::Instant::now();
+    let results = runner.run(&specs)?;
+    println!(
+        "batch: {} scenario(s) in {:.1} s wall",
+        results.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "{:>18} {:>18} {:>12} {:>9} {:>11} {:>9} {:>9}",
+        "model", "spec", "cycles", "ms", "peak[MiB]", "E[J]", "best dE%"
+    );
+    for r in &results {
+        let best = r
+            .sweep
+            .iter()
+            .flat_map(|(_, pts)| pts.iter())
+            .map(|p| p.delta_e_pct())
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{:>18} {:>18} {:>12} {:>9.1} {:>11.1} {:>9.2} {:>9.1}",
+            r.spec.model.name,
+            format!("{:016x}", r.hash),
+            r.stage1.result.total_cycles,
+            r.stage1.result.seconds() * 1e3,
+            r.stage1.result.peak_needed() as f64 / MIB as f64,
+            r.stage1.energy.on_chip_j(),
+            best,
+        );
     }
     Ok(())
 }
@@ -319,7 +395,7 @@ fn bank_cmd(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         None => vec![trace.capacity],
     };
-    let coord = Coordinator::new();
+    let ctx = ApiContext::new();
     // Reads/writes are not stored in the trace file; accept flags.
     let stats = trapti::trace::AccessStats {
         reads: args.flag_or("reads", "0").parse()?,
@@ -332,7 +408,7 @@ fn bank_cmd(args: &Args) -> Result<()> {
     );
     for &cap in &capacities {
         let base = evaluate(
-            &coord.cacti, &trace, &stats, cap, 1, alpha,
+            &ctx.cacti, &trace, &stats, cap, 1, alpha,
             GatingPolicy::None, 1.0,
         );
         for &b in &banks {
@@ -340,7 +416,7 @@ fn bank_cmd(args: &Args) -> Result<()> {
                 base.clone()
             } else {
                 evaluate(
-                    &coord.cacti, &trace, &stats, cap, b, alpha,
+                    &ctx.cacti, &trace, &stats, cap, b, alpha,
                     GatingPolicy::Aggressive, 1.0,
                 )
             };
@@ -386,8 +462,8 @@ fn e2e_cmd(args: &Args) -> Result<()> {
 /// Policy-sensitivity ablation (paper future work): compare gating
 /// policies and alphas on both workloads' traces at 128 MiB / B=8.
 fn ablate() -> Result<()> {
-    let coord = Coordinator::new();
-    let pair = exp::paired_prefill(&coord)?;
+    let ctx = ApiContext::new();
+    let pair = exp::paired_prefill(&ctx)?;
     let policies = [
         GatingPolicy::None,
         GatingPolicy::Aggressive,
@@ -403,8 +479,8 @@ fn ablate() -> Result<()> {
         for policy in policies {
             for alpha in [1.0, 0.9, 0.75] {
                 let ev = evaluate(
-                    &coord.cacti,
-                    s1.result.sram_trace(),
+                    &ctx.cacti,
+                    s1.trace(),
                     &s1.result.stats,
                     128 * MIB,
                     8,
@@ -435,18 +511,18 @@ Full power gating wins when idle intervals clear break-even;
 }
 
 fn baseline_compare() -> Result<()> {
-    let coord = Coordinator::new();
-    let pair = exp::paired_prefill(&coord)?;
+    let ctx = ApiContext::new();
+    let pair = exp::paired_prefill(&ctx)?;
     println!(
         "{:>10} {:>8} {:>5} {:>14} {:>14} {:>8}",
         "workload", "C[MiB]", "B", "TRAPTI E_lk[J]", "aggreg E_lk[J]", "saving"
     );
     for (label, s1) in [("gpt2-xl", &pair.mha), ("ds-r1d", &pair.gqa)] {
-        let trace = s1.result.sram_trace();
+        let trace = s1.trace();
         let cap = 128 * MIB;
         for b in [4u32, 8, 16] {
             let trapti_ev = evaluate(
-                &coord.cacti, trace, &s1.result.stats, cap, b, 0.9,
+                &ctx.cacti, trace, &s1.result.stats, cap, b, 0.9,
                 GatingPolicy::Aggressive, 1.0,
             );
             let view = analytic::AggregateView::from_stats(
@@ -454,7 +530,7 @@ fn baseline_compare() -> Result<()> {
                 s1.result.total_cycles,
                 &s1.result.stats,
             );
-            let agg = analytic::estimate(&coord.cacti, &view, cap, b, 0.9, 1.0);
+            let agg = analytic::estimate(&ctx.cacti, &view, cap, b, 0.9, 1.0);
             println!(
                 "{label:>10} {:>8} {b:>5} {:>14.2} {:>14.2} {:>7.0}%",
                 cap / MIB,

@@ -200,6 +200,14 @@ impl MemorySystem {
         Ok(())
     }
 
+    /// Disable (or re-enable) occupancy-trace materialization in every
+    /// on-chip memory (streaming-only runs, see `trace::sink`).
+    pub fn set_sample_recording(&mut self, enabled: bool) {
+        for m in &mut self.on_chip {
+            m.set_sample_recording(enabled);
+        }
+    }
+
     /// Mark a tensor obsolete in every memory holding it.
     pub fn mark_obsolete(&mut self, now: u64, t: TensorId) {
         for m in &mut self.on_chip {

@@ -66,6 +66,9 @@ pub struct SramModel {
     /// (diagnostics for calibration and the Fig. 5 decomposition).
     pub peak_composition: Vec<(&'static str, u64)>,
     peak_needed_seen: u64,
+    /// When false, occupancy changes are not materialized into `trace`
+    /// (streaming-only runs — consumers observe them via `TraceSink`).
+    record_samples: bool,
 }
 
 impl SramModel {
@@ -83,7 +86,14 @@ impl SramModel {
             ports: PortTimer::new(cfg),
             peak_composition: Vec::new(),
             peak_needed_seen: 0,
+            record_samples: true,
         }
+    }
+
+    /// Disable (or re-enable) trace materialization. Meant to be set
+    /// before simulation starts; peak diagnostics stay live either way.
+    pub fn set_sample_recording(&mut self, enabled: bool) {
+        self.record_samples = enabled;
     }
 
     pub fn contains(&self, t: TensorId) -> bool {
@@ -114,7 +124,9 @@ impl SramModel {
     }
 
     fn record(&mut self, now: u64) {
-        self.trace.record(now, self.needed_bytes, self.obsolete_bytes);
+        if self.record_samples {
+            self.trace.record(now, self.needed_bytes, self.obsolete_bytes);
+        }
         if self.needed_bytes > self.peak_needed_seen {
             self.peak_needed_seen = self.needed_bytes;
             let mut by_kind: std::collections::BTreeMap<&'static str, u64> =

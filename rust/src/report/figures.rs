@@ -3,8 +3,8 @@
 
 use std::fmt::Write as _;
 
-use crate::coordinator::experiments::{Fig1, Fig8, PairedStage1};
-use crate::coordinator::Stage1;
+use crate::api::experiments::{Fig1, Fig8, PairedStage1};
+use crate::api::Stage1Run;
 use crate::sim::SimResult;
 use crate::trace::trace_to_csv;
 use crate::util::table::{AsciiPlot, Table};
@@ -50,7 +50,7 @@ pub fn fig1(f: &Fig1) -> String {
 
 /// Fig. 5 — time-resolved occupancy traces, plot + stats + CSV.
 pub fn fig5(pair: &PairedStage1) -> (String, String, String) {
-    let render = |s1: &Stage1, label: &str, paper_peak: f64, paper_ms: f64| {
+    let render = |s1: &Stage1Run, label: &str, paper_peak: f64, paper_ms: f64| {
         let tr = s1.result.sram_trace();
         let pts_needed: Vec<(f64, f64)> = tr
             .downsample(400)
@@ -122,7 +122,7 @@ pub fn fig7(pair: &PairedStage1) -> String {
         "Fig. 7 — on-chip energy breakdown (128 MiB shared SRAM)",
         &["Component [J]", "GPT-2 XL (MHA)", "DS-R1D (GQA)"],
     );
-    let rows: Vec<(&str, fn(&Stage1) -> f64)> = vec![
+    let rows: Vec<(&str, fn(&Stage1Run) -> f64)> = vec![
         ("PE dynamic", |s| s.energy.pe_dynamic_j),
         ("PE static", |s| s.energy.pe_static_j),
         ("FIFO static", |s| s.energy.fifo_static_j),
@@ -193,7 +193,7 @@ pub fn fig8(f: &Fig8) -> String {
 }
 
 /// Fig. 9 — energy/area scatter CSV (both workloads, all (C,B) points).
-pub fn fig9_csv(t2: &crate::coordinator::experiments::Table2) -> String {
+pub fn fig9_csv(t2: &crate::api::experiments::Table2) -> String {
     let mut out = String::from("workload,capacity_mib,banks,energy_j,area_mm2\n");
     for (label, pts) in [("gpt2-xl", &t2.mha_points), ("ds-r1d", &t2.gqa_points)] {
         for p in pts.iter() {
@@ -211,7 +211,7 @@ pub fn fig9_csv(t2: &crate::coordinator::experiments::Table2) -> String {
 }
 
 /// Fig. 9 — ASCII scatter.
-pub fn fig9(t2: &crate::coordinator::experiments::Table2) -> String {
+pub fn fig9(t2: &crate::api::experiments::Table2) -> String {
     let series = |pts: &[crate::banking::SweepPoint]| -> Vec<(f64, f64)> {
         pts.iter()
             .map(|p| (p.eval.area_mm2, p.eval.e_total_j()))
@@ -227,19 +227,26 @@ pub fn fig9(t2: &crate::coordinator::experiments::Table2) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{ApiContext, ExperimentSpec};
     use crate::config::tiny;
-    use crate::coordinator::Coordinator;
-    use crate::workload::{Workload, TINY_GQA, TINY_MHA};
+    use crate::workload::{TINY_GQA, TINY_MHA};
 
     fn tiny_pair() -> PairedStage1 {
-        let coord = Coordinator::new();
+        let ctx = ApiContext::new();
         let accel = tiny();
-        let wl = Workload::Prefill { seq: 64 };
-        PairedStage1 {
-            mha: coord.stage1(&TINY_MHA, wl, &accel).unwrap(),
-            gqa: coord.stage1(&TINY_GQA, wl, &accel).unwrap(),
-            accel,
-        }
+        let run = |model| {
+            ExperimentSpec::builder()
+                .model(model)
+                .prefill(64)
+                .accel(accel.clone())
+                .build()
+                .unwrap()
+                .run_stage1(&ctx)
+                .unwrap()
+        };
+        let mha = run(TINY_MHA);
+        let gqa = run(TINY_GQA);
+        PairedStage1 { mha, gqa, accel }
     }
 
     #[test]

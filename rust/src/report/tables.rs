@@ -1,7 +1,7 @@
 //! Paper-style table renderers (Tables I-III + sizing summary).
 
+use crate::api::experiments::{Sizing, Table2, Table3};
 use crate::banking::SweepPoint;
-use crate::coordinator::experiments::{Sizing, Table2, Table3};
 use crate::util::table::{fmt_delta_pct, Table};
 use crate::util::MIB;
 use crate::workload::{all_presets, ModelPreset};

@@ -12,7 +12,10 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+// Offline builds link the API-compatible stub; swap for the real `xla`
+// crate to enable PJRT execution (see xla_stub.rs module docs).
 use super::manifest::{DType, Entry, Manifest};
+use super::xla_stub as xla;
 
 /// A host-side tensor value passed to / returned from an executable.
 #[derive(Debug, Clone, PartialEq)]

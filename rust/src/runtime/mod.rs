@@ -4,6 +4,7 @@
 pub mod client;
 pub mod manifest;
 pub mod model_exec;
+pub mod xla_stub;
 
 pub use client::{Executable, Runtime, Value};
 pub use manifest::{default_artifact_dir, DType, Entry, Manifest, TensorSpec};

@@ -7,6 +7,6 @@ pub mod engine;
 pub mod stats;
 pub mod systolic;
 
-pub use engine::{simulate, Simulator};
+pub use engine::{simulate, simulate_with, SimOptions, Simulator};
 pub use stats::{OpBreakdown, SimResult};
 pub use systolic::{matmul_efficiency, matmul_timing, split_subops, MatmulTiming};

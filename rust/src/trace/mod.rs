@@ -4,7 +4,12 @@
 pub mod access;
 pub mod io;
 pub mod occupancy;
+pub mod sink;
 
 pub use access::{AccessStats, KindStats};
 pub use io::{load_trace, save_trace, trace_from_json, trace_to_csv, trace_to_json};
 pub use occupancy::{OccupancyTrace, Sample, Segment};
+pub use sink::{
+    CsvStreamSink, MaterializeSink, MemoryDesc, OnlineMemStats, OnlineStatsSink,
+    TeeSink, TraceSink,
+};

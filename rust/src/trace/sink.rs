@@ -1,0 +1,421 @@
+//! Streaming occupancy consumers (the `TraceSink` trait).
+//!
+//! Stage I's key artifact is the time-resolved occupancy trace, but not
+//! every consumer needs it materialized: online peak/average statistics,
+//! CSV export, and capacity planning can all run on the *event stream*.
+//! The simulation engine forwards every occupancy change of every
+//! on-chip memory to a `TraceSink` (see `sim::engine::SimOptions`), so
+//! consumers choose between O(samples) memory (\[`MaterializeSink`\])
+//! and O(1) memory (\[`OnlineStatsSink`\], \[`CsvStreamSink`\]).
+//!
+//! Stream semantics mirror [`OccupancyTrace::record`]: samples arrive
+//! with non-decreasing `t`; several samples may share one `t`, in which
+//! case only the **last** state at that instant is observable (the
+//! engine emits intra-instant transients in order; sinks that aggregate
+//! must overwrite, exactly as the materialized trace does).
+
+use std::io::Write;
+
+use super::occupancy::OccupancyTrace;
+
+/// A memory visible to the sink, announced once via [`TraceSink::begin`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryDesc {
+    pub name: String,
+    pub capacity: u64,
+}
+
+/// Receiver of streamed occupancy samples for every on-chip memory.
+pub trait TraceSink {
+    /// Called once before simulation with the on-chip memory layout
+    /// (index in this slice == `mem` index in [`TraceSink::on_sample`]).
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        let _ = memories;
+    }
+
+    /// Occupancy state of memory `mem` changed at cycle `t`.
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64);
+
+    /// Simulation finished at cycle `end`; the last state of each memory
+    /// extends to here.
+    fn finish(&mut self, end: u64) {
+        let _ = end;
+    }
+}
+
+/// Builds one [`OccupancyTrace`] per memory — the materializing sink.
+/// `simulate` without a sink is equivalent to running with this one.
+#[derive(Debug, Default)]
+pub struct MaterializeSink {
+    traces: Vec<OccupancyTrace>,
+}
+
+impl MaterializeSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn traces(&self) -> &[OccupancyTrace] {
+        &self.traces
+    }
+
+    pub fn into_traces(self) -> Vec<OccupancyTrace> {
+        self.traces
+    }
+}
+
+impl TraceSink for MaterializeSink {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        self.traces = memories
+            .iter()
+            .map(|m| OccupancyTrace::new(&m.name, m.capacity))
+            .collect();
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64) {
+        self.traces[mem].record(t, needed, obsolete);
+    }
+
+    fn finish(&mut self, end: u64) {
+        for tr in &mut self.traces {
+            tr.finalize(end);
+        }
+    }
+}
+
+/// O(1)-memory online statistics for one memory: peaks and time-weighted
+/// averages computed without storing samples.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineMemStats {
+    pub name: String,
+    pub capacity: u64,
+    /// Current state `(t, needed, obsolete)`, holding from `t`.
+    cur: (u64, u64, u64),
+    needed_byte_cycles: u128,
+    occupied_byte_cycles: u128,
+    peak_needed: u64,
+    peak_occupied: u64,
+    /// Distinct committed states (≈ materialized sample count).
+    committed: u64,
+    end: Option<u64>,
+}
+
+impl OnlineMemStats {
+    /// Commit the current state over `[cur.t, until)` and fold it into
+    /// the peaks. Zero-duration states at `finish` still count toward
+    /// peaks, matching `OccupancyTrace::peak_needed` over samples.
+    fn commit(&mut self, until: u64) {
+        let (t, needed, obsolete) = self.cur;
+        debug_assert!(until >= t);
+        let dt = (until - t) as u128;
+        self.needed_byte_cycles += needed as u128 * dt;
+        self.occupied_byte_cycles += (needed + obsolete) as u128 * dt;
+        self.peak_needed = self.peak_needed.max(needed);
+        self.peak_occupied = self.peak_occupied.max(needed + obsolete);
+        self.committed += 1;
+    }
+
+    fn record(&mut self, t: u64, needed: u64, obsolete: u64) {
+        debug_assert!(t >= self.cur.0, "stream time went backwards");
+        if t > self.cur.0 {
+            self.commit(t);
+        }
+        // Same-instant updates overwrite (only the final state at an
+        // instant is observable — see module docs).
+        self.cur = (t, needed, obsolete);
+    }
+
+    fn finalize(&mut self, end: u64) {
+        self.commit(end);
+        self.end = Some(end);
+    }
+
+    pub fn peak_needed(&self) -> u64 {
+        self.peak_needed
+    }
+
+    pub fn peak_occupied(&self) -> u64 {
+        self.peak_occupied
+    }
+
+    /// Time-weighted average needed bytes (requires the run to have
+    /// finished). Matches `OccupancyTrace::avg_needed`.
+    pub fn avg_needed(&self) -> f64 {
+        match self.end {
+            Some(end) if end > 0 => self.needed_byte_cycles as f64 / end as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn avg_occupied(&self) -> f64 {
+        match self.end {
+            Some(end) if end > 0 => self.occupied_byte_cycles as f64 / end as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn needed_byte_cycles(&self) -> u128 {
+        self.needed_byte_cycles
+    }
+
+    /// Distinct committed states (≈ the materialized sample count).
+    pub fn committed_states(&self) -> u64 {
+        self.committed
+    }
+
+    pub fn end_time(&self) -> Option<u64> {
+        self.end
+    }
+}
+
+/// Streaming peak/average statistics for every on-chip memory.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStatsSink {
+    mems: Vec<OnlineMemStats>,
+}
+
+impl OnlineStatsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn memories(&self) -> &[OnlineMemStats] {
+        &self.mems
+    }
+
+    /// Shared-SRAM statistics (memory 0), if the run announced any.
+    pub fn shared(&self) -> Option<&OnlineMemStats> {
+        self.mems.first()
+    }
+}
+
+impl TraceSink for OnlineStatsSink {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        self.mems = memories
+            .iter()
+            .map(|m| OnlineMemStats {
+                name: m.name.clone(),
+                capacity: m.capacity,
+                ..Default::default()
+            })
+            .collect();
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64) {
+        self.mems[mem].record(t, needed, obsolete);
+    }
+
+    fn finish(&mut self, end: u64) {
+        for m in &mut self.mems {
+            m.finalize(end);
+        }
+    }
+}
+
+/// Streams `memory,t_cycles,needed_bytes,obsolete_bytes` rows as they
+/// happen. The stream is raw: rows at the same `t` supersede earlier
+/// ones (last wins), so post-processing should keep the final row per
+/// `(memory, t)` — or use `trace_to_csv` on a materialized trace for a
+/// deduplicated export.
+pub struct CsvStreamSink<W: Write> {
+    writer: W,
+    names: Vec<String>,
+    error: Option<std::io::Error>,
+}
+
+impl<W: Write> CsvStreamSink<W> {
+    pub fn new(writer: W) -> Self {
+        Self {
+            writer,
+            names: Vec::new(),
+            error: None,
+        }
+    }
+
+    fn write_row(&mut self, line: String) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = self.writer.write_all(line.as_bytes()) {
+            self.error = Some(e);
+        }
+    }
+
+    /// Hand back the writer; `Err` if any row failed to write.
+    pub fn into_inner(self) -> std::io::Result<W> {
+        match self.error {
+            Some(e) => Err(e),
+            None => Ok(self.writer),
+        }
+    }
+}
+
+impl<W: Write> TraceSink for CsvStreamSink<W> {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        self.names = memories.iter().map(|m| m.name.clone()).collect();
+        self.write_row("memory,t_cycles,needed_bytes,obsolete_bytes\n".to_string());
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64) {
+        let name = self
+            .names
+            .get(mem)
+            .map(String::as_str)
+            .unwrap_or("?");
+        self.write_row(format!("{name},{t},{needed},{obsolete}\n"));
+    }
+
+    fn finish(&mut self, _end: u64) {
+        if self.error.is_none() {
+            if let Err(e) = self.writer.flush() {
+                self.error = Some(e);
+            }
+        }
+    }
+}
+
+/// Fans one stream out to several sinks (e.g. materialize + online
+/// stats in a single simulation pass).
+pub struct TeeSink<'a> {
+    sinks: Vec<&'a mut dyn TraceSink>,
+}
+
+impl<'a> TeeSink<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn TraceSink>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl TraceSink for TeeSink<'_> {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        for s in &mut self.sinks {
+            s.begin(memories);
+        }
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64) {
+        for s in &mut self.sinks {
+            s.on_sample(mem, t, needed, obsolete);
+        }
+    }
+
+    fn finish(&mut self, end: u64) {
+        for s in &mut self.sinks {
+            s.finish(end);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mems() -> Vec<MemoryDesc> {
+        vec![MemoryDesc {
+            name: "sram".to_string(),
+            capacity: u64::MAX,
+        }]
+    }
+
+    /// Drive a sink and a reference OccupancyTrace with the same stream.
+    fn drive(events: &[(u64, u64, u64)], end: u64) -> (OccupancyTrace, OnlineStatsSink) {
+        let mut reference = OccupancyTrace::new("sram", u64::MAX);
+        let mut online = OnlineStatsSink::new();
+        online.begin(&mems());
+        for &(t, n, o) in events {
+            reference.record(t, n, o);
+            online.on_sample(0, t, n, o);
+        }
+        reference.finalize(end);
+        online.finish(end);
+        (reference, online)
+    }
+
+    #[test]
+    fn online_stats_match_materialized_simple() {
+        let (tr, online) = drive(&[(2, 100, 0), (4, 50, 60), (8, 0, 0)], 10);
+        let m = online.shared().unwrap();
+        assert_eq!(m.peak_needed(), tr.peak_needed());
+        assert_eq!(m.peak_occupied(), tr.peak_occupied());
+        assert!((m.avg_needed() - tr.avg_needed()).abs() < 1e-9);
+        assert_eq!(m.needed_byte_cycles(), tr.needed_byte_cycles());
+        assert_eq!(m.end_time(), tr.end_time());
+    }
+
+    #[test]
+    fn online_stats_overwrite_same_instant() {
+        // The transient 1000 at t=5 is overwritten at the same instant
+        // and must not pollute the peak (matching OccupancyTrace).
+        let (tr, online) = drive(&[(5, 1000, 0), (5, 10, 0)], 10);
+        assert_eq!(tr.peak_needed(), 10);
+        assert_eq!(online.shared().unwrap().peak_needed(), 10);
+    }
+
+    #[test]
+    fn online_stats_zero_duration_final_state_counts() {
+        let (tr, online) = drive(&[(10, 999, 1)], 10);
+        assert_eq!(tr.peak_needed(), 999);
+        assert_eq!(online.shared().unwrap().peak_needed(), 999);
+        assert_eq!(online.shared().unwrap().peak_occupied(), 1000);
+    }
+
+    #[test]
+    fn prop_online_equals_materialized_on_random_streams() {
+        crate::util::proptest::check("sink-online-vs-materialized", 100, |rng: &mut Rng| {
+            let mut events = Vec::new();
+            let mut t = 0u64;
+            for _ in 0..rng.range(1, 150) {
+                t += rng.below(30); // may repeat an instant
+                events.push((t, rng.below(1 << 28), rng.below(1 << 28)));
+            }
+            let end = t + rng.range(0, 10);
+            let (tr, online) = drive(&events, end);
+            let m = online.shared().unwrap();
+            assert_eq!(m.peak_needed(), tr.peak_needed());
+            assert_eq!(m.peak_occupied(), tr.peak_occupied());
+            assert_eq!(m.needed_byte_cycles(), tr.needed_byte_cycles());
+            assert!((m.avg_needed() - tr.avg_needed()).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn materialize_sink_builds_finalized_traces() {
+        let mut sink = MaterializeSink::new();
+        sink.begin(&mems());
+        sink.on_sample(0, 3, 40, 0);
+        sink.on_sample(0, 7, 10, 30);
+        sink.finish(12);
+        let traces = sink.into_traces();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].end_time(), Some(12));
+        assert_eq!(traces[0].peak_needed(), 40);
+        traces[0].validate().unwrap();
+    }
+
+    #[test]
+    fn csv_sink_streams_rows() {
+        let mut sink = CsvStreamSink::new(Vec::new());
+        sink.begin(&mems());
+        sink.on_sample(0, 5, 100, 0);
+        sink.finish(10);
+        let bytes = sink.into_inner().unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("memory,t_cycles,needed_bytes,obsolete_bytes\n"));
+        assert!(text.contains("sram,5,100,0\n"));
+    }
+
+    #[test]
+    fn tee_fans_out() {
+        let mut a = MaterializeSink::new();
+        let mut b = OnlineStatsSink::new();
+        {
+            let mut tee = TeeSink::new(vec![&mut a, &mut b]);
+            tee.begin(&mems());
+            tee.on_sample(0, 4, 7, 0);
+            tee.finish(8);
+        }
+        assert_eq!(a.traces()[0].peak_needed(), 7);
+        assert_eq!(b.shared().unwrap().peak_needed(), 7);
+    }
+}

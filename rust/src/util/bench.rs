@@ -1,7 +1,7 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
 //! Each bench target (rust/benches/*.rs, `harness = false`) regenerates
-//! one paper table/figure through `coordinator::experiments` and times
+//! one paper table/figure through `api::experiments` and times
 //! the end-to-end generation with warmup + repeated measurement,
 //! reporting mean / min / max / stddev like criterion's summary line.
 

@@ -1,0 +1,119 @@
+//! Integration tests for the `trapti::api` pipeline: the acceptance
+//! check that a `BatchRunner` executing several specs *concurrently*
+//! produces byte-identical reports to sequential execution, plus
+//! streaming-vs-materialized equivalence through the public API.
+//! Tiny-model scale so it stays fast in every profile.
+
+use std::sync::Arc;
+
+use trapti::api::{ApiContext, BatchRunner, ExperimentSpec};
+use trapti::banking::{GatingPolicy, SweepSpec};
+use trapti::config::tiny;
+use trapti::trace::{MaterializeSink, OnlineStatsSink, TeeSink};
+use trapti::util::MIB;
+use trapti::workload::{Workload, TINY_GQA, TINY_MHA};
+
+fn grid() -> SweepSpec {
+    SweepSpec {
+        capacities: vec![2 * MIB, 4 * MIB],
+        banks: vec![1, 2, 4, 8],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::Aggressive],
+    }
+}
+
+fn spec(model: trapti::workload::ModelPreset, wl: Workload) -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .model(model)
+        .workload(wl)
+        .accel(tiny())
+        .sweep(grid())
+        .build()
+        .unwrap()
+}
+
+/// The acceptance criterion: >= 2 specs executed concurrently must
+/// produce byte-identical reports to sequential execution, with
+/// duplicates deduplicated by content hash.
+#[test]
+fn concurrent_batch_matches_sequential_byte_for_byte() {
+    let specs = vec![
+        spec(TINY_GQA, Workload::Prefill { seq: 64 }),
+        spec(TINY_MHA, Workload::Prefill { seq: 64 }),
+        spec(TINY_GQA, Workload::Decode { prompt: 16, gen: 8 }),
+        spec(TINY_GQA, Workload::Prefill { seq: 64 }), // duplicate of [0]
+    ];
+    let runner = BatchRunner::new().threads(4);
+
+    let parallel = runner.run(&specs).unwrap();
+    let sequential = runner.run_sequential(&specs).unwrap();
+    assert_eq!(parallel.len(), 4);
+    assert_eq!(sequential.len(), 4);
+
+    for (p, s) in parallel.iter().zip(&sequential) {
+        assert_eq!(p.hash, s.hash);
+        assert_eq!(p.report(), s.report(), "spec {:016x}", p.hash);
+        assert!(p.report().contains("stage2"), "sweep rendered");
+    }
+
+    // Memoization: the duplicate spec shares the first run's results.
+    assert!(Arc::ptr_eq(&parallel[0].stage1, &parallel[3].stage1));
+    assert!(Arc::ptr_eq(&parallel[0].sweep, &parallel[3].sweep));
+    // Distinct specs do not.
+    assert!(!Arc::ptr_eq(&parallel[0].stage1, &parallel[1].stage1));
+    assert!(!Arc::ptr_eq(&parallel[0].stage1, &parallel[2].stage1));
+    // The sequential reference never memoizes.
+    assert!(!Arc::ptr_eq(&sequential[0].stage1, &sequential[3].stage1));
+}
+
+/// Streaming Stage I through the public API: online statistics and a
+/// streamed materialization must match a conventional run exactly.
+#[test]
+fn streaming_matches_materialized_through_api() {
+    let ctx = ApiContext::new();
+    let spec = spec(TINY_GQA, Workload::Prefill { seq: 64 });
+    let s1 = spec.run_stage1(&ctx).unwrap();
+
+    let mut mat = MaterializeSink::new();
+    let mut online = OnlineStatsSink::new();
+    let summary = {
+        let mut tee = TeeSink::new(vec![&mut mat, &mut online]);
+        spec.stream_stage1(&ctx, &mut tee).unwrap()
+    };
+
+    assert_eq!(summary.total_cycles(), s1.result.total_cycles);
+    assert_eq!(summary.stats(), &s1.result.stats);
+    // Materialized stream == materialized run, sample for sample.
+    assert_eq!(mat.traces().len(), s1.traces().len());
+    for (a, b) in mat.traces().iter().zip(s1.traces()) {
+        assert_eq!(a.samples(), b.samples(), "memory {}", b.memory);
+    }
+    // O(1) online stats agree with the materialized queries.
+    let m = online.shared().unwrap();
+    assert_eq!(m.peak_needed(), s1.result.peak_needed());
+    assert!((m.avg_needed() - s1.trace().avg_needed()).abs() < 1e-9);
+}
+
+/// Typed-handle path equals the batch path for the same spec.
+#[test]
+fn batch_results_match_direct_stage_handles() {
+    let ctx = ApiContext::new();
+    let sp = spec(TINY_MHA, Workload::Prefill { seq: 48 });
+    let direct_s1 = sp.run_stage1(&ctx).unwrap();
+    let direct_pts = direct_s1.stage2(&ctx);
+
+    let batch = BatchRunner::with_context(ctx.clone())
+        .threads(2)
+        .run(std::slice::from_ref(&sp))
+        .unwrap();
+    assert_eq!(batch.len(), 1);
+    let b = &batch[0];
+    assert_eq!(b.stage1.result.total_cycles, direct_s1.result.total_cycles);
+    assert_eq!(b.sweep.len(), 1, "shared-SRAM sweep group");
+    let (mem, pts) = &b.sweep[0];
+    assert_eq!(mem, "sram");
+    assert_eq!(pts.len(), direct_pts.shared().len());
+    for (a, d) in pts.iter().zip(direct_pts.shared()) {
+        assert_eq!(a.eval.e_total_j().to_bits(), d.eval.e_total_j().to_bits());
+    }
+}

@@ -1,21 +1,20 @@
 //! Full-scale integration tests: the paper's headline claims must hold
-//! on the real Table I workloads at M=2048 (run in release for speed:
-//! `cargo test --release --test paper_experiments`; debug works too,
-//! just slower).
+//! on the real Table I workloads at M=2048, driven through the typed
+//! `trapti::api` pipeline (run in release for speed:
+//! `cargo test --release --test paper_experiments`; the test profile
+//! builds with opt-level 2, so plain `cargo test` works too).
 
-use trapti::banking::{evaluate, GatingPolicy, SweepSpec};
-use trapti::config::baseline;
-use trapti::coordinator::{experiments as exp, Coordinator};
+use trapti::api::{experiments as exp, ApiContext, ExperimentSpec};
+use trapti::banking::{evaluate, GatingPolicy};
 use trapti::util::MIB;
-use trapti::workload::Workload;
 
-fn coord() -> Coordinator {
-    Coordinator::new()
+fn ctx() -> ApiContext {
+    ApiContext::new()
 }
 
 #[test]
 fn fig5_peak_utilization_gap() {
-    let pair = exp::paired_prefill(&coord()).unwrap();
+    let pair = exp::paired_prefill(&ctx()).unwrap();
     // Paper: 107.3 vs 39.1 MiB (2.72x). Calibrated reproduction: 95.5 vs
     // 41.5 (2.30x) — assert the shape with generous bands.
     let mha = pair.mha.result.peak_needed() as f64 / MIB as f64;
@@ -30,7 +29,7 @@ fn fig5_peak_utilization_gap() {
 
 #[test]
 fn fig5_time_gap() {
-    let pair = exp::paired_prefill(&coord()).unwrap();
+    let pair = exp::paired_prefill(&ctx()).unwrap();
     // Paper: 593.9 vs 313.6 ms (1.89x); ours: 320.6 vs 208.2 (1.54x).
     assert!(
         pair.time_ratio() > 1.3,
@@ -45,7 +44,7 @@ fn fig5_time_gap() {
 
 #[test]
 fn fig7_utilization_and_energy_order() {
-    let pair = exp::paired_prefill(&coord()).unwrap();
+    let pair = exp::paired_prefill(&ctx()).unwrap();
     // GQA runs closer to compute capability (paper 77% vs 38%).
     assert!(
         pair.gqa.result.active_utilization()
@@ -60,7 +59,7 @@ fn fig7_utilization_and_energy_order() {
 
 #[test]
 fn sizing_matches_paper_capacities() {
-    let s = exp::sizing(&coord()).unwrap();
+    let s = exp::sizing(&ctx()).unwrap();
     // Paper: GPT-2 XL -> 112 MiB, DS -> 48 MiB (16 MiB rounding).
     assert_eq!(s.gqa_required, 48 * MIB, "DS required capacity");
     assert!(
@@ -74,7 +73,7 @@ fn sizing_matches_paper_capacities() {
 
 #[test]
 fn table2_banking_reduces_energy_with_sweet_spot() {
-    let c = coord();
+    let c = ctx();
     let pair = exp::paired_prefill(&c).unwrap();
     let t2 = exp::table2(&c, &pair);
     // Best bank count lands in the interior (paper: B in {8,16}).
@@ -113,9 +112,9 @@ fn table2_banking_reduces_energy_with_sweet_spot() {
 
 #[test]
 fn fig8_alpha_monotonicity_at_full_scale() {
-    let c = coord();
+    let c = ctx();
     let pair = exp::paired_prefill(&c).unwrap();
-    let f8 = exp::fig8(&c, &pair.gqa);
+    let f8 = exp::fig8(&pair.gqa);
     let avgs: Vec<f64> = f8
         .timelines
         .iter()
@@ -132,7 +131,7 @@ fn fig8_alpha_monotonicity_at_full_scale() {
 
 #[test]
 fn table3_multilevel_headline() {
-    let t3 = exp::table3(&coord()).unwrap();
+    let t3 = exp::table3(&ctx()).unwrap();
     // Paper: multi-level run is slower & hungrier than single-level
     // (550 ms, 73.4 J) with per-memory peaks near 34-38 MiB.
     let ms = t3.stage1.result.seconds() * 1e3;
@@ -150,11 +149,11 @@ fn table3_multilevel_headline() {
 #[test]
 fn switching_overhead_negligible() {
     // Paper §IV-C: "switching overhead had a negligible impact".
-    let c = coord();
+    let c = ctx();
     let pair = exp::paired_prefill(&c).unwrap();
     let ev = evaluate(
         &c.cacti,
-        pair.gqa.result.sram_trace(),
+        pair.gqa.trace(),
         &pair.gqa.result.stats,
         128 * MIB,
         16,
@@ -174,22 +173,22 @@ fn switching_overhead_negligible() {
 fn trace_reuse_equals_inline_stage2() {
     // The two-stage decoupling: Stage II over a saved+reloaded trace
     // must give identical numbers to the inline evaluation.
-    let c = coord();
-    let s1 = c
-        .stage1(
-            &trapti::workload::DS_R1D_Q15B,
-            Workload::Prefill { seq: 2048 },
-            &baseline(),
-        )
+    let c = ctx();
+    let s1 = ExperimentSpec::builder()
+        .model(trapti::workload::DS_R1D_Q15B)
+        .prefill(2048)
+        .build()
+        .unwrap()
+        .run_stage1(&c)
         .unwrap();
     let dir = std::env::temp_dir().join("trapti-trace-roundtrip");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("ds.trace.json");
-    trapti::trace::save_trace(s1.result.sram_trace(), &path).unwrap();
+    trapti::trace::save_trace(s1.trace(), &path).unwrap();
     let reloaded = trapti::trace::load_trace(&path).unwrap();
-    let spec = SweepSpec::paper_grid(s1.result.peak_needed());
+    let spec = s1.paper_sweep();
     let inline = trapti::banking::sweep(
-        &c.cacti, s1.result.sram_trace(), &s1.result.stats, &spec, 1.0,
+        &c.cacti, s1.trace(), &s1.result.stats, &spec, 1.0,
     );
     let from_file =
         trapti::banking::sweep(&c.cacti, &reloaded, &s1.result.stats, &spec, 1.0);
@@ -203,7 +202,7 @@ fn trace_reuse_equals_inline_stage2() {
 #[test]
 fn aggregate_baseline_cannot_see_gating_opportunities() {
     // The gap-and-motivation claim, measured at full scale.
-    let c = coord();
+    let c = ctx();
     let pair = exp::paired_prefill(&c).unwrap();
     let s1 = &pair.gqa;
     let view = trapti::analytic::AggregateView::from_stats(
@@ -214,7 +213,7 @@ fn aggregate_baseline_cannot_see_gating_opportunities() {
     let agg = trapti::analytic::estimate(&c.cacti, &view, 128 * MIB, 16, 0.9, 1.0);
     let trapti_ev = evaluate(
         &c.cacti,
-        s1.result.sram_trace(),
+        s1.trace(),
         &s1.result.stats,
         128 * MIB,
         16,
