@@ -1,0 +1,56 @@
+//! Bench: serving occupancy vs concurrency — multi-tenant decode
+//! streams over the paged KV arena at concurrency ∈ {1, 4, 16, 64},
+//! each merged trace swept through Stage II.
+//! Run: `cargo bench --bench fig10_serving_occupancy`.
+
+use trapti::api::{experiments as exp, ApiContext};
+use trapti::util::bench::{bench, default_iters};
+use trapti::util::MIB;
+use trapti::workload::GPT2_XL;
+
+fn main() {
+    let ctx = ApiContext::new();
+    let (_stats, points) = bench("fig10_serving_occupancy", default_iters(), || {
+        exp::fig10_serving(&ctx, &GPT2_XL, 256, 7).expect("serving runs")
+    });
+
+    println!(
+        "{:>6} {:>11} {:>11} {:>11} {:>8} {:>6} {:>13} {:>8}",
+        "conc", "peak[MiB]", "occ[MiB]", "avg[MiB]", "ms", "bestB", "best policy", "dE%"
+    );
+    for p in &points {
+        println!(
+            "{:>6} {:>11.1} {:>11.1} {:>11.1} {:>8.1} {:>6} {:>13} {:>8.1}",
+            p.concurrency,
+            p.peak_needed as f64 / MIB as f64,
+            p.peak_occupied as f64 / MIB as f64,
+            p.avg_needed / MIB as f64,
+            p.total_cycles as f64 / 1e6,
+            p.best_banks,
+            p.best_policy.label(),
+            p.best_delta_pct,
+        );
+    }
+
+    // Serving-shaped occupancy is the point of the figure: stacking
+    // concurrent KV caches must push the peak strictly past the
+    // single-stream case, and every run must serve the whole population.
+    let single = &points[0];
+    let heavy = points.last().expect("four concurrency levels");
+    assert_eq!(single.concurrency, 1);
+    assert_eq!(heavy.concurrency, 64);
+    for p in &points {
+        assert_eq!(p.completed, 256, "requests dropped at c={}", p.concurrency);
+        assert!(p.best_delta_pct < 0.0, "banking must win at c={}", p.concurrency);
+    }
+    assert!(
+        heavy.peak_needed > single.peak_needed,
+        "64-way serving peak {} must exceed single-stream peak {}",
+        heavy.peak_needed,
+        single.peak_needed
+    );
+    assert!(
+        heavy.peak_concurrent > single.peak_concurrent,
+        "concurrency cap never exercised"
+    );
+}

@@ -135,6 +135,15 @@ impl BatchRunner {
     pub fn run(&self, specs: &[ExperimentSpec]) -> Result<Vec<BatchResult>> {
         for s in specs {
             s.validate()?;
+            // Fail fast with a pointer to the right entry point instead
+            // of erroring later inside a worker thread.
+            if matches!(s.workload, crate::workload::Workload::Serving(_)) {
+                return Err(anyhow!(
+                    "BatchRunner batches single-sequence specs; serving spec \
+                     {:016x} runs via ExperimentSpec::run_serving",
+                    s.content_hash()
+                ));
+            }
         }
         // Dedupe, preserving first-seen order (hash + structural
         // equality, so a hash collision cannot alias two specs).
@@ -299,5 +308,15 @@ mod tests {
         let mut bad = spec(TINY_GQA, 64);
         bad.workload = crate::workload::Workload::Prefill { seq: 0 };
         assert!(BatchRunner::new().run(&[bad]).is_err());
+    }
+
+    #[test]
+    fn serving_spec_rejected_with_pointer_to_run_serving() {
+        let mut sp = spec(TINY_GQA, 64);
+        sp.workload = crate::workload::Workload::Serving(
+            crate::serving::ServingParams::new(8, 2, 1),
+        );
+        let err = BatchRunner::new().run(&[sp]).unwrap_err();
+        assert!(err.to_string().contains("run_serving"), "{err:#}");
     }
 }

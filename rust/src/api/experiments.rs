@@ -16,8 +16,9 @@ use crate::banking::{
     SweepSpec,
 };
 use crate::config::{baseline, multilevel, AccelConfig};
+use crate::serving::ServingParams;
 use crate::util::MIB;
-use crate::workload::{DS_R1D_Q15B, GPT2_XL};
+use crate::workload::{ModelPreset, DS_R1D_Q15B, GPT2_XL};
 
 use super::batch::BatchRunner;
 use super::spec::ExperimentSpec;
@@ -314,6 +315,64 @@ impl Table3 {
     }
 }
 
+/// Fig. 10 — serving occupancy vs concurrency: one multi-tenant serving
+/// run per concurrency level, each swept through Stage II.
+pub struct Fig10Point {
+    pub concurrency: u32,
+    pub peak_needed: u64,
+    pub peak_occupied: u64,
+    pub avg_needed: f64,
+    pub total_cycles: u64,
+    pub completed: u32,
+    pub peak_concurrent: u32,
+    /// Best Stage-II candidate on this trace.
+    pub best_banks: u32,
+    pub best_policy: GatingPolicy,
+    pub best_capacity: u64,
+    pub best_delta_pct: f64,
+}
+
+/// Concurrency axis of the serving figure.
+pub const FIG10_CONCURRENCY: [u32; 4] = [1, 4, 16, 64];
+
+/// Run the serving scenario at each concurrency in
+/// [`FIG10_CONCURRENCY`] (same request population and seed throughout)
+/// and sweep each merged trace through Stage II.
+pub fn fig10_serving(
+    ctx: &ApiContext,
+    model: &ModelPreset,
+    requests: u32,
+    seed: u64,
+) -> Result<Vec<Fig10Point>> {
+    FIG10_CONCURRENCY
+        .iter()
+        .map(|&concurrency| {
+            let spec = ExperimentSpec::builder()
+                .model(model.clone())
+                .serving(ServingParams::new(requests, concurrency, seed))
+                .build()?;
+            let run = spec.run_serving()?;
+            let s2 = run.stage2(ctx);
+            let best = s2
+                .best()
+                .expect("serving grid is never empty");
+            Ok(Fig10Point {
+                concurrency,
+                peak_needed: run.trace().peak_needed(),
+                peak_occupied: run.trace().peak_occupied(),
+                avg_needed: run.trace().avg_needed(),
+                total_cycles: run.result.total_cycles,
+                completed: run.result.completed,
+                peak_concurrent: run.result.peak_concurrent,
+                best_banks: best.eval.banks,
+                best_policy: best.eval.policy,
+                best_capacity: best.eval.capacity,
+                best_delta_pct: best.delta_e_pct(),
+            })
+        })
+        .collect()
+}
+
 /// Headline numbers pulled together for `repro report headline`.
 pub struct Headline {
     pub peak_ratio: f64,
@@ -357,6 +416,20 @@ mod tests {
     #[test]
     fn constants_match_paper() {
         assert_eq!(PAPER_SEQ, 2048);
+    }
+
+    #[test]
+    fn fig10_runs_at_each_concurrency() {
+        let ctx = ApiContext::new();
+        let pts = fig10_serving(&ctx, &crate::workload::TINY_GQA, 8, 1).unwrap();
+        assert_eq!(pts.len(), FIG10_CONCURRENCY.len());
+        for (p, &c) in pts.iter().zip(&FIG10_CONCURRENCY) {
+            assert_eq!(p.concurrency, c);
+            assert_eq!(p.completed, 8);
+            assert!(p.peak_concurrent >= 1 && p.peak_concurrent <= c.min(8));
+            assert!(p.peak_needed > 0);
+            assert!(p.best_banks >= 1);
+        }
     }
 
     #[test]

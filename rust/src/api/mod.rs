@@ -41,9 +41,11 @@
 
 pub mod batch;
 pub mod experiments;
+pub mod serving;
 pub mod spec;
 pub mod stage;
 
 pub use batch::{BatchResult, BatchRunner};
+pub use serving::{ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};
 pub use stage::{ApiContext, Stage1Run, Stage1Summary, Stage2Run};

@@ -1,0 +1,225 @@
+//! Typed serving pipeline: `ExperimentSpec` (Serving workload) →
+//! [`ServingRun`] → [`ServingSweep`].
+//!
+//! Mirrors the `Stage1Run`/`Stage2Run` handles: a `ServingSweep` is only
+//! obtainable from a `&ServingRun`, so "sweep before simulate" stays
+//! unrepresentable for the serving scenario too. The Stage-II evaluator
+//! consumes the merged KV-arena trace through the exact same
+//! [`crate::banking::sweep`] entry point as single-sequence traces.
+
+use anyhow::{bail, Result};
+
+use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSpec};
+use crate::serving::ServingParams;
+use crate::sim::serving::{
+    simulate_serving, simulate_serving_with, ServingResult, ServingSimOptions,
+};
+use crate::trace::{OccupancyTrace, TraceSink};
+use crate::util::MIB;
+use crate::workload::Workload;
+
+use super::spec::ExperimentSpec;
+use super::stage::ApiContext;
+
+/// Stage-I output of a serving scenario: the merged KV-arena occupancy
+/// trace plus completion / traffic statistics.
+#[derive(Debug, Clone)]
+pub struct ServingRun {
+    pub spec: ExperimentSpec,
+    pub result: ServingResult,
+}
+
+impl ExperimentSpec {
+    /// The serving params of this spec, or an error for single-sequence
+    /// workloads.
+    pub fn serving_params(&self) -> Result<ServingParams> {
+        match self.workload {
+            Workload::Serving(p) => Ok(p),
+            _ => bail!(
+                "spec workload is {:?}; run_serving needs Workload::Serving \
+                 (use ExperimentSpecBuilder::serving)",
+                self.workload
+            ),
+        }
+    }
+
+    /// Execute the serving scenario (materialized trace).
+    pub fn run_serving(&self) -> Result<ServingRun> {
+        self.validate()?;
+        let params = self.serving_params()?;
+        let result = simulate_serving(&self.model, params, &self.accel)?;
+        Ok(ServingRun {
+            spec: self.clone(),
+            result,
+        })
+    }
+
+    /// Execute the serving scenario streaming occupancy into `sink`
+    /// without materializing the trace (O(1) trace memory). The returned
+    /// run's trace is empty, so its Stage-II methods sweep nothing —
+    /// peaks and averages live in the caller's sink.
+    pub fn stream_serving(&self, sink: &mut dyn TraceSink) -> Result<ServingRun> {
+        self.validate()?;
+        let params = self.serving_params()?;
+        let result = simulate_serving_with(
+            &self.model,
+            params,
+            &self.accel,
+            ServingSimOptions {
+                sink: Some(sink),
+                materialize: false,
+            },
+        )?;
+        Ok(ServingRun {
+            spec: self.clone(),
+            result,
+        })
+    }
+}
+
+impl ServingRun {
+    /// Borrowed view of the merged KV-arena occupancy trace.
+    pub fn trace(&self) -> &OccupancyTrace {
+        &self.result.trace
+    }
+
+    /// Default Stage-II grid for serving traces: one capacity (the peak
+    /// occupancy rounded up to a 16 MiB step), the paper's bank set, and
+    /// all three gating policies — serving asks "which (B, policy) fits
+    /// this traffic", not "how small can the SRAM be".
+    pub fn serving_grid(&self) -> SweepSpec {
+        let peak = self.trace().peak_occupied().max(1);
+        let capacity = peak.div_ceil(16 * MIB).max(1) * 16 * MIB;
+        SweepSpec {
+            capacities: vec![capacity],
+            banks: vec![1, 2, 4, 8, 16, 32],
+            alphas: vec![0.9],
+            policies: vec![
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        }
+    }
+
+    /// Stage II over the serving trace: the spec's grid, or
+    /// [`ServingRun::serving_grid`] when the spec left it open.
+    pub fn stage2(&self, ctx: &ApiContext) -> ServingSweep {
+        let grid = self
+            .spec
+            .sweep
+            .clone()
+            .unwrap_or_else(|| self.serving_grid());
+        self.stage2_with(ctx, &grid)
+    }
+
+    /// Stage II with an explicit grid.
+    pub fn stage2_with(&self, ctx: &ApiContext, grid: &SweepSpec) -> ServingSweep {
+        let points = sweep(
+            &ctx.cacti,
+            &self.result.trace,
+            &self.result.stats,
+            grid,
+            self.spec.freq_ghz(),
+        );
+        ServingSweep {
+            spec: grid.clone(),
+            points,
+        }
+    }
+}
+
+/// Stage-II output over a serving trace.
+#[derive(Debug, Clone)]
+pub struct ServingSweep {
+    pub spec: SweepSpec,
+    pub points: Vec<SweepPoint>,
+}
+
+impl ServingSweep {
+    /// Lowest-energy candidate.
+    pub fn best(&self) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.eval.e_total_j().total_cmp(&b.eval.e_total_j()))
+    }
+
+    /// Best ΔE% (negative = win over the unbanked, ungated reference).
+    pub fn best_delta_pct(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| p.delta_e_pct())
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny;
+    use crate::workload::TINY_GQA;
+
+    fn serving_spec() -> ExperimentSpec {
+        let mut p = ServingParams::new(24, 4, 7);
+        p.prompt_min = 4;
+        p.prompt_max = 32;
+        p.gen_min = 2;
+        p.gen_max = 16;
+        p.page_tokens = 8;
+        p.mean_arrival_gap = 50_000;
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn run_serving_then_stage2_composes() {
+        let ctx = ApiContext::new();
+        let run = serving_spec().run_serving().unwrap();
+        assert_eq!(run.result.completed, 24);
+        assert!(run.trace().peak_needed() > 0);
+        let s2 = run.stage2(&ctx);
+        assert!(!s2.points.is_empty());
+        let best = s2.best().unwrap();
+        assert!(best.eval.banks >= 1);
+        // Banked gating must beat the unbanked reference on a serving
+        // trace with arrival gaps and completion churn.
+        assert!(s2.best_delta_pct() < 0.0);
+    }
+
+    #[test]
+    fn run_stage1_rejects_serving_specs() {
+        let ctx = ApiContext::new();
+        let err = serving_spec().run_stage1(&ctx).unwrap_err();
+        assert!(err.to_string().contains("run_serving"), "{err:#}");
+    }
+
+    #[test]
+    fn run_serving_rejects_single_sequence_specs() {
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        assert!(spec.run_serving().is_err());
+    }
+
+    #[test]
+    fn streaming_run_matches_materialized_stats() {
+        use crate::trace::OnlineStatsSink;
+        let spec = serving_spec();
+        let reference = spec.run_serving().unwrap();
+        let mut online = OnlineStatsSink::new();
+        let streamed = spec.stream_serving(&mut online).unwrap();
+        assert_eq!(streamed.result.total_cycles, reference.result.total_cycles);
+        assert_eq!(
+            online.shared().unwrap().peak_needed(),
+            reference.trace().peak_needed()
+        );
+        assert_eq!(streamed.trace().samples().len(), 1, "not materialized");
+    }
+}

@@ -9,6 +9,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::banking::{GatingPolicy, SweepSpec};
 use crate::config::{baseline, AccelConfig};
+use crate::serving::ServingParams;
+use crate::util::fnv::Fnv64 as Fnv;
 use crate::workload::{FfnKind, ModelPreset, NormKind, Workload};
 
 /// One fully-specified experiment. Construct via [`ExperimentSpec::builder`].
@@ -68,6 +70,18 @@ impl ExperimentSpec {
                 h.u64(1);
                 h.u64(prompt as u64);
                 h.u64(gen as u64);
+            }
+            Workload::Serving(p) => {
+                h.u64(2);
+                h.u64(p.requests as u64);
+                h.u64(p.concurrency as u64);
+                h.u64(p.seed);
+                h.u64(p.mean_arrival_gap);
+                h.u64(p.prompt_min as u64);
+                h.u64(p.prompt_max as u64);
+                h.u64(p.gen_min as u64);
+                h.u64(p.gen_max as u64);
+                h.u64(p.page_tokens as u64);
             }
         }
 
@@ -153,6 +167,7 @@ impl ExperimentSpec {
             Workload::Decode { gen, .. } => {
                 ensure!(gen >= 1, "decode needs gen >= 1 (got {gen})");
             }
+            Workload::Serving(p) => p.validate()?,
         }
         self.accel.validate()?;
         if let Some(s) = &self.sweep {
@@ -233,6 +248,13 @@ impl ExperimentSpecBuilder {
         self.workload(Workload::Decode { prompt, gen })
     }
 
+    /// Shorthand for `.workload(Workload::Serving(params))` — a
+    /// multi-tenant serving scenario (see [`crate::serving`]). Run it
+    /// with `ExperimentSpec::run_serving`, not `run_stage1`.
+    pub fn serving(self, params: ServingParams) -> Self {
+        self.workload(Workload::Serving(params))
+    }
+
     /// Accelerator configuration; defaults to the paper baseline
     /// (`config::baseline()`) when omitted.
     pub fn accel(mut self, accel: AccelConfig) -> Self {
@@ -262,39 +284,6 @@ impl ExperimentSpecBuilder {
         };
         spec.validate()?;
         Ok(spec)
-    }
-}
-
-/// FNV-1a, 64-bit: tiny, dependency-free, stable across platforms.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn bytes(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
-        }
-    }
-
-    fn u64(&mut self, v: u64) {
-        self.bytes(&v.to_le_bytes());
-    }
-
-    fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
-    }
-
-    fn str(&mut self, s: &str) {
-        self.u64(s.len() as u64);
-        self.bytes(s.as_bytes());
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
     }
 }
 
@@ -433,5 +422,55 @@ mod tests {
         let a = base();
         let b = a.clone();
         assert_eq!(a.content_hash(), b.content_hash());
+    }
+
+    #[test]
+    fn serving_spec_builds_and_hashes_stably() {
+        let p = ServingParams::new(64, 8, 7);
+        let a = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        let b = a.clone();
+        assert_eq!(a.content_hash(), b.content_hash());
+        // Every serving field is semantic.
+        let edits: [fn(&mut ServingParams); 6] = [
+            |p| p.requests += 1,
+            |p| p.concurrency += 1,
+            |p| p.seed += 1,
+            |p| p.mean_arrival_gap += 1,
+            |p| p.gen_max += 1,
+            |p| p.page_tokens += 1,
+        ];
+        for (i, f) in edits.into_iter().enumerate() {
+            let mut q = p;
+            f(&mut q);
+            let c = ExperimentSpec::builder()
+                .model(TINY_GQA)
+                .serving(q)
+                .accel(tiny())
+                .build()
+                .unwrap();
+            assert_ne!(a.content_hash(), c.content_hash(), "field {i}");
+        }
+    }
+
+    #[test]
+    fn builder_rejects_invalid_serving_params() {
+        let mut p = ServingParams::new(0, 8, 7);
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .build()
+            .is_err());
+        p = ServingParams::new(8, 8, 7);
+        p.gen_min = 0;
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .build()
+            .is_err());
     }
 }

@@ -98,6 +98,9 @@ impl Stage1Summary {
 
 impl ExperimentSpec {
     /// Execute Stage I (build graph → simulate → energy breakdown).
+    /// Serving specs have no single dataflow graph and are rejected here
+    /// — run them via [`ExperimentSpec::run_serving`]
+    /// (`api::serving`), which produces the merged KV-arena trace.
     pub fn run_stage1(&self, ctx: &ApiContext) -> Result<Stage1Run> {
         self.validate()?;
         let graph = build_workload(&self.model, self.workload)?;

@@ -61,11 +61,24 @@ pub struct SweepPoint {
 
 impl SweepPoint {
     pub fn delta_e_pct(&self) -> f64 {
-        (self.eval.e_total_j() - self.base_e_j) / self.base_e_j * 100.0
+        pct_delta(self.eval.e_total_j(), self.base_e_j)
     }
 
     pub fn delta_a_pct(&self) -> f64 {
-        (self.eval.area_mm2 - self.base_area_mm2) / self.base_area_mm2 * 100.0
+        pct_delta(self.eval.area_mm2, self.base_area_mm2)
+    }
+}
+
+/// Relative delta in percent, guarded against a zero reference: a
+/// zero-length trace with zero access statistics evaluates to zero base
+/// energy, and an unguarded division would report NaN/inf instead of
+/// "no change" (0%) downstream (`best_delta_pct` folds with `min`, so a
+/// NaN would silently poison the headline metric).
+fn pct_delta(value: f64, base: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (value - base) / base * 100.0
     }
 }
 
@@ -196,6 +209,35 @@ mod tests {
                 .unwrap();
             assert!(best.eval.banks >= 4, "best banks at {cap}: {}", best.eval.banks);
             assert!(best.delta_e_pct() < -20.0, "ΔE={}", best.delta_e_pct());
+        }
+    }
+
+    #[test]
+    fn zero_base_energy_yields_finite_deltas() {
+        // Regression: a zero-length trace with zero access statistics
+        // gives a B=1 reference energy of exactly 0 J; delta_e_pct used
+        // to divide by it unguarded and return NaN.
+        let mut tr = OccupancyTrace::new("sram", 64 * MIB);
+        tr.finalize(0);
+        let spec = SweepSpec {
+            capacities: vec![16 * MIB],
+            banks: vec![1, 4],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        let pts = sweep(
+            &CactiModel::default(),
+            &tr,
+            &AccessStats::default(),
+            &spec,
+            1.0,
+        );
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert_eq!(p.base_e_j, 0.0, "B=1 reference energy must be 0");
+            assert!(p.delta_e_pct().is_finite(), "dE = {}", p.delta_e_pct());
+            assert!(p.delta_a_pct().is_finite(), "dA = {}", p.delta_a_pct());
+            assert_eq!(p.delta_e_pct(), 0.0);
         }
     }
 

@@ -15,6 +15,12 @@
 //! * **Stage II** ([`cacti`], [`banking`]): offline exploration of banked
 //!   SRAM organizations and power-gating policies driven by the Stage-I
 //!   trace (Eqs. 1–5 of the paper).
+//! * **Serving** ([`serving`], [`sim::serving`]): multi-tenant request
+//!   workloads — concurrent decode streams over a paged KV arena with
+//!   continuous-batching admission — producing merged occupancy traces
+//!   through the same [`trace`] machinery, so Stage II answers the
+//!   banking question for serving-shaped traffic too
+//!   (`api::ExperimentSpec::run_serving`, `repro serve`).
 //! * **Functional layer** ([`runtime`]): AOT-compiled JAX/Pallas decode
 //!   models (HLO text in `artifacts/`) executed through PJRT — Python is
 //!   never on the request path. Offline builds link an API-compatible
@@ -71,6 +77,7 @@ pub mod energy;
 pub mod memory;
 pub mod report;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod trace;
 pub mod util;

@@ -106,6 +106,7 @@ fn run(raw: &[String]) -> Result<()> {
         "report" => report(&args),
         "simulate" => simulate_cmd(&args),
         "batch" => batch_cmd(&args),
+        "serve" => serve_cmd(&args),
         "bank" => bank_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
@@ -129,6 +130,13 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
   repro batch              run several scenarios as one parallel,
                            memoized batch (--models A,B,.. --seq
                            --accel --threads N --decode P:G)
+  repro serve              multi-tenant serving: concurrent decode
+                           streams over a paged KV arena, then a
+                           Stage-II sweep on the merged trace
+                           (--model --accel --concurrency --requests
+                            --seed --prompt MIN:MAX --gen MIN:MAX
+                            --page-tokens N --arrival CYCLES
+                            --trace-csv FILE --save-trace FILE)
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
   repro e2e                functional PJRT decode (--model, --steps)
@@ -373,6 +381,116 @@ fn batch_cmd(args: &Args) -> Result<()> {
             r.stage1.energy.on_chip_j(),
             best,
         );
+    }
+    Ok(())
+}
+
+/// Parse a `MIN:MAX` token range.
+fn parse_range(s: &str, flag: &str) -> Result<(u32, u32)> {
+    let (lo, hi) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("--{flag} wants MIN:MAX"))?;
+    Ok((lo.parse()?, hi.parse()?))
+}
+
+/// Multi-tenant serving scenario: Stage-I serving simulation (merged
+/// KV-arena occupancy) + Stage-II banking sweep on the serving trace.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let model_name = args.flag_or("model", "gpt2-xl");
+    let model = preset(&model_name)
+        .ok_or_else(|| anyhow!("unknown model `{model_name}`"))?;
+    let accel_name = args.flag_or("accel", "baseline");
+    let accel = named(&accel_name)
+        .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+
+    let mut params = trapti::serving::ServingParams::new(
+        args.flag_or("requests", "256").parse()?,
+        args.flag_or("concurrency", "64").parse()?,
+        args.flag_or("seed", "7").parse()?,
+    );
+    if let Some(p) = args.flag("prompt") {
+        (params.prompt_min, params.prompt_max) = parse_range(p, "prompt")?;
+    }
+    if let Some(g) = args.flag("gen") {
+        (params.gen_min, params.gen_max) = parse_range(g, "gen")?;
+    }
+    if let Some(pt) = args.flag("page-tokens") {
+        params.page_tokens = pt.parse()?;
+    }
+    if let Some(a) = args.flag("arrival") {
+        params.mean_arrival_gap = a.parse()?;
+    }
+
+    let spec = ExperimentSpec::builder()
+        .model(model)
+        .serving(params)
+        .accel(accel)
+        .build()?;
+    let run = spec.run_serving()?;
+    let r = &run.result;
+    println!("{} on {} [spec {:016x}]", r.workload, r.accel, spec.content_hash());
+    println!(
+        "completed {}/{} requests in {:.1} ms ({} cycles), peak {} concurrent",
+        r.completed,
+        params.requests,
+        r.seconds() * 1e3,
+        r.total_cycles,
+        r.peak_concurrent,
+    );
+    println!(
+        "arena: {:.1} MiB capacity, {:.1} KiB pages  trace: {} samples, hash {:016x}",
+        r.arena_capacity as f64 / MIB as f64,
+        r.page_bytes as f64 / 1024.0,
+        r.trace.samples().len(),
+        r.trace_hash(),
+    );
+    println!(
+        "occupancy: peak needed {:.1} MiB, peak occupied {:.1} MiB, avg needed {:.1} MiB",
+        r.peak_needed() as f64 / MIB as f64,
+        r.peak_occupied() as f64 / MIB as f64,
+        r.trace.avg_needed() / MIB as f64,
+    );
+
+    let ctx = ApiContext::new();
+    let s2 = run.stage2(&ctx);
+    println!(
+        "\nStage II on the serving trace ({} candidates):",
+        s2.points.len()
+    );
+    println!(
+        "{:>9} {:>5} {:>13} {:>12} {:>8} {:>9} {:>10}",
+        "C[MiB]", "B", "policy", "E_total[J]", "dE%", "avgBact", "gated%"
+    );
+    for p in &s2.points {
+        println!(
+            "{:>9} {:>5} {:>13} {:>12.3} {:>8.1} {:>9.2} {:>9.1}",
+            p.eval.capacity / MIB,
+            p.eval.banks,
+            p.eval.policy.label(),
+            p.eval.e_total_j(),
+            p.delta_e_pct(),
+            p.eval.avg_active_banks,
+            p.eval.gated_fraction * 100.0,
+        );
+    }
+    if let Some(best) = s2.best() {
+        println!(
+            "best: C={} MiB B={} policy={} (dE {:.1}%)",
+            best.eval.capacity / MIB,
+            best.eval.banks,
+            best.eval.policy.label(),
+            best.delta_e_pct(),
+        );
+    }
+
+    if let Some(path) = args.flag("trace-csv") {
+        std::fs::write(path, trace_to_csv(run.trace()))
+            .with_context(|| format!("writing {path}"))?;
+        println!("trace CSV saved to {path}");
+    }
+    if let Some(path) = args.flag("save-trace") {
+        save_trace(run.trace(), Path::new(path))?;
+        println!("trace saved to {path}");
     }
     Ok(())
 }

@@ -1,0 +1,185 @@
+//! Paged KV-cache arena: fixed-size pages per stream, allocated as
+//! contexts grow and freed wholesale at completion.
+//!
+//! The arena is what turns many interleaved KV caches into the paper's
+//! needed/obsolete occupancy split (see the [`super`] module docs):
+//! *needed* is the live KV bytes of every active stream, *obsolete* is
+//! page-internal fragmentation — bytes the allocator holds but no stream
+//! needs, evictable for free exactly like the single-sequence trace's
+//! obsolete tensors.
+
+use anyhow::{bail, ensure, Result};
+
+/// Per-stream allocation state.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct StreamAlloc {
+    pages: u64,
+    live_bytes: u64,
+}
+
+/// Fixed-page KV allocator shared by all active streams.
+#[derive(Debug, Clone)]
+pub struct PagedKvArena {
+    page_bytes: u64,
+    capacity_pages: u64,
+    allocated_pages: u64,
+    needed_bytes: u64,
+    /// `(stream id, alloc)` — sorted by id; streams are few (≤
+    /// concurrency cap), so linear search beats hashing and stays
+    /// deterministic.
+    streams: Vec<(u32, StreamAlloc)>,
+}
+
+impl PagedKvArena {
+    /// `capacity_bytes` rounds *down* to whole pages.
+    pub fn new(page_bytes: u64, capacity_bytes: u64) -> Self {
+        assert!(page_bytes > 0, "page_bytes must be > 0");
+        Self {
+            page_bytes,
+            capacity_pages: capacity_bytes / page_bytes,
+            allocated_pages: 0,
+            needed_bytes: 0,
+            streams: Vec::new(),
+        }
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Whole-page capacity in bytes.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_pages * self.page_bytes
+    }
+
+    /// Register a new stream with no pages yet.
+    pub fn admit(&mut self, id: u32) -> Result<()> {
+        ensure!(
+            self.index_of(id).is_none(),
+            "stream {id} already resident in the arena"
+        );
+        let at = self.streams.partition_point(|&(sid, _)| sid < id);
+        self.streams.insert(at, (id, StreamAlloc::default()));
+        Ok(())
+    }
+
+    /// Grow a stream's live KV by `bytes`, allocating pages on demand.
+    /// Fails (leaving state unchanged) when the arena is out of pages.
+    pub fn grow(&mut self, id: u32, bytes: u64) -> Result<()> {
+        let page = self.page_bytes;
+        let free = self.capacity_pages - self.allocated_pages;
+        let Some(i) = self.index_of(id) else {
+            bail!("stream {id} not resident in the arena");
+        };
+        let s = &mut self.streams[i].1;
+        let new_live = s.live_bytes + bytes;
+        let need_pages = new_live.div_ceil(page);
+        let extra = need_pages.saturating_sub(s.pages);
+        ensure!(
+            extra <= free,
+            "arena exhausted: stream {id} needs {extra} page(s), {free} free"
+        );
+        s.live_bytes = new_live;
+        s.pages = need_pages;
+        self.allocated_pages += extra;
+        self.needed_bytes += bytes;
+        Ok(())
+    }
+
+    /// Free every page of a completed stream.
+    pub fn release(&mut self, id: u32) -> Result<()> {
+        let Some(i) = self.index_of(id) else {
+            bail!("stream {id} not resident in the arena");
+        };
+        let (_, s) = self.streams.remove(i);
+        self.allocated_pages -= s.pages;
+        self.needed_bytes -= s.live_bytes;
+        Ok(())
+    }
+
+    fn index_of(&self, id: u32) -> Option<usize> {
+        self.streams
+            .binary_search_by_key(&id, |&(sid, _)| sid)
+            .ok()
+    }
+
+    /// Live KV bytes across all streams (the trace's *needed*).
+    pub fn needed_bytes(&self) -> u64 {
+        self.needed_bytes
+    }
+
+    /// Bytes held in allocated pages.
+    pub fn allocated_bytes(&self) -> u64 {
+        self.allocated_pages * self.page_bytes
+    }
+
+    /// Page-internal fragmentation (the trace's *obsolete*).
+    pub fn obsolete_bytes(&self) -> u64 {
+        self.allocated_bytes() - self.needed_bytes
+    }
+
+    pub fn active_streams(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_grows_by_whole_pages() {
+        let mut a = PagedKvArena::new(100, 1000);
+        a.admit(0).unwrap();
+        a.grow(0, 30).unwrap();
+        assert_eq!(a.needed_bytes(), 30);
+        assert_eq!(a.allocated_bytes(), 100);
+        assert_eq!(a.obsolete_bytes(), 70);
+        // Still inside page 1.
+        a.grow(0, 70).unwrap();
+        assert_eq!(a.allocated_bytes(), 100);
+        assert_eq!(a.obsolete_bytes(), 0);
+        // Crosses into page 2.
+        a.grow(0, 1).unwrap();
+        assert_eq!(a.allocated_bytes(), 200);
+        assert_eq!(a.obsolete_bytes(), 99);
+    }
+
+    #[test]
+    fn release_frees_everything() {
+        let mut a = PagedKvArena::new(100, 1000);
+        a.admit(3).unwrap();
+        a.admit(7).unwrap();
+        a.grow(3, 150).unwrap();
+        a.grow(7, 250).unwrap();
+        assert_eq!(a.active_streams(), 2);
+        assert_eq!(a.allocated_bytes(), 500);
+        a.release(3).unwrap();
+        assert_eq!(a.active_streams(), 1);
+        assert_eq!(a.allocated_bytes(), 300);
+        assert_eq!(a.needed_bytes(), 250);
+        a.release(7).unwrap();
+        assert_eq!(a.allocated_bytes(), 0);
+        assert_eq!(a.needed_bytes(), 0);
+    }
+
+    #[test]
+    fn capacity_enforced_and_failure_is_atomic() {
+        let mut a = PagedKvArena::new(100, 250); // 2 whole pages
+        a.admit(0).unwrap();
+        a.grow(0, 200).unwrap();
+        let before = a.clone();
+        assert!(a.grow(0, 1).is_err());
+        assert_eq!(a.needed_bytes(), before.needed_bytes());
+        assert_eq!(a.allocated_bytes(), before.allocated_bytes());
+    }
+
+    #[test]
+    fn duplicate_admit_and_unknown_stream_rejected() {
+        let mut a = PagedKvArena::new(100, 1000);
+        a.admit(1).unwrap();
+        assert!(a.admit(1).is_err());
+        assert!(a.grow(2, 10).is_err());
+        assert!(a.release(2).is_err());
+    }
+}

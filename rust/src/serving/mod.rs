@@ -1,0 +1,47 @@
+//! Multi-tenant serving scenarios: deterministic request workloads over
+//! a paged KV arena.
+//!
+//! The paper's Stage-I traces ramp one sequence at a time; a serving
+//! system instead holds **many interleaved KV caches** with staggered
+//! arrivals, steady-state plateaus at the concurrency cap, and churn as
+//! completed requests free their memory. That is exactly the regime
+//! where banked power gating behaves differently from single-sequence
+//! ramps, and this module produces the occupancy timelines that let
+//! Stage II answer the banking question for it.
+//!
+//! ## How paged-arena occupancy maps onto needed/obsolete
+//!
+//! The single-sequence trace splits resident bytes into *needed* (data
+//! future ops still read) and *obsolete* (resident but dead — evictable
+//! for free). The serving scenario reproduces that split from the
+//! allocator's point of view:
+//!
+//! * **needed** = Σ over active streams of their live KV bytes. Every
+//!   byte of a live context is read again on the stream's next decode
+//!   step, so it pins SRAM banks on exactly like needed tensor data.
+//! * **obsolete** = allocated-page bytes − needed bytes, i.e. the
+//!   page-internal fragmentation of the paged allocator (tail pages are
+//!   only partially filled until the context grows into them). Those
+//!   bytes occupy banked capacity but carry no data anyone will read, so
+//!   — like obsolete tensors — dropping them is free and they do not
+//!   keep banks powered under the paper's `NeededOnly` gating basis.
+//! * Completion frees a stream's pages wholesale: both components drop
+//!   at once, producing the churn edges that give serving traces their
+//!   characteristic sawtooth around the concurrency plateau.
+//!
+//! The stream of `(t, needed, obsolete)` changes feeds the exact same
+//! [`crate::trace::OccupancyTrace::record`] /
+//! [`crate::trace::TraceSink`] machinery as the cycle-level simulator,
+//! so every Stage-II consumer (sweeps, policies, figure renderers) works
+//! on serving traces unchanged.
+//!
+//! Entry points: [`ServingParams`] (pure data, embedded in
+//! [`crate::workload::Workload::Serving`] and hashed/validated by
+//! [`crate::api::ExperimentSpec`]), [`generate_requests`], and the
+//! scheduler in [`crate::sim::serving`].
+
+pub mod arena;
+pub mod workload;
+
+pub use arena::PagedKvArena;
+pub use workload::{generate_requests, Request, ServingParams};

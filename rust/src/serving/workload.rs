@@ -1,0 +1,169 @@
+//! Deterministic request-arrival workload generation for the serving
+//! simulator.
+//!
+//! A [`ServingParams`] is pure data — all-integer so it stays `Copy`/`Eq`
+//! and hashes stably into [`crate::api::ExperimentSpec::content_hash`].
+//! [`generate_requests`] expands it into a concrete arrival schedule with
+//! the crate's seeded PRNG: same params, same requests, bit-for-bit.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+/// Parameters of one multi-tenant serving scenario.
+///
+/// Inter-arrival gaps are uniform in `[0, 2 * mean_arrival_gap]` cycles
+/// (mean `mean_arrival_gap`); prompt and generation lengths are uniform
+/// in their inclusive ranges. `page_tokens` sets the KV page granularity
+/// of the paged arena (see [`super::arena::PagedKvArena`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServingParams {
+    /// Total requests in the workload.
+    pub requests: u32,
+    /// Continuous-batching concurrency cap (max simultaneous streams).
+    pub concurrency: u32,
+    /// Arrival/length RNG seed.
+    pub seed: u64,
+    /// Mean inter-arrival gap in cycles.
+    pub mean_arrival_gap: u64,
+    /// Prompt length range (tokens, inclusive).
+    pub prompt_min: u32,
+    pub prompt_max: u32,
+    /// Generation length range (tokens, inclusive).
+    pub gen_min: u32,
+    pub gen_max: u32,
+    /// KV page granularity in tokens.
+    pub page_tokens: u32,
+}
+
+impl ServingParams {
+    /// Defaults for the paper-shaped serving scenario: prompts 64–512,
+    /// generations 16–128, 16-token pages, 1M-cycle mean arrival gap.
+    pub fn new(requests: u32, concurrency: u32, seed: u64) -> Self {
+        Self {
+            requests,
+            concurrency,
+            seed,
+            mean_arrival_gap: 1_000_000,
+            prompt_min: 64,
+            prompt_max: 512,
+            gen_min: 16,
+            gen_max: 128,
+            page_tokens: 16,
+        }
+    }
+
+    /// Longest possible per-stream context (prompt + generated tokens).
+    pub fn max_stream_tokens(&self) -> u32 {
+        self.prompt_max + self.gen_max
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.requests >= 1, "serving needs requests >= 1");
+        ensure!(self.concurrency >= 1, "serving needs concurrency >= 1");
+        ensure!(
+            self.prompt_min <= self.prompt_max,
+            "serving prompt range inverted: {}..{}",
+            self.prompt_min,
+            self.prompt_max
+        );
+        ensure!(
+            self.gen_min >= 1,
+            "serving needs gen_min >= 1 (got {})",
+            self.gen_min
+        );
+        ensure!(
+            self.gen_min <= self.gen_max,
+            "serving gen range inverted: {}..{}",
+            self.gen_min,
+            self.gen_max
+        );
+        ensure!(self.page_tokens >= 1, "serving needs page_tokens >= 1");
+        Ok(())
+    }
+}
+
+/// One generated request of the serving workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u32,
+    /// Arrival time in cycles (non-decreasing across the schedule).
+    pub arrival: u64,
+    /// Prompt tokens whose KV materializes at admission.
+    pub prompt: u32,
+    /// Tokens to generate before the request completes.
+    pub gen: u32,
+}
+
+/// Expand params into the concrete, deterministic arrival schedule.
+pub fn generate_requests(p: &ServingParams) -> Vec<Request> {
+    let mut rng = Rng::new(p.seed);
+    let mut t = 0u64;
+    (0..p.requests)
+        .map(|id| {
+            t += rng.below(2 * p.mean_arrival_gap + 1);
+            Request {
+                id,
+                arrival: t,
+                prompt: rng.range(p.prompt_min as u64, p.prompt_max as u64) as u32,
+                gen: rng.range(p.gen_min as u64, p.gen_max as u64) as u32,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = ServingParams::new(32, 4, 7);
+        assert_eq!(generate_requests(&p), generate_requests(&p));
+        let mut p2 = p;
+        p2.seed = 8;
+        assert_ne!(generate_requests(&p), generate_requests(&p2));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_lengths_in_range() {
+        let p = ServingParams::new(200, 8, 3);
+        let reqs = generate_requests(&p);
+        assert_eq!(reqs.len(), 200);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for r in &reqs {
+            assert!((p.prompt_min..=p.prompt_max).contains(&r.prompt));
+            assert!((p.gen_min..=p.gen_max).contains(&r.gen));
+        }
+    }
+
+    #[test]
+    fn zero_gap_means_simultaneous_arrivals() {
+        let mut p = ServingParams::new(8, 2, 1);
+        p.mean_arrival_gap = 0;
+        for r in generate_requests(&p) {
+            assert_eq!(r.arrival, 0);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(ServingParams::new(1, 1, 0).validate().is_ok());
+        let mut p = ServingParams::new(0, 1, 0);
+        assert!(p.validate().is_err());
+        p = ServingParams::new(1, 0, 0);
+        assert!(p.validate().is_err());
+        p = ServingParams::new(1, 1, 0);
+        p.gen_min = 0;
+        assert!(p.validate().is_err());
+        p = ServingParams::new(1, 1, 0);
+        p.prompt_min = 10;
+        p.prompt_max = 5;
+        assert!(p.validate().is_err());
+        p = ServingParams::new(1, 1, 0);
+        p.page_tokens = 0;
+        assert!(p.validate().is_err());
+    }
+}

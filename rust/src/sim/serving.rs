@@ -1,0 +1,450 @@
+//! Serving-level simulator: round-robin continuous batching of many
+//! decode streams over a paged KV arena.
+//!
+//! Where `sim::engine` resolves one sequence at op granularity, this
+//! scheduler resolves a whole request population at *decode-step*
+//! granularity — the right resolution for serving-shaped occupancy,
+//! where the interesting dynamics (staggered arrivals, concurrency
+//! plateaus, completion churn, paged fragmentation) span billions of
+//! cycles. Per-step costs come from a closed-form model of the same
+//! accelerator config the cycle-level engine uses:
+//!
+//! * one **round** advances every active stream by one token; the
+//!   model's weights stream from DRAM once per round (the batching win),
+//! * each stream then pays its projection MACs plus the larger of its
+//!   attention MACs and its KV streaming time (context-proportional),
+//! * **admission** (continuous batching) happens between rounds: arrived
+//!   requests join while the concurrency cap has room, paying a prefill
+//!   lump and materializing their prompt KV in the arena.
+//!
+//! Every arena state change is forwarded through the existing
+//! [`TraceSink`] machinery with the same piecewise-constant semantics as
+//! the cycle-level engine, so serving traces drop into Stage II (and
+//! every sink consumer) unchanged. All arithmetic is integer and the
+//! workload is seeded, so runs are bit-deterministic.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::config::AccelConfig;
+use crate::serving::{generate_requests, PagedKvArena, ServingParams};
+use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::{AccessStats, OccupancyTrace};
+use crate::util::ceil_div;
+use crate::util::fnv::Fnv64;
+use crate::workload::ModelPreset;
+
+/// Serving-simulation knobs, mirroring [`super::SimOptions`].
+pub struct ServingSimOptions<'s> {
+    /// Optional streaming consumer of arena occupancy changes
+    /// (memory 0 = the KV arena).
+    pub sink: Option<&'s mut dyn TraceSink>,
+    /// When false, the result's `trace` stays empty (sink-only run with
+    /// O(1) trace memory).
+    pub materialize: bool,
+}
+
+impl Default for ServingSimOptions<'_> {
+    fn default() -> Self {
+        Self {
+            sink: None,
+            materialize: true,
+        }
+    }
+}
+
+/// Output of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServingResult {
+    /// Workload label, e.g. `gpt2-xl-serve-r256-c64-s7`.
+    pub workload: String,
+    pub accel: String,
+    /// Merged KV-arena occupancy trace (empty when the run streamed to a
+    /// sink with `materialize = false`).
+    pub trace: OccupancyTrace,
+    /// KV-traffic access statistics (Eq. 3 inputs for Stage II).
+    pub stats: AccessStats,
+    /// Makespan in cycles (arrival of first request to last completion).
+    pub total_cycles: u64,
+    /// Requests that ran to completion (equals the workload size).
+    pub completed: u32,
+    /// Highest number of simultaneously active streams observed.
+    pub peak_concurrent: u32,
+    pub page_bytes: u64,
+    pub arena_capacity: u64,
+    pub freq_ghz: f64,
+}
+
+impl ServingResult {
+    pub fn seconds(&self) -> f64 {
+        self.total_cycles as f64 / (self.freq_ghz * 1e9)
+    }
+
+    pub fn peak_needed(&self) -> u64 {
+        self.trace.peak_needed()
+    }
+
+    pub fn peak_occupied(&self) -> u64 {
+        self.trace.peak_occupied()
+    }
+
+    /// Stable FNV-1a fingerprint of the materialized trace (samples +
+    /// end time) — the CLI's determinism check. Meaningless on
+    /// sink-only runs, whose trace is empty.
+    pub fn trace_hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.str(&self.trace.memory);
+        h.u64(self.trace.capacity);
+        for s in self.trace.samples() {
+            h.u64(s.t);
+            h.u64(s.needed);
+            h.u64(s.obsolete);
+        }
+        h.u64(self.trace.end_time().unwrap_or(0));
+        h.finish()
+    }
+}
+
+/// Closed-form per-step cost model derived from model + accelerator.
+struct CostModel {
+    macs_per_cycle: u64,
+    /// Shared-SRAM aggregate bandwidth, bytes/cycle.
+    sram_bw: u64,
+    /// SRAM interface word for access-count accounting.
+    word: u32,
+    /// Weight bytes streamed from DRAM per round (0 if resident).
+    weight_bytes: u64,
+    /// Cycles of that weight stream.
+    weight_cycles: u64,
+    /// KV bytes appended per generated token (all layers, K + V).
+    kv_token_bytes: u64,
+    /// Per-token projection + FFN MACs (whole model).
+    proj_macs: u64,
+    /// Attention MACs per context token per generated token.
+    attn_macs_per_ctx: u64,
+}
+
+impl CostModel {
+    fn new(m: &ModelPreset, cfg: &AccelConfig) -> Self {
+        let macs_per_cycle =
+            (cfg.sa.rows as u64 * cfg.sa.cols as u64 * cfg.sa.count as u64).max(1);
+        let sram = cfg.shared_sram();
+        let sram_bw = sram.bandwidth().max(1);
+        let dram_bw = cfg.dram.bandwidth().max(1);
+        let weight_bytes = if cfg.sched.weight_resident {
+            0
+        } else {
+            m.param_count()
+        };
+        Self {
+            macs_per_cycle,
+            sram_bw,
+            word: sram.bytes_per_cycle,
+            weight_bytes,
+            weight_cycles: ceil_div(weight_bytes, dram_bw),
+            kv_token_bytes: m.kv_cache_bytes(1),
+            proj_macs: m.total_macs(1),
+            attn_macs_per_ctx: 2 * m.layers as u64 * m.heads as u64 * m.d_head as u64,
+        }
+    }
+
+    /// Cycles one stream adds to a round when decoding at context `ctx`.
+    fn decode_step_cycles(&self, ctx: u32) -> u64 {
+        let attn = ceil_div(self.attn_macs_per_ctx * ctx as u64, self.macs_per_cycle);
+        let kv_stream = ceil_div(self.kv_token_bytes * ctx as u64, self.sram_bw);
+        let proj = ceil_div(self.proj_macs, self.macs_per_cycle);
+        (proj + attn.max(kv_stream)).max(1)
+    }
+
+    /// Admission lump: compute-bound prefill, floored by one weight pass.
+    fn prefill_cycles(&self, m: &ModelPreset, prompt: u32) -> u64 {
+        let compute = ceil_div(m.total_macs(prompt as u64), self.macs_per_cycle);
+        compute.max(self.weight_cycles)
+    }
+}
+
+/// One active decode stream.
+#[derive(Debug, Clone, Copy)]
+struct Stream {
+    id: u32,
+    /// Tokens currently in the stream's KV cache.
+    ctx: u32,
+    /// Tokens still to generate.
+    remaining: u32,
+}
+
+/// Forward the arena's occupancy to the trace/sink iff it changed since
+/// the last emission (same piecewise-constant semantics as the engine).
+fn emit_change(
+    t: u64,
+    arena: &PagedKvArena,
+    materialize: bool,
+    trace: &mut OccupancyTrace,
+    sink: &mut Option<&mut dyn TraceSink>,
+    last: &mut (u64, u64),
+) {
+    let cur = (arena.needed_bytes(), arena.obsolete_bytes());
+    if *last == cur {
+        return;
+    }
+    *last = cur;
+    if materialize {
+        trace.record(t, cur.0, cur.1);
+    }
+    if let Some(s) = sink.as_deref_mut() {
+        s.on_sample(0, t, cur.0, cur.1);
+    }
+}
+
+/// Run a serving scenario with default options (materialized trace).
+pub fn simulate_serving(
+    model: &ModelPreset,
+    params: ServingParams,
+    cfg: &AccelConfig,
+) -> Result<ServingResult> {
+    simulate_serving_with(model, params, cfg, ServingSimOptions::default())
+}
+
+/// Run a serving scenario with explicit sink/materialization options.
+pub fn simulate_serving_with(
+    model: &ModelPreset,
+    params: ServingParams,
+    cfg: &AccelConfig,
+    mut opts: ServingSimOptions<'_>,
+) -> Result<ServingResult> {
+    params.validate()?;
+    cfg.validate()?;
+    let cost = CostModel::new(model, cfg);
+    let reqs = generate_requests(&params);
+
+    // Arena sized so the concurrency cap — not page exhaustion — is the
+    // admission limit: every stream can grow to its maximum context.
+    let page_bytes = params.page_tokens as u64 * cost.kv_token_bytes;
+    let pages_per_stream =
+        ceil_div(params.max_stream_tokens() as u64, params.page_tokens as u64);
+    let capacity = params.concurrency as u64 * pages_per_stream * page_bytes;
+
+    let mut arena = PagedKvArena::new(page_bytes, capacity);
+    let mut trace = OccupancyTrace::new("kv-arena", capacity);
+    let mut stats = AccessStats::default();
+    if let Some(sink) = opts.sink.as_deref_mut() {
+        sink.begin(&[MemoryDesc {
+            name: "kv-arena".to_string(),
+            capacity,
+        }]);
+    }
+
+    let mut last_emitted = (0u64, 0u64);
+    let materialize = opts.materialize;
+    let mut active: VecDeque<Stream> = VecDeque::new();
+    let mut next = 0usize;
+    let mut now = 0u64;
+    let mut completed = 0u32;
+    let mut peak_concurrent = 0u32;
+
+    loop {
+        // Continuous-batching admission: arrived requests join while the
+        // concurrency cap has room.
+        while next < reqs.len()
+            && active.len() < params.concurrency as usize
+            && reqs[next].arrival <= now
+        {
+            let r = reqs[next];
+            next += 1;
+            now += cost.prefill_cycles(model, r.prompt);
+            arena
+                .admit(r.id)
+                .and_then(|()| arena.grow(r.id, r.prompt as u64 * cost.kv_token_bytes))
+                .with_context(|| format!("admitting request {}", r.id))?;
+            stats.dram_read(cost.weight_bytes);
+            stats.sram_write(r.prompt as u64 * cost.kv_token_bytes, cost.word, "kv");
+            active.push_back(Stream {
+                id: r.id,
+                ctx: r.prompt,
+                remaining: r.gen,
+            });
+            peak_concurrent = peak_concurrent.max(active.len() as u32);
+            emit_change(
+                now,
+                &arena,
+                materialize,
+                &mut trace,
+                &mut opts.sink,
+                &mut last_emitted,
+            );
+        }
+
+        if active.is_empty() {
+            // Idle: jump to the next arrival, or finish.
+            let Some(r) = reqs.get(next) else { break };
+            now = now.max(r.arrival);
+            continue;
+        }
+
+        // One round: weights stream once for the whole batch...
+        if cost.weight_cycles > 0 {
+            now += cost.weight_cycles;
+            stats.dram_read(cost.weight_bytes);
+        }
+        // ...then each active stream decodes one token, round-robin.
+        for _ in 0..active.len() {
+            let mut s = active.pop_front().expect("active non-empty");
+            s.ctx += 1;
+            s.remaining -= 1;
+            now += cost.decode_step_cycles(s.ctx);
+            arena
+                .grow(s.id, cost.kv_token_bytes)
+                .with_context(|| format!("decode step of request {}", s.id))?;
+            stats.sram_read(s.ctx as u64 * cost.kv_token_bytes, cost.word, "kv");
+            stats.sram_write(cost.kv_token_bytes, cost.word, "kv");
+            if s.remaining == 0 {
+                arena
+                    .release(s.id)
+                    .with_context(|| format!("completing request {}", s.id))?;
+                completed += 1;
+            } else {
+                active.push_back(s);
+            }
+            emit_change(
+                now,
+                &arena,
+                materialize,
+                &mut trace,
+                &mut opts.sink,
+                &mut last_emitted,
+            );
+        }
+    }
+
+    trace.finalize(now);
+    if let Some(sink) = opts.sink.as_deref_mut() {
+        sink.finish(now);
+    }
+    if opts.materialize {
+        trace.validate().context("serving trace invariant")?;
+    }
+
+    Ok(ServingResult {
+        workload: format!(
+            "{}-serve-r{}-c{}-s{}",
+            model.name, params.requests, params.concurrency, params.seed
+        ),
+        accel: cfg.name.clone(),
+        trace,
+        stats,
+        total_cycles: now,
+        completed,
+        peak_concurrent,
+        page_bytes,
+        arena_capacity: capacity,
+        freq_ghz: cfg.sa.freq_ghz,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::tiny;
+    use crate::trace::{MaterializeSink, OnlineStatsSink, TeeSink};
+    use crate::workload::TINY_GQA;
+
+    fn params(requests: u32, concurrency: u32, seed: u64) -> ServingParams {
+        let mut p = ServingParams::new(requests, concurrency, seed);
+        // Small lengths keep the unit tests fast.
+        p.prompt_min = 4;
+        p.prompt_max = 32;
+        p.gen_min = 2;
+        p.gen_max = 16;
+        p.page_tokens = 8;
+        p.mean_arrival_gap = 50_000;
+        p
+    }
+
+    #[test]
+    fn all_requests_complete_and_arena_drains() {
+        let r = simulate_serving(&TINY_GQA, params(40, 4, 9), &tiny()).unwrap();
+        assert_eq!(r.completed, 40);
+        assert!(r.peak_concurrent >= 1 && r.peak_concurrent <= 4);
+        assert!(r.total_cycles > 0);
+        // The arena drains at the end: final state is empty.
+        let last = r.trace.samples().last().unwrap();
+        assert_eq!(last.needed, 0);
+        assert_eq!(last.obsolete, 0);
+        r.trace.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = simulate_serving(&TINY_GQA, params(30, 4, 7), &tiny()).unwrap();
+        let b = simulate_serving(&TINY_GQA, params(30, 4, 7), &tiny()).unwrap();
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.trace.samples(), b.trace.samples());
+        assert_eq!(a.trace_hash(), b.trace_hash());
+        assert_eq!(a.stats, b.stats);
+        let c = simulate_serving(&TINY_GQA, params(30, 4, 8), &tiny()).unwrap();
+        assert_ne!(a.trace_hash(), c.trace_hash());
+    }
+
+    #[test]
+    fn concurrency_raises_peak_occupancy() {
+        let p1 = simulate_serving(&TINY_GQA, params(40, 1, 5), &tiny()).unwrap();
+        let p8 = simulate_serving(&TINY_GQA, params(40, 8, 5), &tiny()).unwrap();
+        assert!(p8.peak_concurrent > p1.peak_concurrent);
+        assert!(
+            p8.peak_needed() > p1.peak_needed(),
+            "8-way serving peak {} must exceed 1-way {}",
+            p8.peak_needed(),
+            p1.peak_needed()
+        );
+    }
+
+    #[test]
+    fn fragmentation_shows_up_as_obsolete() {
+        let r = simulate_serving(&TINY_GQA, params(20, 4, 3), &tiny()).unwrap();
+        // Paged allocation with 8-token pages and arbitrary prompt/gen
+        // lengths must leave partially-filled tail pages at some point.
+        assert!(
+            r.trace.samples().iter().any(|s| s.obsolete > 0),
+            "paged arena never fragmented"
+        );
+        // And fragmentation is bounded by one page per active stream.
+        for s in r.trace.samples() {
+            assert!(s.obsolete < r.page_bytes * (r.peak_concurrent as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn sink_stream_matches_materialized_trace() {
+        let p = params(25, 4, 11);
+        let reference = simulate_serving(&TINY_GQA, p, &tiny()).unwrap();
+
+        let mut mat = MaterializeSink::new();
+        let mut online = OnlineStatsSink::new();
+        let streamed = {
+            let mut tee = TeeSink::new(vec![&mut mat, &mut online]);
+            simulate_serving_with(
+                &TINY_GQA,
+                p,
+                &tiny(),
+                ServingSimOptions {
+                    sink: Some(&mut tee),
+                    materialize: false,
+                },
+            )
+            .unwrap()
+        };
+        assert_eq!(streamed.total_cycles, reference.total_cycles);
+        assert_eq!(streamed.stats, reference.stats);
+        // The internal trace stayed empty...
+        assert_eq!(streamed.trace.samples().len(), 1);
+        // ...while the sink materialization reproduces it exactly.
+        assert_eq!(mat.traces().len(), 1);
+        assert_eq!(mat.traces()[0].samples(), reference.trace.samples());
+        assert_eq!(mat.traces()[0].end_time(), reference.trace.end_time());
+        let m = online.shared().unwrap();
+        assert_eq!(m.peak_needed(), reference.peak_needed());
+        assert_eq!(m.peak_occupied(), reference.peak_occupied());
+        assert!((m.avg_needed() - reference.trace.avg_needed()).abs() < 1e-9);
+    }
+}

@@ -7,11 +7,12 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::util::json::{parse, Json};
 
 use super::occupancy::OccupancyTrace;
+use super::sink::MemoryDesc;
 
 pub fn trace_to_json(tr: &OccupancyTrace) -> Json {
     Json::obj(vec![
@@ -80,6 +81,84 @@ pub fn load_trace(path: &Path) -> Result<OccupancyTrace> {
     trace_from_json(&parse(&text)?)
 }
 
+/// Header emitted by [`super::sink::CsvStreamSink`].
+pub const STREAM_CSV_HEADER: &str = "memory,t_cycles,needed_bytes,obsolete_bytes";
+
+/// Parse a [`super::sink::CsvStreamSink`] export back into one finalized
+/// trace per memory.
+///
+/// The stream is raw — several rows may share one `(memory, t)`, in
+/// which case only the last is observable — so reconstruction goes
+/// through [`OccupancyTrace::record`], whose overwrite/coalesce
+/// semantics are exactly the stream's. Capacities and the end time are
+/// not part of the CSV; the caller supplies them (the same
+/// [`MemoryDesc`] list the sink was `begin`-ed with, and the run's end).
+/// Output order matches `memories`; a row naming an unknown memory is an
+/// error.
+pub fn stream_csv_to_traces(
+    csv: &str,
+    memories: &[MemoryDesc],
+    end: u64,
+) -> Result<Vec<OccupancyTrace>> {
+    let mut lines = csv.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty stream CSV"))?;
+    ensure!(
+        header == STREAM_CSV_HEADER,
+        "unexpected stream CSV header `{header}`"
+    );
+    let mut traces: Vec<OccupancyTrace> = memories
+        .iter()
+        .map(|m| OccupancyTrace::new(&m.name, m.capacity))
+        .collect();
+    // Last row time per memory, tracked independently of the trace's
+    // sample list: `record` coalesces no-op rows away, so the samples
+    // alone cannot detect a backwards-time row that follows one.
+    let mut last_row_t = vec![0u64; memories.len()];
+    for (n, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let mut f = line.split(',');
+        let (Some(name), Some(t), Some(needed), Some(obsolete), None) =
+            (f.next(), f.next(), f.next(), f.next(), f.next())
+        else {
+            return Err(anyhow!("stream CSV row {}: want 4 fields", n + 2));
+        };
+        let i = memories
+            .iter()
+            .position(|m| m.name == name)
+            .ok_or_else(|| anyhow!("stream CSV row {}: unknown memory `{name}`", n + 2))?;
+        let parse_u64 = |s: &str, what: &str| -> Result<u64> {
+            s.parse()
+                .with_context(|| format!("stream CSV row {}: bad {what} `{s}`", n + 2))
+        };
+        let t = parse_u64(t, "t_cycles")?;
+        ensure!(
+            last_row_t[i] <= t,
+            "stream CSV row {}: time went backwards for `{name}`",
+            n + 2
+        );
+        last_row_t[i] = t;
+        traces[i].record(
+            t,
+            parse_u64(needed, "needed_bytes")?,
+            parse_u64(obsolete, "obsolete_bytes")?,
+        );
+    }
+    for tr in &mut traces {
+        let last_t = tr.samples().last().expect("trace never empty").t;
+        ensure!(
+            last_t <= end,
+            "stream CSV: end {} precedes last sample of `{}`",
+            end,
+            tr.memory
+        );
+        tr.finalize(end);
+        tr.validate()?;
+    }
+    Ok(traces)
+}
+
 /// CSV rows `t_cycles,needed,obsolete,free` (Fig. 5's stacked regions).
 pub fn trace_to_csv(tr: &OccupancyTrace) -> String {
     let mut out = String::from("t_cycles,needed_bytes,obsolete_bytes,free_bytes\n");
@@ -134,6 +213,62 @@ mod tests {
         assert_eq!(lines[0], "t_cycles,needed_bytes,obsolete_bytes,free_bytes");
         assert_eq!(lines.len(), 5); // header + t=0 + 3 samples
         assert!(lines[2].starts_with("10,100,0,"));
+    }
+
+    #[test]
+    fn stream_csv_roundtrip_matches_samples() {
+        use crate::trace::sink::{CsvStreamSink, TraceSink};
+        let mems = vec![
+            MemoryDesc { name: "sram".into(), capacity: 1 << 20 },
+            MemoryDesc { name: "dm1".into(), capacity: 1 << 20 },
+        ];
+        let mut sink = CsvStreamSink::new(Vec::new());
+        sink.begin(&mems);
+        sink.on_sample(0, 5, 100, 0);
+        sink.on_sample(1, 5, 7, 1);
+        sink.on_sample(0, 5, 200, 0); // same-instant supersession
+        sink.on_sample(0, 9, 0, 200);
+        sink.finish(12);
+        let csv = String::from_utf8(sink.into_inner().unwrap()).unwrap();
+
+        let traces = stream_csv_to_traces(&csv, &mems, 12).unwrap();
+        assert_eq!(traces.len(), 2);
+        let mut want = OccupancyTrace::new("sram", 1 << 20);
+        want.record(5, 200, 0); // last state at t=5 wins
+        want.record(9, 0, 200);
+        want.finalize(12);
+        assert_eq!(traces[0].samples(), want.samples());
+        assert_eq!(traces[0].end_time(), Some(12));
+        assert_eq!(traces[1].samples().last().unwrap().needed, 7);
+    }
+
+    #[test]
+    fn stream_csv_rejects_malformed_input() {
+        let mems = vec![MemoryDesc { name: "sram".into(), capacity: 100 }];
+        // Bad header.
+        assert!(stream_csv_to_traces("nope\n", &mems, 10).is_err());
+        // Unknown memory.
+        let csv = format!("{STREAM_CSV_HEADER}\nother,1,2,3\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // Wrong arity.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,1,2\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // Non-numeric field.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,1,x,3\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // End before last sample.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,20,1,0\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // Backwards time, even behind a no-op row that coalesces away.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,9,0,0\nsram,5,1,0\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // Over capacity.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,1,90,20\n");
+        assert!(stream_csv_to_traces(&csv, &mems, 10).is_err());
+        // Empty body is fine: one all-zero sample per memory.
+        let csv = format!("{STREAM_CSV_HEADER}\n");
+        let traces = stream_csv_to_traces(&csv, &mems, 10).unwrap();
+        assert_eq!(traces[0].samples().len(), 1);
     }
 
     #[test]

@@ -1,0 +1,76 @@
+//! FNV-1a, 64-bit: tiny, dependency-free, stable across platforms.
+//!
+//! Shared by every content hash in the crate (`ExperimentSpec`
+//! memoization keys, serving-trace determinism fingerprints) so the two
+//! can never drift onto different hash functions.
+
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed string hashing (unambiguous concatenation).
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let mut a = Fnv64::new();
+        a.str("trapti");
+        a.u64(42);
+        let mut b = Fnv64::new();
+        b.str("trapti");
+        b.u64(42);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.str("trapti");
+        c.u64(43);
+        assert_ne!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn length_prefix_disambiguates() {
+        let mut a = Fnv64::new();
+        a.str("ab");
+        a.str("c");
+        let mut b = Fnv64::new();
+        b.str("a");
+        b.str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -2,10 +2,13 @@
 //! serde/clap/rand/proptest, so the crate carries minimal equivalents).
 
 pub mod bench;
+pub mod fnv;
 pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod table;
+
+pub use fnv::Fnv64;
 
 /// Integer ceiling division.
 #[inline]

@@ -1,7 +1,9 @@
 //! Whole-model workload builders: prefill (the paper's Fig. 5-9 runs)
 //! and decode (the Fig. 1 MHA-vs-GQA motivation).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use crate::serving::ServingParams;
 
 use super::attention::{
     build_decode_attention, build_prefill_attention, DecodeLayerWeights,
@@ -19,12 +21,20 @@ pub enum Workload {
     /// Auto-regressive generation of `gen` tokens after a `prompt`-token
     /// prefix whose KV is already cached (DRAM-resident at start).
     Decode { prompt: u32, gen: u32 },
+    /// Multi-tenant serving: many concurrent decode streams over a paged
+    /// KV arena (see [`crate::serving`]). Has no single dataflow graph —
+    /// it runs through `sim::serving` / `ExperimentSpec::run_serving`.
+    Serving(ServingParams),
 }
 
 pub fn build_workload(m: &ModelPreset, w: Workload) -> Result<WorkloadGraph> {
     match w {
         Workload::Prefill { seq } => build_prefill(m, seq),
         Workload::Decode { prompt, gen } => build_decode(m, prompt, gen),
+        Workload::Serving(_) => bail!(
+            "serving workloads have no single dataflow graph; run them \
+             via ExperimentSpec::run_serving (sim::serving)"
+        ),
     }
 }
 

@@ -1,0 +1,186 @@
+//! Property suite for the Stage-II banking layer, driven by the in-tree
+//! `util::proptest` harness over randomized occupancy traces.
+//!
+//! Four families of invariants:
+//! 1. Eq. 1 (`banks_required`) is monotone in occupancy and clamped to
+//!    `[0, B]`.
+//! 2. `bank_activity` timelines exactly tile `[0, end)` — no gaps, no
+//!    overlaps — with coalesced neighbors that actually differ.
+//! 3. `idle_intervals(b)` are disjoint, maximal, and consistent with the
+//!    activity timeline they came from.
+//! 4. `sweep` B=1 reference points report ΔE ≈ 0 and ΔA ≈ 0 on any
+//!    trace (including degenerate zero-length / zero-stats ones).
+
+use trapti::banking::{
+    bank_activity, banks_required, idle_intervals, sweep, ActivitySegment,
+    GatingPolicy, OccupancyBasis, SweepSpec,
+};
+use trapti::cacti::CactiModel;
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::util::MIB;
+
+/// A random finalized trace with occupancy below `cap`.
+fn random_trace(rng: &mut Rng, cap: u64) -> OccupancyTrace {
+    let mut tr = OccupancyTrace::new("m", cap);
+    let mut t = 0u64;
+    for _ in 0..rng.range(1, 60) {
+        t += rng.range(1, 2_000);
+        let needed = rng.below(cap + 1);
+        let obsolete = rng.below(cap - needed + 1);
+        tr.record(t, needed, obsolete);
+    }
+    tr.finalize(t + rng.range(1, 500));
+    tr
+}
+
+/// Random power-of-two bank count in [1, 32].
+fn random_banks(rng: &mut Rng) -> u32 {
+    1u32 << rng.below(6)
+}
+
+/// Random alpha in (0, 1].
+fn random_alpha(rng: &mut Rng) -> f64 {
+    0.05 + rng.f64() * 0.95
+}
+
+#[test]
+fn prop_banks_required_monotone_and_clamped() {
+    check("banks-required-monotone-clamped", 300, |rng| {
+        let cap = rng.range(1, 1 << 30);
+        let banks = random_banks(rng);
+        let alpha = random_alpha(rng);
+        let mut a = rng.below(2 * cap + 1);
+        let mut b = rng.below(2 * cap + 1);
+        if a > b {
+            std::mem::swap(&mut a, &mut b);
+        }
+        let ra = banks_required(a, cap, banks, alpha);
+        let rb = banks_required(b, cap, banks, alpha);
+        // Monotone in occupancy.
+        assert!(ra <= rb, "occ {a} -> {ra} banks but occ {b} -> {rb}");
+        // Clamped to [0, B], zero exactly at zero occupancy.
+        assert!(ra <= banks && rb <= banks);
+        assert_eq!(banks_required(0, cap, banks, alpha), 0);
+        if a > 0 {
+            assert!(ra >= 1, "nonzero occupancy must keep >= 1 bank on");
+        }
+    });
+}
+
+#[test]
+fn prop_activity_segments_tile_run_exactly() {
+    check("activity-tiles-run", 200, |rng| {
+        let cap = rng.range(1, 64) * MIB;
+        let tr = random_trace(rng, cap);
+        let banks = random_banks(rng);
+        let alpha = random_alpha(rng);
+        let basis = if rng.bool() {
+            OccupancyBasis::NeededOnly
+        } else {
+            OccupancyBasis::NeededPlusObsolete
+        };
+        let act = bank_activity(&tr, cap, banks, alpha, basis);
+        let end = tr.end_time().unwrap();
+
+        assert!(!act.is_empty(), "end > 0 must yield segments");
+        assert_eq!(act.first().unwrap().t0, 0, "timeline must start at 0");
+        assert_eq!(act.last().unwrap().t1, end, "timeline must reach end");
+        for s in &act {
+            assert!(s.t0 < s.t1, "empty segment {s:?}");
+            assert!(s.active <= banks, "active beyond B in {s:?}");
+        }
+        for w in act.windows(2) {
+            // No gap, no overlap between consecutive segments...
+            assert_eq!(w[0].t1, w[1].t0, "gap/overlap between {w:?}");
+            // ...and coalescing leaves no equal neighbors.
+            assert_ne!(w[0].active, w[1].active, "uncoalesced neighbors {w:?}");
+        }
+        let total: u64 = act.iter().map(|s| s.dt()).sum();
+        assert_eq!(total, end, "segment durations must sum to the run");
+    });
+}
+
+#[test]
+fn prop_idle_intervals_disjoint_maximal_consistent() {
+    check("idle-intervals-consistent", 200, |rng| {
+        let cap = rng.range(1, 64) * MIB;
+        let tr = random_trace(rng, cap);
+        let banks = random_banks(rng);
+        let act = bank_activity(&tr, cap, banks, random_alpha(rng), OccupancyBasis::NeededOnly);
+
+        for bank in 0..banks {
+            let idles = idle_intervals(&act, bank);
+            for &(t0, t1) in &idles {
+                assert!(t0 < t1, "empty idle interval ({t0}, {t1})");
+            }
+            // Disjoint AND maximal: merged intervals cannot touch — a
+            // shared endpoint would mean the interval wasn't maximal.
+            for w in idles.windows(2) {
+                assert!(
+                    w[0].1 < w[1].0,
+                    "bank {bank}: intervals {w:?} touch or overlap"
+                );
+            }
+            // Consistency with the timeline, both directions: idle time
+            // equals the time spent at activity <= bank, and no segment
+            // with activity > bank intersects an idle interval.
+            let idle_total: u64 = idles.iter().map(|&(t0, t1)| t1 - t0).sum();
+            let timeline_idle: u64 = act
+                .iter()
+                .filter(|s| s.active <= bank)
+                .map(ActivitySegment::dt)
+                .sum();
+            assert_eq!(idle_total, timeline_idle, "bank {bank} idle time");
+            for s in act.iter().filter(|s| s.active > bank) {
+                for &(t0, t1) in &idles {
+                    assert!(
+                        s.t1 <= t0 || t1 <= s.t0,
+                        "bank {bank}: busy segment {s:?} inside idle ({t0}, {t1})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_b1_reference_has_zero_deltas() {
+    let cacti = CactiModel::default();
+    check("sweep-b1-zero-deltas", 60, |rng| {
+        let cap = rng.range(1, 32) * MIB;
+        let tr = random_trace(rng, cap);
+        let stats = AccessStats {
+            reads: rng.below(1 << 30),
+            writes: rng.below(1 << 30),
+            ..Default::default()
+        };
+        // Grid at and above the trace's peak so nothing is skipped.
+        let base_cap = tr.peak_needed().max(MIB);
+        let spec = SweepSpec {
+            capacities: vec![base_cap, base_cap * 2],
+            banks: vec![1, 2, 8],
+            alphas: vec![random_alpha(rng)],
+            policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+        };
+        let pts = sweep(&cacti, &tr, &stats, &spec, 1.0);
+        assert_eq!(pts.len(), spec.points());
+        for p in &pts {
+            assert!(p.delta_e_pct().is_finite());
+            assert!(p.delta_a_pct().is_finite());
+            if p.eval.banks == 1 {
+                assert!(
+                    p.delta_e_pct().abs() < 1e-9,
+                    "B=1 dE = {}",
+                    p.delta_e_pct()
+                );
+                assert!(
+                    p.delta_a_pct().abs() < 1e-9,
+                    "B=1 dA = {}",
+                    p.delta_a_pct()
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,144 @@
+//! Serving integration tests: the ISSUE acceptance scenario (gpt2-xl,
+//! 256 requests, concurrency 64, seed 7), bit-determinism, and the
+//! materialized-vs-streamed differential harness.
+
+use trapti::api::{ApiContext, ExperimentSpec};
+use trapti::serving::ServingParams;
+use trapti::sim::serving::{simulate_serving, simulate_serving_with, ServingSimOptions};
+use trapti::trace::{
+    stream_csv_to_traces, CsvStreamSink, MemoryDesc, OnlineStatsSink, TeeSink,
+};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::workload::{GPT2_XL, TINY_GQA};
+
+fn acceptance_spec(concurrency: u32) -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .model(GPT2_XL)
+        .serving(ServingParams::new(256, concurrency, 7))
+        .build()
+        .expect("acceptance spec builds")
+}
+
+/// The ISSUE acceptance scenario end to end: Stage I (serving sim) +
+/// Stage II (banking sweep on the serving trace), deterministic, with
+/// 64-way peak occupancy strictly above the single-stream peak.
+#[test]
+fn acceptance_gpt2_xl_c64_r256_seed7() {
+    let ctx = ApiContext::new();
+    let run = acceptance_spec(64).run_serving().unwrap();
+    assert_eq!(run.result.completed, 256, "every request must finish");
+    assert_eq!(run.result.peak_concurrent, 64, "cap must be reached");
+
+    // Stage II completes and reports a best banking point.
+    let s2 = run.stage2(&ctx);
+    assert!(!s2.points.is_empty());
+    let best = s2.best().unwrap();
+    assert!(best.eval.banks >= 1);
+    assert!(
+        s2.best_delta_pct() < 0.0,
+        "banked gating must beat the reference on a serving trace"
+    );
+
+    // Bit-determinism: same seed, same trace hash, sample for sample.
+    let again = acceptance_spec(64).run_serving().unwrap();
+    assert_eq!(run.result.trace_hash(), again.result.trace_hash());
+    assert_eq!(run.trace().samples(), again.trace().samples());
+    assert_eq!(run.result.total_cycles, again.result.total_cycles);
+
+    // Serving-shaped occupancy: 64 concurrent streams stack strictly
+    // higher than a single stream of the same population.
+    let single = acceptance_spec(1).run_serving().unwrap();
+    assert_eq!(single.result.completed, 256);
+    assert!(
+        run.trace().peak_needed() > single.trace().peak_needed(),
+        "c=64 peak {} must exceed c=1 peak {}",
+        run.trace().peak_needed(),
+        single.trace().peak_needed()
+    );
+}
+
+#[test]
+fn different_seed_changes_the_trace() {
+    let a = acceptance_spec(4);
+    let mut p = a.serving_params().unwrap();
+    p.seed = 8;
+    p.requests = 32;
+    let mut q = p;
+    q.seed = 9;
+    let spec_for = |params| {
+        ExperimentSpec::builder()
+            .model(GPT2_XL)
+            .serving(params)
+            .build()
+            .unwrap()
+    };
+    let rb = spec_for(p).run_serving().unwrap();
+    let rc = spec_for(q).run_serving().unwrap();
+    assert_ne!(rb.result.trace_hash(), rc.result.trace_hash());
+}
+
+/// Differential harness: a randomized serving workload run twice — once
+/// materialized, once streaming through `OnlineStatsSink` +
+/// `CsvStreamSink` — must agree on peaks/averages, and the CSV must
+/// parse back (via `trace::io`) to the exact materialized samples.
+#[test]
+fn differential_materialized_vs_streamed_random_workloads() {
+    let accel = trapti::config::tiny();
+    check("serving-differential", 12, |rng: &mut Rng| {
+        let mut p = ServingParams::new(
+            rng.range(1, 40) as u32,
+            rng.range(1, 8) as u32,
+            rng.next_u64(),
+        );
+        p.prompt_min = rng.range(0, 8) as u32;
+        p.prompt_max = p.prompt_min + rng.range(0, 40) as u32;
+        p.gen_min = rng.range(1, 6) as u32;
+        p.gen_max = p.gen_min + rng.range(0, 24) as u32;
+        p.page_tokens = rng.range(1, 32) as u32;
+        p.mean_arrival_gap = rng.below(200_000);
+
+        // Run 1: materialized reference.
+        let reference = simulate_serving(&TINY_GQA, p, &accel).unwrap();
+        assert_eq!(reference.completed, p.requests);
+
+        // Run 2: streaming-only, O(1) trace memory.
+        let mut online = OnlineStatsSink::new();
+        let mut csv = CsvStreamSink::new(Vec::new());
+        let streamed = {
+            let mut tee = TeeSink::new(vec![&mut online, &mut csv]);
+            simulate_serving_with(
+                &TINY_GQA,
+                p,
+                &accel,
+                ServingSimOptions {
+                    sink: Some(&mut tee),
+                    materialize: false,
+                },
+            )
+            .unwrap()
+        };
+        assert_eq!(streamed.total_cycles, reference.total_cycles);
+        assert_eq!(streamed.stats, reference.stats);
+        assert_eq!(streamed.trace.samples().len(), 1, "must not materialize");
+
+        // Identical peaks and time-weighted averages.
+        let m = online.shared().unwrap();
+        assert_eq!(m.peak_needed(), reference.trace.peak_needed());
+        assert_eq!(m.peak_occupied(), reference.trace.peak_occupied());
+        assert_eq!(m.end_time(), reference.trace.end_time());
+        assert!((m.avg_needed() - reference.trace.avg_needed()).abs() < 1e-9);
+
+        // The CSV stream parses back to the exact materialized samples.
+        let text = String::from_utf8(csv.into_inner().unwrap()).unwrap();
+        let mems = vec![MemoryDesc {
+            name: "kv-arena".to_string(),
+            capacity: reference.arena_capacity,
+        }];
+        let parsed =
+            stream_csv_to_traces(&text, &mems, reference.total_cycles).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].samples(), reference.trace.samples());
+        assert_eq!(parsed[0].end_time(), reference.trace.end_time());
+    });
+}
