@@ -1,0 +1,79 @@
+//! Bench: fused single-pass Stage-II sweep vs. the per-point naive
+//! oracle on the paper's Table II grid over a fig10-style serving trace
+//! (gpt2-xl, 256 requests, concurrency 64 — the CI acceptance scenario).
+//! Run: `cargo bench --bench stage2_sweep`.
+//!
+//! The fused engine must be differentially identical to the oracle and
+//! at least 5x faster on this grid: Stage II is supposed to be the cheap
+//! offline pass of the two-stage flow, and the naive
+//! O(grid × B × segments) walk broke that on serving-length traces.
+
+use trapti::api::ApiContext;
+use trapti::banking::{sweep, sweep_naive, GatingPolicy, SweepSpec};
+use trapti::serving::ServingParams;
+use trapti::sim::serving::simulate_serving;
+use trapti::util::bench::{bench, default_iters};
+use trapti::util::MIB;
+use trapti::workload::GPT2_XL;
+
+fn main() {
+    let ctx = ApiContext::new();
+    let accel = trapti::config::baseline();
+    let run = simulate_serving(&GPT2_XL, ServingParams::new(256, 64, 7), &accel)
+        .expect("serving trace");
+    let trace = &run.trace;
+    let peak = trace.peak_needed();
+
+    // Table II grid shape anchored at this trace's peak: six 16 MiB
+    // capacity steps x the paper's bank set (36 points, alpha = 0.9).
+    let start = peak.div_ceil(16 * MIB).max(1) * 16 * MIB;
+    let grid = SweepSpec {
+        capacities: (0u64..6).map(|i| start + i * 16 * MIB).collect(),
+        banks: vec![1, 2, 4, 8, 16, 32],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::Aggressive],
+    };
+    println!(
+        "serving trace: {} samples, peak {:.1} MiB; grid: {} points",
+        trace.samples().len(),
+        peak as f64 / MIB as f64,
+        grid.points(),
+    );
+
+    let iters = default_iters();
+    let (naive_stats, naive_pts) = bench("stage2_sweep_naive", iters, || {
+        sweep_naive(&ctx.cacti, trace, &run.stats, &grid, 1.0)
+    });
+    let (fused_stats, fused_pts) = bench("stage2_sweep_fused", iters, || {
+        sweep(&ctx.cacti, trace, &run.stats, &grid, 1.0)
+    });
+
+    // Differential identity: the fused engine IS the production path.
+    assert_eq!(fused_pts.len(), naive_pts.len());
+    for (f, n) in fused_pts.iter().zip(&naive_pts) {
+        assert_eq!(f.eval.e_total_j().to_bits(), n.eval.e_total_j().to_bits());
+        assert_eq!(f.eval.n_switch, n.eval.n_switch);
+        assert_eq!(
+            f.eval.gated_fraction.to_bits(),
+            n.eval.gated_fraction.to_bits()
+        );
+        assert_eq!(f.base_e_j.to_bits(), n.base_e_j.to_bits());
+    }
+    let best = fused_pts
+        .iter()
+        .map(|p| p.delta_e_pct())
+        .fold(f64::INFINITY, f64::min);
+    println!("best dE on the serving trace: {best:.1}%");
+    assert!(best < 0.0, "banking must win on serving traffic");
+
+    let speedup = naive_stats.mean.as_secs_f64() / fused_stats.mean.as_secs_f64();
+    println!(
+        "fused speedup over naive: {speedup:.1}x ({:?} -> {:?})",
+        naive_stats.mean, fused_stats.mean
+    );
+    assert!(
+        speedup >= 5.0,
+        "fused Stage II must be >= 5x faster on the Table II grid \
+         (got {speedup:.2}x)"
+    );
+}

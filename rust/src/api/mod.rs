@@ -18,6 +18,12 @@
 //!    threads, memoized by spec hash — a grid of scenarios runs as one
 //!    parallel batch with byte-identical results to a sequential loop.
 //!
+//! Stage I and Stage II can also run **fused**: the simulation streams
+//! occupancy straight into the single-pass sweep engine
+//! ([`crate::banking::SweepSink`]) so no trace is ever materialized —
+//! [`ExperimentSpec::stream_stage2`] for single-sequence workloads,
+//! [`ExperimentSpec::serve_fused`] for serving scenarios.
+//!
 //! The paper's figure/table runners live in [`experiments`]; the
 //! legacy `coordinator::Coordinator` is a thin deprecated shim over
 //! this module.

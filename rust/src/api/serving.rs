@@ -9,10 +9,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSpec};
+use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSink, SweepSpec};
 use crate::serving::ServingParams;
 use crate::sim::serving::{
-    simulate_serving, simulate_serving_with, ServingResult, ServingSimOptions,
+    arena_capacity, simulate_serving, simulate_serving_with, ServingResult,
+    ServingSimOptions,
 };
 use crate::trace::{OccupancyTrace, TraceSink};
 use crate::util::MIB;
@@ -75,6 +76,86 @@ impl ExperimentSpec {
             result,
         })
     }
+
+    /// Default Stage-II grid for a *fused* (streamed) serving run, where
+    /// the trace peak is unknown until the simulation ends: one capacity
+    /// — the provisioned KV-arena bound
+    /// ([`crate::sim::serving::arena_capacity`]) rounded up to a 16 MiB
+    /// step — with the same bank/policy axes as
+    /// [`ServingRun::serving_grid`]. The materialized default instead
+    /// tightens the capacity to the *observed* peak; pass the same
+    /// explicit grid to both paths when comparing them.
+    pub fn serving_arena_grid(&self) -> Result<SweepSpec> {
+        let params = self.serving_params()?;
+        let bound = arena_capacity(&self.model, &params).max(1);
+        let capacity = bound.div_ceil(16 * MIB).max(1) * 16 * MIB;
+        Ok(serving_axes(capacity))
+    }
+
+    /// Fused Stage I + Stage II for a serving scenario: the simulation
+    /// streams the KV-arena occupancy straight into the single-pass
+    /// sweep engine ([`crate::banking::SweepSink`]), so the Stage-II
+    /// answer is ready the moment the run completes and **no trace is
+    /// ever materialized**. The grid is the spec's, or
+    /// [`ExperimentSpec::serving_arena_grid`] when the spec left it open.
+    ///
+    /// With the same explicit grid, the returned sweep is byte-identical
+    /// to `run_serving()` + `stage2_with` (the CI determinism gate
+    /// asserts exactly that through `repro serve --fused`).
+    pub fn serve_fused(&self, ctx: &ApiContext) -> Result<(ServingRun, ServingSweep)> {
+        let grid = match &self.sweep {
+            Some(g) => g.clone(),
+            None => self.serving_arena_grid()?,
+        };
+        self.serve_fused_with(ctx, &grid)
+    }
+
+    /// Fused serving run with an explicit Stage-II grid.
+    pub fn serve_fused_with(
+        &self,
+        ctx: &ApiContext,
+        grid: &SweepSpec,
+    ) -> Result<(ServingRun, ServingSweep)> {
+        self.validate()?;
+        let params = self.serving_params()?;
+        let mut sink = SweepSink::new(&ctx.cacti, grid, self.freq_ghz());
+        let result = simulate_serving_with(
+            &self.model,
+            params,
+            &self.accel,
+            ServingSimOptions {
+                sink: Some(&mut sink),
+                materialize: false,
+            },
+        )?;
+        let points = sink.into_points(&result.stats);
+        Ok((
+            ServingRun {
+                spec: self.clone(),
+                result,
+            },
+            ServingSweep {
+                spec: grid.clone(),
+                points,
+            },
+        ))
+    }
+}
+
+/// The serving bank/policy axes at one capacity: the paper's bank set
+/// and all three gating policies — serving asks "which (B, policy) fits
+/// this traffic", not "how small can the SRAM be".
+fn serving_axes(capacity: u64) -> SweepSpec {
+    SweepSpec {
+        capacities: vec![capacity],
+        banks: vec![1, 2, 4, 8, 16, 32],
+        alphas: vec![0.9],
+        policies: vec![
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ],
+    }
 }
 
 impl ServingRun {
@@ -90,16 +171,7 @@ impl ServingRun {
     pub fn serving_grid(&self) -> SweepSpec {
         let peak = self.trace().peak_occupied().max(1);
         let capacity = peak.div_ceil(16 * MIB).max(1) * 16 * MIB;
-        SweepSpec {
-            capacities: vec![capacity],
-            banks: vec![1, 2, 4, 8, 16, 32],
-            alphas: vec![0.9],
-            policies: vec![
-                GatingPolicy::Aggressive,
-                GatingPolicy::conservative(),
-                GatingPolicy::drowsy(),
-            ],
-        }
+        serving_axes(capacity)
     }
 
     /// Stage II over the serving trace: the spec's grid, or
@@ -206,6 +278,52 @@ mod tests {
             .build()
             .unwrap();
         assert!(spec.run_serving().is_err());
+    }
+
+    #[test]
+    fn serve_fused_matches_materialized_stage2_on_same_grid() {
+        let ctx = ApiContext::new();
+        let spec = serving_spec();
+        let reference = spec.run_serving().unwrap();
+        // Same explicit grid for both paths (the fused default derives
+        // its capacity from the arena bound, not the observed peak).
+        let grid = reference.serving_grid();
+        let ref_sweep = reference.stage2_with(&ctx, &grid);
+        let (run, fused) = spec.serve_fused_with(&ctx, &grid).unwrap();
+        assert_eq!(run.result.total_cycles, reference.result.total_cycles);
+        assert_eq!(run.result.stats, reference.result.stats);
+        assert_eq!(run.trace().samples().len(), 1, "no materialized trace");
+        assert_eq!(fused.points.len(), ref_sweep.points.len());
+        for (a, b) in fused.points.iter().zip(&ref_sweep.points) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+            assert_eq!(a.eval.policy, b.eval.policy);
+            assert_eq!(
+                a.eval.gated_fraction.to_bits(),
+                b.eval.gated_fraction.to_bits()
+            );
+            assert_eq!(a.base_e_j.to_bits(), b.base_e_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn serve_fused_default_grid_uses_arena_bound() {
+        let ctx = ApiContext::new();
+        let spec = serving_spec();
+        let grid = spec.serving_arena_grid().unwrap();
+        assert_eq!(grid.capacities.len(), 1);
+        assert_eq!(grid.capacities[0] % (16 * crate::util::MIB), 0);
+        assert!(
+            grid.capacities[0]
+                >= crate::sim::serving::arena_capacity(
+                    &spec.model,
+                    &spec.serving_params().unwrap()
+                )
+        );
+        let (run, sweep) = spec.serve_fused(&ctx).unwrap();
+        assert_eq!(run.result.completed, 24);
+        assert!(!sweep.points.is_empty(), "arena bound must be feasible");
+        assert!(sweep.best_delta_pct() < 0.0);
     }
 
     #[test]

@@ -8,9 +8,9 @@
 //! [`Stage1Summary`], which deliberately has *no* Stage-II methods —
 //! its traces were never materialized.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::banking::{sweep, SweepPoint, SweepSpec};
+use crate::banking::{sweep, SweepPoint, SweepSink, SweepSpec};
 use crate::cacti::CactiModel;
 use crate::energy::{energy_breakdown, EnergyBreakdown, EnergyParams};
 use crate::memory::{size_memory, SizingResult};
@@ -138,6 +138,33 @@ impl ExperimentSpec {
             energy,
             result,
         })
+    }
+
+    /// Fused Stage I + Stage II: stream the simulation's shared-SRAM
+    /// occupancy straight into the single-pass sweep engine
+    /// ([`crate::banking::SweepSink`]) — Stage II finishes the moment
+    /// Stage I does, with **no materialized trace**. Requires the spec to
+    /// carry an explicit sweep grid: the streamed run has no trace to
+    /// derive the paper grid's capacity floor from (grid capacities below
+    /// the observed peak are still dropped, matching [`Stage1Run::stage2`]).
+    /// Equivalent to `run_stage1` + `stage2_with` on the same grid,
+    /// point for point.
+    pub fn stream_stage2(
+        &self,
+        ctx: &ApiContext,
+    ) -> Result<(Stage1Summary, Vec<SweepPoint>)> {
+        let grid = self.sweep.as_ref().ok_or_else(|| {
+            anyhow!(
+                "stream_stage2 needs an explicit sweep grid on the spec \
+                 (ExperimentSpecBuilder::sweep); a streamed run has no \
+                 materialized trace to derive the paper grid from — use \
+                 run_stage1 + stage2 for peak-derived grids"
+            )
+        })?;
+        let mut sink = SweepSink::new(&ctx.cacti, grid, self.freq_ghz());
+        let summary = self.stream_stage1(ctx, &mut sink)?;
+        let points = sink.into_points(summary.stats());
+        Ok((summary, points))
     }
 
     /// Stage-I memory sizing loop (16 MiB steps, CACTI latency model —
@@ -384,6 +411,35 @@ mod tests {
         // ...while the raw result's traces were never materialized
         // (escape hatch documents this).
         assert_eq!(summary.into_result().sram_trace().samples().len(), 1);
+    }
+
+    #[test]
+    fn stream_stage2_matches_materialized_pipeline() {
+        let ctx = ApiContext::new();
+        let spec = tiny_spec();
+        let s1 = spec.run_stage1(&ctx).unwrap();
+        let reference = s1.stage2_with(&ctx, &small_grid());
+        let (summary, points) = spec.stream_stage2(&ctx).unwrap();
+        assert_eq!(summary.total_cycles(), s1.result.total_cycles);
+        assert_eq!(summary.stats(), &s1.result.stats);
+        assert_eq!(points.len(), reference.shared().len());
+        for (a, b) in points.iter().zip(reference.shared()) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+            assert_eq!(a.eval.policy, b.eval.policy);
+            assert_eq!(a.base_e_j.to_bits(), b.base_e_j.to_bits());
+        }
+        // The streamed result never materialized a trace.
+        assert_eq!(summary.into_result().sram_trace().samples().len(), 1);
+    }
+
+    #[test]
+    fn stream_stage2_requires_explicit_grid() {
+        let ctx = ApiContext::new();
+        let mut bare = tiny_spec();
+        bare.sweep = None;
+        let err = bare.stream_stage2(&ctx).unwrap_err();
+        assert!(err.to_string().contains("sweep grid"), "{err:#}");
     }
 
     #[test]

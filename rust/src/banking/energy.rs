@@ -51,6 +51,12 @@ impl BankingEval {
 /// Evaluate one candidate against a Stage-I trace + access statistics.
 ///
 /// `freq_ghz` converts trace cycles to seconds for leakage integration.
+///
+/// This is the single-candidate oracle: it materializes the activity
+/// timeline and per-bank idle intervals. Grid sweeps go through the
+/// fused single-pass engine instead ([`crate::banking::sweep`] /
+/// [`crate::banking::fused`]), whose accumulators replicate these exact
+/// expressions — keep the two in sync.
 pub fn evaluate(
     cacti: &CactiModel,
     trace: &OccupancyTrace,
@@ -85,7 +91,7 @@ pub fn evaluate(
             }
         }
     }
-    let total_bank_cycles = end as f64 * banks as f64;
+    let total_bank_cycles = end * banks as f64;
     // Acted-on idle time retains `idle_leak_factor` of nominal leakage
     // (0 for true power gating, retention_factor for drowsy mode).
     let retained = policy.idle_leak_factor();

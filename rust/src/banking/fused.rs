@@ -1,0 +1,743 @@
+//! Fused single-pass Stage-II sweep engine.
+//!
+//! The naive sweep ([`super::sweep::sweep_naive`]) re-walks the full
+//! occupancy trace once per grid point (`bank_activity` is O(segments)
+//! and allocates a `Vec<ActivitySegment>`), then walks the timeline once
+//! per bank inside `evaluate` — O(grid × B × segments) total. With long
+//! serving traces and the paper's 36-point Table II grid, that made
+//! Stage II dominate wall-clock, defeating the premise that Stage II is
+//! a cheap offline pass.
+//!
+//! This engine makes **one traversal** of the occupancy segments and
+//! updates *every* (C, B, α, policy) candidate incrementally. Each
+//! candidate holds O(B) state:
+//!
+//! * the current `banks_required` level, maintained through its
+//!   **threshold ladder** (occupancy bands `(k·usable, (k+1)·usable]`):
+//!   successive segments usually stay in or near the current band, so
+//!   the level update is a couple of comparisons, not a division;
+//! * one open-idle-run start time per bank (banks pack low-to-high, so
+//!   bank `b` idles exactly while `level <= b`; a level rise closes runs,
+//!   a level fall opens them);
+//! * accumulators for the time-weighted active-bank integral, gated
+//!   cycles, and switch counts.
+//!
+//! No per-candidate timeline is ever materialized, and the traversal is
+//! allocation-free. Gate decisions go through the *same*
+//! [`GatingPolicy::decider`] path as `evaluate`, and the floating-point
+//! reductions replicate `evaluate`'s expressions exactly, so the fused
+//! results are bit-identical to the naive oracle (asserted by
+//! `tests/sweep_fused.rs` and the `stage2_sweep` bench).
+//!
+//! Two front ends:
+//!
+//! * [`sweep_fused`] — drop-in behind [`super::sweep::sweep`] for
+//!   materialized traces; shards candidates across threads on large
+//!   grid × trace products (same spawn pattern as `api::BatchRunner`).
+//! * [`SweepSink`] — a [`TraceSink`] that consumes the Stage-I stream
+//!   directly, so Stage I + Stage II run fused during simulation with
+//!   **no materialized trace at all** (`ExperimentSpec::stream_stage2`,
+//!   `ExperimentSpec::serve_fused`, `repro serve --fused`).
+
+use crate::cacti::{CactiModel, SramCharacterization};
+use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::{AccessStats, OccupancyTrace};
+use crate::util::ceil_div;
+
+use super::energy::BankingEval;
+use super::policy::{GateDecider, GatingPolicy};
+use super::sweep::{SweepPoint, SweepSpec};
+
+/// Incremental Stage-II state of one (C, B, α, policy) candidate.
+#[derive(Debug, Clone)]
+struct Candidate {
+    capacity: u64,
+    banks: u32,
+    alpha: f64,
+    policy: GatingPolicy,
+    ch: SramCharacterization,
+    decider: GateDecider,
+    /// Eq. 1 denominator `floor(alpha * C / B)`; 0 means "any occupancy
+    /// pins every bank" (degenerate tiny-capacity case).
+    usable_per_bank: u64,
+    /// Current `banks_required` level. Starts at `banks` ("everything
+    /// busy, nothing open") so the first segment opens the right runs.
+    level: u32,
+    /// Start time of the current constant-level run (for the activity
+    /// integral).
+    run_start: u64,
+    /// Per-bank open idle-run start; entry `b` is meaningful iff
+    /// `b >= level`.
+    open_since: Vec<u64>,
+    /// Σ level · dt over the traversal (integer, order-independent).
+    active_weighted: u128,
+    gated_cycles: u128,
+    n_switch: u64,
+    started: bool,
+}
+
+impl Candidate {
+    fn new(
+        cacti: &CactiModel,
+        capacity: u64,
+        banks: u32,
+        alpha: f64,
+        policy: GatingPolicy,
+        freq_ghz: f64,
+    ) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha={alpha}");
+        assert!(banks >= 1);
+        let ch = cacti.characterize(capacity, banks);
+        let decider = policy.decider(&ch, freq_ghz);
+        // Exactly `banks_required`'s denominator (same float expression).
+        let usable_per_bank = (alpha * (capacity as f64 / banks as f64)).floor() as u64;
+        Self {
+            capacity,
+            banks,
+            alpha,
+            policy,
+            ch,
+            decider,
+            usable_per_bank,
+            level: banks,
+            run_start: 0,
+            open_since: vec![0; banks as usize],
+            active_weighted: 0,
+            gated_cycles: 0,
+            n_switch: 0,
+            started: false,
+        }
+    }
+
+    /// Eq. 1 via the threshold ladder: walk the current level down/up
+    /// until `needed` falls inside its band. Amortized O(level delta);
+    /// equal to `ceil(needed / usable).min(banks)` exactly.
+    #[inline]
+    fn level_for(&self, needed: u64) -> u32 {
+        if needed == 0 {
+            return 0;
+        }
+        let usable = self.usable_per_bank;
+        if usable == 0 {
+            return self.banks;
+        }
+        let mut l = self.level.max(1);
+        while l > 1 && needed <= usable.saturating_mul((l - 1) as u64) {
+            l -= 1;
+        }
+        while l < self.banks && needed > usable.saturating_mul(l as u64) {
+            l += 1;
+        }
+        debug_assert_eq!(
+            l as u64,
+            ceil_div(needed, usable).min(self.banks as u64),
+            "ladder diverged from Eq. 1 at needed={needed}"
+        );
+        l
+    }
+
+    /// Close the idle run of bank `b` at time `t`, paying a transition
+    /// pair iff the policy gates it.
+    #[inline]
+    fn close_run(&mut self, b: u32, t: u64) {
+        let dt = t - self.open_since[b as usize];
+        if dt > 0 && self.decider.gate(dt) {
+            self.gated_cycles += dt as u128;
+            self.n_switch += 2;
+        }
+    }
+
+    /// Consume the occupancy change at segment boundary `t0`: from here
+    /// until the next boundary (or the run's end) `needed` bytes are
+    /// resident. Segments are contiguous, so only the left edge matters —
+    /// the open run closes at the next call's `t0` or at [`Candidate::seal`].
+    #[inline]
+    fn advance(&mut self, t0: u64, needed: u64) {
+        if !self.started {
+            self.started = true;
+            debug_assert_eq!(t0, 0, "occupancy streams start at t=0");
+        }
+        let new = self.level_for(needed);
+        let old = self.level;
+        if new != old {
+            if new > old {
+                for b in old..new {
+                    self.close_run(b, t0);
+                }
+            } else {
+                for b in new..old {
+                    self.open_since[b as usize] = t0;
+                }
+            }
+            self.active_weighted += old as u128 * (t0 - self.run_start) as u128;
+            self.run_start = t0;
+            self.level = new;
+        }
+    }
+
+    /// Close every open run and the activity integral at the run's end.
+    fn seal(&mut self, end: u64) {
+        if !self.started {
+            // Zero-segment trace (end == 0): nothing was ever active or
+            // idle, matching the empty activity timeline of the oracle.
+            self.level = 0;
+            return;
+        }
+        for b in self.level..self.banks {
+            self.close_run(b, end);
+        }
+        self.active_weighted += self.level as u128 * (end - self.run_start) as u128;
+        self.run_start = end;
+    }
+
+    /// Assemble the final evaluation. Float expressions replicate
+    /// [`super::energy::evaluate`] term for term so the result is
+    /// bit-identical to the naive path.
+    fn into_eval(self, stats: &AccessStats, end: u64, freq_ghz: f64) -> BankingEval {
+        let ch = self.ch;
+        let cyc_to_s = 1.0 / (freq_ghz * 1e9);
+        let end_f = end as f64;
+
+        let e_dyn = stats.reads as f64 * ch.e_read_j + stats.writes as f64 * ch.e_write_j;
+
+        let avg = if end == 0 {
+            0.0
+        } else {
+            self.active_weighted as f64 / end_f
+        };
+
+        let total_bank_cycles = end_f * self.banks as f64;
+        let retained = self.policy.idle_leak_factor();
+        let leak_cycles = total_bank_cycles - self.gated_cycles as f64 * (1.0 - retained);
+        let e_leak = ch.p_leak_bank_w * leak_cycles * cyc_to_s;
+        let per_switch = match self.policy {
+            GatingPolicy::Drowsy { .. } => ch.e_switch_j * 0.01,
+            _ => ch.e_switch_j,
+        };
+        let e_sw = self.n_switch as f64 * per_switch;
+
+        BankingEval {
+            capacity: self.capacity,
+            banks: self.banks,
+            alpha: self.alpha,
+            policy: self.policy,
+            e_dyn_j: e_dyn,
+            e_leak_j: e_leak,
+            e_sw_j: e_sw,
+            n_switch: self.n_switch,
+            avg_active_banks: avg,
+            gated_fraction: if total_bank_cycles > 0.0 {
+                self.gated_cycles as f64 / total_bank_cycles
+            } else {
+                0.0
+            },
+            area_mm2: ch.area_mm2,
+            latency_cycles: ch.latency_cycles,
+            characterization: ch,
+        }
+    }
+}
+
+/// One (capacity, alpha) group of the grid: the shared B=1 ungated
+/// reference plus one candidate per (policy, banks) cell, in the naive
+/// sweep's output order.
+struct Group {
+    capacity: u64,
+    base: Candidate,
+    /// `policies.len() * banks.len()` candidates, policy-major.
+    cells: Vec<Candidate>,
+}
+
+/// Single-pass evaluator of a whole [`SweepSpec`] grid over a stream of
+/// occupancy segments. Feed segments with [`FusedSweep::push_segment`]
+/// (non-overlapping, time-ordered, starting at 0), then
+/// [`FusedSweep::finish`] once with the run's end time.
+pub struct FusedSweep {
+    freq_ghz: f64,
+    groups: Vec<Group>,
+    end: Option<u64>,
+}
+
+impl FusedSweep {
+    /// Build the engine for every candidate of `spec`. Capacities known
+    /// to be infeasible may be pre-filtered by the caller; otherwise
+    /// [`FusedSweep::finish`] filters by the observed peak.
+    pub fn new(cacti: &CactiModel, spec: &SweepSpec, freq_ghz: f64) -> Self {
+        let mut groups = Vec::with_capacity(spec.capacities.len() * spec.alphas.len());
+        for &cap in &spec.capacities {
+            for &alpha in &spec.alphas {
+                let base =
+                    Candidate::new(cacti, cap, 1, alpha, GatingPolicy::None, freq_ghz);
+                let mut cells =
+                    Vec::with_capacity(spec.policies.len() * spec.banks.len());
+                for &policy in &spec.policies {
+                    for &banks in &spec.banks {
+                        cells.push(Candidate::new(
+                            cacti, cap, banks, alpha, policy, freq_ghz,
+                        ));
+                    }
+                }
+                groups.push(Group {
+                    capacity: cap,
+                    base,
+                    cells,
+                });
+            }
+        }
+        Self {
+            freq_ghz,
+            groups,
+            end: None,
+        }
+    }
+
+    /// Total candidates held (cells + references).
+    pub fn candidates(&self) -> usize {
+        self.groups.iter().map(|g| g.cells.len() + 1).sum()
+    }
+
+    /// Consume one piecewise-constant occupancy segment `[t0, t1)`
+    /// holding `needed` bytes (the paper's `NeededOnly` basis). Segments
+    /// must be contiguous, time-ordered, and start at 0.
+    #[inline]
+    pub fn push_segment(&mut self, t0: u64, t1: u64, needed: u64) {
+        debug_assert!(t1 > t0, "empty segment [{t0}, {t1})");
+        debug_assert!(self.end.is_none(), "push after finish");
+        for g in &mut self.groups {
+            g.base.advance(t0, needed);
+            for c in &mut g.cells {
+                c.advance(t0, needed);
+            }
+        }
+    }
+
+    /// Seal every candidate at the run's end time.
+    pub fn finish(&mut self, end: u64) {
+        assert!(self.end.is_none(), "finish called twice");
+        self.end = Some(end);
+        for g in &mut self.groups {
+            g.base.seal(end);
+            for c in &mut g.cells {
+                c.seal(end);
+            }
+        }
+    }
+
+    /// Assemble the grid points in the naive sweep's output order
+    /// (capacity → alpha → policy → banks), dropping capacities below
+    /// `peak_needed` (infeasible: the schedule would change). `stats`
+    /// supplies the Eq. 3 dynamic-energy counts.
+    pub fn into_points(self, stats: &AccessStats, peak_needed: u64) -> Vec<SweepPoint> {
+        let end = self.end.expect("finish() before into_points()");
+        let freq = self.freq_ghz;
+        let mut out = Vec::new();
+        for g in self.groups {
+            if g.capacity < peak_needed {
+                continue;
+            }
+            let base = g.base.into_eval(stats, end, freq);
+            let base_e = base.e_total_j();
+            let base_a = base.area_mm2;
+            for cell in g.cells {
+                // The exact (B=1, no-gating) cell IS the reference; reuse
+                // it like the oracle does (identical by construction).
+                let eval = if cell.banks == 1 && cell.policy == GatingPolicy::None {
+                    base.clone()
+                } else {
+                    cell.into_eval(stats, end, freq)
+                };
+                out.push(SweepPoint {
+                    eval,
+                    base_e_j: base_e,
+                    base_area_mm2: base_a,
+                });
+            }
+        }
+        out
+    }
+
+    /// Split the engine's candidate groups into up to `n` shards for
+    /// thread-parallel traversal; reassemble with [`FusedSweep::reunite`].
+    fn split(&mut self, n: usize) -> Vec<Vec<Group>> {
+        let groups = std::mem::take(&mut self.groups);
+        let per = groups.len().div_ceil(n.max(1));
+        let mut shards: Vec<Vec<Group>> = Vec::new();
+        let mut it = groups.into_iter().peekable();
+        while it.peek().is_some() {
+            shards.push(it.by_ref().take(per).collect());
+        }
+        shards
+    }
+
+    fn reunite(&mut self, shards: Vec<Vec<Group>>) {
+        self.groups = shards.into_iter().flatten().collect();
+    }
+}
+
+/// Work threshold (segments × candidates) above which the materialized
+/// sweep shards candidates across threads. Below it, spawn overhead
+/// outweighs the win (~a quarter-million O(1) updates run in well under
+/// a millisecond).
+const PARALLEL_WORK_THRESHOLD: u128 = 1 << 18;
+
+/// Fused implementation behind [`super::sweep::sweep`]: one traversal of
+/// the (finalized) trace evaluates the whole grid, sharding candidate
+/// groups across OS threads when the grid × trace product is large.
+/// Per-candidate results are independent, so the output is byte-identical
+/// at any thread count.
+pub fn sweep_fused(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    spec: &SweepSpec,
+    freq_ghz: f64,
+) -> Vec<SweepPoint> {
+    let peak = trace.peak_needed();
+    // Pre-filter infeasible capacities: same outcome as the post-filter,
+    // without paying traversal work for points that get dropped.
+    let feasible = SweepSpec {
+        capacities: spec
+            .capacities
+            .iter()
+            .copied()
+            .filter(|&c| c >= peak)
+            .collect(),
+        banks: spec.banks.clone(),
+        alphas: spec.alphas.clone(),
+        policies: spec.policies.clone(),
+    };
+    let end = trace.end_time().expect("trace must be finalized");
+    let mut engine = FusedSweep::new(cacti, &feasible, freq_ghz);
+
+    let work = trace.samples().len() as u128 * engine.candidates() as u128;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if work >= PARALLEL_WORK_THRESHOLD && threads > 1 && engine.groups.len() > 1 {
+        // Shard groups across threads; each walks the trace once over its
+        // shard (same scoped-spawn pattern as api::BatchRunner). Scope
+        // joins every worker before returning.
+        let mut shards = engine.split(threads.min(engine.groups.len()));
+        std::thread::scope(|scope| {
+            for shard in &mut shards {
+                scope.spawn(move || {
+                    for seg in trace.segments() {
+                        for g in shard.iter_mut() {
+                            g.base.advance(seg.t0, seg.needed);
+                            for c in &mut g.cells {
+                                c.advance(seg.t0, seg.needed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        engine.reunite(shards);
+    } else {
+        for seg in trace.segments() {
+            engine.push_segment(seg.t0, seg.t1, seg.needed);
+        }
+    }
+    engine.finish(end);
+    engine.into_points(stats, peak)
+}
+
+/// Streaming Stage-II consumer: a [`TraceSink`] that runs the fused sweep
+/// engine directly on the Stage-I occupancy stream of one memory, so
+/// `Stage2Run`-equivalent results come out of a simulation that never
+/// materialized a trace.
+///
+/// Sample semantics mirror [`OccupancyTrace::record`]: same-instant
+/// updates overwrite (only the final state at an instant is observable),
+/// and the state at `t` holds until the next sample. The sink also tracks
+/// the peak needed bytes at *sample* granularity (zero-duration final
+/// states included), so its feasibility filtering matches
+/// `OccupancyTrace::peak_needed` exactly.
+///
+/// When to stream vs. materialize: stream when the trace exists only to
+/// feed Stage II on a *known* grid (O(1) trace memory, one pass);
+/// materialize when the grid derives from the observed peak, when the
+/// trace itself is an artifact (CSV/JSON export, figures), or when
+/// several differently-parameterized sweeps will reuse it.
+pub struct SweepSink {
+    engine: FusedSweep,
+    /// Which announced memory to consume (0 = shared SRAM / KV arena).
+    mem: usize,
+    /// Pending state `(t, needed)` — committed when time advances.
+    pending: (u64, u64),
+    peak_needed: u64,
+    finished: Option<u64>,
+}
+
+impl SweepSink {
+    /// Sweep `spec` over the occupancy stream of memory index 0.
+    pub fn new(cacti: &CactiModel, spec: &SweepSpec, freq_ghz: f64) -> Self {
+        Self::for_memory(cacti, spec, freq_ghz, 0)
+    }
+
+    /// Sweep the stream of the `mem`-th announced memory.
+    pub fn for_memory(
+        cacti: &CactiModel,
+        spec: &SweepSpec,
+        freq_ghz: f64,
+        mem: usize,
+    ) -> Self {
+        Self {
+            engine: FusedSweep::new(cacti, spec, freq_ghz),
+            mem,
+            pending: (0, 0),
+            peak_needed: 0,
+            finished: None,
+        }
+    }
+
+    /// Commit the pending state over `[pending.t, until)`.
+    fn commit(&mut self, until: u64) {
+        let (t, needed) = self.pending;
+        self.peak_needed = self.peak_needed.max(needed);
+        if until > t {
+            self.engine.push_segment(t, until, needed);
+        }
+    }
+
+    /// Peak needed bytes observed so far (sample granularity).
+    pub fn peak_needed(&self) -> u64 {
+        self.peak_needed
+    }
+
+    /// Finalize into sweep points (requires the stream to have finished).
+    /// Grid capacities below the observed peak are dropped, exactly like
+    /// [`super::sweep::sweep`] on the materialized trace.
+    pub fn into_points(self, stats: &AccessStats) -> Vec<SweepPoint> {
+        assert!(
+            self.finished.is_some(),
+            "SweepSink::into_points before the stream finished"
+        );
+        self.engine.into_points(stats, self.peak_needed)
+    }
+}
+
+impl TraceSink for SweepSink {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        assert!(
+            self.mem < memories.len(),
+            "SweepSink targets memory {} but the run announced {}",
+            self.mem,
+            memories.len()
+        );
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, _obsolete: u64) {
+        if mem != self.mem {
+            return;
+        }
+        debug_assert!(t >= self.pending.0, "stream time went backwards");
+        if t > self.pending.0 {
+            self.commit(t);
+        }
+        self.pending = (t, needed);
+    }
+
+    fn finish(&mut self, end: u64) {
+        self.commit(end);
+        self.engine.finish(end);
+        self.finished = Some(end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::sweep::sweep_naive;
+    use crate::util::rng::Rng;
+    use crate::util::MIB;
+
+    fn grid() -> SweepSpec {
+        SweepSpec {
+            capacities: vec![16 * MIB, 48 * MIB, 64 * MIB],
+            banks: vec![1, 2, 4, 8, 16, 32],
+            alphas: vec![0.9, 1.0],
+            policies: vec![
+                GatingPolicy::None,
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        }
+    }
+
+    fn stats() -> AccessStats {
+        AccessStats {
+            reads: 12_345_678,
+            writes: 987_654,
+            ..Default::default()
+        }
+    }
+
+    fn random_trace(rng: &mut Rng, cap: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("m", cap);
+        let mut t = 0u64;
+        for _ in 0..rng.range(1, 120) {
+            t += rng.range(1, 50_000);
+            // Mix zero-occupancy gaps in so gating triggers at every B.
+            let needed = if rng.below(4) == 0 { 0 } else { rng.below(cap + 1) };
+            tr.record(t, needed, 0);
+        }
+        tr.finalize(t + rng.range(1, 10_000));
+        tr
+    }
+
+    fn assert_points_identical(fused: &[SweepPoint], naive: &[SweepPoint]) {
+        assert_eq!(fused.len(), naive.len());
+        for (f, n) in fused.iter().zip(naive) {
+            assert_eq!(f.eval.capacity, n.eval.capacity);
+            assert_eq!(f.eval.banks, n.eval.banks);
+            assert_eq!(f.eval.alpha.to_bits(), n.eval.alpha.to_bits());
+            assert_eq!(f.eval.policy, n.eval.policy);
+            assert_eq!(f.eval.n_switch, n.eval.n_switch);
+            assert_eq!(
+                f.eval.gated_fraction.to_bits(),
+                n.eval.gated_fraction.to_bits(),
+                "gated_fraction at C={} B={} {:?}",
+                n.eval.capacity,
+                n.eval.banks,
+                n.eval.policy
+            );
+            assert_eq!(
+                f.eval.avg_active_banks.to_bits(),
+                n.eval.avg_active_banks.to_bits()
+            );
+            assert_eq!(f.eval.e_dyn_j.to_bits(), n.eval.e_dyn_j.to_bits());
+            assert_eq!(f.eval.e_leak_j.to_bits(), n.eval.e_leak_j.to_bits());
+            assert_eq!(f.eval.e_sw_j.to_bits(), n.eval.e_sw_j.to_bits());
+            assert_eq!(f.base_e_j.to_bits(), n.base_e_j.to_bits());
+            assert_eq!(f.base_area_mm2.to_bits(), n.base_area_mm2.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_matches_naive_on_random_traces() {
+        let cacti = CactiModel::default();
+        crate::util::proptest::check("fused-vs-naive", 40, |rng| {
+            let tr = random_trace(rng, 64 * MIB);
+            let st = stats();
+            let fused = sweep_fused(&cacti, &tr, &st, &grid(), 1.0);
+            let naive = sweep_naive(&cacti, &tr, &st, &grid(), 1.0);
+            assert_points_identical(&fused, &naive);
+        });
+    }
+
+    #[test]
+    fn fused_matches_naive_on_degenerate_traces() {
+        let cacti = CactiModel::default();
+        let st = AccessStats::default();
+        // Zero-length trace.
+        let mut empty = OccupancyTrace::new("m", 64 * MIB);
+        empty.finalize(0);
+        assert_points_identical(
+            &sweep_fused(&cacti, &empty, &st, &grid(), 1.0),
+            &sweep_naive(&cacti, &empty, &st, &grid(), 1.0),
+        );
+        // Constant occupancy with a zero-duration final sample that sets
+        // the peak (feasibility filter must see it).
+        let mut spike = OccupancyTrace::new("m", 64 * MIB);
+        spike.record(5, 10 * MIB, 0);
+        spike.record(100, 60 * MIB, 0);
+        spike.finalize(100);
+        assert_eq!(spike.peak_needed(), 60 * MIB);
+        assert_points_identical(
+            &sweep_fused(&cacti, &spike, &st, &grid(), 1.0),
+            &sweep_naive(&cacti, &spike, &st, &grid(), 1.0),
+        );
+    }
+
+    #[test]
+    fn sink_matches_materialized_sweep() {
+        let cacti = CactiModel::default();
+        let mut rng = Rng::new(99);
+        let tr = random_trace(&mut rng, 48 * MIB);
+        let st = stats();
+        let spec = grid();
+
+        let mut sink = SweepSink::new(&cacti, &spec, 1.0);
+        sink.begin(&[MemoryDesc {
+            name: "m".to_string(),
+            capacity: 48 * MIB,
+        }]);
+        for s in tr.samples() {
+            sink.on_sample(0, s.t, s.needed, s.obsolete);
+        }
+        sink.finish(tr.end_time().unwrap());
+        assert_eq!(sink.peak_needed(), tr.peak_needed());
+        let streamed = sink.into_points(&st);
+        let materialized = sweep_fused(&cacti, &tr, &st, &spec, 1.0);
+        assert_points_identical(&streamed, &materialized);
+    }
+
+    #[test]
+    fn sink_overwrites_same_instant_and_ignores_other_memories() {
+        let cacti = CactiModel::default();
+        let spec = SweepSpec {
+            capacities: vec![MIB],
+            banks: vec![1, 2],
+            alphas: vec![1.0],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        let mems = [
+            MemoryDesc { name: "a".into(), capacity: MIB },
+            MemoryDesc { name: "b".into(), capacity: MIB },
+        ];
+
+        let mut sink = SweepSink::new(&cacti, &spec, 1.0);
+        sink.begin(&mems);
+        sink.on_sample(0, 10, MIB, 0); // transient, overwritten below
+        sink.on_sample(0, 10, 1024, 0);
+        sink.on_sample(1, 20, MIB, 0); // other memory: ignored
+        sink.on_sample(0, 50_000, 0, 0);
+        sink.finish(1_000_000);
+        let streamed = sink.into_points(&AccessStats::default());
+
+        let mut tr = OccupancyTrace::new("a", MIB);
+        tr.record(10, MIB, 0);
+        tr.record(10, 1024, 0);
+        tr.record(50_000, 0, 0);
+        tr.finalize(1_000_000);
+        let reference = sweep_fused(&cacti, &tr, &AccessStats::default(), &spec, 1.0);
+        assert_points_identical(&streamed, &reference);
+        // The transient MIB at t=10 never pinned the peak.
+        assert_eq!(streamed[0].eval.capacity, MIB);
+    }
+
+    #[test]
+    fn parallel_sharding_is_byte_identical() {
+        // Force the threaded path: every capacity feasible (occupancy
+        // stays below the smallest) and segments x candidates above the
+        // work threshold.
+        let cacti = CactiModel::default();
+        let mut rng = Rng::new(7);
+        let mut tr = OccupancyTrace::new("m", 64 * MIB);
+        let mut t = 0u64;
+        for _ in 0..20_000 {
+            t += rng.range(1, 100);
+            tr.record(t, rng.below(60 * MIB), 0);
+        }
+        tr.finalize(t + 1);
+        let spec = SweepSpec {
+            capacities: vec![64 * MIB, 80 * MIB, 96 * MIB, 112 * MIB],
+            banks: vec![1, 2, 4, 8, 16, 32],
+            alphas: vec![0.9, 1.0],
+            policies: vec![
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        };
+        let candidates = spec.points() + spec.capacities.len() * spec.alphas.len();
+        let work = tr.samples().len() as u128 * candidates as u128;
+        assert!(work >= PARALLEL_WORK_THRESHOLD, "work={work}");
+        let st = stats();
+        let fused = sweep_fused(&cacti, &tr, &st, &spec, 1.0);
+        let naive = sweep_naive(&cacti, &tr, &st, &spec, 1.0);
+        assert_points_identical(&fused, &naive);
+    }
+}

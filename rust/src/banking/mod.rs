@@ -1,15 +1,23 @@
 //! Stage II: offline SRAM banking and power-gating exploration driven by
 //! Stage-I occupancy traces (paper §III-B, Eqs. 1-5).
+//!
+//! Grid sweeps run through the fused single-pass engine ([`fused`]): one
+//! traversal of the trace (or of the live Stage-I stream, via
+//! [`SweepSink`]) evaluates every (C, B, α, policy) candidate at once.
+//! The per-point path survives as [`sweep_naive`], the differential
+//! oracle.
 
 pub mod activity;
 pub mod energy;
+pub mod fused;
 pub mod policy;
 pub mod sweep;
 
 pub use activity::{
     avg_active, bank_activity, banks_required, idle_intervals, ActivitySegment,
     OccupancyBasis,
-}; 
+};
 pub use energy::{evaluate, BankingEval};
-pub use policy::GatingPolicy;
-pub use sweep::{sweep, SweepPoint, SweepSpec};
+pub use fused::{sweep_fused, FusedSweep, SweepSink};
+pub use policy::{GateDecider, GatingPolicy};
+pub use sweep::{sweep, sweep_naive, SweepPoint, SweepSpec};

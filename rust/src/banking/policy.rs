@@ -64,31 +64,77 @@ impl GatingPolicy {
         }
     }
 
-    /// Break-even idle duration in cycles for this SRAM organization:
-    /// gate iff `P_leak * dt > 2 * E_switch`, i.e.
-    /// `dt > 2 * E_switch / P_leak` (plus wake-up latency, which must be
-    /// hidden inside the interval).
-    pub fn break_even_cycles(ch: &SramCharacterization, freq_ghz: f64) -> u64 {
+    /// Pure *energy* break-even idle duration in cycles: the point where
+    /// the leakage saved equals the transition cost, `dt` such that
+    /// `P_leak * dt = 2 * E_switch`. Wake-up latency is NOT folded in —
+    /// policies add it on top (it must be hidden inside the interval,
+    /// but it is a latency constraint, not an energy multiple).
+    pub fn energy_break_even_cycles(ch: &SramCharacterization, freq_ghz: f64) -> u64 {
         if ch.p_leak_bank_w <= 0.0 {
             return u64::MAX;
         }
         let seconds = 2.0 * ch.e_switch_j / ch.p_leak_bank_w;
         let cycles = seconds * freq_ghz * 1e9;
-        (cycles.ceil() as u64).saturating_add(ch.wake_cycles)
+        cycles.ceil() as u64
+    }
+
+    /// Break-even idle duration in cycles for this SRAM organization:
+    /// gate iff `P_leak * dt > 2 * E_switch`, i.e.
+    /// `dt > 2 * E_switch / P_leak` (plus wake-up latency, which must be
+    /// hidden inside the interval).
+    pub fn break_even_cycles(ch: &SramCharacterization, freq_ghz: f64) -> u64 {
+        Self::energy_break_even_cycles(ch, freq_ghz).saturating_add(ch.wake_cycles)
+    }
+
+    /// Precompute the gate decision for this policy on one SRAM
+    /// organization. The fused sweep engine and `should_gate` share this
+    /// single code path, so their per-interval decisions can never drift.
+    pub fn decider(&self, ch: &SramCharacterization, freq_ghz: f64) -> GateDecider {
+        match *self {
+            GatingPolicy::None => GateDecider::Never,
+            GatingPolicy::Aggressive => {
+                GateDecider::MinExclusive(Self::break_even_cycles(ch, freq_ghz))
+            }
+            // `min_idle_factor` scales the *energy* break-even only; the
+            // wake-up latency is a fixed add-on, not something thrash
+            // avoidance should multiply (that over-penalized wake-heavy
+            // organizations at high factors).
+            GatingPolicy::Conservative { min_idle_factor } => GateDecider::MinExclusiveF(
+                min_idle_factor
+                    * Self::energy_break_even_cycles(ch, freq_ghz) as f64
+                    + ch.wake_cycles as f64,
+            ),
+            // Drowsy entry/exit is ~free: act on any idle interval
+            // longer than its one-cycle wake-up.
+            GatingPolicy::Drowsy { .. } => GateDecider::MinExclusive(1),
+        }
     }
 
     /// Should an idle interval of `dt` cycles be gated?
     pub fn should_gate(&self, dt: u64, ch: &SramCharacterization, freq_ghz: f64) -> bool {
-        let be = Self::break_even_cycles(ch, freq_ghz);
+        self.decider(ch, freq_ghz).gate(dt)
+    }
+}
+
+/// Resolved per-(policy, organization, frequency) gating rule: an idle
+/// interval is gated iff its duration clears the threshold. Copy-sized so
+/// the fused sweep engine can hold one per candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GateDecider {
+    Never,
+    /// Gate iff `dt > threshold` (integer cycles).
+    MinExclusive(u64),
+    /// Gate iff `dt as f64 > threshold` (fractional break-even multiple).
+    MinExclusiveF(f64),
+}
+
+impl GateDecider {
+    #[inline]
+    pub fn gate(&self, dt: u64) -> bool {
         match *self {
-            GatingPolicy::None => false,
-            GatingPolicy::Aggressive => dt > be,
-            GatingPolicy::Conservative { min_idle_factor } => {
-                dt as f64 > be as f64 * min_idle_factor
-            }
-            // Drowsy entry/exit is ~free: act on any idle interval
-            // longer than its one-cycle wake-up.
-            GatingPolicy::Drowsy { .. } => dt > 1,
+            GateDecider::Never => false,
+            GateDecider::MinExclusive(thr) => dt > thr,
+            GateDecider::MinExclusiveF(thr) => dt as f64 > thr,
         }
     }
 }
@@ -128,6 +174,56 @@ mod tests {
         let cons = GatingPolicy::conservative();
         assert!(!cons.should_gate(be * 2, &ch(), 1.0));
         assert!(cons.should_gate(be * 5, &ch(), 1.0));
+    }
+
+    #[test]
+    fn conservative_scales_energy_break_even_not_wake() {
+        // Regression: the factor used to multiply the *whole* break-even
+        // (which already folds in wake_cycles), over-penalizing wake
+        // latency at high factors. The threshold is
+        // `factor * energy_break_even + wake`.
+        let ch = ch();
+        let energy_be = GatingPolicy::energy_break_even_cycles(&ch, 1.0);
+        assert!(ch.wake_cycles > 0, "organization must have wake latency");
+        let factor = 4.0;
+        let cons = GatingPolicy::Conservative {
+            min_idle_factor: factor,
+        };
+        let threshold = (factor * energy_be as f64) as u64 + ch.wake_cycles;
+        assert!(!cons.should_gate(threshold, &ch, 1.0));
+        assert!(cons.should_gate(threshold + 1, &ch, 1.0));
+        // The old (buggy) threshold was strictly larger; a dt between the
+        // two must now gate.
+        let old_threshold = ((energy_be + ch.wake_cycles) as f64 * factor) as u64;
+        assert!(old_threshold > threshold);
+        assert!(cons.should_gate(old_threshold, &ch, 1.0));
+    }
+
+    #[test]
+    fn break_even_splits_into_energy_plus_wake() {
+        let ch = ch();
+        assert_eq!(
+            GatingPolicy::break_even_cycles(&ch, 1.0),
+            GatingPolicy::energy_break_even_cycles(&ch, 1.0) + ch.wake_cycles
+        );
+    }
+
+    #[test]
+    fn decider_matches_should_gate_for_every_policy() {
+        let ch = ch();
+        let policies = [
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ];
+        let be = GatingPolicy::break_even_cycles(&ch, 1.0);
+        for p in policies {
+            let d = p.decider(&ch, 1.0);
+            for dt in [0, 1, 2, be / 2, be, be + 1, be * 4, be * 4 + 101, be * 10] {
+                assert_eq!(d.gate(dt), p.should_gate(dt, &ch, 1.0), "{p:?} dt={dt}");
+            }
+        }
     }
 
     #[test]

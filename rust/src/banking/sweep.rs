@@ -86,7 +86,29 @@ fn pct_delta(value: f64, base: f64) -> f64 {
 /// the schedule, not the candidate banking), exactly the decoupling the
 /// paper's two-stage design exploits. Candidates whose capacity is below
 /// the trace's peak needed bytes are skipped (infeasible).
+///
+/// Dispatches to the fused single-pass engine
+/// ([`super::fused`]): one traversal of the occupancy trace evaluates
+/// every grid point simultaneously, sharded across threads for large
+/// grids. Differentially identical to [`sweep_naive`], the per-point
+/// oracle it replaced.
 pub fn sweep(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    spec: &SweepSpec,
+    freq_ghz: f64,
+) -> Vec<SweepPoint> {
+    super::fused::sweep_fused(cacti, trace, stats, spec, freq_ghz)
+}
+
+/// The straightforward per-grid-point sweep: re-derives the bank-activity
+/// timeline and per-bank idle intervals for every candidate
+/// (O(grid × B × segments), one `Vec<ActivitySegment>` per point).
+/// Kept as the differential oracle for the fused engine
+/// (`tests/sweep_fused.rs`, the `stage2_sweep` bench) — production code
+/// should call [`sweep`].
+pub fn sweep_naive(
     cacti: &CactiModel,
     trace: &OccupancyTrace,
     stats: &AccessStats,
@@ -115,7 +137,12 @@ pub fn sweep(
                 let base_e = base.e_total_j();
                 let base_a = base.area_mm2;
                 for &banks in &spec.banks {
-                    let eval = if banks == 1 {
+                    // Every grid point — including B=1 — is evaluated
+                    // under the *requested* policy: a single bank still
+                    // has idle gaps a policy may act on (a lone drowsy
+                    // bank is legal and saves leakage). Only the exact
+                    // (B=1, no-gating) point can reuse the reference.
+                    let eval = if banks == 1 && policy == GatingPolicy::None {
                         base.clone()
                     } else {
                         evaluate(cacti, trace, stats, cap, banks, alpha, policy, freq_ghz)
@@ -238,6 +265,60 @@ mod tests {
             assert!(p.delta_e_pct().is_finite(), "dE = {}", p.delta_e_pct());
             assert!(p.delta_a_pct().is_finite(), "dA = {}", p.delta_a_pct());
             assert_eq!(p.delta_e_pct(), 0.0);
+        }
+    }
+
+    #[test]
+    fn b1_point_carries_requested_policy_and_models_gating() {
+        // Regression: the B=1 grid point used to reuse the ungated
+        // reference wholesale, so `eval.policy` misstated the requested
+        // policy and a lone gated/drowsy bank was never modeled. A trace
+        // with long zero-occupancy gaps lets even a single bank gate.
+        let mut tr = OccupancyTrace::new("sram", 64 * MIB);
+        let mut t = 0;
+        while t < 100_000_000 {
+            tr.record(t, 20 * MIB, 0);
+            tr.record(t + 100_000, 0, 0); // 900k-cycle idle tail
+            t += 1_000_000;
+        }
+        tr.finalize(100_000_000);
+        let spec = SweepSpec {
+            capacities: vec![64 * MIB],
+            banks: vec![1, 4],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+        };
+        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!(
+                spec.policies.contains(&p.eval.policy),
+                "emitted policy {:?} must be the requested one",
+                p.eval.policy
+            );
+            if p.eval.banks == 1 {
+                assert!(
+                    p.eval.gated_fraction > 0.0,
+                    "{:?}: a single bank must act on its idle gaps",
+                    p.eval.policy
+                );
+                assert!(p.eval.n_switch > 0);
+                assert!(p.delta_e_pct() < 0.0, "{:?}", p.eval.policy);
+            }
+        }
+    }
+
+    #[test]
+    fn naive_oracle_matches_fused_dispatch() {
+        let tr = synth_trace(128 * MIB);
+        let spec = SweepSpec::paper_grid(48 * MIB);
+        let fused = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        let naive = sweep_naive(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        assert_eq!(fused.len(), naive.len());
+        for (a, b) in fused.iter().zip(&naive) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+            assert_eq!(a.base_e_j.to_bits(), b.base_e_j.to_bits());
         }
     }
 

@@ -25,7 +25,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use trapti::analytic;
 use trapti::api::{experiments as exp, ApiContext, BatchRunner, ExperimentSpec};
-use trapti::banking::{evaluate, GatingPolicy};
+use trapti::banking::{evaluate, GatingPolicy, SweepSpec};
 use trapti::config::{named, parse::parse_bytes};
 use trapti::report::{figures, tables};
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
@@ -136,7 +136,12 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                            (--model --accel --concurrency --requests
                             --seed --prompt MIN:MAX --gen MIN:MAX
                             --page-tokens N --arrival CYCLES
-                            --trace-csv FILE --save-trace FILE)
+                            --trace-csv FILE --save-trace FILE
+                            --fused 1 [stream Stage I straight into the
+                            fused Stage-II engine; no materialized trace]
+                            --capacities MiB,.. --banks 1,2,..
+                            --alpha A [explicit Stage-II grid]
+                            --sweep-out FILE [write the Stage-II table])
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
   repro e2e                functional PJRT decode (--model, --steps)
@@ -393,8 +398,91 @@ fn parse_range(s: &str, flag: &str) -> Result<(u32, u32)> {
     Ok((lo.parse()?, hi.parse()?))
 }
 
+/// Optional explicit Stage-II grid from `--capacities` (MiB list),
+/// `--banks` and `--alpha`; policies are the serving trio. Passing the
+/// same grid to a materialized and a `--fused` run makes their sweep
+/// tables byte-comparable (the CI determinism gate).
+fn serving_grid_flags(args: &Args) -> Result<Option<SweepSpec>> {
+    let Some(list) = args.flag("capacities") else {
+        // --banks/--alpha only shape an *explicit* grid; without a
+        // capacity axis they would be silently dropped, so reject them.
+        if args.flag("banks").is_some() || args.flag("alpha").is_some() {
+            bail!(
+                "--banks/--alpha need --capacities MiB,.. (they customize an \
+                 explicit Stage-II grid; without one the grid is derived \
+                 from the trace peak / arena bound)"
+            );
+        }
+        return Ok(None);
+    };
+    let capacities: Vec<u64> = list
+        .split(',')
+        .map(|s| parse_bytes(&format!("{}MiB", s.trim())))
+        .collect::<Result<_>>()?;
+    let banks: Vec<u32> = args
+        .flag_or("banks", "1,2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    let alpha: f64 = args.flag_or("alpha", "0.9").parse()?;
+    Ok(Some(SweepSpec {
+        capacities,
+        banks,
+        alphas: vec![alpha],
+        policies: vec![
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ],
+    }))
+}
+
+/// Deterministic Stage-II report for a serving sweep (stable field order
+/// and float formatting), shared by stdout and `--sweep-out` so the
+/// materialized and fused paths are byte-comparable.
+fn serving_sweep_report(s2: &trapti::api::ServingSweep) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Stage II on the serving trace ({} candidates):",
+        s2.points.len()
+    );
+    let _ = writeln!(
+        out,
+        "{:>9} {:>5} {:>13} {:>12} {:>8} {:>9} {:>10}",
+        "C[MiB]", "B", "policy", "E_total[J]", "dE%", "avgBact", "gated%"
+    );
+    for p in &s2.points {
+        let _ = writeln!(
+            out,
+            "{:>9} {:>5} {:>13} {:>12.3} {:>8.1} {:>9.2} {:>9.1}",
+            p.eval.capacity / MIB,
+            p.eval.banks,
+            p.eval.policy.label(),
+            p.eval.e_total_j(),
+            p.delta_e_pct(),
+            p.eval.avg_active_banks,
+            p.eval.gated_fraction * 100.0,
+        );
+    }
+    if let Some(best) = s2.best() {
+        let _ = writeln!(
+            out,
+            "best: C={} MiB B={} policy={} (dE {:.1}%)",
+            best.eval.capacity / MIB,
+            best.eval.banks,
+            best.eval.policy.label(),
+            best.delta_e_pct(),
+        );
+    }
+    out
+}
+
 /// Multi-tenant serving scenario: Stage-I serving simulation (merged
 /// KV-arena occupancy) + Stage-II banking sweep on the serving trace.
+/// With `--fused`, Stage I streams straight into the fused Stage-II
+/// engine and no trace is materialized.
 fn serve_cmd(args: &Args) -> Result<()> {
     let model_name = args.flag_or("model", "gpt2-xl");
     let model = preset(&model_name)
@@ -420,13 +508,34 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some(a) = args.flag("arrival") {
         params.mean_arrival_gap = a.parse()?;
     }
+    // Boolean-valued flag: `--fused 1|true|yes|on` (the parser requires
+    // every flag to carry a value; `--fused 0` really means off).
+    let fused = match args.flag("fused") {
+        None => false,
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "1" | "true" | "yes" | "on" => true,
+            "0" | "false" | "no" | "off" => false,
+            other => bail!("--fused wants 0/1 (got `{other}`)"),
+        },
+    };
 
-    let spec = ExperimentSpec::builder()
+    let mut builder = ExperimentSpec::builder()
         .model(model)
         .serving(params)
-        .accel(accel)
-        .build()?;
-    let run = spec.run_serving()?;
+        .accel(accel);
+    if let Some(grid) = serving_grid_flags(args)? {
+        builder = builder.sweep(grid);
+    }
+    let spec = builder.build()?;
+    let ctx = ApiContext::new();
+
+    let (run, s2) = if fused {
+        spec.serve_fused(&ctx)?
+    } else {
+        let run = spec.run_serving()?;
+        let s2 = run.stage2(&ctx);
+        (run, s2)
+    };
     let r = &run.result;
     println!("{} on {} [spec {:016x}]", r.workload, r.accel, spec.content_hash());
     println!(
@@ -437,58 +546,48 @@ fn serve_cmd(args: &Args) -> Result<()> {
         r.total_cycles,
         r.peak_concurrent,
     );
-    println!(
-        "arena: {:.1} MiB capacity, {:.1} KiB pages  trace: {} samples, hash {:016x}",
-        r.arena_capacity as f64 / MIB as f64,
-        r.page_bytes as f64 / 1024.0,
-        r.trace.samples().len(),
-        r.trace_hash(),
-    );
-    println!(
-        "occupancy: peak needed {:.1} MiB, peak occupied {:.1} MiB, avg needed {:.1} MiB",
-        r.peak_needed() as f64 / MIB as f64,
-        r.peak_occupied() as f64 / MIB as f64,
-        r.trace.avg_needed() / MIB as f64,
-    );
-
-    let ctx = ApiContext::new();
-    let s2 = run.stage2(&ctx);
-    println!(
-        "\nStage II on the serving trace ({} candidates):",
-        s2.points.len()
-    );
-    println!(
-        "{:>9} {:>5} {:>13} {:>12} {:>8} {:>9} {:>10}",
-        "C[MiB]", "B", "policy", "E_total[J]", "dE%", "avgBact", "gated%"
-    );
-    for p in &s2.points {
+    if fused {
         println!(
-            "{:>9} {:>5} {:>13} {:>12.3} {:>8.1} {:>9.2} {:>9.1}",
-            p.eval.capacity / MIB,
-            p.eval.banks,
-            p.eval.policy.label(),
-            p.eval.e_total_j(),
-            p.delta_e_pct(),
-            p.eval.avg_active_banks,
-            p.eval.gated_fraction * 100.0,
+            "arena: {:.1} MiB capacity, {:.1} KiB pages  trace: streamed \
+             (fused Stage I+II, nothing materialized)",
+            r.arena_capacity as f64 / MIB as f64,
+            r.page_bytes as f64 / 1024.0,
+        );
+    } else {
+        println!(
+            "arena: {:.1} MiB capacity, {:.1} KiB pages  trace: {} samples, hash {:016x}",
+            r.arena_capacity as f64 / MIB as f64,
+            r.page_bytes as f64 / 1024.0,
+            r.trace.samples().len(),
+            r.trace_hash(),
+        );
+        println!(
+            "occupancy: peak needed {:.1} MiB, peak occupied {:.1} MiB, avg needed {:.1} MiB",
+            r.peak_needed() as f64 / MIB as f64,
+            r.peak_occupied() as f64 / MIB as f64,
+            r.trace.avg_needed() / MIB as f64,
         );
     }
-    if let Some(best) = s2.best() {
-        println!(
-            "best: C={} MiB B={} policy={} (dE {:.1}%)",
-            best.eval.capacity / MIB,
-            best.eval.banks,
-            best.eval.policy.label(),
-            best.delta_e_pct(),
-        );
+
+    let table = serving_sweep_report(&s2);
+    print!("\n{table}");
+    if let Some(path) = args.flag("sweep-out") {
+        std::fs::write(path, &table).with_context(|| format!("writing {path}"))?;
+        println!("sweep table saved to {path}");
     }
 
     if let Some(path) = args.flag("trace-csv") {
+        if fused {
+            bail!("--trace-csv needs a materialized trace; drop --fused");
+        }
         std::fs::write(path, trace_to_csv(run.trace()))
             .with_context(|| format!("writing {path}"))?;
         println!("trace CSV saved to {path}");
     }
     if let Some(path) = args.flag("save-trace") {
+        if fused {
+            bail!("--save-trace needs a materialized trace; drop --fused");
+        }
         save_trace(run.trace(), Path::new(path))?;
         println!("trace saved to {path}");
     }
@@ -525,19 +624,18 @@ fn bank_cmd(args: &Args) -> Result<()> {
         "C[MiB]", "B", "E_total[J]", "dE%", "avgBact", "gated%", "area[mm2]"
     );
     for &cap in &capacities {
+        // ΔE reference: unbanked and ungated. Every row — B=1 included —
+        // is evaluated under the gating policy (a lone bank still gates
+        // its idle gaps).
         let base = evaluate(
             &ctx.cacti, &trace, &stats, cap, 1, alpha,
             GatingPolicy::None, 1.0,
         );
         for &b in &banks {
-            let ev = if b == 1 {
-                base.clone()
-            } else {
-                evaluate(
-                    &ctx.cacti, &trace, &stats, cap, b, alpha,
-                    GatingPolicy::Aggressive, 1.0,
-                )
-            };
+            let ev = evaluate(
+                &ctx.cacti, &trace, &stats, cap, b, alpha,
+                GatingPolicy::Aggressive, 1.0,
+            );
             println!(
                 "{:>9} {:>5} {:>12.3} {:>10.1} {:>8.2} {:>9.1} {:>10.1}",
                 cap / MIB,

@@ -197,6 +197,20 @@ fn emit_change(
     }
 }
 
+/// KV-arena capacity the serving simulator provisions for `(model,
+/// params)`: every stream can grow to its maximum context, so the
+/// concurrency cap — not page exhaustion — is the admission limit. A
+/// pure function of its inputs, exposed so fused Stage-II grids
+/// (`ExperimentSpec::serve_fused`) can bound candidate capacities
+/// *before* the simulation runs.
+pub fn arena_capacity(model: &ModelPreset, params: &ServingParams) -> u64 {
+    let kv_token_bytes = model.kv_cache_bytes(1);
+    let page_bytes = params.page_tokens as u64 * kv_token_bytes;
+    let pages_per_stream =
+        ceil_div(params.max_stream_tokens() as u64, params.page_tokens as u64);
+    params.concurrency as u64 * pages_per_stream * page_bytes
+}
+
 /// Run a serving scenario with default options (materialized trace).
 pub fn simulate_serving(
     model: &ModelPreset,
@@ -219,11 +233,9 @@ pub fn simulate_serving_with(
     let reqs = generate_requests(&params);
 
     // Arena sized so the concurrency cap — not page exhaustion — is the
-    // admission limit: every stream can grow to its maximum context.
+    // admission limit (see `arena_capacity`).
     let page_bytes = params.page_tokens as u64 * cost.kv_token_bytes;
-    let pages_per_stream =
-        ceil_div(params.max_stream_tokens() as u64, params.page_tokens as u64);
-    let capacity = params.concurrency as u64 * pages_per_stream * page_bytes;
+    let capacity = arena_capacity(model, &params);
 
     let mut arena = PagedKvArena::new(page_bytes, capacity);
     let mut trace = OccupancyTrace::new("kv-arena", capacity);
@@ -412,6 +424,15 @@ mod tests {
         for s in r.trace.samples() {
             assert!(s.obsolete < r.page_bytes * (r.peak_concurrent as u64 + 1));
         }
+    }
+
+    #[test]
+    fn arena_capacity_matches_simulated_arena() {
+        let p = params(10, 4, 2);
+        let r = simulate_serving(&TINY_GQA, p, &tiny()).unwrap();
+        assert_eq!(r.arena_capacity, arena_capacity(&TINY_GQA, &p));
+        // The provisioned bound always covers the observed occupancy.
+        assert!(r.peak_occupied() <= r.arena_capacity);
     }
 
     #[test]

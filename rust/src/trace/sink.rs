@@ -2,11 +2,14 @@
 //!
 //! Stage I's key artifact is the time-resolved occupancy trace, but not
 //! every consumer needs it materialized: online peak/average statistics,
-//! CSV export, and capacity planning can all run on the *event stream*.
-//! The simulation engine forwards every occupancy change of every
-//! on-chip memory to a `TraceSink` (see `sim::engine::SimOptions`), so
-//! consumers choose between O(samples) memory (\[`MaterializeSink`\])
-//! and O(1) memory (\[`OnlineStatsSink`\], \[`CsvStreamSink`\]).
+//! CSV export, capacity planning — and the whole of Stage II — can all
+//! run on the *event stream*. The simulation engine forwards every
+//! occupancy change of every on-chip memory to a `TraceSink` (see
+//! `sim::engine::SimOptions`), so consumers choose between O(samples)
+//! memory (\[`MaterializeSink`\]) and O(1) memory
+//! (\[`OnlineStatsSink`\], \[`CsvStreamSink`\], and
+//! `banking::SweepSink` — the fused Stage-II sweep engine running
+//! directly on the stream).
 //!
 //! Stream semantics mirror [`OccupancyTrace::record`]: samples arrive
 //! with non-decreasing `t`; several samples may share one `t`, in which

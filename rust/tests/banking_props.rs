@@ -8,12 +8,15 @@
 //!    overlaps — with coalesced neighbors that actually differ.
 //! 3. `idle_intervals(b)` are disjoint, maximal, and consistent with the
 //!    activity timeline they came from.
-//! 4. `sweep` B=1 reference points report ΔE ≈ 0 and ΔA ≈ 0 on any
-//!    trace (including degenerate zero-length / zero-stats ones).
+//! 4. `sweep` emits every grid point under its *requested* policy — the
+//!    B=1 cell included (it used to be silently replaced by the ungated
+//!    reference) — with finite deltas against a reference that is always
+//!    the (B=1, no-gating) evaluation, on any trace (including
+//!    degenerate zero-length / zero-stats ones).
 
 use trapti::banking::{
-    bank_activity, banks_required, idle_intervals, sweep, ActivitySegment,
-    GatingPolicy, OccupancyBasis, SweepSpec,
+    bank_activity, banks_required, evaluate, idle_intervals, sweep,
+    ActivitySegment, GatingPolicy, OccupancyBasis, SweepSpec,
 };
 use trapti::cacti::CactiModel;
 use trapti::trace::{AccessStats, OccupancyTrace};
@@ -146,9 +149,9 @@ fn prop_idle_intervals_disjoint_maximal_consistent() {
 }
 
 #[test]
-fn prop_sweep_b1_reference_has_zero_deltas() {
+fn prop_sweep_points_carry_requested_policy_vs_ungated_reference() {
     let cacti = CactiModel::default();
-    check("sweep-b1-zero-deltas", 60, |rng| {
+    check("sweep-policy-vs-reference", 60, |rng| {
         let cap = rng.range(1, 32) * MIB;
         let tr = random_trace(rng, cap);
         let stats = AccessStats {
@@ -158,27 +161,70 @@ fn prop_sweep_b1_reference_has_zero_deltas() {
         };
         // Grid at and above the trace's peak so nothing is skipped.
         let base_cap = tr.peak_needed().max(MIB);
+        let alpha = random_alpha(rng);
         let spec = SweepSpec {
             capacities: vec![base_cap, base_cap * 2],
             banks: vec![1, 2, 8],
-            alphas: vec![random_alpha(rng)],
-            policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+            alphas: vec![alpha],
+            policies: vec![
+                GatingPolicy::None,
+                GatingPolicy::Aggressive,
+                GatingPolicy::drowsy(),
+            ],
         };
         let pts = sweep(&cacti, &tr, &stats, &spec, 1.0);
         assert_eq!(pts.len(), spec.points());
         for p in &pts {
             assert!(p.delta_e_pct().is_finite());
             assert!(p.delta_a_pct().is_finite());
-            if p.eval.banks == 1 {
+            // Every point — B=1 included — reports the policy it was
+            // requested under (the old sweep silently substituted the
+            // ungated reference at B=1).
+            assert!(
+                spec.policies.contains(&p.eval.policy),
+                "policy {:?} not in grid",
+                p.eval.policy
+            );
+            // The ΔE/ΔA reference is always the (B=1, ungated) eval.
+            let reference = evaluate(
+                &cacti,
+                &tr,
+                &stats,
+                p.eval.capacity,
+                1,
+                alpha,
+                GatingPolicy::None,
+                1.0,
+            );
+            assert_eq!(p.base_e_j.to_bits(), reference.e_total_j().to_bits());
+            assert_eq!(p.base_area_mm2.to_bits(), reference.area_mm2.to_bits());
+            // The point itself equals a direct evaluation under its own
+            // policy (B=1 drowsy/aggressive really are modeled now).
+            let direct = evaluate(
+                &cacti,
+                &tr,
+                &stats,
+                p.eval.capacity,
+                p.eval.banks,
+                alpha,
+                p.eval.policy,
+                1.0,
+            );
+            assert_eq!(p.eval.e_total_j().to_bits(), direct.e_total_j().to_bits());
+            assert_eq!(p.eval.n_switch, direct.n_switch);
+            // No-gating at B=1 is exactly the reference: zero deltas.
+            if p.eval.banks == 1 && p.eval.policy == GatingPolicy::None {
+                assert!(p.delta_e_pct().abs() < 1e-9);
+                assert!(p.delta_a_pct().abs() < 1e-9);
+            }
+            // Break-even-filtered gating never loses energy vs. the
+            // reference at B=1 (same organization, gating only helps).
+            if p.eval.banks == 1 && p.eval.policy == GatingPolicy::Aggressive {
                 assert!(
-                    p.delta_e_pct().abs() < 1e-9,
-                    "B=1 dE = {}",
-                    p.delta_e_pct()
-                );
-                assert!(
-                    p.delta_a_pct().abs() < 1e-9,
-                    "B=1 dA = {}",
-                    p.delta_a_pct()
+                    p.eval.e_total_j() <= p.base_e_j + 1e-12,
+                    "B=1 aggressive worse than ungated: {} vs {}",
+                    p.eval.e_total_j(),
+                    p.base_e_j
                 );
             }
         }

@@ -1,0 +1,217 @@
+//! Differential suite for the fused Stage-II sweep engine: the fused
+//! single-pass path (`banking::sweep`, `SweepSink`, `serve_fused`,
+//! `stream_stage2`) must be indistinguishable from the per-point naive
+//! oracle (`banking::sweep_naive`) on every workload type — prefill,
+//! decode, and serving — plus a property check that the fused activity
+//! integral equals `avg_active(bank_activity(...))` per candidate.
+
+use trapti::api::{ApiContext, ExperimentSpec};
+use trapti::banking::{
+    avg_active, bank_activity, sweep, sweep_naive, GatingPolicy, OccupancyBasis,
+    SweepPoint, SweepSpec,
+};
+use trapti::serving::ServingParams;
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::util::MIB;
+use trapti::workload::TINY_GQA;
+
+/// Every `SweepPoint` field within 1e-12 (energies are bit-identical in
+/// practice; the tolerance is the acceptance bound), with
+/// `n_switch`/`gated_fraction` exact.
+fn assert_points_match(fused: &[SweepPoint], naive: &[SweepPoint]) {
+    assert_eq!(fused.len(), naive.len(), "point count");
+    for (f, n) in fused.iter().zip(naive) {
+        let at = format!(
+            "C={} B={} alpha={} {:?}",
+            n.eval.capacity, n.eval.banks, n.eval.alpha, n.eval.policy
+        );
+        assert_eq!(f.eval.capacity, n.eval.capacity, "{at}");
+        assert_eq!(f.eval.banks, n.eval.banks, "{at}");
+        assert_eq!(f.eval.alpha.to_bits(), n.eval.alpha.to_bits(), "{at}");
+        assert_eq!(f.eval.policy, n.eval.policy, "{at}");
+        // Exact integer / bookkeeping fields.
+        assert_eq!(f.eval.n_switch, n.eval.n_switch, "{at}");
+        assert_eq!(
+            f.eval.gated_fraction.to_bits(),
+            n.eval.gated_fraction.to_bits(),
+            "{at}"
+        );
+        assert_eq!(f.eval.latency_cycles, n.eval.latency_cycles, "{at}");
+        // Float fields within 1e-12 (absolute or relative).
+        for (a, b, what) in [
+            (f.eval.e_dyn_j, n.eval.e_dyn_j, "e_dyn"),
+            (f.eval.e_leak_j, n.eval.e_leak_j, "e_leak"),
+            (f.eval.e_sw_j, n.eval.e_sw_j, "e_sw"),
+            (f.eval.avg_active_banks, n.eval.avg_active_banks, "avg_act"),
+            (f.eval.area_mm2, n.eval.area_mm2, "area"),
+            (f.base_e_j, n.base_e_j, "base_e"),
+            (f.base_area_mm2, n.base_area_mm2, "base_area"),
+            (f.delta_e_pct(), n.delta_e_pct(), "dE%"),
+            (f.delta_a_pct(), n.delta_a_pct(), "dA%"),
+        ] {
+            let tol = 1e-12 * b.abs().max(1.0);
+            assert!((a - b).abs() <= tol, "{what} {a} vs {b} at {at}");
+        }
+    }
+}
+
+fn rich_grid(capacities: Vec<u64>) -> SweepSpec {
+    SweepSpec {
+        capacities,
+        banks: vec![1, 2, 4, 8, 16, 32],
+        alphas: vec![0.9, 1.0],
+        policies: vec![
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ],
+    }
+}
+
+#[test]
+fn sweep_fused_matches_naive_on_prefill_trace() {
+    let ctx = ApiContext::new();
+    let s1 = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .prefill(96)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap()
+        .run_stage1(&ctx)
+        .unwrap();
+    let grid = rich_grid(vec![2 * MIB, 4 * MIB, 8 * MIB]);
+    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    assert!(!fused.is_empty());
+    assert_points_match(&fused, &naive);
+}
+
+#[test]
+fn sweep_fused_matches_naive_on_decode_trace() {
+    let ctx = ApiContext::new();
+    let s1 = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .decode(48, 24)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap()
+        .run_stage1(&ctx)
+        .unwrap();
+    let grid = rich_grid(vec![MIB, 2 * MIB, 4 * MIB]);
+    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    assert!(!fused.is_empty());
+    assert_points_match(&fused, &naive);
+}
+
+#[test]
+fn sweep_fused_matches_naive_on_serving_trace() {
+    let ctx = ApiContext::new();
+    let mut p = ServingParams::new(48, 6, 11);
+    p.prompt_min = 4;
+    p.prompt_max = 48;
+    p.gen_min = 2;
+    p.gen_max = 24;
+    p.page_tokens = 8;
+    p.mean_arrival_gap = 40_000;
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(p)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap();
+    let run = spec.run_serving().unwrap();
+    // Capacity axis straddles the peak so the infeasibility filter is
+    // exercised on both sides.
+    let peak = run.trace().peak_needed();
+    let grid = rich_grid(vec![
+        (peak / 2).max(1),
+        peak.max(1),
+        peak * 2,
+        peak * 4,
+    ]);
+    let fused = sweep(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0);
+    let naive = sweep_naive(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0);
+    assert!(!fused.is_empty());
+    assert_points_match(&fused, &naive);
+
+    // And the end-to-end fused serving path (simulation streaming into
+    // the sweep sink, no materialized trace) agrees with Stage II over
+    // the materialized trace on the same grid.
+    let sweep_grid = run.serving_grid();
+    let reference = run.stage2_with(&ctx, &sweep_grid);
+    let (fused_run, fused_sweep) = spec.serve_fused_with(&ctx, &sweep_grid).unwrap();
+    assert_eq!(fused_run.result.total_cycles, run.result.total_cycles);
+    assert_points_match(&fused_sweep.points, &reference.points);
+}
+
+#[test]
+fn stream_stage2_is_fused_stage1_plus_stage2() {
+    let ctx = ApiContext::new();
+    let grid = rich_grid(vec![2 * MIB, 4 * MIB]);
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .prefill(64)
+        .accel(trapti::config::tiny())
+        .sweep(grid.clone())
+        .build()
+        .unwrap();
+    let s1 = spec.run_stage1(&ctx).unwrap();
+    let reference = s1.stage2_with(&ctx, &grid);
+    let (summary, points) = spec.stream_stage2(&ctx).unwrap();
+    assert_eq!(summary.total_cycles(), s1.result.total_cycles);
+    assert_points_match(&points, reference.shared());
+}
+
+/// Property: the fused engine's per-candidate activity integral equals
+/// `avg_active(bank_activity(trace, ...))` for every candidate, on
+/// randomized traces (the integral is reported as
+/// `eval.avg_active_banks`).
+#[test]
+fn prop_fused_activity_integral_matches_bank_activity() {
+    let ctx = ApiContext::new();
+    check("fused-activity-integral", 60, |rng: &mut Rng| {
+        let cap = rng.range(1, 48) * MIB;
+        let mut tr = OccupancyTrace::new("m", cap);
+        let mut t = 0u64;
+        for _ in 0..rng.range(1, 80) {
+            t += rng.range(1, 5_000);
+            let needed = if rng.below(5) == 0 { 0 } else { rng.below(cap + 1) };
+            tr.record(t, needed, 0);
+        }
+        tr.finalize(t + rng.range(1, 1_000));
+
+        let grid = SweepSpec {
+            capacities: vec![tr.peak_needed().max(1), tr.peak_needed().max(1) * 2],
+            banks: vec![1, 4, 8, 32],
+            alphas: vec![0.05 + rng.f64() * 0.95],
+            policies: vec![GatingPolicy::Aggressive],
+        };
+        let stats = AccessStats::default();
+        let pts = sweep(&ctx.cacti, &tr, &stats, &grid, 1.0);
+        assert_eq!(pts.len(), grid.points());
+        for p in &pts {
+            let timeline = bank_activity(
+                &tr,
+                p.eval.capacity,
+                p.eval.banks,
+                p.eval.alpha,
+                OccupancyBasis::NeededOnly,
+            );
+            let want = avg_active(&timeline);
+            assert_eq!(
+                p.eval.avg_active_banks.to_bits(),
+                want.to_bits(),
+                "activity integral at C={} B={} alpha={}: {} vs {}",
+                p.eval.capacity,
+                p.eval.banks,
+                p.eval.alpha,
+                p.eval.avg_active_banks,
+                want
+            );
+        }
+    });
+}
