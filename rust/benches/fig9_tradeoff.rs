@@ -9,7 +9,7 @@ fn main() {
     let ctx = ApiContext::new();
     let pair = exp::paired_prefill(&ctx).expect("stage1 pair");
     let (_stats, t2) = bench("fig9_tradeoff", default_iters(), || {
-        exp::table2(&ctx, &pair)
+        exp::table2(&ctx, &pair).expect("stage2")
     });
     print!("{}", figures::fig9(&t2));
     // DS-R1D must dominate: lower energy at comparable area (its reduced,

@@ -42,10 +42,10 @@ fn main() {
 
     let iters = default_iters();
     let (naive_stats, naive_pts) = bench("stage2_sweep_naive", iters, || {
-        sweep_naive(&ctx.cacti, trace, &run.stats, &grid, 1.0)
+        sweep_naive(&ctx.cacti, trace, &run.stats, &grid, 1.0).expect("finalized trace")
     });
     let (fused_stats, fused_pts) = bench("stage2_sweep_fused", iters, || {
-        sweep(&ctx.cacti, trace, &run.stats, &grid, 1.0)
+        sweep(&ctx.cacti, trace, &run.stats, &grid, 1.0).expect("finalized trace")
     });
 
     // Differential identity: the fused engine IS the production path.

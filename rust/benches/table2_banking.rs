@@ -10,7 +10,7 @@ fn main() {
     let ctx = ApiContext::new();
     let pair = exp::paired_prefill(&ctx).expect("stage1 pair");
     let (_stats, t2) = bench("table2_banking", default_iters(), || {
-        exp::table2(&ctx, &pair)
+        exp::table2(&ctx, &pair).expect("stage2")
     });
     for t in tables::table2(&t2) {
         print!("{}", t.render());

@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3. Stage-II optimization for this workload -------------------
-    let s2 = s1.stage2(&ctx);
+    let s2 = s1.stage2(&ctx)?;
     let best = s2.best().expect("sweep non-empty");
     println!(
         "stage II: best organization C={} MiB, B={} -> {:.1}% SRAM energy \

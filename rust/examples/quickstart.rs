@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     // --- Stage II: banking + power-gating exploration ------------------
     // (typed handle: only obtainable from a Stage-I run, reading the
     // occupancy trace through a borrowed view).
-    let s2 = s1.stage2(&ctx);
+    let s2 = s1.stage2(&ctx)?;
     println!("\nStage II (alpha=0.9, aggressive gating):");
     println!(
         "{:>8} {:>6} {:>12} {:>8} {:>12}",

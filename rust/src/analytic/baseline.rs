@@ -116,7 +116,8 @@ mod tests {
         let trapti = evaluate(
             &cacti, &tr, &stats, 128 * MIB, 8, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        )
+        .unwrap();
         assert!(
             trapti.e_leak_j < agg.e_leak_j * 0.55,
             "time-resolved {} vs aggregate {} J",
@@ -135,7 +136,8 @@ mod tests {
         let trapti = evaluate(
             &cacti, &tr, &stats, 128 * MIB, 4, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        )
+        .unwrap();
         assert!((agg.e_dyn_j - trapti.e_dyn_j).abs() < 1e-12);
     }
 
@@ -153,7 +155,8 @@ mod tests {
         let trapti = evaluate(
             &cacti, &tr, &stats, 128 * MIB, 8, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        )
+        .unwrap();
         // TRAPTI still gates the never-needed top bank(s); the pinned
         // ones match the aggregate count.
         let ratio = trapti.e_leak_j / agg.e_leak_j;

@@ -219,7 +219,7 @@ impl BatchRunner {
     fn compute(&self, spec: &ExperimentSpec) -> Result<Computed> {
         let s1 = spec.run_stage1(&self.ctx)?;
         let sweep = if spec.sweep.is_some() || self.derive_sweep {
-            let s2 = s1.stage2(&self.ctx);
+            let s2 = s1.stage2(&self.ctx)?;
             Arc::new(s2.per_memory)
         } else {
             Arc::new(Vec::new())

@@ -252,11 +252,11 @@ pub struct Table2 {
     pub mha_points: Vec<SweepPoint>,
 }
 
-pub fn table2(ctx: &ApiContext, pair: &PairedStage1) -> Table2 {
-    Table2 {
-        gqa_points: pair.gqa.stage2(ctx).shared().to_vec(),
-        mha_points: pair.mha.stage2(ctx).shared().to_vec(),
-    }
+pub fn table2(ctx: &ApiContext, pair: &PairedStage1) -> Result<Table2> {
+    Ok(Table2 {
+        gqa_points: pair.gqa.stage2(ctx)?.shared().to_vec(),
+        mha_points: pair.mha.stage2(ctx)?.shared().to_vec(),
+    })
 }
 
 impl Table2 {
@@ -300,7 +300,7 @@ pub fn table3(ctx: &ApiContext) -> Result<Table3> {
         })
         .build()?;
     let stage1 = spec.run_stage1(ctx)?;
-    let per_memory = stage1.stage2_per_memory(ctx).per_memory;
+    let per_memory = stage1.stage2_per_memory(ctx)?.per_memory;
     Ok(Table3 { stage1, per_memory })
 }
 
@@ -352,7 +352,7 @@ pub fn fig10_serving(
                 .serving(ServingParams::new(requests, concurrency, seed))
                 .build()?;
             let run = spec.run_serving()?;
-            let s2 = run.stage2(ctx);
+            let s2 = run.stage2(ctx)?;
             let best = s2
                 .best()
                 .expect("serving grid is never empty");
@@ -385,7 +385,7 @@ pub struct Headline {
 
 pub fn headline(ctx: &ApiContext) -> Result<Headline> {
     let pair = paired_prefill(ctx)?;
-    let t2 = table2(ctx, &pair);
+    let t2 = table2(ctx, &pair)?;
     let t3 = table3(ctx)?;
     let gqa_best = t2
         .gqa_points

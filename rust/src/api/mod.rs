@@ -17,6 +17,11 @@
 //! 3. **[`BatchRunner`]** executes many specs concurrently across
 //!    threads, memoized by spec hash — a grid of scenarios runs as one
 //!    parallel batch with byte-identical results to a sequential loop.
+//! 4. **[`optimize`]** closes the loop: [`Stage2Run::optimize`] /
+//!    `ServingSweep::optimize` derive an ε-Pareto frontier over
+//!    (energy, activity, area) from a sweep, and [`run_portfolio`]
+//!    scores configurations across *several* workloads (worst-case /
+//!    mean regret) to pick the robust-best one — `repro optimize`.
 //!
 //! Stage I and Stage II can also run **fused**: the simulation streams
 //! occupancy straight into the single-pass sweep engine
@@ -39,7 +44,7 @@
 //!     .build()
 //!     .unwrap();
 //! let s1 = spec.run_stage1(&ctx).unwrap();
-//! let s2 = s1.stage2(&ctx); // paper grid derived from the peak
+//! let s2 = s1.stage2(&ctx).unwrap(); // paper grid derived from the peak
 //! println!("best dE = {:.1}%", s2.best_delta_pct());
 //! ```
 //!
@@ -47,11 +52,13 @@
 
 pub mod batch;
 pub mod experiments;
+pub mod optimize;
 pub mod serving;
 pub mod spec;
 pub mod stage;
 
 pub use batch::{BatchResult, BatchRunner};
+pub use optimize::{run_portfolio, PortfolioOptions, PortfolioRun};
 pub use serving::{ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};
 pub use stage::{ApiContext, Stage1Run, Stage1Summary, Stage2Run};

@@ -1,0 +1,414 @@
+//! `api` surface of the Stage-II Pareto/portfolio optimizer
+//! ([`crate::banking::optimize`]).
+//!
+//! Three entry points:
+//!
+//! * [`Stage2Run::optimize`] — frontier (+ trivial single-workload
+//!   portfolio) over an existing single-sequence Stage-II run.
+//! * [`ServingSweep::optimize`] — the same over a serving sweep.
+//! * [`run_portfolio`] — the batch entry point: execute several
+//!   [`ExperimentSpec`]s (mixed single-sequence and serving), collect
+//!   one [`WorkloadSweep`] each, and run the cross-workload optimizer.
+//!   Whenever a shared explicit grid is available, Stage I streams
+//!   straight into the fused [`crate::banking::SweepSink`]
+//!   (`stream_stage2` / `serve_fused_with`), so serving-scale grids
+//!   reach the optimizer **without materializing a trace**.
+//!
+//! Everything downstream of the simulations is deterministic; two
+//! `run_portfolio` calls over equal specs produce identical results
+//! (the CI gate compares `repro optimize --pareto-csv` bytes).
+
+use anyhow::Result;
+
+use crate::banking::optimize::{optimize, Constraints, OptimizeResult, WorkloadSweep};
+use crate::banking::SweepSpec;
+use crate::workload::Workload;
+
+use super::serving::ServingSweep;
+use super::spec::ExperimentSpec;
+use super::stage::{ApiContext, Stage2Run};
+
+/// Options for [`run_portfolio`].
+#[derive(Debug, Clone, Default)]
+pub struct PortfolioOptions {
+    /// Shared Stage-II grid for every workload. `None` falls back to
+    /// each spec's own grid (`ExperimentSpec::sweep`), then to the
+    /// derived default (arena grid for serving, peak-derived paper grid
+    /// for single-sequence — the latter forces a materialized run). A
+    /// portfolio needs overlapping grids to find shared configurations,
+    /// so passing one shared grid here is the robust choice.
+    pub grid: Option<SweepSpec>,
+    pub constraints: Constraints,
+    /// ε for the per-workload frontiers (0 = exact).
+    pub epsilon: f64,
+    /// Per-workload weights for the mean-regret tie-breaker.
+    pub weights: Option<Vec<f64>>,
+}
+
+/// A portfolio run's collected inputs and optimizer output.
+#[derive(Debug, Clone)]
+pub struct PortfolioRun {
+    pub workloads: Vec<WorkloadSweep>,
+    pub result: OptimizeResult,
+}
+
+/// Closed-form capacity upper bound covering `spec`'s occupancy without
+/// running a simulation: the provisioned KV-arena bound for serving
+/// ([`crate::sim::serving::arena_capacity`]), 2x the KV footprint for
+/// single-sequence shapes, rounded up to a 16 MiB step. The single
+/// source of truth for every derived covering grid (CLI default, bench,
+/// CI gate) so the rounding/bound formula cannot drift between them.
+pub fn covering_capacity_bound(spec: &ExperimentSpec) -> u64 {
+    use crate::sim::serving::arena_capacity;
+    use crate::util::MIB;
+    let bound = match spec.workload {
+        Workload::Serving(p) => arena_capacity(&spec.model, &p),
+        Workload::Prefill { seq } => spec.model.kv_cache_bytes(seq as u64) * 2,
+        Workload::Decode { prompt, gen } => {
+            spec.model.kv_cache_bytes(prompt as u64 + gen as u64) * 2
+        }
+    };
+    bound.div_ceil(16 * MIB).max(1) * 16 * MIB
+}
+
+/// The optimizer's full policy axis — the spread from "do nothing" to
+/// aggressive gating. One definition shared by [`covering_grid`] and
+/// the CLI's explicit-grid flags, so the two `repro optimize` modes can
+/// never explore different policy sets.
+pub fn full_policy_axis() -> Vec<crate::banking::GatingPolicy> {
+    use crate::banking::GatingPolicy;
+    vec![
+        GatingPolicy::None,
+        GatingPolicy::Aggressive,
+        GatingPolicy::conservative(),
+        GatingPolicy::drowsy(),
+    ]
+}
+
+/// Shared default grid for [`run_portfolio`]: 16 MiB capacity steps up
+/// to the largest covering bound of `specs` (floored at 128 MiB), the
+/// paper bank set, α = 0.9, all four gating policies. Purely
+/// closed-form — no simulation runs to derive it, so the fused
+/// streaming path stays available and the portfolio intersection is
+/// never empty.
+pub fn covering_grid(specs: &[ExperimentSpec]) -> SweepSpec {
+    use crate::util::MIB;
+    let top = specs
+        .iter()
+        .map(covering_capacity_bound)
+        .fold(128 * MIB, u64::max);
+    let mut capacities = Vec::new();
+    let mut c = 16 * MIB;
+    while c <= top {
+        capacities.push(c);
+        c += 16 * MIB;
+    }
+    SweepSpec {
+        capacities,
+        banks: vec![1, 2, 4, 8, 16, 32],
+        alphas: vec![0.9],
+        policies: full_policy_axis(),
+    }
+}
+
+/// Deterministic workload label used in reports and regret columns.
+pub fn workload_label(spec: &ExperimentSpec) -> String {
+    match spec.workload {
+        Workload::Prefill { seq } => format!("{}-prefill{}", spec.model.name, seq),
+        Workload::Decode { prompt, gen } => {
+            format!("{}-decode{}+{}", spec.model.name, prompt, gen)
+        }
+        Workload::Serving(p) => format!(
+            "{}-serve-r{}-c{}-s{}",
+            spec.model.name, p.requests, p.concurrency, p.seed
+        ),
+    }
+}
+
+/// Execute every spec and collect its Stage-II sweep as a
+/// [`WorkloadSweep`], streaming through the fused engine when an
+/// explicit grid makes that possible.
+fn collect_sweeps(
+    ctx: &ApiContext,
+    specs: &[ExperimentSpec],
+    grid: Option<&SweepSpec>,
+) -> Result<Vec<WorkloadSweep>> {
+    let mut out = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = workload_label(spec);
+        let effective = grid.cloned().or_else(|| spec.sweep.clone());
+        let ws = match spec.workload {
+            Workload::Serving(_) => {
+                let g = match effective {
+                    Some(g) => g,
+                    None => spec.serving_arena_grid()?,
+                };
+                // Fused: occupancy streams into the sweep engine; no
+                // materialized trace at serving scale.
+                let (run, s2) = spec.serve_fused_with(ctx, &g)?;
+                WorkloadSweep {
+                    name,
+                    end_cycles: run.result.total_cycles,
+                    points: s2.points,
+                }
+            }
+            _ => match effective {
+                Some(g) => {
+                    // Fused single-sequence path.
+                    let mut streamed = spec.clone();
+                    streamed.sweep = Some(g);
+                    let (summary, points) = streamed.stream_stage2(ctx)?;
+                    WorkloadSweep {
+                        name,
+                        end_cycles: summary.total_cycles(),
+                        points,
+                    }
+                }
+                None => {
+                    // No grid anywhere: materialize so the paper grid
+                    // can derive from the observed peak.
+                    let s1 = spec.run_stage1(ctx)?;
+                    let s2 = s1.stage2(ctx)?;
+                    WorkloadSweep {
+                        name,
+                        end_cycles: s1.result.total_cycles,
+                        points: s2.shared().to_vec(),
+                    }
+                }
+            },
+        };
+        out.push(ws);
+    }
+    Ok(out)
+}
+
+/// The batch portfolio entry point: run every spec (serving specs via
+/// the fused serving pipeline, single-sequence specs via fused streaming
+/// when a grid is known), then optimize across all of them. See
+/// [`crate::banking::optimize::optimize`] for the frontier/portfolio
+/// semantics.
+pub fn run_portfolio(
+    ctx: &ApiContext,
+    specs: &[ExperimentSpec],
+    opts: &PortfolioOptions,
+) -> Result<PortfolioRun> {
+    let workloads = collect_sweeps(ctx, specs, opts.grid.as_ref())?;
+    let result = optimize(
+        &workloads,
+        &opts.constraints,
+        opts.epsilon,
+        opts.weights.as_deref(),
+    )?;
+    Ok(PortfolioRun { workloads, result })
+}
+
+impl ExperimentSpec {
+    /// One-spec convenience: run this spec end to end (fused whenever a
+    /// grid is known — see [`run_portfolio`]) and optimize its sweep.
+    /// The single-workload portfolio is trivially the workload's own
+    /// frontier; use [`run_portfolio`] for cross-workload selection.
+    pub fn optimize(
+        &self,
+        ctx: &ApiContext,
+        constraints: &Constraints,
+        epsilon: f64,
+    ) -> Result<OptimizeResult> {
+        let workloads = collect_sweeps(ctx, std::slice::from_ref(self), None)?;
+        Ok(optimize(&workloads, constraints, epsilon, None)?)
+    }
+}
+
+impl Stage2Run<'_> {
+    /// Run the Pareto optimizer over this run's shared-SRAM sweep:
+    /// constraint filtering + ε-dominance frontier (the single-workload
+    /// portfolio is trivially its own optimum).
+    pub fn optimize(
+        &self,
+        constraints: &Constraints,
+        epsilon: f64,
+    ) -> Result<OptimizeResult> {
+        let w = WorkloadSweep {
+            name: self.stage1.result.workload.clone(),
+            end_cycles: self.stage1.result.total_cycles,
+            points: self.shared().to_vec(),
+        };
+        Ok(optimize(&[w], constraints, epsilon, None)?)
+    }
+}
+
+impl ServingSweep {
+    /// Run the Pareto optimizer over this serving sweep.
+    pub fn optimize(
+        &self,
+        constraints: &Constraints,
+        epsilon: f64,
+    ) -> Result<OptimizeResult> {
+        let w = WorkloadSweep {
+            name: self.workload.clone(),
+            end_cycles: self.end_cycles,
+            points: self.points.clone(),
+        };
+        Ok(optimize(&[w], constraints, epsilon, None)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::optimize::ConfigKey;
+    use crate::banking::GatingPolicy;
+    use crate::config::tiny;
+    use crate::serving::ServingParams;
+    use crate::util::MIB;
+    use crate::workload::{TINY_GQA, TINY_MHA};
+
+    fn shared_grid() -> SweepSpec {
+        SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB, 8 * MIB],
+            banks: vec![1, 2, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        }
+    }
+
+    fn decode_spec(model: crate::workload::ModelPreset) -> ExperimentSpec {
+        ExperimentSpec::builder()
+            .model(model)
+            .decode(32, 16)
+            .accel(tiny())
+            .build()
+            .unwrap()
+    }
+
+    fn serving_spec() -> ExperimentSpec {
+        let mut p = ServingParams::new(16, 4, 7);
+        p.prompt_min = 4;
+        p.prompt_max = 32;
+        p.gen_min = 2;
+        p.gen_max = 16;
+        p.page_tokens = 8;
+        p.mean_arrival_gap = 50_000;
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn portfolio_over_mixed_workloads_end_to_end() {
+        let ctx = ApiContext::new();
+        let specs = vec![decode_spec(TINY_MHA), decode_spec(TINY_GQA), serving_spec()];
+        let opts = PortfolioOptions {
+            grid: Some(shared_grid()),
+            ..Default::default()
+        };
+        let run = run_portfolio(&ctx, &specs, &opts).unwrap();
+        assert_eq!(run.workloads.len(), 3);
+        assert_eq!(run.result.frontiers.len(), 3);
+        for f in &run.result.frontiers {
+            assert!(!f.frontier.is_empty(), "{} frontier empty", f.workload);
+            assert!(f.feasible > 0);
+        }
+        let best = run.result.robust_best().expect("portfolio non-empty");
+        assert!(best.worst_regret_pct >= 0.0);
+        assert_eq!(best.regret_pct.len(), 3);
+        // Workload labels are deterministic and distinct.
+        assert_eq!(run.result.workload_names[0], "tiny-mha-decode32+16");
+        assert_eq!(run.result.workload_names[1], "tiny-gqa-decode32+16");
+        assert!(run.result.workload_names[2].starts_with("tiny-gqa-serve-r16-c4-s7"));
+    }
+
+    #[test]
+    fn run_portfolio_is_deterministic() {
+        let ctx = ApiContext::new();
+        let specs = vec![decode_spec(TINY_GQA), serving_spec()];
+        let opts = PortfolioOptions {
+            grid: Some(shared_grid()),
+            ..Default::default()
+        };
+        let a = run_portfolio(&ctx, &specs, &opts).unwrap();
+        let b = run_portfolio(&ctx, &specs, &opts).unwrap();
+        assert_eq!(a.result.portfolio.len(), b.result.portfolio.len());
+        for (x, y) in a.result.portfolio.iter().zip(&b.result.portfolio) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(
+                x.worst_regret_pct.to_bits(),
+                y.worst_regret_pct.to_bits(),
+                "{:?}",
+                x.key
+            );
+            for (ex, ey) in x.energy_j.iter().zip(&y.energy_j) {
+                assert_eq!(ex.to_bits(), ey.to_bits());
+            }
+        }
+        for (fa, fb) in a.result.frontiers.iter().zip(&b.result.frontiers) {
+            assert_eq!(fa.frontier.len(), fb.frontier.len());
+            for (x, y) in fa.frontier.iter().zip(&fb.frontier) {
+                assert_eq!(ConfigKey::of(&x.point), ConfigKey::of(&y.point));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_portfolio_matches_materialized_sweeps() {
+        // The streamed (SweepSink) collection path must hand the
+        // optimizer the exact same points as materialized Stage II.
+        let ctx = ApiContext::new();
+        let spec = decode_spec(TINY_GQA);
+        let grid = shared_grid();
+        let run = run_portfolio(
+            &ctx,
+            std::slice::from_ref(&spec),
+            &PortfolioOptions {
+                grid: Some(grid.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let s1 = spec.run_stage1(&ctx).unwrap();
+        let reference = s1.stage2_with(&ctx, &grid).unwrap();
+        let streamed = &run.workloads[0].points;
+        assert_eq!(streamed.len(), reference.shared().len());
+        for (a, b) in streamed.iter().zip(reference.shared()) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+        }
+        // And the single-workload handle entry point agrees.
+        let via_handle = reference
+            .optimize(&Constraints::default(), 0.0)
+            .unwrap();
+        assert_eq!(
+            via_handle.frontiers[0].frontier.len(),
+            run.result.frontiers[0].frontier.len()
+        );
+    }
+
+    #[test]
+    fn spec_level_optimize_convenience() {
+        let ctx = ApiContext::new();
+        let mut spec = decode_spec(TINY_GQA);
+        spec.sweep = Some(shared_grid());
+        let r = spec.optimize(&ctx, &Constraints::default(), 0.0).unwrap();
+        assert_eq!(r.frontiers.len(), 1);
+        assert_eq!(r.workload_names[0], "tiny-gqa-decode32+16");
+        assert!(!r.frontiers[0].frontier.is_empty());
+    }
+
+    #[test]
+    fn serving_sweep_optimize_entry_point() {
+        let ctx = ApiContext::new();
+        let (run, s2) = serving_spec()
+            .serve_fused_with(&ctx, &shared_grid())
+            .unwrap();
+        let r = s2.optimize(&Constraints::default(), 0.0).unwrap();
+        assert_eq!(r.frontiers.len(), 1);
+        assert_eq!(r.frontiers[0].end_cycles, run.result.total_cycles);
+        assert!(!r.frontiers[0].frontier.is_empty());
+    }
+}

@@ -12,8 +12,7 @@ use anyhow::{bail, Result};
 use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSink, SweepSpec};
 use crate::serving::ServingParams;
 use crate::sim::serving::{
-    arena_capacity, simulate_serving, simulate_serving_with, ServingResult,
-    ServingSimOptions,
+    simulate_serving, simulate_serving_with, ServingResult, ServingSimOptions,
 };
 use crate::trace::{OccupancyTrace, TraceSink};
 use crate::util::MIB;
@@ -86,9 +85,10 @@ impl ExperimentSpec {
     /// tightens the capacity to the *observed* peak; pass the same
     /// explicit grid to both paths when comparing them.
     pub fn serving_arena_grid(&self) -> Result<SweepSpec> {
-        let params = self.serving_params()?;
-        let bound = arena_capacity(&self.model, &params).max(1);
-        let capacity = bound.div_ceil(16 * MIB).max(1) * 16 * MIB;
+        self.serving_params()?; // typed error for single-sequence specs
+        // Shared bound/rounding formula with the optimizer's covering
+        // grids — one definition, no drift.
+        let capacity = super::optimize::covering_capacity_bound(self);
         Ok(serving_axes(capacity))
     }
 
@@ -129,15 +129,18 @@ impl ExperimentSpec {
             },
         )?;
         let points = sink.into_points(&result.stats);
+        let sweep = ServingSweep {
+            workload: result.workload.clone(),
+            end_cycles: result.total_cycles,
+            spec: grid.clone(),
+            points,
+        };
         Ok((
             ServingRun {
                 spec: self.clone(),
                 result,
             },
-            ServingSweep {
-                spec: grid.clone(),
-                points,
-            },
+            sweep,
         ))
     }
 }
@@ -175,8 +178,9 @@ impl ServingRun {
     }
 
     /// Stage II over the serving trace: the spec's grid, or
-    /// [`ServingRun::serving_grid`] when the spec left it open.
-    pub fn stage2(&self, ctx: &ApiContext) -> ServingSweep {
+    /// [`ServingRun::serving_grid`] when the spec left it open. Errors
+    /// (instead of panicking) if the trace is unfinalized.
+    pub fn stage2(&self, ctx: &ApiContext) -> Result<ServingSweep> {
         let grid = self
             .spec
             .sweep
@@ -186,24 +190,31 @@ impl ServingRun {
     }
 
     /// Stage II with an explicit grid.
-    pub fn stage2_with(&self, ctx: &ApiContext, grid: &SweepSpec) -> ServingSweep {
+    pub fn stage2_with(&self, ctx: &ApiContext, grid: &SweepSpec) -> Result<ServingSweep> {
         let points = sweep(
             &ctx.cacti,
             &self.result.trace,
             &self.result.stats,
             grid,
             self.spec.freq_ghz(),
-        );
-        ServingSweep {
+        )?;
+        Ok(ServingSweep {
+            workload: self.result.workload.clone(),
+            end_cycles: self.result.total_cycles,
             spec: grid.clone(),
             points,
-        }
+        })
     }
 }
 
-/// Stage-II output over a serving trace.
+/// Stage-II output over a serving trace. Carries the workload label and
+/// the run length so it can feed the Stage-II optimizer
+/// (`ServingSweep::optimize`, [`crate::banking::optimize`]) standalone.
 #[derive(Debug, Clone)]
 pub struct ServingSweep {
+    pub workload: String,
+    /// Stage-I makespan in cycles (wake-exposure accounting).
+    pub end_cycles: u64,
     pub spec: SweepSpec,
     pub points: Vec<SweepPoint>,
 }
@@ -253,7 +264,7 @@ mod tests {
         let run = serving_spec().run_serving().unwrap();
         assert_eq!(run.result.completed, 24);
         assert!(run.trace().peak_needed() > 0);
-        let s2 = run.stage2(&ctx);
+        let s2 = run.stage2(&ctx).unwrap();
         assert!(!s2.points.is_empty());
         let best = s2.best().unwrap();
         assert!(best.eval.banks >= 1);
@@ -288,7 +299,7 @@ mod tests {
         // Same explicit grid for both paths (the fused default derives
         // its capacity from the arena bound, not the observed peak).
         let grid = reference.serving_grid();
-        let ref_sweep = reference.stage2_with(&ctx, &grid);
+        let ref_sweep = reference.stage2_with(&ctx, &grid).unwrap();
         let (run, fused) = spec.serve_fused_with(&ctx, &grid).unwrap();
         assert_eq!(run.result.total_cycles, reference.result.total_cycles);
         assert_eq!(run.result.stats, reference.result.stats);

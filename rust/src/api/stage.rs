@@ -207,14 +207,16 @@ impl Stage1Run {
     }
 
     /// Stage II over the shared-SRAM trace with the run's aggregate
-    /// access statistics (Table II semantics).
-    pub fn stage2(&self, ctx: &ApiContext) -> Stage2Run<'_> {
+    /// access statistics (Table II semantics). Errors (instead of
+    /// panicking) if the trace is unfinalized — possible only through
+    /// direct mutation of `result`.
+    pub fn stage2(&self, ctx: &ApiContext) -> Result<Stage2Run<'_>> {
         let spec = self.effective_sweep();
         self.stage2_with(ctx, &spec)
     }
 
     /// Stage II over the shared-SRAM trace with an explicit grid.
-    pub fn stage2_with(&self, ctx: &ApiContext, spec: &SweepSpec) -> Stage2Run<'_> {
+    pub fn stage2_with(&self, ctx: &ApiContext, spec: &SweepSpec) -> Result<Stage2Run<'_>> {
         let trace = self.result.sram_trace();
         let points = sweep(
             &ctx.cacti,
@@ -222,19 +224,19 @@ impl Stage1Run {
             &self.result.stats,
             spec,
             self.spec.freq_ghz(),
-        );
-        Stage2Run {
+        )?;
+        Ok(Stage2Run {
             stage1: self,
             spec: spec.clone(),
             per_memory: vec![(trace.memory.clone(), points)],
-        }
+        })
     }
 
     /// Stage II independently per on-chip memory (Table III evaluates
     /// shared SRAM, DM1, DM2 separately). Traces zip *defensively* with
     /// their per-memory statistics: a length mismatch evaluates the
     /// common prefix instead of panicking.
-    pub fn stage2_per_memory(&self, ctx: &ApiContext) -> Stage2Run<'_> {
+    pub fn stage2_per_memory(&self, ctx: &ApiContext) -> Result<Stage2Run<'_>> {
         let spec = self.effective_sweep();
         self.stage2_per_memory_with(ctx, &spec)
     }
@@ -244,24 +246,24 @@ impl Stage1Run {
         &self,
         ctx: &ApiContext,
         spec: &SweepSpec,
-    ) -> Stage2Run<'_> {
+    ) -> Result<Stage2Run<'_>> {
         let per_memory = self
             .result
             .traces
             .iter()
             .zip(self.result.per_mem_stats.iter())
             .map(|(tr, st)| {
-                (
+                Ok((
                     tr.memory.clone(),
-                    sweep(&ctx.cacti, tr, st, spec, self.spec.freq_ghz()),
-                )
+                    sweep(&ctx.cacti, tr, st, spec, self.spec.freq_ghz())?,
+                ))
             })
-            .collect();
-        Stage2Run {
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Stage2Run {
             stage1: self,
             spec: spec.clone(),
             per_memory,
-        }
+        })
     }
 }
 
@@ -336,7 +338,7 @@ mod tests {
         let s1 = tiny_spec().run_stage1(&ctx).unwrap();
         assert!(s1.result.feasible());
         assert!(s1.energy.total_j() > 0.0);
-        let s2 = s1.stage2(&ctx);
+        let s2 = s1.stage2(&ctx).unwrap();
         assert!(!s2.shared().is_empty());
         // Gating must find idle intervals and cut leakage vs B=1.
         let best = s2
@@ -361,8 +363,8 @@ mod tests {
             &s1.result.stats,
             &small_grid(),
             s1.spec.freq_ghz(),
-        );
-        let s2 = s1.stage2(&ctx);
+        ).unwrap();
+        let s2 = s1.stage2(&ctx).unwrap();
         assert_eq!(s2.shared().len(), direct.len());
         for (a, b) in s2.shared().iter().zip(&direct) {
             assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
@@ -381,13 +383,13 @@ mod tests {
             .unwrap();
         let mut s1 = spec.run_stage1(&ctx).unwrap();
         assert_eq!(s1.result.traces.len(), 3);
-        let full = s1.stage2_per_memory(&ctx);
+        let full = s1.stage2_per_memory(&ctx).unwrap();
         assert_eq!(full.per_memory.len(), 3);
 
         // Divergent lengths (e.g. a deserialized result missing stats)
         // must evaluate the common prefix, not panic.
         s1.result.per_mem_stats.truncate(1);
-        let partial = s1.stage2_per_memory(&ctx);
+        let partial = s1.stage2_per_memory(&ctx).unwrap();
         assert_eq!(partial.per_memory.len(), 1);
         assert_eq!(partial.per_memory[0].0, "sram");
     }
@@ -418,7 +420,7 @@ mod tests {
         let ctx = ApiContext::new();
         let spec = tiny_spec();
         let s1 = spec.run_stage1(&ctx).unwrap();
-        let reference = s1.stage2_with(&ctx, &small_grid());
+        let reference = s1.stage2_with(&ctx, &small_grid()).unwrap();
         let (summary, points) = spec.stream_stage2(&ctx).unwrap();
         assert_eq!(summary.total_cycles(), s1.result.total_cycles);
         assert_eq!(summary.stats(), &s1.result.stats);

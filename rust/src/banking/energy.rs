@@ -6,11 +6,39 @@
 //!   * `E_leak = sum_k P_bank * B_act(k) * dt_k`  (+ ungated idle leak)
 //!   * `E_sw   = N_sw * E_sw_bank`                (break-even-filtered)
 
+use std::fmt;
+
 use crate::cacti::{CactiModel, SramCharacterization};
 use crate::trace::{AccessStats, OccupancyTrace};
 
 use super::activity::{avg_active, bank_activity, idle_intervals, OccupancyBasis};
 use super::policy::GatingPolicy;
+
+/// Typed Stage-II evaluation error.
+///
+/// The evaluator used to `expect` a finalized trace and panic on library
+/// misuse; it now reports the condition as data so callers (the CLI, the
+/// batch runner, the optimizer) can surface it instead of aborting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnergyError {
+    /// The occupancy trace was never [`OccupancyTrace::finalize`]d, so
+    /// there is no end time to integrate leakage over.
+    UnfinalizedTrace { memory: String },
+}
+
+impl fmt::Display for EnergyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EnergyError::UnfinalizedTrace { memory } => write!(
+                f,
+                "occupancy trace `{memory}` is not finalized; call \
+                 OccupancyTrace::finalize(end) before Stage-II evaluation"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EnergyError {}
 
 /// Full evaluation of one (C, B, alpha, policy) candidate.
 #[derive(Debug, Clone)]
@@ -42,9 +70,17 @@ impl BankingEval {
         self.e_dyn_j + self.e_leak_j + self.e_sw_j
     }
 
-    /// Paper's ΔE% relative to a baseline evaluation.
+    /// Paper's ΔE% relative to a baseline evaluation. A zero-energy
+    /// baseline (zero-length trace with zero access counts) reports 0%
+    /// ("no change") instead of NaN/inf — same guard as
+    /// [`super::sweep::SweepPoint::delta_e_pct`].
     pub fn delta_pct(&self, base: &BankingEval) -> f64 {
-        (self.e_total_j() - base.e_total_j()) / base.e_total_j() * 100.0
+        let b = base.e_total_j();
+        if b == 0.0 {
+            0.0
+        } else {
+            (self.e_total_j() - b) / b * 100.0
+        }
     }
 }
 
@@ -57,6 +93,10 @@ impl BankingEval {
 /// fused single-pass engine instead ([`crate::banking::sweep`] /
 /// [`crate::banking::fused`]), whose accumulators replicate these exact
 /// expressions — keep the two in sync.
+///
+/// Errors with [`EnergyError::UnfinalizedTrace`] when the trace has no
+/// end time. Zero-length (`finalize(0)`) traces evaluate cleanly to
+/// all-zero energies.
 pub fn evaluate(
     cacti: &CactiModel,
     trace: &OccupancyTrace,
@@ -66,10 +106,15 @@ pub fn evaluate(
     alpha: f64,
     policy: GatingPolicy,
     freq_ghz: f64,
-) -> BankingEval {
+) -> Result<BankingEval, EnergyError> {
     let ch = cacti.characterize(capacity, banks);
     let cyc_to_s = 1.0 / (freq_ghz * 1e9);
-    let end = trace.end_time().expect("trace must be finalized") as f64;
+    let Some(end) = trace.end_time() else {
+        return Err(EnergyError::UnfinalizedTrace {
+            memory: trace.memory.clone(),
+        });
+    };
+    let end = end as f64;
 
     // Eq. 3 — dynamic energy from Stage-I access counts.
     let e_dyn = stats.reads as f64 * ch.e_read_j + stats.writes as f64 * ch.e_write_j;
@@ -106,7 +151,7 @@ pub fn evaluate(
     };
     let e_sw = n_switch as f64 * per_switch;
 
-    BankingEval {
+    Ok(BankingEval {
         capacity,
         banks,
         alpha,
@@ -116,6 +161,8 @@ pub fn evaluate(
         e_sw_j: e_sw,
         n_switch,
         avg_active_banks: avg,
+        // Guard the utilization division: a zero-length trace (end == 0)
+        // has zero total bank-cycles and would otherwise yield NaN.
         gated_fraction: if total_bank_cycles > 0.0 {
             gated_cycles as f64 / total_bank_cycles
         } else {
@@ -124,7 +171,7 @@ pub fn evaluate(
         area_mm2: ch.area_mm2,
         latency_cycles: ch.latency_cycles,
         characterization: ch,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -158,7 +205,7 @@ mod tests {
         let cacti = CactiModel::default();
         let tr = synth_trace(128 * MIB, 30 * MIB, 1_000_000, 100_000_000);
         let st = stats(1_000_000, 500_000);
-        let ev = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
+        let ev = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0).unwrap();
         let ch = cacti.characterize(128 * MIB, 1);
         let want_leak = ch.p_leak_bank_w * 0.1; // 100M cycles = 0.1 s
         assert!((ev.e_leak_j - want_leak).abs() / want_leak < 1e-9);
@@ -173,11 +220,11 @@ mod tests {
         let cacti = CactiModel::default();
         let tr = synth_trace(128 * MIB, 30 * MIB, 1_000_000, 100_000_000);
         let st = stats(10_000_000, 5_000_000);
-        let base = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
+        let base = evaluate(&cacti, &tr, &st, 128 * MIB, 1, 0.9, GatingPolicy::None, 1.0).unwrap();
         let b8 = evaluate(
             &cacti, &tr, &st, 128 * MIB, 8, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        ).unwrap();
         assert!(
             b8.e_total_j() < base.e_total_j() * 0.7,
             "B=8 gated {} vs B=1 {}",
@@ -195,11 +242,11 @@ mod tests {
         let tr = synth_trace(64 * MIB, 20 * MIB, 500_000, 50_000_000);
         let st = stats(1_000_000, 1_000_000);
         for &b in &[2u32, 4, 8, 16] {
-            let none = evaluate(&cacti, &tr, &st, 64 * MIB, b, 0.9, GatingPolicy::None, 1.0);
+            let none = evaluate(&cacti, &tr, &st, 64 * MIB, b, 0.9, GatingPolicy::None, 1.0).unwrap();
             let agg = evaluate(
                 &cacti, &tr, &st, 64 * MIB, b, 0.9,
                 GatingPolicy::Aggressive, 1.0,
-            );
+            ).unwrap();
             assert!(
                 agg.e_total_j() <= none.e_total_j() + 1e-12,
                 "B={b}: gating made it worse"
@@ -215,11 +262,11 @@ mod tests {
         let agg = evaluate(
             &cacti, &tr, &st, 64 * MIB, 8, 1.0,
             GatingPolicy::Aggressive, 1.0,
-        );
+        ).unwrap();
         let cons = evaluate(
             &cacti, &tr, &st, 64 * MIB, 8, 0.9,
             GatingPolicy::conservative(), 1.0,
-        );
+        ).unwrap();
         assert!(cons.gated_fraction <= agg.gated_fraction);
         assert!(cons.n_switch <= agg.n_switch);
     }
@@ -230,8 +277,8 @@ mod tests {
         let cacti = CactiModel::default();
         let tr = synth_trace(64 * MIB, 30 * MIB, 500_000, 50_000_000);
         let st = stats(1, 1);
-        let a10 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 1.0, GatingPolicy::Aggressive, 1.0);
-        let a05 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 0.5, GatingPolicy::Aggressive, 1.0);
+        let a10 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 1.0, GatingPolicy::Aggressive, 1.0).unwrap();
+        let a05 = evaluate(&cacti, &tr, &st, 64 * MIB, 4, 0.5, GatingPolicy::Aggressive, 1.0).unwrap();
         assert!(a05.avg_active_banks >= a10.avg_active_banks);
         assert!(a05.e_leak_j >= a10.e_leak_j);
     }
@@ -241,15 +288,15 @@ mod tests {
         let cacti = CactiModel::default();
         let tr = synth_trace(64 * MIB, 20 * MIB, 200_000, 50_000_000);
         let st = stats(1_000_000, 1_000_000);
-        let none = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::None, 1.0);
+        let none = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::None, 1.0).unwrap();
         let drowsy = evaluate(
             &cacti, &tr, &st, 64 * MIB, 8, 0.9,
             GatingPolicy::drowsy(), 1.0,
-        );
+        ).unwrap();
         let full = evaluate(
             &cacti, &tr, &st, 64 * MIB, 8, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        ).unwrap();
         assert!(drowsy.e_leak_j < none.e_leak_j);
         assert!(drowsy.e_leak_j > full.e_leak_j);
         // Drowsy acts on more intervals (no break-even filter).
@@ -261,10 +308,93 @@ mod tests {
         let cacti = CactiModel::default();
         let tr = synth_trace(64 * MIB, 10 * MIB, 500_000, 50_000_000);
         let st = stats(100, 100);
-        let a = evaluate(&cacti, &tr, &st, 64 * MIB, 1, 0.9, GatingPolicy::None, 1.0);
-        let b = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::Aggressive, 1.0);
+        let a = evaluate(&cacti, &tr, &st, 64 * MIB, 1, 0.9, GatingPolicy::None, 1.0).unwrap();
+        let b = evaluate(&cacti, &tr, &st, 64 * MIB, 8, 0.9, GatingPolicy::Aggressive, 1.0).unwrap();
         let d = b.delta_pct(&a);
         assert!((d - (b.e_total_j() - a.e_total_j()) / a.e_total_j() * 100.0).abs() < 1e-12);
         assert!(d < 0.0, "banking+gating should be negative ΔE");
+    }
+
+    #[test]
+    fn unfinalized_trace_is_a_typed_error_not_a_panic() {
+        // Regression: evaluate used to `expect("trace must be finalized")`.
+        let cacti = CactiModel::default();
+        let tr = OccupancyTrace::new("dm1", 64 * MIB); // never finalized
+        let err = evaluate(
+            &cacti,
+            &tr,
+            &stats(1, 1),
+            64 * MIB,
+            4,
+            0.9,
+            GatingPolicy::Aggressive,
+            1.0,
+        )
+        .unwrap_err();
+        assert_eq!(
+            err,
+            EnergyError::UnfinalizedTrace {
+                memory: "dm1".to_string()
+            }
+        );
+        assert!(err.to_string().contains("dm1"), "{err}");
+        assert!(err.to_string().contains("finalize"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_trace_evaluates_to_finite_zeroes() {
+        // Regression: end == 0 means total_bank_cycles == 0; the
+        // gated-fraction division must be guarded, not NaN.
+        let cacti = CactiModel::default();
+        let mut tr = OccupancyTrace::new("sram", 64 * MIB);
+        tr.finalize(0);
+        for policy in [
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ] {
+            let ev = evaluate(
+                &cacti,
+                &tr,
+                &AccessStats::default(),
+                64 * MIB,
+                8,
+                0.9,
+                policy,
+                1.0,
+            )
+            .unwrap();
+            assert_eq!(ev.e_total_j(), 0.0, "{policy:?}");
+            assert_eq!(ev.gated_fraction, 0.0, "{policy:?}");
+            assert!(ev.gated_fraction.is_finite());
+            assert!(ev.avg_active_banks == 0.0);
+            assert_eq!(ev.n_switch, 0);
+        }
+    }
+
+    #[test]
+    fn zero_energy_baseline_delta_pct_is_zero_not_nan() {
+        let cacti = CactiModel::default();
+        let mut tr = OccupancyTrace::new("sram", 64 * MIB);
+        tr.finalize(0);
+        let st = AccessStats::default();
+        let base =
+            evaluate(&cacti, &tr, &st, 64 * MIB, 1, 0.9, GatingPolicy::None, 1.0).unwrap();
+        let banked = evaluate(
+            &cacti,
+            &tr,
+            &st,
+            64 * MIB,
+            8,
+            0.9,
+            GatingPolicy::Aggressive,
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(base.e_total_j(), 0.0);
+        let d = banked.delta_pct(&base);
+        assert!(d.is_finite(), "delta_pct must not be NaN/inf: {d}");
+        assert_eq!(d, 0.0);
     }
 }

@@ -44,7 +44,7 @@ use crate::trace::sink::{MemoryDesc, TraceSink};
 use crate::trace::{AccessStats, OccupancyTrace};
 use crate::util::ceil_div;
 
-use super::energy::BankingEval;
+use super::energy::{BankingEval, EnergyError};
 use super::policy::{GateDecider, GatingPolicy};
 use super::sweep::{SweepPoint, SweepSpec};
 
@@ -385,13 +385,21 @@ const PARALLEL_WORK_THRESHOLD: u128 = 1 << 18;
 /// groups across OS threads when the grid × trace product is large.
 /// Per-candidate results are independent, so the output is byte-identical
 /// at any thread count.
+///
+/// Errors with [`EnergyError::UnfinalizedTrace`] instead of panicking
+/// when the trace has no end time.
 pub fn sweep_fused(
     cacti: &CactiModel,
     trace: &OccupancyTrace,
     stats: &AccessStats,
     spec: &SweepSpec,
     freq_ghz: f64,
-) -> Vec<SweepPoint> {
+) -> Result<Vec<SweepPoint>, EnergyError> {
+    let Some(end) = trace.end_time() else {
+        return Err(EnergyError::UnfinalizedTrace {
+            memory: trace.memory.clone(),
+        });
+    };
     let peak = trace.peak_needed();
     // Pre-filter infeasible capacities: same outcome as the post-filter,
     // without paying traversal work for points that get dropped.
@@ -406,7 +414,6 @@ pub fn sweep_fused(
         alphas: spec.alphas.clone(),
         policies: spec.policies.clone(),
     };
-    let end = trace.end_time().expect("trace must be finalized");
     let mut engine = FusedSweep::new(cacti, &feasible, freq_ghz);
 
     let work = trace.samples().len() as u128 * engine.candidates() as u128;
@@ -439,7 +446,7 @@ pub fn sweep_fused(
         }
     }
     engine.finish(end);
-    engine.into_points(stats, peak)
+    Ok(engine.into_points(stats, peak))
 }
 
 /// Streaming Stage-II consumer: a [`TraceSink`] that runs the fused sweep
@@ -621,8 +628,8 @@ mod tests {
         crate::util::proptest::check("fused-vs-naive", 40, |rng| {
             let tr = random_trace(rng, 64 * MIB);
             let st = stats();
-            let fused = sweep_fused(&cacti, &tr, &st, &grid(), 1.0);
-            let naive = sweep_naive(&cacti, &tr, &st, &grid(), 1.0);
+            let fused = sweep_fused(&cacti, &tr, &st, &grid(), 1.0).unwrap();
+            let naive = sweep_naive(&cacti, &tr, &st, &grid(), 1.0).unwrap();
             assert_points_identical(&fused, &naive);
         });
     }
@@ -635,8 +642,8 @@ mod tests {
         let mut empty = OccupancyTrace::new("m", 64 * MIB);
         empty.finalize(0);
         assert_points_identical(
-            &sweep_fused(&cacti, &empty, &st, &grid(), 1.0),
-            &sweep_naive(&cacti, &empty, &st, &grid(), 1.0),
+            &sweep_fused(&cacti, &empty, &st, &grid(), 1.0).unwrap(),
+            &sweep_naive(&cacti, &empty, &st, &grid(), 1.0).unwrap(),
         );
         // Constant occupancy with a zero-duration final sample that sets
         // the peak (feasibility filter must see it).
@@ -646,8 +653,8 @@ mod tests {
         spike.finalize(100);
         assert_eq!(spike.peak_needed(), 60 * MIB);
         assert_points_identical(
-            &sweep_fused(&cacti, &spike, &st, &grid(), 1.0),
-            &sweep_naive(&cacti, &spike, &st, &grid(), 1.0),
+            &sweep_fused(&cacti, &spike, &st, &grid(), 1.0).unwrap(),
+            &sweep_naive(&cacti, &spike, &st, &grid(), 1.0).unwrap(),
         );
     }
 
@@ -670,7 +677,7 @@ mod tests {
         sink.finish(tr.end_time().unwrap());
         assert_eq!(sink.peak_needed(), tr.peak_needed());
         let streamed = sink.into_points(&st);
-        let materialized = sweep_fused(&cacti, &tr, &st, &spec, 1.0);
+        let materialized = sweep_fused(&cacti, &tr, &st, &spec, 1.0).unwrap();
         assert_points_identical(&streamed, &materialized);
     }
 
@@ -702,7 +709,7 @@ mod tests {
         tr.record(10, 1024, 0);
         tr.record(50_000, 0, 0);
         tr.finalize(1_000_000);
-        let reference = sweep_fused(&cacti, &tr, &AccessStats::default(), &spec, 1.0);
+        let reference = sweep_fused(&cacti, &tr, &AccessStats::default(), &spec, 1.0).unwrap();
         assert_points_identical(&streamed, &reference);
         // The transient MIB at t=10 never pinned the peak.
         assert_eq!(streamed[0].eval.capacity, MIB);
@@ -736,8 +743,8 @@ mod tests {
         let work = tr.samples().len() as u128 * candidates as u128;
         assert!(work >= PARALLEL_WORK_THRESHOLD, "work={work}");
         let st = stats();
-        let fused = sweep_fused(&cacti, &tr, &st, &spec, 1.0);
-        let naive = sweep_naive(&cacti, &tr, &st, &spec, 1.0);
+        let fused = sweep_fused(&cacti, &tr, &st, &spec, 1.0).unwrap();
+        let naive = sweep_naive(&cacti, &tr, &st, &spec, 1.0).unwrap();
         assert_points_identical(&fused, &naive);
     }
 }

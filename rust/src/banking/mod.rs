@@ -10,6 +10,7 @@
 pub mod activity;
 pub mod energy;
 pub mod fused;
+pub mod optimize;
 pub mod policy;
 pub mod sweep;
 
@@ -17,7 +18,12 @@ pub use activity::{
     avg_active, bank_activity, banks_required, idle_intervals, ActivitySegment,
     OccupancyBasis,
 };
-pub use energy::{evaluate, BankingEval};
+pub use energy::{evaluate, BankingEval, EnergyError};
 pub use fused::{sweep_fused, FusedSweep, SweepSink};
+pub use optimize::{
+    optimize, pareto_frontier, ConfigKey, Constraints, FrontierPoint,
+    OptimizeError, OptimizeResult, PortfolioEntry, WorkloadFrontier,
+    WorkloadSweep,
+};
 pub use policy::{GateDecider, GatingPolicy};
 pub use sweep::{sweep, sweep_naive, SweepPoint, SweepSpec};

@@ -1,0 +1,810 @@
+//! Stage-II Pareto optimizer with cross-workload robust selection.
+//!
+//! The sweep ([`super::sweep`]) *evaluates* every (C, B, α, policy)
+//! candidate; this module *chooses* among them — the missing half of the
+//! paper's offline optimization flow. Three passes:
+//!
+//! 1. **Constraint filtering** ([`Constraints`]): drop candidates that
+//!    violate a maximum area overhead (ΔA% vs the unbanked reference), a
+//!    maximum wake-latency exposure (gated-interval wake-ups as a share
+//!    of the run), or a minimum capacity.
+//! 2. **ε-dominance Pareto frontier** ([`pareto_frontier`]) over the
+//!    three objectives (energy `E_tot`, activity/latency proxy
+//!    `avg_active_banks`, area `area_mm2` — all minimized). ε = 0 is the
+//!    exact frontier; ε > 0 thins near-duplicates (a point survives only
+//!    if no other point is within a factor `1+ε` of beating it on every
+//!    objective).
+//! 3. **Portfolio selection** ([`optimize`]): score every configuration
+//!    that is feasible on *all* supplied workloads by its per-workload
+//!    energy regret vs that workload's own optimum, and rank by
+//!    worst-case regret (tie-broken by weighted-mean regret, then by
+//!    config identity). The top entry is the *robust-best* configuration
+//!    — the concrete artifact behind the paper's observation that the
+//!    MHA-vs-GQA occupancy gap (2.72x peak) yields *different optimal
+//!    configurations* per workload.
+//!
+//! Everything here is deterministic: candidate order is canonicalized by
+//! total-order float comparison before any frontier or portfolio pass,
+//! so equal inputs produce byte-identical reports.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::util::MIB;
+
+use super::policy::GatingPolicy;
+use super::sweep::SweepPoint;
+
+/// One workload's evaluated sweep, as fed to the optimizer. `end_cycles`
+/// is the Stage-I run length (for wake-exposure accounting); `points`
+/// comes from [`super::sweep::sweep`] (or the streamed
+/// [`super::fused::SweepSink`]) — the optimizer never re-walks a trace.
+#[derive(Debug, Clone)]
+pub struct WorkloadSweep {
+    pub name: String,
+    pub end_cycles: u64,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Constraint filter applied before the frontier / portfolio passes.
+/// `None` fields are unconstrained.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Constraints {
+    /// Maximum banking area overhead, percent vs the unbanked (B=1)
+    /// reference at the same capacity (`SweepPoint::delta_a_pct`).
+    pub max_area_overhead_pct: Option<f64>,
+    /// Maximum wake-latency exposure, percent of the run spent waking
+    /// gated banks ([`wake_exposure_pct`]).
+    pub max_wake_exposure_pct: Option<f64>,
+    /// Minimum SRAM capacity in bytes (e.g. a functional floor from the
+    /// sizing loop).
+    pub min_capacity: Option<u64>,
+}
+
+impl Constraints {
+    /// Does `point` survive the filter for a run of `end_cycles`?
+    pub fn admits(&self, point: &SweepPoint, end_cycles: u64) -> bool {
+        if let Some(min) = self.min_capacity {
+            if point.eval.capacity < min {
+                return false;
+            }
+        }
+        if let Some(max) = self.max_area_overhead_pct {
+            if point.delta_a_pct() > max {
+                return false;
+            }
+        }
+        if let Some(max) = self.max_wake_exposure_pct {
+            if wake_exposure_pct(point, end_cycles) > max {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Wake-latency exposure of a candidate: every gated interval pays the
+/// organization's `wake_cycles` when its bank powers back on
+/// (`n_switch / 2` intervals), expressed as a percentage of the run.
+/// Zero-length runs report 0 (nothing was ever gated).
+pub fn wake_exposure_pct(point: &SweepPoint, end_cycles: u64) -> f64 {
+    if end_cycles == 0 {
+        return 0.0;
+    }
+    let wakeups = point.eval.n_switch / 2;
+    let wake_cycles = wakeups * point.eval.characterization.wake_cycles;
+    wake_cycles as f64 / end_cycles as f64 * 100.0
+}
+
+/// Typed optimizer error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OptimizeError {
+    /// `optimize` was called with no workloads.
+    NoWorkloads,
+    /// ε must be finite and >= 0.
+    InvalidEpsilon(f64),
+    /// Weights must match the workload count and sum to a positive value.
+    InvalidWeights(String),
+    /// A workload's sweep has no candidate surviving the constraints
+    /// (or its sweep was empty to begin with).
+    NoFeasibleConfigs { workload: String },
+    /// No configuration is feasible on every supplied workload, so a
+    /// portfolio cannot be selected (typically a grid whose capacities
+    /// don't reach the largest workload's peak).
+    NoSharedConfigs,
+}
+
+impl fmt::Display for OptimizeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptimizeError::NoWorkloads => {
+                write!(f, "optimize needs at least one workload sweep")
+            }
+            OptimizeError::InvalidEpsilon(e) => {
+                write!(f, "epsilon must be finite and >= 0 (got {e})")
+            }
+            OptimizeError::InvalidWeights(why) => write!(f, "invalid weights: {why}"),
+            OptimizeError::NoFeasibleConfigs { workload } => write!(
+                f,
+                "workload `{workload}` has no candidate satisfying the \
+                 constraints (check the grid covers its peak and the \
+                 constraint bounds are attainable)"
+            ),
+            OptimizeError::NoSharedConfigs => write!(
+                f,
+                "no configuration is feasible on every workload; widen the \
+                 grid so its capacities cover the largest workload's peak"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OptimizeError {}
+
+/// Canonical identity of a (C, B, α, policy) configuration across
+/// workloads. Floats are keyed by their bit patterns, so the key is
+/// total-ordered and hashable while staying exactly faithful to the
+/// grid's values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ConfigKey {
+    pub capacity: u64,
+    pub banks: u32,
+    alpha_bits: u64,
+    policy_kind: u8,
+    policy_param_bits: u64,
+}
+
+impl ConfigKey {
+    pub fn of(point: &SweepPoint) -> Self {
+        let (policy_kind, policy_param_bits) = match point.eval.policy {
+            GatingPolicy::None => (0, 0),
+            GatingPolicy::Aggressive => (1, 0),
+            GatingPolicy::Conservative { min_idle_factor } => {
+                (2, min_idle_factor.to_bits())
+            }
+            GatingPolicy::Drowsy { retention_factor } => {
+                (3, retention_factor.to_bits())
+            }
+        };
+        Self {
+            capacity: point.eval.capacity,
+            banks: point.eval.banks,
+            alpha_bits: point.eval.alpha.to_bits(),
+            policy_kind,
+            policy_param_bits,
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        f64::from_bits(self.alpha_bits)
+    }
+
+    pub fn policy(&self) -> GatingPolicy {
+        match self.policy_kind {
+            0 => GatingPolicy::None,
+            1 => GatingPolicy::Aggressive,
+            2 => GatingPolicy::Conservative {
+                min_idle_factor: f64::from_bits(self.policy_param_bits),
+            },
+            _ => GatingPolicy::Drowsy {
+                retention_factor: f64::from_bits(self.policy_param_bits),
+            },
+        }
+    }
+
+    /// Compact deterministic label, e.g. `64MiB/B8/a0.90/aggressive`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}MiB/B{}/a{:.2}/{}",
+            self.capacity / MIB,
+            self.banks,
+            self.alpha(),
+            self.policy().label(),
+        )
+    }
+}
+
+/// One frontier member with its derived wake exposure.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub point: SweepPoint,
+    pub wake_exposure_pct: f64,
+}
+
+/// Per-workload optimizer output: the constraint-feasible candidate
+/// count, the ε-Pareto frontier (canonical order: energy, then activity,
+/// then area), and the workload's own energy optimum (the portfolio
+/// regret reference).
+#[derive(Debug, Clone)]
+pub struct WorkloadFrontier {
+    pub workload: String,
+    pub end_cycles: u64,
+    /// Candidates surviving the constraint filter.
+    pub feasible: usize,
+    pub frontier: Vec<FrontierPoint>,
+    /// Lowest total energy among feasible candidates, joules.
+    pub best_energy_j: f64,
+    /// Identity of that energy-optimal candidate.
+    pub best_key: ConfigKey,
+}
+
+/// One portfolio candidate: a configuration feasible on every workload,
+/// scored by per-workload energy regret vs each workload's own optimum.
+#[derive(Debug, Clone)]
+pub struct PortfolioEntry {
+    pub key: ConfigKey,
+    /// Total energy on each workload (same order as the input slice).
+    pub energy_j: Vec<f64>,
+    /// Regret vs the workload's feasible optimum, percent (>= 0).
+    pub regret_pct: Vec<f64>,
+    pub worst_regret_pct: f64,
+    /// Weighted mean (equal weights unless supplied).
+    pub mean_regret_pct: f64,
+}
+
+/// Full optimizer output. `portfolio` is sorted best-first by
+/// (worst-case regret, mean regret, config identity); the robust-best
+/// configuration is [`OptimizeResult::robust_best`].
+#[derive(Debug, Clone)]
+pub struct OptimizeResult {
+    pub epsilon: f64,
+    pub constraints: Constraints,
+    pub workload_names: Vec<String>,
+    pub frontiers: Vec<WorkloadFrontier>,
+    pub portfolio: Vec<PortfolioEntry>,
+}
+
+impl OptimizeResult {
+    pub fn robust_best(&self) -> Option<&PortfolioEntry> {
+        self.portfolio.first()
+    }
+}
+
+/// The three minimized objectives of a candidate.
+#[inline]
+fn objectives(p: &SweepPoint) -> [f64; 3] {
+    [p.eval.e_total_j(), p.eval.avg_active_banks, p.eval.area_mm2]
+}
+
+/// Plain Pareto dominance (minimization): `a` beats-or-ties `b`
+/// everywhere and strictly beats it somewhere.
+#[inline]
+fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Multiplicative ε-dominance: `a` is within a factor `1+ε` of beating
+/// `b` on every objective and strictly beats it on at least one.
+/// Objectives are non-negative, so the multiplicative form is safe;
+/// ε = 0 reduces to [`dominates`].
+#[inline]
+fn eps_dominates(a: &[f64; 3], b: &[f64; 3], eps: f64) -> bool {
+    let scale = 1.0 + eps;
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if *x > y * scale {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Canonical deterministic processing order: objectives
+/// lexicographically (total order on floats), tie-broken by config
+/// identity. Dominators always sort before the points they dominate.
+fn canonical_order(points: &[SweepPoint]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&i, &j| {
+        let a = objectives(&points[i]);
+        let b = objectives(&points[j]);
+        a[0].total_cmp(&b[0])
+            .then(a[1].total_cmp(&b[1]))
+            .then(a[2].total_cmp(&b[2]))
+            .then(ConfigKey::of(&points[i]).cmp(&ConfigKey::of(&points[j])))
+    });
+    order
+}
+
+/// Indices of the ε-Pareto frontier of `points` (minimizing energy,
+/// activity, and area), in canonical order. With ε = 0 this is the exact
+/// non-dominated set; larger ε thins near-duplicates. Regardless of ε,
+/// no returned point is strictly dominated by *any* input point (a final
+/// guard pass enforces this even when ε-thinning removed a point's
+/// dominator chain).
+pub fn pareto_frontier(points: &[SweepPoint], epsilon: f64) -> Vec<usize> {
+    let obj: Vec<[f64; 3]> = points.iter().map(objectives).collect();
+    let order = canonical_order(points);
+    let mut archive: Vec<usize> = Vec::new();
+    'candidates: for &i in &order {
+        for &j in &archive {
+            if eps_dominates(&obj[j], &obj[i], epsilon) {
+                continue 'candidates;
+            }
+        }
+        archive.retain(|&j| !eps_dominates(&obj[i], &obj[j], epsilon));
+        archive.push(i);
+    }
+    // Final dominated-free guarantee across the *whole* input set.
+    archive.retain(|&i| !(0..points.len()).any(|j| j != i && dominates(&obj[j], &obj[i])));
+    // Restore canonical order (retain/push may have permuted it).
+    let rank: BTreeMap<usize, usize> =
+        order.iter().enumerate().map(|(r, &i)| (i, r)).collect();
+    archive.sort_by_key(|i| rank[i]);
+    archive
+}
+
+/// Run the optimizer over one or more workload sweeps: constraint
+/// filtering, per-workload ε-Pareto frontiers, and — when every workload
+/// shares at least one feasible configuration — the cross-workload
+/// regret portfolio. `weights`, when given, must match `workloads` in
+/// length and weighs the mean-regret tie-breaker (worst-case regret
+/// always ranks first).
+pub fn optimize(
+    workloads: &[WorkloadSweep],
+    constraints: &Constraints,
+    epsilon: f64,
+    weights: Option<&[f64]>,
+) -> Result<OptimizeResult, OptimizeError> {
+    if workloads.is_empty() {
+        return Err(OptimizeError::NoWorkloads);
+    }
+    if !epsilon.is_finite() || epsilon < 0.0 {
+        return Err(OptimizeError::InvalidEpsilon(epsilon));
+    }
+    let weights = match weights {
+        None => vec![1.0; workloads.len()],
+        Some(w) => {
+            if w.len() != workloads.len() {
+                return Err(OptimizeError::InvalidWeights(format!(
+                    "{} weights for {} workloads",
+                    w.len(),
+                    workloads.len()
+                )));
+            }
+            if w.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                return Err(OptimizeError::InvalidWeights(
+                    "weights must be finite and >= 0".to_string(),
+                ));
+            }
+            if w.iter().sum::<f64>() <= 0.0 {
+                return Err(OptimizeError::InvalidWeights(
+                    "weights must sum to > 0".to_string(),
+                ));
+            }
+            w.to_vec()
+        }
+    };
+    let weight_sum: f64 = weights.iter().sum();
+
+    // Pass 1+2: per-workload constraint filter + frontier.
+    let mut frontiers = Vec::with_capacity(workloads.len());
+    // Per-workload feasible energy by config (for the portfolio pass).
+    let mut energy_maps: Vec<BTreeMap<ConfigKey, f64>> = Vec::new();
+    for w in workloads {
+        let feasible: Vec<SweepPoint> = w
+            .points
+            .iter()
+            .filter(|p| constraints.admits(p, w.end_cycles))
+            .cloned()
+            .collect();
+        if feasible.is_empty() {
+            return Err(OptimizeError::NoFeasibleConfigs {
+                workload: w.name.clone(),
+            });
+        }
+        // The canonical order sorts by energy first, so the workload's
+        // energy optimum is the first canonical candidate.
+        let order = canonical_order(&feasible);
+        let best = &feasible[order[0]];
+        let best_energy = best.eval.e_total_j();
+        let best_key = ConfigKey::of(best);
+
+        let frontier = pareto_frontier(&feasible, epsilon)
+            .into_iter()
+            .map(|i| FrontierPoint {
+                wake_exposure_pct: wake_exposure_pct(&feasible[i], w.end_cycles),
+                point: feasible[i].clone(),
+            })
+            .collect();
+
+        let mut energies = BTreeMap::new();
+        for p in &feasible {
+            // Duplicate configs cannot arise from one grid sweep; keep
+            // the first deterministically if a caller passes merged sets.
+            energies
+                .entry(ConfigKey::of(p))
+                .or_insert_with(|| p.eval.e_total_j());
+        }
+        energy_maps.push(energies);
+
+        frontiers.push(WorkloadFrontier {
+            workload: w.name.clone(),
+            end_cycles: w.end_cycles,
+            feasible: feasible.len(),
+            frontier,
+            best_energy_j: best_energy,
+            best_key,
+        });
+    }
+
+    // Pass 3: portfolio over configurations feasible everywhere.
+    let mut portfolio: Vec<PortfolioEntry> = Vec::new();
+    for (key, &e0) in &energy_maps[0] {
+        let mut energy_j = Vec::with_capacity(workloads.len());
+        energy_j.push(e0);
+        let mut shared = true;
+        for m in &energy_maps[1..] {
+            match m.get(key) {
+                Some(&e) => energy_j.push(e),
+                None => {
+                    shared = false;
+                    break;
+                }
+            }
+        }
+        if !shared {
+            continue;
+        }
+        let regret_pct: Vec<f64> = energy_j
+            .iter()
+            .zip(&frontiers)
+            .map(|(&e, f)| {
+                if f.best_energy_j == 0.0 {
+                    0.0
+                } else {
+                    (e - f.best_energy_j) / f.best_energy_j * 100.0
+                }
+            })
+            .collect();
+        let worst = regret_pct.iter().copied().fold(0.0f64, f64::max);
+        let mean = regret_pct
+            .iter()
+            .zip(&weights)
+            .map(|(r, w)| r * w)
+            .sum::<f64>()
+            / weight_sum;
+        portfolio.push(PortfolioEntry {
+            key: *key,
+            energy_j,
+            regret_pct,
+            worst_regret_pct: worst,
+            mean_regret_pct: mean,
+        });
+    }
+    if portfolio.is_empty() {
+        return Err(OptimizeError::NoSharedConfigs);
+    }
+    portfolio.sort_by(|a, b| {
+        a.worst_regret_pct
+            .total_cmp(&b.worst_regret_pct)
+            .then(a.mean_regret_pct.total_cmp(&b.mean_regret_pct))
+            .then(a.key.cmp(&b.key))
+    });
+
+    Ok(OptimizeResult {
+        epsilon,
+        constraints: constraints.clone(),
+        workload_names: workloads.iter().map(|w| w.name.clone()).collect(),
+        frontiers,
+        portfolio,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::sweep::{sweep_naive, SweepSpec};
+    use crate::cacti::CactiModel;
+    use crate::trace::{AccessStats, OccupancyTrace};
+
+    fn synth_trace(cap: u64, occ: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", cap);
+        let mut t = 0;
+        while t < 50_000_000 {
+            tr.record(t, occ, 0);
+            tr.record(t + 200_000, occ / 8, 0);
+            t += 1_000_000;
+        }
+        tr.finalize(50_000_000);
+        tr
+    }
+
+    fn stats() -> AccessStats {
+        AccessStats {
+            reads: 5_000_000,
+            writes: 2_000_000,
+            ..Default::default()
+        }
+    }
+
+    fn grid(capacities: Vec<u64>) -> SweepSpec {
+        SweepSpec {
+            capacities,
+            banks: vec![1, 2, 4, 8, 16, 32],
+            alphas: vec![0.9],
+            policies: vec![
+                GatingPolicy::None,
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        }
+    }
+
+    fn workload(name: &str, occ_mib: u64) -> WorkloadSweep {
+        let tr = synth_trace(128 * MIB, occ_mib * MIB);
+        let points = sweep_naive(
+            &CactiModel::default(),
+            &tr,
+            &stats(),
+            &grid(vec![64 * MIB, 96 * MIB, 128 * MIB]),
+            1.0,
+        )
+        .unwrap();
+        WorkloadSweep {
+            name: name.to_string(),
+            end_cycles: tr.end_time().unwrap(),
+            points,
+        }
+    }
+
+    #[test]
+    fn frontier_is_dominated_free_and_covers_input() {
+        let w = workload("mha-like", 60);
+        let idx = pareto_frontier(&w.points, 0.0);
+        assert!(!idx.is_empty());
+        let obj: Vec<[f64; 3]> = w.points.iter().map(objectives).collect();
+        // Dominated-free vs the whole sweep.
+        for &i in &idx {
+            for (j, o) in obj.iter().enumerate() {
+                assert!(
+                    j == i || !dominates(o, &obj[i]),
+                    "frontier point {i} dominated by {j}"
+                );
+            }
+        }
+        // Every non-frontier point is weakly dominated by some member.
+        for (j, o) in obj.iter().enumerate() {
+            if idx.contains(&j) {
+                continue;
+            }
+            assert!(
+                idx.iter().any(|&i| (0..3).all(|k| obj[i][k] <= o[k])),
+                "point {j} neither on frontier nor covered"
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_thins_but_never_admits_dominated_points() {
+        let w = workload("gqa-like", 20);
+        let exact = pareto_frontier(&w.points, 0.0);
+        let thinned = pareto_frontier(&w.points, 0.25);
+        assert!(!thinned.is_empty());
+        let obj: Vec<[f64; 3]> = w.points.iter().map(objectives).collect();
+        for &i in &thinned {
+            for (j, o) in obj.iter().enumerate() {
+                assert!(j == i || !dominates(o, &obj[i]));
+            }
+        }
+        assert!(
+            thinned.len() <= exact.len(),
+            "thinning must not grow the frontier: {} vs {}",
+            thinned.len(),
+            exact.len()
+        );
+    }
+
+    #[test]
+    fn frontier_is_deterministic() {
+        let w = workload("det", 40);
+        let a = pareto_frontier(&w.points, 0.1);
+        let b = pareto_frontier(&w.points, 0.1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn constraints_filter_area_capacity_and_wake() {
+        let w = workload("constrained", 40);
+        let unconstrained = optimize(
+            std::slice::from_ref(&w),
+            &Constraints::default(),
+            0.0,
+            None,
+        )
+        .unwrap();
+        assert_eq!(unconstrained.frontiers[0].feasible, w.points.len());
+
+        let min_cap = optimize(
+            std::slice::from_ref(&w),
+            &Constraints {
+                min_capacity: Some(96 * MIB),
+                ..Default::default()
+            },
+            0.0,
+            None,
+        )
+        .unwrap();
+        assert!(min_cap.frontiers[0].feasible < w.points.len());
+        for f in &min_cap.frontiers[0].frontier {
+            assert!(f.point.eval.capacity >= 96 * MIB);
+        }
+
+        let tight_area = optimize(
+            std::slice::from_ref(&w),
+            &Constraints {
+                max_area_overhead_pct: Some(5.0),
+                ..Default::default()
+            },
+            0.0,
+            None,
+        )
+        .unwrap();
+        for f in &tight_area.frontiers[0].frontier {
+            assert!(f.point.delta_a_pct() <= 5.0);
+        }
+
+        // An unattainable bound is a typed error, not a panic.
+        let err = optimize(
+            std::slice::from_ref(&w),
+            &Constraints {
+                min_capacity: Some(1 << 60),
+                ..Default::default()
+            },
+            0.0,
+            None,
+        )
+        .unwrap_err();
+        assert!(matches!(err, OptimizeError::NoFeasibleConfigs { .. }));
+    }
+
+    #[test]
+    fn portfolio_minimizes_worst_case_regret() {
+        // Two workloads with different occupancy shapes: their own
+        // optima differ, and the robust pick must brute-force-minimize
+        // the worst-case regret over shared configs.
+        let a = workload("heavy", 100);
+        let b = workload("light", 10);
+        let r = optimize(&[a, b], &Constraints::default(), 0.0, None).unwrap();
+        assert_eq!(r.workload_names, vec!["heavy", "light"]);
+        let best = r.robust_best().unwrap();
+        for e in &r.portfolio {
+            assert!(
+                best.worst_regret_pct <= e.worst_regret_pct + 1e-12,
+                "{:?} beats robust-best",
+                e.key
+            );
+            assert_eq!(e.regret_pct.len(), 2);
+            for &reg in &e.regret_pct {
+                assert!(reg >= -1e-12 && reg.is_finite());
+            }
+        }
+        // Per-workload optima carry zero regret on their own workload.
+        for (wi, f) in r.frontiers.iter().enumerate() {
+            let own = r
+                .portfolio
+                .iter()
+                .find(|e| e.key == f.best_key);
+            if let Some(own) = own {
+                assert!(own.regret_pct[wi].abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn divergent_optima_produce_nonzero_robust_regret() {
+        // A config optimal for one workload is generally not optimal for
+        // the other; the robust pick's worst-case regret is then the
+        // headline number. At minimum the result must be internally
+        // consistent: worst >= each per-workload regret >= 0.
+        let a = workload("mha", 90);
+        let b = workload("gqa", 12);
+        let r = optimize(&[a, b], &Constraints::default(), 0.0, None).unwrap();
+        let best = r.robust_best().unwrap();
+        for &reg in &best.regret_pct {
+            assert!(best.worst_regret_pct >= reg - 1e-12);
+        }
+        // Both frontiers must be non-trivial and name their own best.
+        for f in &r.frontiers {
+            assert!(!f.frontier.is_empty());
+            assert!(f.best_energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn weights_shift_mean_but_not_worst_ranking_key() {
+        let a = workload("wa", 80);
+        let b = workload("wb", 16);
+        let even = optimize(&[a.clone(), b.clone()], &Constraints::default(), 0.0, None)
+            .unwrap();
+        let skewed = optimize(
+            &[a, b],
+            &Constraints::default(),
+            0.0,
+            Some(&[10.0, 0.1]),
+        )
+        .unwrap();
+        // Same shared-config set either way.
+        assert_eq!(even.portfolio.len(), skewed.portfolio.len());
+        for (e, s) in even.portfolio.iter().zip(&skewed.portfolio) {
+            // Worst-case regret is weight-independent (it ranks first,
+            // so entries stay keyed by it)...
+            assert!(e.worst_regret_pct >= 0.0 && s.worst_regret_pct >= 0.0);
+        }
+    }
+
+    #[test]
+    fn typed_errors_for_bad_inputs() {
+        assert_eq!(
+            optimize(&[], &Constraints::default(), 0.0, None).unwrap_err(),
+            OptimizeError::NoWorkloads
+        );
+        let w = workload("w", 30);
+        assert!(matches!(
+            optimize(std::slice::from_ref(&w), &Constraints::default(), -0.5, None)
+                .unwrap_err(),
+            OptimizeError::InvalidEpsilon(_)
+        ));
+        assert!(matches!(
+            optimize(
+                std::slice::from_ref(&w),
+                &Constraints::default(),
+                0.0,
+                Some(&[1.0, 2.0])
+            )
+            .unwrap_err(),
+            OptimizeError::InvalidWeights(_)
+        ));
+        assert!(matches!(
+            optimize(
+                std::slice::from_ref(&w),
+                &Constraints::default(),
+                0.0,
+                Some(&[0.0])
+            )
+            .unwrap_err(),
+            OptimizeError::InvalidWeights(_)
+        ));
+    }
+
+    #[test]
+    fn config_key_roundtrips_policy_and_orders_deterministically() {
+        let w = workload("keys", 24);
+        for p in &w.points {
+            let k = ConfigKey::of(p);
+            assert_eq!(k.policy(), p.eval.policy);
+            assert_eq!(k.alpha().to_bits(), p.eval.alpha.to_bits());
+            assert!(k.label().contains(&format!("B{}", p.eval.banks)));
+        }
+        let mut keys: Vec<ConfigKey> = w.points.iter().map(ConfigKey::of).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), w.points.len(), "grid configs must be unique");
+    }
+
+    #[test]
+    fn wake_exposure_accounting() {
+        let w = workload("wake", 40);
+        for p in &w.points {
+            let e = wake_exposure_pct(p, w.end_cycles);
+            assert!(e.is_finite() && e >= 0.0);
+            if p.eval.n_switch == 0 {
+                assert_eq!(e, 0.0);
+            }
+        }
+        // Zero-length run: exposure is defined as 0.
+        assert_eq!(wake_exposure_pct(&w.points[0], 0), 0.0);
+    }
+}

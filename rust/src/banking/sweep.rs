@@ -5,7 +5,7 @@
 use crate::cacti::CactiModel;
 use crate::trace::{AccessStats, OccupancyTrace};
 
-use super::energy::{evaluate, BankingEval};
+use super::energy::{evaluate, BankingEval, EnergyError};
 use super::policy::GatingPolicy;
 
 /// Sweep grid specification. The paper's §IV-C setting is
@@ -92,13 +92,16 @@ fn pct_delta(value: f64, base: f64) -> f64 {
 /// every grid point simultaneously, sharded across threads for large
 /// grids. Differentially identical to [`sweep_naive`], the per-point
 /// oracle it replaced.
+///
+/// Errors with [`EnergyError::UnfinalizedTrace`] instead of panicking
+/// when the trace was never finalized.
 pub fn sweep(
     cacti: &CactiModel,
     trace: &OccupancyTrace,
     stats: &AccessStats,
     spec: &SweepSpec,
     freq_ghz: f64,
-) -> Vec<SweepPoint> {
+) -> Result<Vec<SweepPoint>, EnergyError> {
     super::fused::sweep_fused(cacti, trace, stats, spec, freq_ghz)
 }
 
@@ -114,7 +117,7 @@ pub fn sweep_naive(
     stats: &AccessStats,
     spec: &SweepSpec,
     freq_ghz: f64,
-) -> Vec<SweepPoint> {
+) -> Result<Vec<SweepPoint>, EnergyError> {
     let peak = trace.peak_needed();
     let mut out = Vec::with_capacity(spec.points());
     for &cap in &spec.capacities {
@@ -133,7 +136,7 @@ pub fn sweep_naive(
                     alpha,
                     GatingPolicy::None,
                     freq_ghz,
-                );
+                )?;
                 let base_e = base.e_total_j();
                 let base_a = base.area_mm2;
                 for &banks in &spec.banks {
@@ -145,7 +148,7 @@ pub fn sweep_naive(
                     let eval = if banks == 1 && policy == GatingPolicy::None {
                         base.clone()
                     } else {
-                        evaluate(cacti, trace, stats, cap, banks, alpha, policy, freq_ghz)
+                        evaluate(cacti, trace, stats, cap, banks, alpha, policy, freq_ghz)?
                     };
                     out.push(SweepPoint {
                         eval,
@@ -156,7 +159,7 @@ pub fn sweep_naive(
             }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -218,7 +221,7 @@ mod tests {
             &stats(),
             &SweepSpec::paper_grid(48 * MIB),
             1.0,
-        );
+        ).unwrap();
         assert_eq!(pts.len(), 36);
         for p in &pts {
             if p.eval.banks == 1 {
@@ -258,7 +261,7 @@ mod tests {
             &AccessStats::default(),
             &spec,
             1.0,
-        );
+        ).unwrap();
         assert_eq!(pts.len(), 2);
         for p in &pts {
             assert_eq!(p.base_e_j, 0.0, "B=1 reference energy must be 0");
@@ -288,7 +291,7 @@ mod tests {
             alphas: vec![0.9],
             policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
         };
-        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0).unwrap();
         assert_eq!(pts.len(), 4);
         for p in &pts {
             assert!(
@@ -312,8 +315,8 @@ mod tests {
     fn naive_oracle_matches_fused_dispatch() {
         let tr = synth_trace(128 * MIB);
         let spec = SweepSpec::paper_grid(48 * MIB);
-        let fused = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
-        let naive = sweep_naive(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        let fused = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0).unwrap();
+        let naive = sweep_naive(&CactiModel::default(), &tr, &stats(), &spec, 1.0).unwrap();
         assert_eq!(fused.len(), naive.len());
         for (a, b) in fused.iter().zip(&naive) {
             assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
@@ -331,7 +334,7 @@ mod tests {
             alphas: vec![0.9],
             policies: vec![GatingPolicy::Aggressive],
         };
-        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        let pts = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0).unwrap();
         assert!(pts.iter().all(|p| p.eval.capacity == 64 * MIB));
     }
 
@@ -344,7 +347,7 @@ mod tests {
             &stats(),
             &SweepSpec::paper_grid(64 * MIB),
             1.0,
-        );
+        ).unwrap();
         for w in pts
             .iter()
             .filter(|p| p.eval.capacity == 64 * MIB)
@@ -352,6 +355,25 @@ mod tests {
             .windows(2)
         {
             assert!(w[1].eval.area_mm2 >= w[0].eval.area_mm2);
+        }
+    }
+
+    #[test]
+    fn unfinalized_trace_errors_on_both_sweep_paths() {
+        // Regression: both the fused dispatch and the naive oracle used
+        // to panic inside evaluate / segments() on unfinalized traces.
+        let tr = OccupancyTrace::new("sram", 64 * MIB); // no finalize
+        let spec = SweepSpec::paper_grid(16 * MIB);
+        let fused = sweep(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        let naive = sweep_naive(&CactiModel::default(), &tr, &stats(), &spec, 1.0);
+        for r in [fused, naive] {
+            let err = r.unwrap_err();
+            assert_eq!(
+                err,
+                EnergyError::UnfinalizedTrace {
+                    memory: "sram".to_string()
+                }
+            );
         }
     }
 }

@@ -95,14 +95,14 @@ impl Coordinator {
         stage1: &Stage1,
         spec: &SweepSpec,
         freq_ghz: f64,
-    ) -> Vec<SweepPoint> {
-        sweep(
+    ) -> Result<Vec<SweepPoint>> {
+        Ok(sweep(
             &self.cacti,
             stage1.result.sram_trace(),
             &stage1.result.stats,
             spec,
             freq_ghz,
-        )
+        )?)
     }
 
     /// Stage-II sweep for every on-chip memory of a multi-level run
@@ -114,17 +114,17 @@ impl Coordinator {
         stage1: &Stage1,
         spec: &SweepSpec,
         freq_ghz: f64,
-    ) -> Vec<(String, Vec<SweepPoint>)> {
+    ) -> Result<Vec<(String, Vec<SweepPoint>)>> {
         stage1
             .result
             .traces
             .iter()
             .zip(stage1.result.per_mem_stats.iter())
             .map(|(tr, st)| {
-                (
+                Ok((
                     tr.memory.clone(),
-                    sweep(&self.cacti, tr, st, spec, freq_ghz),
-                )
+                    sweep(&self.cacti, tr, st, spec, freq_ghz)?,
+                ))
             })
             .collect()
     }
@@ -176,8 +176,10 @@ mod tests {
         assert_eq!(s1.result.total_cycles, api_s1.result.total_cycles);
         assert_eq!(s1.result.stats, api_s1.result.stats);
 
-        let pts = coord.stage2(&s1, &small_grid(), 1.0);
-        let api_pts = api_s1.stage2_with(&ApiContext::new(), &small_grid());
+        let pts = coord.stage2(&s1, &small_grid(), 1.0).unwrap();
+        let api_pts = api_s1
+            .stage2_with(&ApiContext::new(), &small_grid())
+            .unwrap();
         assert_eq!(pts.len(), api_pts.shared().len());
         for (a, b) in pts.iter().zip(api_pts.shared()) {
             assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
@@ -191,12 +193,12 @@ mod tests {
             .stage1(&TINY_GQA, Workload::Prefill { seq: 64 }, &multilevel())
             .unwrap();
         assert_eq!(s1.result.traces.len(), 3);
-        let full = coord.stage2_per_memory(&s1, &small_grid(), 1.0);
+        let full = coord.stage2_per_memory(&s1, &small_grid(), 1.0).unwrap();
         assert_eq!(full.len(), 3);
         // Divergent lengths must not panic (the old implementation
         // indexed per_mem_stats[i] and did).
         s1.result.per_mem_stats.truncate(2);
-        let partial = coord.stage2_per_memory(&s1, &small_grid(), 1.0);
+        let partial = coord.stage2_per_memory(&s1, &small_grid(), 1.0).unwrap();
         assert_eq!(partial.len(), 2);
     }
 }

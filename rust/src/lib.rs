@@ -49,7 +49,7 @@
 //!     .run_stage1(&ctx)
 //!     .unwrap();
 //! println!("peak needed: {} bytes", s1.result.peak_needed());
-//! let s2 = s1.stage2(&ctx);
+//! let s2 = s1.stage2(&ctx).unwrap();
 //! println!("best dE: {:.1}%", s2.best_delta_pct());
 //!
 //! // Or a whole grid of scenarios as one parallel, memoized batch.

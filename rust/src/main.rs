@@ -25,8 +25,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use trapti::analytic;
 use trapti::api::{experiments as exp, ApiContext, BatchRunner, ExperimentSpec};
-use trapti::banking::{evaluate, GatingPolicy, SweepSpec};
-use trapti::config::{named, parse::parse_bytes};
+use trapti::banking::{evaluate, Constraints, GatingPolicy, SweepSpec};
+use trapti::config::{named, parse::parse_bytes, AccelConfig};
 use trapti::report::{figures, tables};
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
 use trapti::trace::{load_trace, save_trace, trace_to_csv};
@@ -108,6 +108,7 @@ fn run(raw: &[String]) -> Result<()> {
         "batch" => batch_cmd(&args),
         "serve" => serve_cmd(&args),
         "bank" => bank_cmd(&args),
+        "optimize" => optimize_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
         "ablate" => ablate(),
@@ -144,6 +145,20 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --sweep-out FILE [write the Stage-II table])
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
+  repro optimize           Stage-II Pareto optimizer + cross-workload
+                           robust (portfolio) selection over several
+                           workloads at once, streamed through the fused
+                           sweep engine
+                           (--workloads MODEL:prefill:SEQ|
+                            MODEL:decode:PROMPT:GEN|
+                            MODEL:serve:REQS:CONC:SEED,..
+                            --accel NAME
+                            --capacities MiB,.. --banks 1,2,.. --alpha A
+                            --epsilon E [frontier thinning, default 0]
+                            --max-area-pct X --max-wake-pct X
+                            --min-capacity MiB [constraints]
+                            --pareto-csv FILE [deterministic frontier CSV]
+                            --report-out FILE [full text report])
   repro e2e                functional PJRT decode (--model, --steps)
   repro baseline-compare   TRAPTI vs aggregate-statistics DSE
   repro ablate             gating-policy sensitivity study (the paper's
@@ -190,7 +205,7 @@ fn report(args: &Args) -> Result<()> {
             emit("fig8", &figures::fig8(&f8))?;
         }
         if ["fig9", "table2", "headline"].contains(&which) || all {
-            let t2 = exp::table2(&ctx, &pair);
+            let t2 = exp::table2(&ctx, &pair)?;
             if which == "table2" || all {
                 let text = tables::table2(&t2)
                     .iter()
@@ -533,7 +548,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         spec.serve_fused(&ctx)?
     } else {
         let run = spec.run_serving()?;
-        let s2 = run.stage2(&ctx);
+        let s2 = run.stage2(&ctx)?;
         (run, s2)
     };
     let r = &run.result;
@@ -630,12 +645,12 @@ fn bank_cmd(args: &Args) -> Result<()> {
         let base = evaluate(
             &ctx.cacti, &trace, &stats, cap, 1, alpha,
             GatingPolicy::None, 1.0,
-        );
+        )?;
         for &b in &banks {
             let ev = evaluate(
                 &ctx.cacti, &trace, &stats, cap, b, alpha,
                 GatingPolicy::Aggressive, 1.0,
-            );
+            )?;
             println!(
                 "{:>9} {:>5} {:>12.3} {:>10.1} {:>8.2} {:>9.1} {:>10.1}",
                 cap / MIB,
@@ -647,6 +662,177 @@ fn bank_cmd(args: &Args) -> Result<()> {
                 ev.area_mm2,
             );
         }
+    }
+    Ok(())
+}
+
+/// Parse one `MODEL:prefill:SEQ` / `MODEL:decode:PROMPT:GEN` /
+/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED` workload descriptor.
+fn parse_workload_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpec> {
+    let parts: Vec<&str> = desc.split(':').collect();
+    let model_of = |name: &str| {
+        preset(name).ok_or_else(|| anyhow!("unknown model `{name}` in `{desc}`"))
+    };
+    let (model, workload) = match parts.as_slice() {
+        [m, "prefill", seq] => (
+            model_of(m)?,
+            Workload::Prefill { seq: seq.parse()? },
+        ),
+        [m, "decode", prompt, gen] => (
+            model_of(m)?,
+            Workload::Decode {
+                prompt: prompt.parse()?,
+                gen: gen.parse()?,
+            },
+        ),
+        [m, "serve", requests, concurrency, seed] => (
+            model_of(m)?,
+            Workload::Serving(trapti::serving::ServingParams::new(
+                requests.parse()?,
+                concurrency.parse()?,
+                seed.parse()?,
+            )),
+        ),
+        _ => bail!(
+            "workload descriptor `{desc}` wants MODEL:prefill:SEQ | \
+             MODEL:decode:PROMPT:GEN | MODEL:serve:REQS:CONC:SEED"
+        ),
+    };
+    ExperimentSpec::builder()
+        .model(model)
+        .workload(workload)
+        .accel(accel.clone())
+        .build()
+}
+
+/// Explicit optimizer grid from `--capacities`/`--banks`/`--alpha`
+/// (all four gating policies), or `None` to derive a covering default.
+fn optimize_grid_flags(args: &Args) -> Result<Option<SweepSpec>> {
+    let Some(list) = args.flag("capacities") else {
+        if args.flag("banks").is_some() || args.flag("alpha").is_some() {
+            bail!(
+                "--banks/--alpha need --capacities MiB,.. (without them \
+                 `repro optimize` derives a grid covering every \
+                 workload's capacity bound)"
+            );
+        }
+        return Ok(None);
+    };
+    let capacities: Vec<u64> = list
+        .split(',')
+        .map(|s| parse_bytes(&format!("{}MiB", s.trim())))
+        .collect::<Result<_>>()?;
+    let banks: Vec<u32> = args
+        .flag_or("banks", "1,2,4,8,16,32")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    let alpha: f64 = args.flag_or("alpha", "0.9").parse()?;
+    Ok(Some(SweepSpec {
+        capacities,
+        banks,
+        alphas: vec![alpha],
+        // Same policy axis as the derived covering grid — the two flag
+        // modes must explore the same policy set.
+        policies: trapti::api::optimize::full_policy_axis(),
+    }))
+}
+
+/// Stage-II Pareto + portfolio optimization over several workloads at
+/// once — the offline flow that *chooses* a banked configuration. Each
+/// workload runs fused (Stage I streams into the sweep engine; nothing
+/// materialized), then `banking::optimize` filters, builds per-workload
+/// ε-Pareto frontiers, and ranks shared configurations by worst-case
+/// energy regret. Output is deterministic: same specs + seed produce
+/// byte-identical reports and `--pareto-csv` files (the CI gate).
+fn optimize_cmd(args: &Args) -> Result<()> {
+    use std::fmt::Write as _;
+
+    let accel_name = args.flag_or("accel", "baseline");
+    let accel = named(&accel_name)
+        .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+    let descriptors = args.flag_or(
+        "workloads",
+        "gpt2-xl:decode:512:128,ds-r1d:decode:512:128,gpt2-xl:serve:64:8:7",
+    );
+    let mut specs = Vec::new();
+    for d in descriptors.split(',') {
+        specs.push(parse_workload_descriptor(d.trim(), &accel)?);
+    }
+    let grid = match optimize_grid_flags(args)? {
+        Some(g) => g,
+        // Shared covering grid derived from closed-form capacity bounds
+        // (api::optimize::covering_grid — also what the bench uses).
+        None => trapti::api::optimize::covering_grid(&specs),
+    };
+    let constraints = Constraints {
+        max_area_overhead_pct: match args.flag("max-area-pct") {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        },
+        max_wake_exposure_pct: match args.flag("max-wake-pct") {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        },
+        min_capacity: match args.flag("min-capacity") {
+            Some(v) => Some(parse_bytes(&format!("{}MiB", v.trim()))?),
+            None => None,
+        },
+    };
+    let epsilon: f64 = args.flag_or("epsilon", "0").parse()?;
+
+    let ctx = ApiContext::new();
+    let opts = trapti::api::PortfolioOptions {
+        grid: Some(grid.clone()),
+        constraints,
+        epsilon,
+        weights: None,
+    };
+    let run = trapti::api::run_portfolio(&ctx, &specs, &opts)?;
+    let r = &run.result;
+
+    let mut report = String::new();
+    let _ = writeln!(
+        report,
+        "Stage-II Pareto/portfolio optimization: {} workload(s), grid {} \
+         points, epsilon={:.3}",
+        r.workload_names.len(),
+        grid.points(),
+        r.epsilon,
+    );
+    for f in &r.frontiers {
+        let _ = writeln!(
+            report,
+            "\n{}: own optimum {} (E={:.3} J over {} cycles)",
+            f.workload,
+            f.best_key.label(),
+            f.best_energy_j,
+            f.end_cycles,
+        );
+        report.push_str(&tables::pareto_table(f).render());
+    }
+    report.push('\n');
+    report.push_str(&tables::portfolio_table(r, 15).render());
+    if let Some(best) = r.robust_best() {
+        let _ = writeln!(
+            report,
+            "robust-best across all workloads: {}  (worst regret \
+             {:+.1}%, mean {:+.1}%)",
+            best.key.label(),
+            best.worst_regret_pct,
+            best.mean_regret_pct,
+        );
+    }
+    print!("{report}");
+
+    if let Some(path) = args.flag("report-out") {
+        std::fs::write(path, &report).with_context(|| format!("writing {path}"))?;
+        println!("report saved to {path}");
+    }
+    if let Some(path) = args.flag("pareto-csv") {
+        std::fs::write(path, tables::pareto_csv(r))
+            .with_context(|| format!("writing {path}"))?;
+        println!("Pareto CSV saved to {path}");
     }
     Ok(())
 }
@@ -703,7 +889,7 @@ fn ablate() -> Result<()> {
                     alpha,
                     policy,
                     1.0,
-                );
+                )?;
                 println!(
                     "{label:>10} {:>13} {alpha:>6} {:>11.2} {:>10.2} {:>10.3} {:>8.1}% {:>9}",
                     policy.label(),
@@ -740,7 +926,7 @@ fn baseline_compare() -> Result<()> {
             let trapti_ev = evaluate(
                 &ctx.cacti, trace, &s1.result.stats, cap, b, 0.9,
                 GatingPolicy::Aggressive, 1.0,
-            );
+            )?;
             let view = analytic::AggregateView::from_stats(
                 trace.peak_needed(),
                 s1.result.total_cycles,

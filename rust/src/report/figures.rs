@@ -275,4 +275,58 @@ mod tests {
         assert!(s.contains("Total on-chip"));
         assert!(s.contains("paper 78.47"));
     }
+
+    /// Golden fig9 CSV over synthetic round-number points: the exact
+    /// byte layout of the paper artifact is pinned, and a zero-base
+    /// degenerate point can never print NaN/inf (the CSV carries raw
+    /// energy/area only; deltas are guarded at the struct level).
+    #[test]
+    fn golden_fig9_csv() {
+        use crate::api::experiments::Table2;
+        use crate::banking::{BankingEval, GatingPolicy, SweepPoint};
+        use crate::cacti::SramCharacterization;
+
+        let point = |banks: u32, e_total: f64, area: f64| SweepPoint {
+            eval: BankingEval {
+                capacity: 64 * MIB,
+                banks,
+                alpha: 0.9,
+                policy: GatingPolicy::Aggressive,
+                e_dyn_j: e_total,
+                e_leak_j: 0.0,
+                e_sw_j: 0.0,
+                n_switch: 0,
+                avg_active_banks: 1.0,
+                gated_fraction: 0.0,
+                area_mm2: area,
+                latency_cycles: 10,
+                characterization: SramCharacterization {
+                    capacity: 64 * MIB,
+                    banks,
+                    e_read_j: 1e-9,
+                    e_write_j: 1.1e-9,
+                    p_leak_bank_w: 0.5,
+                    e_switch_j: 1e-6,
+                    wake_cycles: 100,
+                    area_mm2: area,
+                    latency_cycles: 10,
+                },
+            },
+            base_e_j: 0.0, // degenerate base: must not leak NaN anywhere
+            base_area_mm2: 0.0,
+        };
+        let t2 = Table2 {
+            mha_points: vec![point(1, 10.0, 100.0)],
+            gqa_points: vec![point(8, 5.0, 110.0)],
+        };
+        let got = fig9_csv(&t2);
+        let want = "workload,capacity_mib,banks,energy_j,area_mm2\n\
+                    gpt2-xl,64,1,10.000,100.0\n\
+                    ds-r1d,64,8,5.000,110.0\n";
+        assert_eq!(got, want);
+        assert!(!got.contains("NaN") && !got.contains("inf"));
+        // The ASCII scatter over the same points is NaN-free too.
+        let plot = fig9(&t2);
+        assert!(!plot.contains("NaN"), "{plot}");
+    }
 }

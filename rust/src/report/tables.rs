@@ -1,6 +1,10 @@
-//! Paper-style table renderers (Tables I-III + sizing summary).
+//! Paper-style table renderers (Tables I-III + sizing summary) and the
+//! Stage-II optimizer's frontier/portfolio tables + deterministic CSV.
+
+use std::fmt::Write as _;
 
 use crate::api::experiments::{Sizing, Table2, Table3};
+use crate::banking::optimize::{OptimizeResult, WorkloadFrontier};
 use crate::banking::SweepPoint;
 use crate::util::table::{fmt_delta_pct, Table};
 use crate::util::MIB;
@@ -144,6 +148,104 @@ pub fn sizing_table(s: &Sizing) -> Table {
     t
 }
 
+/// One workload's ε-Pareto frontier (from
+/// [`crate::banking::optimize::optimize`]): the configurations that are
+/// not (ε-)beaten on all of energy, activity, and area at once.
+pub fn pareto_table(f: &WorkloadFrontier) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Pareto frontier — {} ({} feasible -> {} on frontier)",
+            f.workload,
+            f.feasible,
+            f.frontier.len()
+        ),
+        &[
+            "C [MiB]", "B", "alpha", "policy", "E [J]", "dE%", "avgBact",
+            "A [mm2]", "dA%", "wake%",
+        ],
+    );
+    for fp in &f.frontier {
+        let p = &fp.point;
+        t.row(vec![
+            (p.eval.capacity / MIB).to_string(),
+            p.eval.banks.to_string(),
+            format!("{:.2}", p.eval.alpha),
+            p.eval.policy.label().to_string(),
+            format!("{:.3}", p.eval.e_total_j()),
+            fmt_delta_pct(p.eval.e_total_j(), p.base_e_j),
+            format!("{:.2}", p.eval.avg_active_banks),
+            format!("{:.1}", p.eval.area_mm2),
+            fmt_delta_pct(p.eval.area_mm2, p.base_area_mm2),
+            format!("{:.2}", fp.wake_exposure_pct),
+        ]);
+    }
+    t
+}
+
+/// Cross-workload portfolio regret, best-first (the top row is the
+/// robust-best configuration). `max_rows` bounds the rendered rows; the
+/// full ranking lives in the [`OptimizeResult`].
+pub fn portfolio_table(r: &OptimizeResult, max_rows: usize) -> Table {
+    let shown = max_rows.min(r.portfolio.len());
+    let mut headers: Vec<String> = vec!["Config".into()];
+    for name in &r.workload_names {
+        headers.push(format!("regret% {name}"));
+    }
+    headers.push("worst%".into());
+    headers.push("mean%".into());
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!(
+            "Portfolio regret (top {shown} of {} shared configs; \
+             row 1 = robust-best)",
+            r.portfolio.len()
+        ),
+        &hdr,
+    );
+    for e in r.portfolio.iter().take(max_rows) {
+        let mut row = vec![e.key.label()];
+        for reg in &e.regret_pct {
+            row.push(format!("{reg:+.1}"));
+        }
+        row.push(format!("{:+.1}", e.worst_regret_pct));
+        row.push(format!("{:+.1}", e.mean_regret_pct));
+        t.row(row);
+    }
+    t
+}
+
+/// Deterministic CSV of every frontier point of every workload — the
+/// `repro optimize --pareto-csv` artifact and the CI determinism gate's
+/// comparison subject. Fixed field order and float precision: equal
+/// inputs produce byte-identical output.
+pub fn pareto_csv(r: &OptimizeResult) -> String {
+    let mut out = String::from(
+        "workload,capacity_mib,banks,alpha,policy,energy_j,delta_e_pct,\
+         avg_active_banks,area_mm2,delta_a_pct,wake_exposure_pct\n",
+    );
+    for f in &r.frontiers {
+        for fp in &f.frontier {
+            let p = &fp.point;
+            let _ = writeln!(
+                out,
+                "{},{},{},{:.3},{},{:.6},{:.3},{:.4},{:.3},{:.3},{:.4}",
+                f.workload,
+                p.eval.capacity / MIB,
+                p.eval.banks,
+                p.eval.alpha,
+                p.eval.policy.label(),
+                p.eval.e_total_j(),
+                p.delta_e_pct(),
+                p.eval.avg_active_banks,
+                p.eval.area_mm2,
+                p.delta_a_pct(),
+                fp.wake_exposure_pct,
+            );
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,11 +281,13 @@ mod tests {
         let base = evaluate(
             &cacti, &tr, &stats, 64 * MIB, 1, 0.9,
             GatingPolicy::None, 1.0,
-        );
+        )
+        .unwrap();
         let banked = evaluate(
             &cacti, &tr, &stats, 64 * MIB, 8, 0.9,
             GatingPolicy::Aggressive, 1.0,
-        );
+        )
+        .unwrap();
         let pts = vec![
             SweepPoint {
                 base_e_j: base.e_total_j(),
@@ -203,5 +307,180 @@ mod tests {
         let s = t.render();
         assert!(s.contains("64"));
         assert!(s.contains('-'), "banked delta must be negative: {s}");
+    }
+
+    // ---- golden-output suite -------------------------------------------
+    //
+    // Synthetic points with round numbers make the expected strings
+    // hand-computable; any formatting/column regression fails here in CI
+    // instead of silently corrupting paper artifacts.
+
+    use crate::banking::optimize::{
+        ConfigKey, Constraints, FrontierPoint, OptimizeResult, PortfolioEntry,
+        WorkloadFrontier,
+    };
+    use crate::banking::{BankingEval, GatingPolicy};
+    use crate::cacti::SramCharacterization;
+
+    fn synth_ch(capacity: u64, banks: u32) -> SramCharacterization {
+        SramCharacterization {
+            capacity,
+            banks,
+            e_read_j: 1e-9,
+            e_write_j: 1.1e-9,
+            p_leak_bank_w: 0.5,
+            e_switch_j: 1e-6,
+            wake_cycles: 100,
+            area_mm2: 0.0,
+            latency_cycles: 10,
+        }
+    }
+
+    fn synth_point(
+        cap_mib: u64,
+        banks: u32,
+        e_total: f64,
+        area: f64,
+        base_e: f64,
+        base_a: f64,
+    ) -> SweepPoint {
+        SweepPoint {
+            eval: BankingEval {
+                capacity: cap_mib * MIB,
+                banks,
+                alpha: 0.9,
+                policy: GatingPolicy::Aggressive,
+                e_dyn_j: e_total,
+                e_leak_j: 0.0,
+                e_sw_j: 0.0,
+                n_switch: 4,
+                avg_active_banks: 2.5,
+                gated_fraction: 0.25,
+                area_mm2: area,
+                latency_cycles: 10,
+                characterization: synth_ch(cap_mib * MIB, banks),
+            },
+            base_e_j: base_e,
+            base_area_mm2: base_a,
+        }
+    }
+
+    fn synth_frontier(workload: &str, point: SweepPoint) -> WorkloadFrontier {
+        WorkloadFrontier {
+            workload: workload.to_string(),
+            end_cycles: 1_000,
+            feasible: 2,
+            best_energy_j: point.eval.e_total_j(),
+            best_key: ConfigKey::of(&point),
+            frontier: vec![FrontierPoint {
+                wake_exposure_pct: 20.0,
+                point,
+            }],
+        }
+    }
+
+    #[test]
+    fn golden_table2_half_csv() {
+        let pts = vec![
+            synth_point(64, 1, 10.0, 100.0, 10.0, 100.0),
+            synth_point(64, 8, 5.0, 110.0, 10.0, 100.0),
+        ];
+        let got = table2_half("golden", &pts, &[1, 8]).to_csv();
+        let want = "C [MiB],E(B=1) [J],A(B=1) [mm2],E(B=8) [J],A(B=8) [mm2],dE%(8),dA%(8)\n\
+                    64,10.00,100.0,5.00,110.0,-50.0,+10.0\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn golden_table2_zero_base_renders_dash_not_nan() {
+        // Regression (fig9/table2 NaN audit): a zero-energy/area base —
+        // a degenerate zero-length trace — must render the paper's dash.
+        let pts = vec![synth_point(64, 8, 5.0, 110.0, 0.0, 0.0)];
+        let t = table2_half("golden", &pts, &[8]);
+        let csv = t.to_csv();
+        assert_eq!(
+            csv,
+            "C [MiB],E(B=8) [J],A(B=8) [mm2],dE%(8),dA%(8)\n\
+             64,5.00,110.0,–,–\n"
+        );
+        let rendered = t.render();
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        assert!(!rendered.contains("inf"), "{rendered}");
+        assert!(rendered.contains('–'), "{rendered}");
+    }
+
+    #[test]
+    fn golden_pareto_table_csv() {
+        let f = synth_frontier("wa", synth_point(64, 8, 5.0, 110.0, 10.0, 100.0));
+        let got = pareto_table(&f).to_csv();
+        let want = "C [MiB],B,alpha,policy,E [J],dE%,avgBact,A [mm2],dA%,wake%\n\
+                    64,8,0.90,aggressive,5.000,-50.0,2.50,110.0,+10.0,20.00\n";
+        assert_eq!(got, want);
+        assert!(pareto_table(&f)
+            .render()
+            .contains("2 feasible -> 1 on frontier"));
+    }
+
+    #[test]
+    fn golden_portfolio_table_csv() {
+        let pa = synth_point(64, 8, 5.0, 110.0, 10.0, 100.0);
+        let r = OptimizeResult {
+            epsilon: 0.0,
+            constraints: Constraints::default(),
+            workload_names: vec!["wa".to_string(), "wb".to_string()],
+            frontiers: vec![
+                synth_frontier("wa", pa.clone()),
+                synth_frontier("wb", pa.clone()),
+            ],
+            portfolio: vec![PortfolioEntry {
+                key: ConfigKey::of(&pa),
+                energy_j: vec![5.0, 11.0],
+                regret_pct: vec![0.0, 10.0],
+                worst_regret_pct: 10.0,
+                mean_regret_pct: 5.0,
+            }],
+        };
+        let got = portfolio_table(&r, 20).to_csv();
+        let want = "Config,regret% wa,regret% wb,worst%,mean%\n\
+                    64MiB/B8/a0.90/aggressive,+0.0,+10.0,+10.0,+5.0\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn golden_pareto_csv() {
+        let r = OptimizeResult {
+            epsilon: 0.0,
+            constraints: Constraints::default(),
+            workload_names: vec!["wa".to_string()],
+            frontiers: vec![synth_frontier(
+                "wa",
+                synth_point(64, 8, 5.0, 110.0, 10.0, 100.0),
+            )],
+            portfolio: vec![],
+        };
+        let got = pareto_csv(&r);
+        let want = "workload,capacity_mib,banks,alpha,policy,energy_j,delta_e_pct,\
+                    avg_active_banks,area_mm2,delta_a_pct,wake_exposure_pct\n\
+                    wa,64,8,0.900,aggressive,5.000000,-50.000,2.5000,110.000,10.000,20.0000\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pareto_csv_zero_base_is_finite() {
+        // The CSV delta columns go through the struct-level guard: a
+        // zero base yields 0.000, never NaN/inf.
+        let r = OptimizeResult {
+            epsilon: 0.0,
+            constraints: Constraints::default(),
+            workload_names: vec!["wa".to_string()],
+            frontiers: vec![synth_frontier(
+                "wa",
+                synth_point(64, 8, 5.0, 110.0, 0.0, 0.0),
+            )],
+            portfolio: vec![],
+        };
+        let got = pareto_csv(&r);
+        assert!(!got.contains("NaN") && !got.contains("inf"), "{got}");
+        assert!(got.contains(",0.000,"), "{got}");
     }
 }

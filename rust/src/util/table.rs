@@ -210,9 +210,12 @@ pub fn fmt_mib(bytes: u64) -> String {
 }
 
 /// Format a signed percentage delta like the paper's ΔE/ΔA columns.
+/// A zero or non-finite base has no meaningful relative delta; render
+/// `–` (the paper's empty-cell dash) rather than `NaN`/`inf`, so a
+/// degenerate sweep can never corrupt a rendered artifact.
 pub fn fmt_delta_pct(new: f64, base: f64) -> String {
-    if base == 0.0 {
-        return "n/a".into();
+    if base == 0.0 || !base.is_finite() || !new.is_finite() {
+        return "–".into();
     }
     let pct = (new - base) / base * 100.0;
     format!("{:+.1}", pct)
@@ -262,6 +265,9 @@ mod tests {
         assert_eq!(fmt_mib(107 * 1024 * 1024 + 300 * 1024), "107.3 MiB");
         assert_eq!(fmt_delta_pct(90.0, 100.0), "-10.0");
         assert_eq!(fmt_delta_pct(110.0, 100.0), "+10.0");
-        assert_eq!(fmt_delta_pct(1.0, 0.0), "n/a");
+        // Degenerate bases render the paper's dash, never NaN/inf.
+        assert_eq!(fmt_delta_pct(1.0, 0.0), "–");
+        assert_eq!(fmt_delta_pct(f64::NAN, 100.0), "–");
+        assert_eq!(fmt_delta_pct(1.0, f64::INFINITY), "–");
     }
 }

@@ -100,7 +100,7 @@ fn batch_results_match_direct_stage_handles() {
     let ctx = ApiContext::new();
     let sp = spec(TINY_MHA, Workload::Prefill { seq: 48 });
     let direct_s1 = sp.run_stage1(&ctx).unwrap();
-    let direct_pts = direct_s1.stage2(&ctx);
+    let direct_pts = direct_s1.stage2(&ctx).unwrap();
 
     let batch = BatchRunner::with_context(ctx.clone())
         .threads(2)

@@ -172,7 +172,7 @@ fn prop_sweep_points_carry_requested_policy_vs_ungated_reference() {
                 GatingPolicy::drowsy(),
             ],
         };
-        let pts = sweep(&cacti, &tr, &stats, &spec, 1.0);
+        let pts = sweep(&cacti, &tr, &stats, &spec, 1.0).unwrap();
         assert_eq!(pts.len(), spec.points());
         for p in &pts {
             assert!(p.delta_e_pct().is_finite());
@@ -195,7 +195,7 @@ fn prop_sweep_points_carry_requested_policy_vs_ungated_reference() {
                 alpha,
                 GatingPolicy::None,
                 1.0,
-            );
+            ).unwrap();
             assert_eq!(p.base_e_j.to_bits(), reference.e_total_j().to_bits());
             assert_eq!(p.base_area_mm2.to_bits(), reference.area_mm2.to_bits());
             // The point itself equals a direct evaluation under its own
@@ -209,7 +209,7 @@ fn prop_sweep_points_carry_requested_policy_vs_ungated_reference() {
                 alpha,
                 p.eval.policy,
                 1.0,
-            );
+            ).unwrap();
             assert_eq!(p.eval.e_total_j().to_bits(), direct.e_total_j().to_bits());
             assert_eq!(p.eval.n_switch, direct.n_switch);
             // No-gating at B=1 is exactly the reference: zero deltas.

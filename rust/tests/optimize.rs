@@ -1,0 +1,247 @@
+//! Integration suite for the Stage-II Pareto/portfolio optimizer.
+//!
+//! The acceptance property: frontier points must be dominated-free
+//! against the *naive oracle's* sweep output (`sweep_naive`) on
+//! randomized traces — the optimizer can never emit a configuration that
+//! some evaluated candidate beats on energy, activity, and area at once.
+//! Plus: cross-workload portfolio consistency via brute force, and
+//! byte-determinism of the `pareto_csv` artifact over the fused
+//! serving/decode pipeline (what the CI `repro optimize` gate compares).
+
+use trapti::api::{ApiContext, ExperimentSpec, PortfolioOptions};
+use trapti::banking::{
+    optimize, pareto_frontier, sweep_naive, Constraints, GatingPolicy, SweepPoint,
+    SweepSpec, WorkloadSweep,
+};
+use trapti::cacti::CactiModel;
+use trapti::report::tables::pareto_csv;
+use trapti::serving::ServingParams;
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::util::MIB;
+use trapti::workload::{TINY_GQA, TINY_MHA};
+
+fn objectives(p: &SweepPoint) -> [f64; 3] {
+    [p.eval.e_total_j(), p.eval.avg_active_banks, p.eval.area_mm2]
+}
+
+fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+fn random_trace(rng: &mut Rng, cap: u64) -> OccupancyTrace {
+    let mut tr = OccupancyTrace::new("m", cap);
+    let mut t = 0u64;
+    for _ in 0..rng.range(1, 100) {
+        t += rng.range(1, 20_000);
+        let needed = if rng.below(5) == 0 { 0 } else { rng.below(cap + 1) };
+        tr.record(t, needed, 0);
+    }
+    tr.finalize(t + rng.range(1, 5_000));
+    tr
+}
+
+fn rich_grid(peak: u64) -> SweepSpec {
+    SweepSpec {
+        capacities: vec![peak.max(1), peak.max(1) * 2, peak.max(1) * 4],
+        banks: vec![1, 2, 4, 8, 16, 32],
+        alphas: vec![0.9],
+        policies: vec![
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ],
+    }
+}
+
+/// The ISSUE acceptance property: on randomized traces, every frontier
+/// point of the optimizer is dominated-free against the *naive oracle's*
+/// full sweep, and every non-frontier candidate is weakly dominated by
+/// some frontier member (nothing good was dropped).
+#[test]
+fn prop_frontier_dominated_free_against_sweep_naive() {
+    let cacti = CactiModel::default();
+    check("optimize-frontier-vs-naive", 30, |rng: &mut Rng| {
+        let tr = random_trace(rng, 48 * MIB);
+        let stats = AccessStats {
+            reads: rng.below(1 << 28),
+            writes: rng.below(1 << 28),
+            ..Default::default()
+        };
+        let points =
+            sweep_naive(&cacti, &tr, &stats, &rich_grid(tr.peak_needed()), 1.0)
+                .unwrap();
+        assert!(!points.is_empty());
+        let frontier = pareto_frontier(&points, 0.0);
+        assert!(!frontier.is_empty());
+        let obj: Vec<[f64; 3]> = points.iter().map(objectives).collect();
+        for &i in &frontier {
+            for (j, o) in obj.iter().enumerate() {
+                assert!(
+                    j == i || !dominates(o, &obj[i]),
+                    "frontier point {i} is dominated by sweep point {j}"
+                );
+            }
+        }
+        for (j, o) in obj.iter().enumerate() {
+            if frontier.contains(&j) {
+                continue;
+            }
+            assert!(
+                frontier
+                    .iter()
+                    .any(|&i| obj[i].iter().zip(o).all(|(x, y)| x <= y)),
+                "candidate {j} neither on frontier nor covered by it"
+            );
+        }
+    });
+}
+
+/// The full optimize() pass over the oracle output: the robust-best
+/// portfolio pick must brute-force-minimize worst-case regret across
+/// workloads, and regrets must be exact energy ratios.
+#[test]
+fn prop_portfolio_regret_matches_brute_force() {
+    let cacti = CactiModel::default();
+    check("optimize-portfolio-brute-force", 10, |rng: &mut Rng| {
+        // Shared grid across two random workloads, anchored above both
+        // peaks so the portfolio intersection is non-empty.
+        let ta = random_trace(rng, 32 * MIB);
+        let tb = random_trace(rng, 32 * MIB);
+        let peak = ta.peak_needed().max(tb.peak_needed()).max(1);
+        let grid = rich_grid(peak);
+        let stats = AccessStats {
+            reads: 1_000_000,
+            writes: 500_000,
+            ..Default::default()
+        };
+        let wa = WorkloadSweep {
+            name: "wa".to_string(),
+            end_cycles: ta.end_time().unwrap(),
+            points: sweep_naive(&cacti, &ta, &stats, &grid, 1.0).unwrap(),
+        };
+        let wb = WorkloadSweep {
+            name: "wb".to_string(),
+            end_cycles: tb.end_time().unwrap(),
+            points: sweep_naive(&cacti, &tb, &stats, &grid, 1.0).unwrap(),
+        };
+        let r = optimize(&[wa, wb], &Constraints::default(), 0.0, None).unwrap();
+        let best = r.robust_best().unwrap();
+        // Brute force: every portfolio entry's worst-case regret >= the
+        // chosen one's.
+        for e in &r.portfolio {
+            assert!(best.worst_regret_pct <= e.worst_regret_pct + 1e-12);
+        }
+        // Regrets recompute exactly from the frontiers' best energies.
+        for e in &r.portfolio {
+            for ((reg, energy), f) in
+                e.regret_pct.iter().zip(&e.energy_j).zip(&r.frontiers)
+            {
+                let want = if f.best_energy_j == 0.0 {
+                    0.0
+                } else {
+                    (energy - f.best_energy_j) / f.best_energy_j * 100.0
+                };
+                assert!((reg - want).abs() < 1e-9, "{reg} vs {want}");
+            }
+        }
+    });
+}
+
+/// End-to-end determinism of the CLI artifact: the fused decode+serving
+/// portfolio pipeline produces byte-identical `pareto_csv` output across
+/// runs (the CI gate's in-process equivalent).
+#[test]
+fn pareto_csv_is_byte_deterministic_over_fused_pipeline() {
+    let ctx = ApiContext::new();
+    let mut p = ServingParams::new(12, 3, 7);
+    p.prompt_min = 4;
+    p.prompt_max = 24;
+    p.gen_min = 2;
+    p.gen_max = 12;
+    p.page_tokens = 8;
+    p.mean_arrival_gap = 40_000;
+    let specs = vec![
+        ExperimentSpec::builder()
+            .model(TINY_MHA)
+            .decode(24, 12)
+            .accel(trapti::config::tiny())
+            .build()
+            .unwrap(),
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(trapti::config::tiny())
+            .build()
+            .unwrap(),
+    ];
+    let opts = PortfolioOptions {
+        grid: Some(SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB, 8 * MIB],
+            banks: vec![1, 2, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        }),
+        ..Default::default()
+    };
+    let a = trapti::api::run_portfolio(&ctx, &specs, &opts).unwrap();
+    let b = trapti::api::run_portfolio(&ctx, &specs, &opts).unwrap();
+    let csv_a = pareto_csv(&a.result);
+    let csv_b = pareto_csv(&b.result);
+    assert!(!csv_a.is_empty());
+    assert_eq!(csv_a, csv_b, "pareto CSV must be byte-identical");
+    // Both workloads contribute frontier rows.
+    assert!(csv_a.contains("tiny-mha-decode24+12"));
+    assert!(csv_a.contains("tiny-gqa-serve-r12-c3-s7"));
+    // And the robust-best is stable.
+    assert_eq!(
+        a.result.robust_best().unwrap().key,
+        b.result.robust_best().unwrap().key
+    );
+}
+
+/// Constraints thread through the full pipeline: a min-capacity floor
+/// excludes small configs from frontier and portfolio alike.
+#[test]
+fn constraints_apply_across_portfolio() {
+    let ctx = ApiContext::new();
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .decode(24, 12)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap();
+    let grid = SweepSpec {
+        capacities: vec![2 * MIB, 4 * MIB, 8 * MIB],
+        banks: vec![1, 4],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::Aggressive],
+    };
+    let run = trapti::api::run_portfolio(
+        &ctx,
+        std::slice::from_ref(&spec),
+        &PortfolioOptions {
+            grid: Some(grid),
+            constraints: Constraints {
+                min_capacity: Some(4 * MIB),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for f in &run.result.frontiers {
+        for fp in &f.frontier {
+            assert!(fp.point.eval.capacity >= 4 * MIB);
+        }
+    }
+    for e in &run.result.portfolio {
+        assert!(e.key.capacity >= 4 * MIB);
+    }
+}

@@ -75,7 +75,7 @@ fn sizing_matches_paper_capacities() {
 fn table2_banking_reduces_energy_with_sweet_spot() {
     let c = ctx();
     let pair = exp::paired_prefill(&c).unwrap();
-    let t2 = exp::table2(&c, &pair);
+    let t2 = exp::table2(&c, &pair).unwrap();
     // Best bank count lands in the interior (paper: B in {8,16}).
     for cap in [64 * MIB, 96 * MIB, 128 * MIB] {
         let best = exp::Table2::best_banks_at(&t2.gqa_points, cap).unwrap();
@@ -160,7 +160,7 @@ fn switching_overhead_negligible() {
         0.9,
         GatingPolicy::Aggressive,
         1.0,
-    );
+    ).unwrap();
     assert!(
         ev.e_sw_j < 0.01 * ev.e_total_j(),
         "switching {} J vs total {} J",
@@ -189,9 +189,11 @@ fn trace_reuse_equals_inline_stage2() {
     let spec = s1.paper_sweep();
     let inline = trapti::banking::sweep(
         &c.cacti, s1.trace(), &s1.result.stats, &spec, 1.0,
-    );
+    )
+    .unwrap();
     let from_file =
-        trapti::banking::sweep(&c.cacti, &reloaded, &s1.result.stats, &spec, 1.0);
+        trapti::banking::sweep(&c.cacti, &reloaded, &s1.result.stats, &spec, 1.0)
+            .unwrap();
     assert_eq!(inline.len(), from_file.len());
     for (a, b) in inline.iter().zip(&from_file) {
         assert!((a.eval.e_total_j() - b.eval.e_total_j()).abs() < 1e-12);
@@ -220,7 +222,7 @@ fn aggregate_baseline_cannot_see_gating_opportunities() {
         0.9,
         GatingPolicy::Aggressive,
         1.0,
-    );
+    ).unwrap();
     assert!(
         trapti_ev.e_leak_j < agg.e_leak_j,
         "time resolution must beat peak-pinned leakage: {} vs {}",

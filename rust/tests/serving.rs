@@ -31,7 +31,7 @@ fn acceptance_gpt2_xl_c64_r256_seed7() {
     assert_eq!(run.result.peak_concurrent, 64, "cap must be reached");
 
     // Stage II completes and reports a best banking point.
-    let s2 = run.stage2(&ctx);
+    let s2 = run.stage2(&ctx).unwrap();
     assert!(!s2.points.is_empty());
     let best = s2.best().unwrap();
     assert!(best.eval.banks >= 1);

@@ -83,8 +83,8 @@ fn sweep_fused_matches_naive_on_prefill_trace() {
         .run_stage1(&ctx)
         .unwrap();
     let grid = rich_grid(vec![2 * MIB, 4 * MIB, 8 * MIB]);
-    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
-    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0).unwrap();
+    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0).unwrap();
     assert!(!fused.is_empty());
     assert_points_match(&fused, &naive);
 }
@@ -101,8 +101,8 @@ fn sweep_fused_matches_naive_on_decode_trace() {
         .run_stage1(&ctx)
         .unwrap();
     let grid = rich_grid(vec![MIB, 2 * MIB, 4 * MIB]);
-    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
-    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0);
+    let fused = sweep(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0).unwrap();
+    let naive = sweep_naive(&ctx.cacti, s1.trace(), &s1.result.stats, &grid, 1.0).unwrap();
     assert!(!fused.is_empty());
     assert_points_match(&fused, &naive);
 }
@@ -133,8 +133,8 @@ fn sweep_fused_matches_naive_on_serving_trace() {
         peak * 2,
         peak * 4,
     ]);
-    let fused = sweep(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0);
-    let naive = sweep_naive(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0);
+    let fused = sweep(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0).unwrap();
+    let naive = sweep_naive(&ctx.cacti, run.trace(), &run.result.stats, &grid, 1.0).unwrap();
     assert!(!fused.is_empty());
     assert_points_match(&fused, &naive);
 
@@ -142,7 +142,7 @@ fn sweep_fused_matches_naive_on_serving_trace() {
     // the sweep sink, no materialized trace) agrees with Stage II over
     // the materialized trace on the same grid.
     let sweep_grid = run.serving_grid();
-    let reference = run.stage2_with(&ctx, &sweep_grid);
+    let reference = run.stage2_with(&ctx, &sweep_grid).unwrap();
     let (fused_run, fused_sweep) = spec.serve_fused_with(&ctx, &sweep_grid).unwrap();
     assert_eq!(fused_run.result.total_cycles, run.result.total_cycles);
     assert_points_match(&fused_sweep.points, &reference.points);
@@ -160,7 +160,7 @@ fn stream_stage2_is_fused_stage1_plus_stage2() {
         .build()
         .unwrap();
     let s1 = spec.run_stage1(&ctx).unwrap();
-    let reference = s1.stage2_with(&ctx, &grid);
+    let reference = s1.stage2_with(&ctx, &grid).unwrap();
     let (summary, points) = spec.stream_stage2(&ctx).unwrap();
     assert_eq!(summary.total_cycles(), s1.result.total_cycles);
     assert_points_match(&points, reference.shared());
@@ -191,7 +191,7 @@ fn prop_fused_activity_integral_matches_bank_activity() {
             policies: vec![GatingPolicy::Aggressive],
         };
         let stats = AccessStats::default();
-        let pts = sweep(&ctx.cacti, &tr, &stats, &grid, 1.0);
+        let pts = sweep(&ctx.cacti, &tr, &stats, &grid, 1.0).unwrap();
         assert_eq!(pts.len(), grid.points());
         for p in &pts {
             let timeline = bank_activity(
