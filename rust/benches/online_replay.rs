@@ -1,0 +1,143 @@
+//! Bench: Stage-III online gating replay of the Table II grid winners ×
+//! {GPT-2 XL, DeepSeek-R1-Distill-Qwen-1.5B} × {decode, serving}.
+//! Run: `cargo bench --bench online_replay`.
+//!
+//! The four workloads stream through the fused Stage-II pipeline once to
+//! find each workload's own energy-optimal configuration (its "Table II
+//! winner"); the timed region is the pure Stage-III replay — the
+//! cycle-level per-bank state machines with wake-stall feedback — which
+//! must stay cheap next to simulation (it walks the trace once per
+//! config with O(B) state). Also asserts the module's two structural
+//! properties on full-scale traces: zero-wake bit-identical
+//! reconciliation with the offline evaluator, and determinism.
+
+use trapti::api::{optimize as api_opt, ApiContext, ExperimentSpec, MaterializedRun};
+use trapti::banking::{evaluate, replay_trace_with, OnlineConfig};
+use trapti::util::bench::{bench, default_iters};
+use trapti::workload::{DS_R1D_Q15B, GPT2_XL};
+
+fn main() {
+    let ctx = ApiContext::new();
+
+    let serving = |model: trapti::workload::ModelPreset| {
+        ExperimentSpec::builder()
+            .model(model)
+            .serving(trapti::serving::ServingParams::new(64, 8, 7))
+            .build()
+            .expect("serving spec")
+    };
+    let decode = |model: trapti::workload::ModelPreset| {
+        ExperimentSpec::builder()
+            .model(model)
+            .decode(512, 128)
+            .build()
+            .expect("decode spec")
+    };
+    let specs = vec![
+        decode(GPT2_XL),
+        decode(DS_R1D_Q15B),
+        serving(GPT2_XL),
+        serving(DS_R1D_Q15B),
+    ];
+
+    // Stage I + II once (fused): the Table II-shaped covering grid gives
+    // each workload its own energy-optimal winner.
+    let grid = api_opt::covering_grid(&specs);
+    let run = api_opt::run_portfolio(
+        &ctx,
+        &specs,
+        &api_opt::PortfolioOptions {
+            grid: Some(grid),
+            ..Default::default()
+        },
+    )
+    .expect("portfolio pipeline");
+
+    // Materialize each workload's trace once (the shared api helper);
+    // replays borrow it.
+    let mut workloads: Vec<(String, MaterializedRun, f64, OnlineConfig)> = Vec::new();
+    for (spec, frontier) in specs.iter().zip(&run.result.frontiers) {
+        let mat = spec.materialize(&ctx).expect("stage 1");
+        let winner = frontier
+            .frontier
+            .iter()
+            .find(|fp| trapti::banking::ConfigKey::of(&fp.point) == frontier.best_key)
+            .unwrap_or(&frontier.frontier[0]);
+        workloads.push((
+            frontier.workload.clone(),
+            mat,
+            spec.freq_ghz(),
+            OnlineConfig::of_point(&winner.point),
+        ));
+    }
+
+    // Timed region: one Stage-III replay per workload winner (totals
+    // only — no timeline recording, the validation-pass configuration).
+    let (stats, reports) = bench("online_replay", default_iters(), || {
+        workloads
+            .iter()
+            .map(|(_, mat, freq, cfg)| {
+                replay_trace_with(&ctx.cacti, mat.trace(), mat.stats(), *cfg, *freq, false)
+                    .expect("replay")
+            })
+            .collect::<Vec<_>>()
+    });
+
+    println!(
+        "{:>34} {:>28} {:>12} {:>10} {:>8} {:>9}",
+        "workload", "winner", "trace[cyc]", "stall[cyc]", "stall%", "wakes"
+    );
+    for ((name, ..), r) in workloads.iter().zip(&reports) {
+        println!(
+            "{:>34} {:>28} {:>12} {:>10} {:>7.3}% {:>9}",
+            name,
+            r.config.label(),
+            r.trace_cycles,
+            r.stall_cycles,
+            r.stall_pct(),
+            r.wake_events,
+        );
+    }
+
+    // Zero-wake reconciliation on full-scale traces: bit-identical to
+    // the offline evaluator for every winner.
+    for (name, mat, freq, cfg) in &workloads {
+        let mut zero = *cfg;
+        zero.wake_override = Some(0);
+        let online =
+            replay_trace_with(&ctx.cacti, mat.trace(), mat.stats(), zero, *freq, false)
+                .expect("zero-wake replay");
+        let offline = evaluate(
+            &ctx.cacti,
+            mat.trace(),
+            mat.stats(),
+            cfg.capacity,
+            cfg.banks,
+            cfg.alpha,
+            cfg.policy,
+            *freq,
+        )
+        .expect("offline evaluate");
+        assert_eq!(
+            online.eval.e_total_j().to_bits(),
+            offline.e_total_j().to_bits(),
+            "{name}: zero-wake replay must reconcile bit-for-bit"
+        );
+        assert_eq!(online.stall_cycles, 0, "{name}");
+    }
+
+    // Determinism: a second replay pass is bit-identical.
+    for ((name, mat, freq, cfg), first) in workloads.iter().zip(&reports) {
+        let again =
+            replay_trace_with(&ctx.cacti, mat.trace(), mat.stats(), *cfg, *freq, false)
+                .expect("replay again");
+        assert_eq!(again.stall_cycles, first.stall_cycles, "{name}");
+        assert_eq!(
+            again.eval.e_total_j().to_bits(),
+            first.eval.e_total_j().to_bits(),
+            "{name}: replay must be deterministic"
+        );
+    }
+
+    println!("replay pass mean: {:?}", stats.mean);
+}

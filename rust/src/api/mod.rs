@@ -29,6 +29,36 @@
 //! [`ExperimentSpec::stream_stage2`] for single-sequence workloads,
 //! [`ExperimentSpec::serve_fused`] for serving scenarios.
 //!
+//! **Stage III** closes the loop online: [`ExperimentSpec::stream_online`]
+//! / [`ExperimentSpec::serve_online`] pipe the Stage-I stream into the
+//! cycle-level gating co-simulator
+//! ([`crate::banking::OnlineGateSim`]) for one chosen configuration,
+//! [`Stage2Run::replay_online`] replays against a materialized trace,
+//! and [`online_validate`] replays a whole portfolio's Pareto frontiers
+//! to report predicted-vs-observed energy/stall deltas (`repro replay`,
+//! `repro optimize --online-validate 1`).
+//!
+//! A runnable end-to-end example on the tiny preset (spec-build →
+//! Stage I → Stage II sweep → optimize):
+//!
+//! ```
+//! use trapti::api::{ApiContext, ExperimentSpec};
+//! use trapti::banking::Constraints;
+//! use trapti::workload::TINY_GQA;
+//!
+//! let ctx = ApiContext::new();
+//! let spec = ExperimentSpec::builder()
+//!     .model(TINY_GQA)
+//!     .decode(32, 16)
+//!     .accel(trapti::config::tiny())
+//!     .build()
+//!     .unwrap();
+//! let s1 = spec.run_stage1(&ctx).unwrap();          // Stage I
+//! let s2 = s1.stage2(&ctx).unwrap();                // Stage II sweep
+//! let r = s2.optimize(&Constraints::default(), 0.0).unwrap();
+//! assert!(!r.frontiers[0].frontier.is_empty());     // Pareto frontier
+//! ```
+//!
 //! The paper's figure/table runners live in [`experiments`]; the
 //! legacy `coordinator::Coordinator` is a thin deprecated shim over
 //! this module.
@@ -58,7 +88,10 @@ pub mod spec;
 pub mod stage;
 
 pub use batch::{BatchResult, BatchRunner};
-pub use optimize::{run_portfolio, PortfolioOptions, PortfolioRun};
+pub use optimize::{
+    online_validate, run_portfolio, OnlineValidation, PortfolioOptions,
+    PortfolioRun,
+};
 pub use serving::{ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};
-pub use stage::{ApiContext, Stage1Run, Stage1Summary, Stage2Run};
+pub use stage::{ApiContext, MaterializedRun, Stage1Run, Stage1Summary, Stage2Run};

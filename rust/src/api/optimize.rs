@@ -1,5 +1,5 @@
 //! `api` surface of the Stage-II Pareto/portfolio optimizer
-//! ([`crate::banking::optimize`]).
+//! ([`crate::banking::optimize`](mod@crate::banking::optimize)).
 //!
 //! Three entry points:
 //!
@@ -18,9 +18,12 @@
 //! `run_portfolio` calls over equal specs produce identical results
 //! (the CI gate compares `repro optimize --pareto-csv` bytes).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::banking::optimize::{optimize, Constraints, OptimizeResult, WorkloadSweep};
+use crate::banking::online::{replay_trace_with, OnlineConfig};
+use crate::banking::optimize::{
+    optimize, ConfigKey, Constraints, OptimizeResult, WorkloadSweep,
+};
 use crate::banking::SweepSpec;
 use crate::workload::Workload;
 
@@ -200,6 +203,113 @@ pub fn run_portfolio(
         opts.weights.as_deref(),
     )?;
     Ok(PortfolioRun { workloads, result })
+}
+
+/// One frontier configuration's offline prediction vs its Stage-III
+/// online observation on one workload.
+#[derive(Debug, Clone)]
+pub struct OnlineValidation {
+    pub workload: String,
+    pub key: ConfigKey,
+    /// Offline Stage-II total energy of the configuration, joules.
+    pub predicted_e_j: f64,
+    /// Online (stall-adjusted) total energy, joules.
+    pub observed_e_j: f64,
+    /// `(observed - predicted) / predicted`, percent (0 for a zero
+    /// prediction). Positive = the offline model underestimated.
+    pub energy_delta_pct: f64,
+    /// The offline wake-exposure bound
+    /// ([`crate::banking::optimize::wake_exposure_pct`]), percent.
+    pub predicted_wake_pct: f64,
+    /// Observed stall share of the run, percent of the trace length.
+    pub observed_stall_pct: f64,
+    /// Stage-I run length (no stalls), cycles.
+    pub trace_cycles: u64,
+    /// Cycles the execution stalled waiting for bank wake-ups.
+    pub stall_cycles: u64,
+    /// Level-rise instants that woke at least one gated bank.
+    pub wake_events: u64,
+}
+
+impl OnlineValidation {
+    /// Stall-adjusted end-to-end cycle count.
+    pub fn end_cycles(&self) -> u64 {
+        self.trace_cycles + self.stall_cycles
+    }
+}
+
+/// Stage-III validation pass over a portfolio run: replay every
+/// per-workload Pareto-frontier configuration online
+/// ([`crate::banking::online::OnlineGateSim`]) against its workload and
+/// report predicted-vs-observed energy and stall deltas per config —
+/// the execution-driven check that the offline optimizer's picks
+/// survive wake-latency timing feedback.
+///
+/// `specs` must be the slice the portfolio was collected from (same
+/// order); each workload is simulated **once** (materialized), then
+/// every frontier configuration replays against that trace. Output
+/// order is deterministic: workloads in input order, frontier
+/// configurations in canonical frontier order.
+pub fn online_validate(
+    ctx: &ApiContext,
+    specs: &[ExperimentSpec],
+    run: &PortfolioRun,
+) -> Result<Vec<OnlineValidation>> {
+    ensure!(
+        specs.len() == run.result.frontiers.len(),
+        "online_validate: {} specs for {} frontiers (pass the spec slice \
+         the portfolio was collected from)",
+        specs.len(),
+        run.result.frontiers.len()
+    );
+    let mut out = Vec::new();
+    for (spec, frontier) in specs.iter().zip(&run.result.frontiers) {
+        ensure!(
+            workload_label(spec) == frontier.workload,
+            "online_validate: spec `{}` does not match frontier workload \
+             `{}` (order must be preserved)",
+            workload_label(spec),
+            frontier.workload
+        );
+        // One materialized Stage-I run per workload; every frontier
+        // config replays against its borrowed trace.
+        let run = spec.materialize(ctx)?;
+        for fp in &frontier.frontier {
+            let config = OnlineConfig::of_point(&fp.point);
+            let report = replay_trace_with(
+                &ctx.cacti,
+                run.trace(),
+                run.stats(),
+                config,
+                spec.freq_ghz(),
+                false, // totals only; no timelines for a whole frontier
+            )?;
+            out.push(OnlineValidation {
+                workload: frontier.workload.clone(),
+                key: ConfigKey::of(&fp.point),
+                predicted_e_j: fp.point.eval.e_total_j(),
+                observed_e_j: report.e_total_j(),
+                energy_delta_pct: report.eval.delta_pct(&fp.point.eval),
+                predicted_wake_pct: fp.wake_exposure_pct,
+                observed_stall_pct: report.stall_pct(),
+                trace_cycles: report.trace_cycles,
+                stall_cycles: report.stall_cycles,
+                wake_events: report.wake_events,
+            });
+        }
+    }
+    Ok(out)
+}
+
+impl PortfolioRun {
+    /// Convenience wrapper around [`online_validate`].
+    pub fn online_validate(
+        &self,
+        ctx: &ApiContext,
+        specs: &[ExperimentSpec],
+    ) -> Result<Vec<OnlineValidation>> {
+        online_validate(ctx, specs, self)
+    }
 }
 
 impl ExperimentSpec {
@@ -398,6 +508,56 @@ mod tests {
         assert_eq!(r.frontiers.len(), 1);
         assert_eq!(r.workload_names[0], "tiny-gqa-decode32+16");
         assert!(!r.frontiers[0].frontier.is_empty());
+    }
+
+    #[test]
+    fn online_validate_covers_every_frontier_config() {
+        let ctx = ApiContext::new();
+        let specs = vec![decode_spec(TINY_GQA), serving_spec()];
+        let opts = PortfolioOptions {
+            grid: Some(shared_grid()),
+            ..Default::default()
+        };
+        let run = run_portfolio(&ctx, &specs, &opts).unwrap();
+        let vals = online_validate(&ctx, &specs, &run).unwrap();
+        let want: usize = run
+            .result
+            .frontiers
+            .iter()
+            .map(|f| f.frontier.len())
+            .sum();
+        assert_eq!(vals.len(), want);
+        // Rows follow (workload, frontier) order and reconcile with the
+        // offline predictions they validate.
+        let mut rows = vals.iter();
+        for f in &run.result.frontiers {
+            for fp in &f.frontier {
+                let v = rows.next().expect("one row per frontier config");
+                assert_eq!(v.workload, f.workload);
+                assert_eq!(v.key, ConfigKey::of(&fp.point));
+                assert_eq!(
+                    v.predicted_e_j.to_bits(),
+                    fp.point.eval.e_total_j().to_bits()
+                );
+                assert!(v.observed_e_j.is_finite() && v.observed_e_j >= 0.0);
+                assert!(v.energy_delta_pct.is_finite());
+                assert!(v.observed_stall_pct.is_finite() && v.observed_stall_pct >= 0.0);
+                assert_eq!(v.end_cycles(), v.trace_cycles + v.stall_cycles);
+                if v.wake_events == 0 {
+                    assert_eq!(v.stall_cycles, 0);
+                }
+            }
+        }
+        assert!(rows.next().is_none(), "no extra validation rows");
+        // Determinism: a second pass is bit-identical.
+        let again = run.online_validate(&ctx, &specs).unwrap();
+        for (a, b) in vals.iter().zip(&again) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.observed_e_j.to_bits(), b.observed_e_j.to_bits());
+            assert_eq!(a.stall_cycles, b.stall_cycles);
+        }
+        // Mismatched spec slices are a typed error, not a silent zip.
+        assert!(online_validate(&ctx, &specs[..1], &run).is_err());
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! obtainable from a `&ServingRun`, so "sweep before simulate" stays
 //! unrepresentable for the serving scenario too. The Stage-II evaluator
 //! consumes the merged KV-arena trace through the exact same
-//! [`crate::banking::sweep`] entry point as single-sequence traces.
+//! [`crate::banking::sweep`](fn@crate::banking::sweep) entry point as
+//! single-sequence traces.
 
 use anyhow::{bail, Result};
 
+use crate::banking::online::{replay_trace, OnlineConfig, OnlineGateSim, OnlineReport};
 use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSink, SweepSpec};
 use crate::serving::ServingParams;
 use crate::sim::serving::{
@@ -110,6 +112,24 @@ impl ExperimentSpec {
         self.serve_fused_with(ctx, &grid)
     }
 
+    /// Fused Stage I + Stage III for a serving scenario: the serving
+    /// simulation streams the KV-arena occupancy straight into the
+    /// online gating co-simulator
+    /// ([`crate::banking::online::OnlineGateSim`]), replaying one chosen
+    /// configuration with wake-latency stalls fed back into timing and
+    /// **no materialized trace**. The serving-side twin of
+    /// [`ExperimentSpec::stream_online`].
+    pub fn serve_online(
+        &self,
+        ctx: &ApiContext,
+        config: OnlineConfig,
+    ) -> Result<(ServingRun, OnlineReport)> {
+        let mut sim = OnlineGateSim::new(&ctx.cacti, config, self.freq_ghz())?;
+        let run = self.stream_serving(&mut sim)?;
+        let report = sim.into_report(&run.result.stats)?;
+        Ok((run, report))
+    }
+
     /// Fused serving run with an explicit Stage-II grid.
     pub fn serve_fused_with(
         &self,
@@ -189,6 +209,20 @@ impl ServingRun {
         self.stage2_with(ctx, &grid)
     }
 
+    /// Stage III: replay one configuration online against the
+    /// materialized serving trace (per-bank state machines, wake-stall
+    /// timing feedback). See [`ExperimentSpec::serve_online`] for the
+    /// streamed equivalent.
+    pub fn replay_online(&self, ctx: &ApiContext, config: OnlineConfig) -> Result<OnlineReport> {
+        Ok(replay_trace(
+            &ctx.cacti,
+            &self.result.trace,
+            &self.result.stats,
+            config,
+            self.spec.freq_ghz(),
+        )?)
+    }
+
     /// Stage II with an explicit grid.
     pub fn stage2_with(&self, ctx: &ApiContext, grid: &SweepSpec) -> Result<ServingSweep> {
         let points = sweep(
@@ -209,7 +243,8 @@ impl ServingRun {
 
 /// Stage-II output over a serving trace. Carries the workload label and
 /// the run length so it can feed the Stage-II optimizer
-/// (`ServingSweep::optimize`, [`crate::banking::optimize`]) standalone.
+/// (`ServingSweep::optimize`,
+/// [`crate::banking::optimize`](mod@crate::banking::optimize)) standalone.
 #[derive(Debug, Clone)]
 pub struct ServingSweep {
     pub workload: String,
@@ -335,6 +370,28 @@ mod tests {
         assert_eq!(run.result.completed, 24);
         assert!(!sweep.points.is_empty(), "arena bound must be feasible");
         assert!(sweep.best_delta_pct() < 0.0);
+    }
+
+    #[test]
+    fn serve_online_matches_materialized_replay() {
+        let ctx = ApiContext::new();
+        let spec = serving_spec();
+        let reference = spec.run_serving().unwrap();
+        // Capacity from the arena bound so the replay is always feasible.
+        let capacity = spec.serving_arena_grid().unwrap().capacities[0];
+        let cfg = OnlineConfig::new(capacity, 8, 0.9, GatingPolicy::Aggressive);
+        let materialized = reference.replay_online(&ctx, cfg).unwrap();
+        let (run, streamed) = spec.serve_online(&ctx, cfg).unwrap();
+        assert_eq!(run.result.total_cycles, reference.result.total_cycles);
+        assert_eq!(run.trace().samples().len(), 1, "no materialized trace");
+        assert_eq!(streamed.trace_cycles, materialized.trace_cycles);
+        assert_eq!(streamed.stall_cycles, materialized.stall_cycles);
+        assert_eq!(streamed.wake_events, materialized.wake_events);
+        assert_eq!(
+            streamed.eval.e_total_j().to_bits(),
+            materialized.eval.e_total_j().to_bits()
+        );
+        assert_eq!(streamed.timeline_csv(), materialized.timeline_csv());
     }
 
     #[test]

@@ -10,15 +10,17 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::banking::online::{replay_trace, OnlineConfig, OnlineGateSim, OnlineReport};
 use crate::banking::{sweep, SweepPoint, SweepSink, SweepSpec};
 use crate::cacti::CactiModel;
 use crate::energy::{energy_breakdown, EnergyBreakdown, EnergyParams};
 use crate::memory::{size_memory, SizingResult};
 use crate::sim::{simulate, simulate_with, SimOptions, SimResult};
-use crate::trace::{OccupancyTrace, TraceSink};
+use crate::trace::{AccessStats, OccupancyTrace, TraceSink};
 use crate::util::MIB;
-use crate::workload::{build_workload, WorkloadGraph};
+use crate::workload::{build_workload, Workload, WorkloadGraph};
 
+use super::serving::ServingRun;
 use super::spec::ExperimentSpec;
 
 /// Shared measurement context: CACTI characterization + energy
@@ -167,6 +169,25 @@ impl ExperimentSpec {
         Ok((summary, points))
     }
 
+    /// Fused Stage I + Stage III: stream the simulation's shared-SRAM
+    /// occupancy straight into the online gating co-simulator
+    /// ([`crate::banking::online::OnlineGateSim`]) — one chosen
+    /// (C, B, α, policy) configuration replayed cycle by cycle with
+    /// wake-latency stalls fed back into timing, **no materialized
+    /// trace**. With `config.wake_override = Some(0)` the report's
+    /// energy is bit-identical to the offline Stage-II evaluation of
+    /// the same configuration.
+    pub fn stream_online(
+        &self,
+        ctx: &ApiContext,
+        config: OnlineConfig,
+    ) -> Result<(Stage1Summary, OnlineReport)> {
+        let mut sim = OnlineGateSim::new(&ctx.cacti, config, self.freq_ghz())?;
+        let summary = self.stream_stage1(ctx, &mut sim)?;
+        let report = sim.into_report(summary.stats())?;
+        Ok((summary, report))
+    }
+
     /// Stage-I memory sizing loop (16 MiB steps, CACTI latency model —
     /// the paper's §IV-B blue loop in Fig. 3).
     pub fn size_memory(&self, ctx: &ApiContext) -> Result<SizingResult> {
@@ -267,6 +288,45 @@ impl Stage1Run {
     }
 }
 
+/// A materialized Stage-I run of either workload kind — the one place
+/// that knows serving specs materialize via `run_serving` and
+/// single-sequence specs via `run_stage1`. Consumers (the Stage-III
+/// validation pass, its tests and bench) borrow the trace and
+/// statistics instead of cloning them.
+#[derive(Debug, Clone)]
+pub enum MaterializedRun {
+    Single(Stage1Run),
+    Serving(ServingRun),
+}
+
+impl MaterializedRun {
+    /// The run's primary occupancy trace (shared SRAM / KV arena).
+    pub fn trace(&self) -> &OccupancyTrace {
+        match self {
+            MaterializedRun::Single(s) => s.trace(),
+            MaterializedRun::Serving(r) => r.trace(),
+        }
+    }
+
+    /// The run's aggregate access statistics (Eq. 3 inputs).
+    pub fn stats(&self) -> &AccessStats {
+        match self {
+            MaterializedRun::Single(s) => &s.result.stats,
+            MaterializedRun::Serving(r) => &r.result.stats,
+        }
+    }
+}
+
+impl ExperimentSpec {
+    /// Materialize this spec's Stage-I run regardless of workload kind.
+    pub fn materialize(&self, ctx: &ApiContext) -> Result<MaterializedRun> {
+        match self.workload {
+            Workload::Serving(_) => Ok(MaterializedRun::Serving(self.run_serving()?)),
+            _ => Ok(MaterializedRun::Single(self.run_stage1(ctx)?)),
+        }
+    }
+}
+
 /// Stage-II output: sweep evaluations grouped per memory, borrowing the
 /// Stage-I run they were derived from.
 #[derive(Debug, Clone)]
@@ -303,6 +363,22 @@ impl Stage2Run<'_> {
         self.points()
             .map(|p| p.delta_e_pct())
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Stage III: replay one configuration of this sweep online against
+    /// the Stage-I trace the sweep was derived from — per-bank state
+    /// machines, wake stalls delaying subsequent accesses, and a
+    /// stall-adjusted end-to-end cycle count the offline sweep cannot
+    /// produce. The configuration need not be a grid point; any
+    /// [`OnlineConfig`] whose capacity covers the trace peak replays.
+    pub fn replay_online(&self, ctx: &ApiContext, config: OnlineConfig) -> Result<OnlineReport> {
+        Ok(replay_trace(
+            &ctx.cacti,
+            self.stage1.trace(),
+            &self.stage1.result.stats,
+            config,
+            self.stage1.spec.freq_ghz(),
+        )?)
     }
 }
 
@@ -442,6 +518,34 @@ mod tests {
         bare.sweep = None;
         let err = bare.stream_stage2(&ctx).unwrap_err();
         assert!(err.to_string().contains("sweep grid"), "{err:#}");
+    }
+
+    #[test]
+    fn stream_online_matches_materialized_replay() {
+        use crate::banking::{GatingPolicy, OnlineConfig};
+        let ctx = ApiContext::new();
+        let spec = tiny_spec();
+        let s1 = spec.run_stage1(&ctx).unwrap();
+        let cfg = OnlineConfig::new(
+            4 * MIB,
+            8,
+            0.9,
+            GatingPolicy::Aggressive,
+        );
+        let reference = s1
+            .stage2(&ctx)
+            .unwrap()
+            .replay_online(&ctx, cfg)
+            .unwrap();
+        let (summary, streamed) = spec.stream_online(&ctx, cfg).unwrap();
+        assert_eq!(summary.total_cycles(), s1.result.total_cycles);
+        assert_eq!(streamed.trace_cycles, s1.result.total_cycles);
+        assert_eq!(streamed.stall_cycles, reference.stall_cycles);
+        assert_eq!(
+            streamed.eval.e_total_j().to_bits(),
+            reference.eval.e_total_j().to_bits()
+        );
+        assert_eq!(streamed.timelines, reference.timelines);
     }
 
     #[test]

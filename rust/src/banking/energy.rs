@@ -90,7 +90,7 @@ impl BankingEval {
 ///
 /// This is the single-candidate oracle: it materializes the activity
 /// timeline and per-bank idle intervals. Grid sweeps go through the
-/// fused single-pass engine instead ([`crate::banking::sweep`] /
+/// fused single-pass engine instead ([`crate::banking::sweep`](fn@crate::banking::sweep) /
 /// [`crate::banking::fused`]), whose accumulators replicate these exact
 /// expressions — keep the two in sync.
 ///

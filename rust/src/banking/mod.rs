@@ -1,15 +1,40 @@
-//! Stage II: offline SRAM banking and power-gating exploration driven by
+//! Stage II & III: SRAM banking and power-gating exploration driven by
 //! Stage-I occupancy traces (paper §III-B, Eqs. 1-5).
 //!
 //! Grid sweeps run through the fused single-pass engine ([`fused`]): one
 //! traversal of the trace (or of the live Stage-I stream, via
 //! [`SweepSink`]) evaluates every (C, B, α, policy) candidate at once.
 //! The per-point path survives as [`sweep_naive`], the differential
-//! oracle.
+//! oracle. [`optimize`](mod@crate::banking::optimize) chooses among the
+//! evaluated candidates (constraints → ε-Pareto frontier → cross-workload
+//! regret portfolio), and [`online`] closes the loop with a Stage-III
+//! execution-driven co-simulation of one chosen configuration, feeding
+//! wake-latency stalls back into timing — the effect the offline model
+//! can only bound.
+//!
+//! ```
+//! use trapti::api::{ApiContext, ExperimentSpec};
+//! use trapti::workload::TINY_GQA;
+//!
+//! // Spec-build → Stage I → Stage II on the paper grid derived from the
+//! // observed peak (tiny preset, runs in milliseconds).
+//! let ctx = ApiContext::new();
+//! let spec = ExperimentSpec::builder()
+//!     .model(TINY_GQA)
+//!     .prefill(64)
+//!     .accel(trapti::config::tiny())
+//!     .build()
+//!     .unwrap();
+//! let s1 = spec.run_stage1(&ctx).unwrap();
+//! let s2 = s1.stage2(&ctx).unwrap();
+//! assert!(!s2.shared().is_empty());
+//! assert!(s2.best_delta_pct() <= 0.0, "banking+gating never hurts");
+//! ```
 
 pub mod activity;
 pub mod energy;
 pub mod fused;
+pub mod online;
 pub mod optimize;
 pub mod policy;
 pub mod sweep;
@@ -20,6 +45,10 @@ pub use activity::{
 };
 pub use energy::{evaluate, BankingEval, EnergyError};
 pub use fused::{sweep_fused, FusedSweep, SweepSink};
+pub use online::{
+    replay_trace, replay_trace_with, BankState, OnlineConfig, OnlineError,
+    OnlineGateSim, OnlineReport, StateSpan,
+};
 pub use optimize::{
     optimize, pareto_frontier, ConfigKey, Constraints, FrontierPoint,
     OptimizeError, OptimizeResult, PortfolioEntry, WorkloadFrontier,

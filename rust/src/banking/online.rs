@@ -1,0 +1,1010 @@
+//! Stage III: execution-driven online power-gating co-simulation.
+//!
+//! Stage II picks a banking/gating configuration *offline* from the
+//! occupancy trace; by construction that model cannot see the latency
+//! feedback of wake-up stalls on execution timing — the optimizer only
+//! *bounds* it as wake-latency exposure
+//! ([`crate::banking::optimize::wake_exposure_pct`]). This module closes
+//! the loop: [`OnlineGateSim`] replays ONE chosen (C, B, α, policy)
+//! configuration cycle by cycle against the live Stage-I occupancy
+//! stream (it is a [`TraceSink`]) with explicit per-bank state machines
+//! ([`BankState`]: Active / Idle / Drowsy / Gated / Waking) and a
+//! feedback path where wake-latency stalls *delay every subsequent
+//! access* — the time warp a trace-driven model cannot express.
+//!
+//! Outputs ([`OnlineReport`]):
+//!
+//! * a **stall-adjusted end-to-end cycle count**
+//!   ([`OnlineReport::end_cycles`] = trace cycles + accumulated stalls),
+//! * **per-bank state timelines** ([`StateSpan`] sequences, and a
+//!   deterministic [`OnlineReport::timeline_csv`] export),
+//! * an **energy total** ([`OnlineReport::eval`]) whose accumulators
+//!   replicate [`crate::banking::evaluate`] term for term, so with wake
+//!   latency forced to 0 ([`OnlineConfig::wake_override`]) the energy is
+//!   **bit-identical** to the offline evaluation of the same
+//!   configuration (`tests/online_replay.rs` asserts this on prefill,
+//!   decode, and serving traces).
+//!
+//! ## Semantics: schedule replay with timing feedback
+//!
+//! Gate decisions replay the *same* break-even rule Stage II used
+//! ([`GatingPolicy::decider`]) — the co-simulation validates the offline
+//! pick, it does not re-optimize. The decision for an idle run is taken
+//! when the run closes (the next access to that bank arrives), on the
+//! run's *observed* (stall-adjusted) duration; with zero wake latency the
+//! observed and trace durations coincide, which is what makes the
+//! reconciliation exact. When a closing run *was* gated, the re-activated
+//! banks enter [`BankState::Waking`] for the wake latency: all banks
+//! rising at one instant wake in parallel (one stall, not one per bank),
+//! and the stall pushes every later trace event — and the run's end —
+//! forward in time. Stalls therefore compound: a gated bank elsewhere
+//! stays gated longer while the machine waits, which is exactly the
+//! second-order effect the offline exposure bound misses.
+//!
+//! The replayed wake latency defaults to the policy's own latency on the
+//! organization ([`GatingPolicy::wake_latency_cycles`]: the CACTI
+//! `wake_cycles` for full power gating, a single cycle for drowsy
+//! retention) and can be overridden per run — the knob behind the
+//! stall-monotonicity property and the zero-wake reconciliation test:
+//!
+//! ```
+//! use trapti::api::{ApiContext, ExperimentSpec};
+//! use trapti::banking::{evaluate, replay_trace, GatingPolicy, OnlineConfig};
+//! use trapti::util::MIB;
+//! use trapti::workload::TINY_GQA;
+//!
+//! let ctx = ApiContext::new();
+//! let spec = ExperimentSpec::builder()
+//!     .model(TINY_GQA)
+//!     .prefill(64)
+//!     .accel(trapti::config::tiny())
+//!     .build()
+//!     .unwrap();
+//! let s1 = spec.run_stage1(&ctx).unwrap();
+//! // Replay one configuration online with wake stalls disabled: the
+//! // energy reconciles bit-for-bit with the offline Stage-II evaluator.
+//! let mut cfg = OnlineConfig::new(4 * MIB, 8, 0.9, GatingPolicy::Aggressive);
+//! cfg.wake_override = Some(0);
+//! let online =
+//!     replay_trace(&ctx.cacti, s1.trace(), &s1.result.stats, cfg, spec.freq_ghz())
+//!         .unwrap();
+//! let offline = evaluate(
+//!     &ctx.cacti, s1.trace(), &s1.result.stats,
+//!     cfg.capacity, cfg.banks, cfg.alpha, cfg.policy, spec.freq_ghz(),
+//! )
+//! .unwrap();
+//! assert_eq!(online.eval.e_total_j().to_bits(), offline.e_total_j().to_bits());
+//! assert_eq!(online.stall_cycles, 0);
+//! ```
+
+use std::fmt;
+
+use crate::cacti::{CactiModel, SramCharacterization};
+use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::{AccessStats, OccupancyTrace};
+use crate::util::ceil_div;
+
+use super::energy::BankingEval;
+use super::policy::{GateDecider, GatingPolicy};
+use super::sweep::SweepPoint;
+
+/// The configuration replayed by one [`OnlineGateSim`] run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OnlineConfig {
+    pub capacity: u64,
+    pub banks: u32,
+    pub alpha: f64,
+    pub policy: GatingPolicy,
+    /// Replayed wake-up latency in cycles. `None` uses the policy's own
+    /// latency on this organization
+    /// ([`GatingPolicy::wake_latency_cycles`]). The gate *threshold* is
+    /// not affected — it always comes from the organization's real
+    /// characterization — but decisions apply it to *observed*
+    /// (stall-adjusted) idle durations, so a nonzero latency can gate
+    /// strictly more runs than the offline schedule as stalls stretch
+    /// them. `Some(0)` produces no stalls and therefore replays the
+    /// exact offline gate schedule — the reconciliation mode.
+    pub wake_override: Option<u64>,
+}
+
+impl OnlineConfig {
+    pub fn new(capacity: u64, banks: u32, alpha: f64, policy: GatingPolicy) -> Self {
+        Self {
+            capacity,
+            banks,
+            alpha,
+            policy,
+            wake_override: None,
+        }
+    }
+
+    /// The configuration of an evaluated sweep point (e.g. a Pareto
+    /// frontier member being validated online).
+    pub fn of_point(point: &SweepPoint) -> Self {
+        Self::new(
+            point.eval.capacity,
+            point.eval.banks,
+            point.eval.alpha,
+            point.eval.policy,
+        )
+    }
+
+    /// Compact deterministic label, e.g. `64MiB/B8/a0.90/aggressive`
+    /// (the same format as `ConfigKey::label` — one shared definition).
+    pub fn label(&self) -> String {
+        super::optimize::config_label(self.capacity, self.banks, self.alpha, self.policy)
+    }
+}
+
+/// Typed Stage-III error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OnlineError {
+    /// The replayed trace was never finalized (no end time).
+    UnfinalizedTrace { memory: String },
+    /// The configuration's capacity is below the observed peak needed
+    /// bytes — the Stage-I schedule would not fit, so the replay is
+    /// meaningless (same rule as the Stage-II sweep's feasibility
+    /// filter).
+    InfeasibleCapacity { capacity: u64, peak_needed: u64 },
+    /// Malformed configuration (alpha out of range, non-power-of-two
+    /// banks — the CACTI constraint).
+    InvalidConfig(String),
+}
+
+impl fmt::Display for OnlineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OnlineError::UnfinalizedTrace { memory } => write!(
+                f,
+                "occupancy trace `{memory}` is not finalized; call \
+                 OccupancyTrace::finalize(end) before the online replay"
+            ),
+            OnlineError::InfeasibleCapacity {
+                capacity,
+                peak_needed,
+            } => write!(
+                f,
+                "capacity {capacity} B is below the observed peak needed \
+                 {peak_needed} B; the Stage-I schedule would not fit this \
+                 configuration (pick a capacity >= the peak)"
+            ),
+            OnlineError::InvalidConfig(why) => write!(f, "invalid online config: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for OnlineError {}
+
+/// State of one bank at one instant of the co-simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BankState {
+    /// Required by the current occupancy level; serving accesses.
+    Active,
+    /// Not required, but the policy left it powered (leaking).
+    Idle,
+    /// In drowsy retention (reduced leakage, data retained).
+    Drowsy,
+    /// Power-gated off (no leakage, contents dropped).
+    Gated,
+    /// Powering back up after a gated/drowsy period; accesses stall.
+    Waking,
+}
+
+impl BankState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            BankState::Active => "active",
+            BankState::Idle => "idle",
+            BankState::Drowsy => "drowsy",
+            BankState::Gated => "gated",
+            BankState::Waking => "waking",
+        }
+    }
+}
+
+/// One constant-state span `[t0, t1)` of a bank's timeline, in
+/// stall-adjusted cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateSpan {
+    pub t0: u64,
+    pub t1: u64,
+    pub state: BankState,
+}
+
+impl StateSpan {
+    pub fn dt(&self) -> u64 {
+        self.t1 - self.t0
+    }
+}
+
+/// Stage-III output: the offline-comparable energy evaluation plus the
+/// timing quantities only an execution-driven model can produce.
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    pub config: OnlineConfig,
+    /// Energy evaluation over the stall-adjusted run. The float
+    /// reductions replicate [`crate::banking::evaluate`] term for term,
+    /// so with zero wake latency this is bit-identical to the offline
+    /// evaluation of the same configuration.
+    pub eval: BankingEval,
+    /// Stage-I end time (trace cycles, no stalls).
+    pub trace_cycles: u64,
+    /// Total cycles the execution stalled waiting for banks to wake.
+    pub stall_cycles: u64,
+    /// Level-rise instants that had to wake at least one gated/drowsy
+    /// bank (banks rising together wake in parallel, so
+    /// `stall_cycles == wake_events * wake_cycles`).
+    pub wake_events: u64,
+    /// Replayed wake-up latency, cycles.
+    pub wake_cycles: u64,
+    /// Per-bank state timelines in stall-adjusted cycles (empty when the
+    /// sim was built with [`OnlineGateSim::with_timeline`]`(false)`).
+    pub timelines: Vec<Vec<StateSpan>>,
+}
+
+impl OnlineReport {
+    /// Stall-adjusted end-to-end cycle count.
+    pub fn end_cycles(&self) -> u64 {
+        self.trace_cycles + self.stall_cycles
+    }
+
+    /// Observed stall share of the run, percent of the trace length
+    /// (comparable to the offline wake-exposure bound; 0 for zero-length
+    /// runs).
+    pub fn stall_pct(&self) -> f64 {
+        if self.trace_cycles == 0 {
+            0.0
+        } else {
+            self.stall_cycles as f64 / self.trace_cycles as f64 * 100.0
+        }
+    }
+
+    pub fn e_total_j(&self) -> f64 {
+        self.eval.e_total_j()
+    }
+
+    /// Deterministic per-bank state timeline export:
+    /// `bank,state,t0_cycles,t1_cycles` rows in bank-major order — the
+    /// `repro replay --timeline-csv` artifact (byte-stable across runs;
+    /// golden-pinned in `report::tables` tests).
+    pub fn timeline_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("bank,state,t0_cycles,t1_cycles\n");
+        for (b, spans) in self.timelines.iter().enumerate() {
+            for s in spans {
+                let _ = writeln!(out, "{b},{},{},{}", s.state.label(), s.t0, s.t1);
+            }
+        }
+        out
+    }
+
+    /// Time each bank spent in `state`, adjusted cycles.
+    pub fn state_cycles(&self, bank: usize, state: BankState) -> u64 {
+        self.timelines
+            .get(bank)
+            .map(|spans| {
+                spans
+                    .iter()
+                    .filter(|s| s.state == state)
+                    .map(StateSpan::dt)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Cycle-level online gating co-simulator for one configuration.
+///
+/// Feed it a Stage-I occupancy stream — either live, as a [`TraceSink`]
+/// (`ExperimentSpec::stream_online`, `ExperimentSpec::serve_online`), or
+/// from a materialized trace via [`replay_trace`] — then call
+/// [`OnlineGateSim::into_report`] with the run's access statistics.
+pub struct OnlineGateSim {
+    config: OnlineConfig,
+    ch: SramCharacterization,
+    decider: GateDecider,
+    /// Effective replayed wake latency.
+    wake: u64,
+    freq_ghz: f64,
+    /// Eq. 1 denominator `floor(alpha * C / B)` (same float expression as
+    /// the offline paths; 0 = any occupancy pins every bank).
+    usable_per_bank: u64,
+    /// Which announced memory to consume in sink mode (0 = shared SRAM /
+    /// KV arena).
+    mem: usize,
+    record_timeline: bool,
+
+    // -- dynamic state -------------------------------------------------
+    /// Current Eq. 1 level. Starts at `banks` ("everything busy") so the
+    /// first segment opens the right idle runs, mirroring the fused
+    /// engine.
+    level: u32,
+    /// Stall-adjusted start of the current constant-level run.
+    run_start: u64,
+    /// Stall-adjusted open time of each bank's idle run (entry `b`
+    /// meaningful iff `b >= level`).
+    open_since: Vec<u64>,
+    /// Cumulative stall so far; adjusted time = trace time + stall.
+    stall: u64,
+    /// Σ level · dt over the adjusted run (integer, order-independent).
+    active_weighted: u128,
+    gated_cycles: u128,
+    n_switch: u64,
+    wake_events: u64,
+    peak_needed: u64,
+    /// Pending sink-mode state `(trace t, needed)`.
+    pending: (u64, u64),
+    started: bool,
+    /// Trace end time once the stream finished.
+    finished: Option<u64>,
+    timelines: Vec<Vec<StateSpan>>,
+    /// Per-bank adjusted time up to which the timeline is recorded.
+    cursor: Vec<u64>,
+}
+
+impl OnlineGateSim {
+    /// Build the co-simulator for `config`, consuming memory index 0.
+    pub fn new(
+        cacti: &CactiModel,
+        config: OnlineConfig,
+        freq_ghz: f64,
+    ) -> Result<Self, OnlineError> {
+        Self::for_memory(cacti, config, freq_ghz, 0)
+    }
+
+    /// Build the co-simulator consuming the `mem`-th announced memory.
+    pub fn for_memory(
+        cacti: &CactiModel,
+        config: OnlineConfig,
+        freq_ghz: f64,
+        mem: usize,
+    ) -> Result<Self, OnlineError> {
+        if !(config.alpha > 0.0 && config.alpha <= 1.0) {
+            return Err(OnlineError::InvalidConfig(format!(
+                "alpha {} must be in (0, 1]",
+                config.alpha
+            )));
+        }
+        if config.banks < 1 || !config.banks.is_power_of_two() {
+            return Err(OnlineError::InvalidConfig(format!(
+                "banks {} must be a power of two >= 1 (CACTI constraint)",
+                config.banks
+            )));
+        }
+        if config.capacity == 0 {
+            return Err(OnlineError::InvalidConfig(
+                "capacity must be > 0".to_string(),
+            ));
+        }
+        let ch = cacti.characterize(config.capacity, config.banks);
+        let decider = config.policy.decider(&ch, freq_ghz);
+        let wake = config
+            .wake_override
+            .unwrap_or_else(|| config.policy.wake_latency_cycles(&ch));
+        // Exactly `banks_required`'s denominator (same float expression).
+        let usable_per_bank =
+            (config.alpha * (config.capacity as f64 / config.banks as f64)).floor() as u64;
+        let banks = config.banks as usize;
+        Ok(Self {
+            config,
+            ch,
+            decider,
+            wake,
+            freq_ghz,
+            usable_per_bank,
+            mem,
+            record_timeline: true,
+            level: config.banks,
+            run_start: 0,
+            open_since: vec![0; banks],
+            stall: 0,
+            active_weighted: 0,
+            gated_cycles: 0,
+            n_switch: 0,
+            wake_events: 0,
+            peak_needed: 0,
+            pending: (0, 0),
+            started: false,
+            finished: None,
+            timelines: vec![Vec::new(); banks],
+            cursor: vec![0; banks],
+        })
+    }
+
+    /// Enable or disable per-bank timeline recording (on by default;
+    /// turn off for long serving replays where only the energy/stall
+    /// totals matter).
+    pub fn with_timeline(mut self, record: bool) -> Self {
+        self.record_timeline = record;
+        if !record {
+            self.timelines = Vec::new();
+            self.cursor = Vec::new();
+        }
+        self
+    }
+
+    /// Effective replayed wake latency, cycles.
+    pub fn wake_cycles(&self) -> u64 {
+        self.wake
+    }
+
+    /// Cumulative stall so far, cycles.
+    pub fn stall_cycles(&self) -> u64 {
+        self.stall
+    }
+
+    /// Peak needed bytes observed so far (sample granularity in sink
+    /// mode).
+    pub fn peak_needed(&self) -> u64 {
+        self.peak_needed
+    }
+
+    /// Eq. 1 for one occupancy value (identical to
+    /// [`crate::banking::banks_required`] on this configuration).
+    #[inline]
+    fn level_for(&self, needed: u64) -> u32 {
+        if needed == 0 {
+            return 0;
+        }
+        if self.usable_per_bank == 0 {
+            return self.config.banks;
+        }
+        ceil_div(needed, self.usable_per_bank).min(self.config.banks as u64) as u32
+    }
+
+    /// The timeline state an acted-on (gated) idle run renders as.
+    fn acted_state(&self) -> BankState {
+        match self.config.policy {
+            GatingPolicy::Drowsy { .. } => BankState::Drowsy,
+            _ => BankState::Gated,
+        }
+    }
+
+    fn push_span(&mut self, bank: u32, t0: u64, t1: u64, state: BankState) {
+        if !self.record_timeline || t1 <= t0 {
+            return;
+        }
+        self.timelines[bank as usize].push(StateSpan { t0, t1, state });
+    }
+
+    /// Close bank `b`'s idle run at adjusted time `t_adj`. Returns true
+    /// iff the run was gated (the bank must wake before serving again).
+    fn close_run(&mut self, b: u32, t_adj: u64) -> bool {
+        let opened = self.open_since[b as usize];
+        let dt = t_adj - opened;
+        let gated = dt > 0 && self.decider.gate(dt);
+        if self.record_timeline {
+            let cur = self.cursor[b as usize];
+            self.push_span(b, cur, opened, BankState::Active);
+            let state = if gated {
+                self.acted_state()
+            } else {
+                BankState::Idle
+            };
+            self.push_span(b, opened, t_adj, state);
+            self.cursor[b as usize] = t_adj;
+        }
+        if gated {
+            self.gated_cycles += dt as u128;
+            self.n_switch += 2;
+        }
+        gated
+    }
+
+    /// Consume the occupancy change at trace-time segment boundary `t0`:
+    /// from here until the next boundary `needed` bytes are resident.
+    /// Boundaries must be time-ordered and start at 0.
+    pub fn step(&mut self, t0: u64, needed: u64) {
+        debug_assert!(self.finished.is_none(), "step after finish");
+        if !self.started {
+            self.started = true;
+            debug_assert_eq!(t0, 0, "occupancy streams start at t=0");
+        }
+        self.peak_needed = self.peak_needed.max(needed);
+        let t_adj = t0 + self.stall;
+        let new = self.level_for(needed);
+        let old = self.level;
+        if new == old {
+            return;
+        }
+        self.active_weighted += old as u128 * (t_adj - self.run_start) as u128;
+        self.run_start = t_adj;
+        self.level = new;
+        if new < old {
+            // Banks new..old fall idle; open their runs.
+            for b in new..old {
+                self.open_since[b as usize] = t_adj;
+            }
+            return;
+        }
+        // Banks old..new are now required; close their idle runs and wake
+        // the gated ones. Rising banks power up in parallel: one wake
+        // stall per rise instant, not one per bank.
+        let mut any_wake = false;
+        for b in old..new {
+            any_wake |= self.close_run(b, t_adj);
+        }
+        if any_wake {
+            self.wake_events += 1;
+            if self.wake > 0 {
+                let wake_end = t_adj + self.wake;
+                if self.record_timeline {
+                    // Every rising bank reports Waking for the stall
+                    // window — banks that were merely idle re-arm
+                    // alongside the waking ones.
+                    for b in old..new {
+                        self.push_span(b, t_adj, wake_end, BankState::Waking);
+                        self.cursor[b as usize] = wake_end;
+                    }
+                }
+                // The access — and every subsequent trace event — waits.
+                // The waking window counts at the new level (banks are
+                // powered and leaking) and extends every other bank's
+                // current state, which is why stalls compound.
+                self.stall += self.wake;
+            }
+        }
+    }
+
+    /// Seal the run at trace end time `end`: close every open idle run
+    /// (no wake — nothing re-activates) and the activity integral.
+    pub fn seal(&mut self, end: u64) {
+        assert!(self.finished.is_none(), "seal called twice");
+        self.finished = Some(end);
+        if !self.started {
+            // Zero-segment stream (end == 0): nothing was ever active or
+            // idle, matching the offline evaluation of an empty trace.
+            self.level = 0;
+            return;
+        }
+        let end_adj = end + self.stall;
+        for b in self.level..self.config.banks {
+            self.close_run(b, end_adj);
+        }
+        self.active_weighted += self.level as u128 * (end_adj - self.run_start) as u128;
+        self.run_start = end_adj;
+        if self.record_timeline {
+            for b in 0..self.config.banks {
+                let cur = self.cursor[b as usize];
+                self.push_span(b, cur, end_adj, BankState::Active);
+                self.cursor[b as usize] = end_adj;
+            }
+        }
+    }
+
+    /// Assemble the report. `stats` supplies the Eq. 3 dynamic-energy
+    /// access counts (the replay does not change access counts — stalls
+    /// delay accesses, they do not add any).
+    ///
+    /// Errors if the configuration's capacity is below the observed peak
+    /// (infeasible, mirroring the sweep's capacity filter). Panics if
+    /// called before [`OnlineGateSim::seal`] / the sink's `finish` —
+    /// library misuse, same contract as `SweepSink::into_points`.
+    pub fn into_report(self, stats: &AccessStats) -> Result<OnlineReport, OnlineError> {
+        let end = self.finished.expect("seal()/finish() before into_report()");
+        if self.config.capacity < self.peak_needed {
+            return Err(OnlineError::InfeasibleCapacity {
+                capacity: self.config.capacity,
+                peak_needed: self.peak_needed,
+            });
+        }
+        let end_adj = end + self.stall;
+        let ch = self.ch;
+        let cyc_to_s = 1.0 / (self.freq_ghz * 1e9);
+        let end_f = end_adj as f64;
+
+        // The float reductions below replicate `banking::evaluate` /
+        // `FusedSweep::into_eval` term for term; with zero stall the
+        // inputs are identical, so the results are bit-identical.
+        let e_dyn = stats.reads as f64 * ch.e_read_j + stats.writes as f64 * ch.e_write_j;
+        let avg = if end_adj == 0 {
+            0.0
+        } else {
+            self.active_weighted as f64 / end_f
+        };
+        let total_bank_cycles = end_f * self.config.banks as f64;
+        let retained = self.config.policy.idle_leak_factor();
+        let leak_cycles = total_bank_cycles - self.gated_cycles as f64 * (1.0 - retained);
+        let e_leak = ch.p_leak_bank_w * leak_cycles * cyc_to_s;
+        let per_switch = match self.config.policy {
+            GatingPolicy::Drowsy { .. } => ch.e_switch_j * 0.01,
+            _ => ch.e_switch_j,
+        };
+        let e_sw = self.n_switch as f64 * per_switch;
+
+        let eval = BankingEval {
+            capacity: self.config.capacity,
+            banks: self.config.banks,
+            alpha: self.config.alpha,
+            policy: self.config.policy,
+            e_dyn_j: e_dyn,
+            e_leak_j: e_leak,
+            e_sw_j: e_sw,
+            n_switch: self.n_switch,
+            avg_active_banks: avg,
+            gated_fraction: if total_bank_cycles > 0.0 {
+                self.gated_cycles as f64 / total_bank_cycles
+            } else {
+                0.0
+            },
+            area_mm2: ch.area_mm2,
+            latency_cycles: ch.latency_cycles,
+            characterization: ch,
+        };
+        Ok(OnlineReport {
+            config: self.config,
+            eval,
+            trace_cycles: end,
+            stall_cycles: self.stall,
+            wake_events: self.wake_events,
+            wake_cycles: self.wake,
+            timelines: self.timelines,
+        })
+    }
+}
+
+impl TraceSink for OnlineGateSim {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        assert!(
+            self.mem < memories.len(),
+            "OnlineGateSim targets memory {} but the run announced {}",
+            self.mem,
+            memories.len()
+        );
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, _obsolete: u64) {
+        if mem != self.mem {
+            return;
+        }
+        debug_assert!(t >= self.pending.0, "stream time went backwards");
+        if t > self.pending.0 {
+            let (t0, n) = self.pending;
+            self.step(t0, n);
+        }
+        // Same-instant updates overwrite: only the final state at an
+        // instant is observable, so a transient never counts toward the
+        // feasibility peak (matching `OccupancyTrace::peak_needed` and
+        // `SweepSink`).
+        self.pending = (t, needed);
+    }
+
+    fn finish(&mut self, end: u64) {
+        let (t0, n) = self.pending;
+        // A zero-duration final state still counts toward the peak
+        // (sample granularity), even though it adds no segment.
+        self.peak_needed = self.peak_needed.max(n);
+        if end > t0 {
+            self.step(t0, n);
+        }
+        self.seal(end);
+    }
+}
+
+/// Replay one configuration against a materialized, finalized trace —
+/// the offline-trace twin of the streaming sink. Timelines are recorded;
+/// use [`OnlineGateSim::with_timeline`] directly for long replays where
+/// only the totals matter.
+pub fn replay_trace(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    config: OnlineConfig,
+    freq_ghz: f64,
+) -> Result<OnlineReport, OnlineError> {
+    replay_trace_with(cacti, trace, stats, config, freq_ghz, true)
+}
+
+/// [`replay_trace`] with explicit timeline recording control.
+pub fn replay_trace_with(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    config: OnlineConfig,
+    freq_ghz: f64,
+    record_timeline: bool,
+) -> Result<OnlineReport, OnlineError> {
+    let Some(end) = trace.end_time() else {
+        return Err(OnlineError::UnfinalizedTrace {
+            memory: trace.memory.clone(),
+        });
+    };
+    let mut sim =
+        OnlineGateSim::new(cacti, config, freq_ghz)?.with_timeline(record_timeline);
+    for seg in trace.segments() {
+        sim.step(seg.t0, seg.needed);
+    }
+    // Zero-duration final samples set the peak without producing a
+    // segment; fold the trace's sample-granularity peak in so the
+    // feasibility check matches the sweep's exactly.
+    sim.peak_needed = sim.peak_needed.max(trace.peak_needed());
+    sim.seal(end);
+    sim.into_report(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::energy::evaluate;
+    use crate::util::rng::Rng;
+    use crate::util::MIB;
+
+    fn cacti() -> CactiModel {
+        CactiModel::default()
+    }
+
+    fn stats() -> AccessStats {
+        AccessStats {
+            reads: 1_000_000,
+            writes: 500_000,
+            ..Default::default()
+        }
+    }
+
+    /// Periodic ramp/release trace with long idle tails.
+    fn synth_trace(cap: u64, occ: u64, period: u64, cycles: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("sram", cap);
+        let mut t = 0;
+        while t < cycles {
+            tr.record(t, occ, 0);
+            tr.record(t + period / 4, 0, 0);
+            t += period;
+        }
+        tr.finalize(cycles);
+        tr
+    }
+
+    fn random_trace(rng: &mut Rng, cap: u64) -> OccupancyTrace {
+        let mut tr = OccupancyTrace::new("m", cap);
+        let mut t = 0u64;
+        for _ in 0..rng.range(1, 120) {
+            t += rng.range(1, 50_000);
+            let needed = if rng.below(4) == 0 { 0 } else { rng.below(cap + 1) };
+            tr.record(t, needed, 0);
+        }
+        tr.finalize(t + rng.range(1, 10_000));
+        tr
+    }
+
+    fn policies() -> [GatingPolicy; 4] {
+        [
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ]
+    }
+
+    fn assert_evals_identical(a: &BankingEval, b: &BankingEval) {
+        assert_eq!(a.e_dyn_j.to_bits(), b.e_dyn_j.to_bits());
+        assert_eq!(a.e_leak_j.to_bits(), b.e_leak_j.to_bits());
+        assert_eq!(a.e_sw_j.to_bits(), b.e_sw_j.to_bits());
+        assert_eq!(a.n_switch, b.n_switch);
+        assert_eq!(a.avg_active_banks.to_bits(), b.avg_active_banks.to_bits());
+        assert_eq!(a.gated_fraction.to_bits(), b.gated_fraction.to_bits());
+    }
+
+    #[test]
+    fn zero_wake_replay_is_bit_identical_to_offline_evaluate() {
+        let cacti = cacti();
+        crate::util::proptest::check("online-zero-wake-reconciliation", 40, |rng| {
+            let tr = random_trace(rng, 64 * MIB);
+            let st = stats();
+            for policy in policies() {
+                for &banks in &[1u32, 4, 32] {
+                    let mut cfg = OnlineConfig::new(64 * MIB, banks, 0.9, policy);
+                    cfg.wake_override = Some(0);
+                    let online = replay_trace(&cacti, &tr, &st, cfg, 1.0).unwrap();
+                    let offline =
+                        evaluate(&cacti, &tr, &st, 64 * MIB, banks, 0.9, policy, 1.0)
+                            .unwrap();
+                    assert_eq!(online.stall_cycles, 0);
+                    assert_eq!(online.end_cycles(), tr.end_time().unwrap());
+                    assert_evals_identical(&online.eval, &offline);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wake_stalls_extend_the_run_and_pay_leakage() {
+        let cacti = cacti();
+        let tr = synth_trace(64 * MIB, 20 * MIB, 1_000_000, 50_000_000);
+        let st = stats();
+        let cfg = OnlineConfig::new(64 * MIB, 8, 0.9, GatingPolicy::Aggressive);
+        let r = replay_trace(&cacti, &tr, &st, cfg, 1.0).unwrap();
+        assert!(r.wake_events > 0, "periodic trace must trigger wake-ups");
+        assert_eq!(r.stall_cycles, r.wake_events * r.wake_cycles);
+        assert_eq!(r.end_cycles(), tr.end_time().unwrap() + r.stall_cycles);
+        // The stalled run leaks strictly more than the zero-wake replay.
+        let mut zero = cfg;
+        zero.wake_override = Some(0);
+        let z = replay_trace(&cacti, &tr, &st, zero, 1.0).unwrap();
+        assert!(r.eval.e_leak_j > z.eval.e_leak_j);
+        // Same gate schedule: identical switch counts.
+        assert_eq!(r.eval.n_switch, z.eval.n_switch);
+    }
+
+    #[test]
+    fn stall_is_monotone_in_wake_latency() {
+        let cacti = cacti();
+        let tr = synth_trace(64 * MIB, 24 * MIB, 500_000, 40_000_000);
+        let st = stats();
+        for policy in [GatingPolicy::Aggressive, GatingPolicy::drowsy()] {
+            let mut prev = 0u64;
+            for wake in [0u64, 1, 10, 100, 1_000, 10_000] {
+                let mut cfg = OnlineConfig::new(64 * MIB, 8, 0.9, policy);
+                cfg.wake_override = Some(wake);
+                let r = replay_trace(&cacti, &tr, &st, cfg, 1.0).unwrap();
+                assert!(
+                    r.stall_cycles >= prev,
+                    "{policy:?}: stall {} regressed below {prev} at wake={wake}",
+                    r.stall_cycles
+                );
+                prev = r.stall_cycles;
+            }
+        }
+    }
+
+    #[test]
+    fn timelines_tile_the_adjusted_run_per_bank() {
+        let cacti = cacti();
+        let mut rng = Rng::new(11);
+        let tr = random_trace(&mut rng, 32 * MIB);
+        let cfg = OnlineConfig::new(32 * MIB, 8, 0.9, GatingPolicy::Aggressive);
+        let r = replay_trace(&cacti, &tr, &stats(), cfg, 1.0).unwrap();
+        assert_eq!(r.timelines.len(), 8);
+        for (b, spans) in r.timelines.iter().enumerate() {
+            let mut t = 0u64;
+            for s in spans {
+                assert_eq!(s.t0, t, "bank {b}: gap before {s:?}");
+                assert!(s.t1 > s.t0, "bank {b}: empty span {s:?}");
+                t = s.t1;
+            }
+            assert_eq!(t, r.end_cycles(), "bank {b} timeline must reach the end");
+        }
+        // Gated time from the timelines reconciles with the evaluation.
+        let gated: u64 = (0..8)
+            .map(|b| r.state_cycles(b, BankState::Gated))
+            .sum();
+        let want = (r.eval.gated_fraction * (r.end_cycles() as f64) * 8.0).round() as u64;
+        assert_eq!(gated, want);
+    }
+
+    #[test]
+    fn sink_mode_matches_materialized_replay() {
+        let cacti = cacti();
+        let mut rng = Rng::new(42);
+        let tr = random_trace(&mut rng, 48 * MIB);
+        let st = stats();
+        let cfg = OnlineConfig::new(48 * MIB, 16, 0.9, GatingPolicy::conservative());
+
+        let mut sink = OnlineGateSim::new(&cacti, cfg, 1.0).unwrap();
+        sink.begin(&[MemoryDesc {
+            name: "m".to_string(),
+            capacity: 48 * MIB,
+        }]);
+        for s in tr.samples() {
+            sink.on_sample(0, s.t, s.needed, s.obsolete);
+        }
+        sink.finish(tr.end_time().unwrap());
+        let streamed = sink.into_report(&st).unwrap();
+        let materialized = replay_trace(&cacti, &tr, &st, cfg, 1.0).unwrap();
+        assert_evals_identical(&streamed.eval, &materialized.eval);
+        assert_eq!(streamed.stall_cycles, materialized.stall_cycles);
+        assert_eq!(streamed.timelines, materialized.timelines);
+        assert_eq!(streamed.timeline_csv(), materialized.timeline_csv());
+    }
+
+    #[test]
+    fn sink_ignores_other_memories_and_overwrites_same_instant() {
+        let cacti = cacti();
+        let cfg = OnlineConfig::new(MIB, 2, 1.0, GatingPolicy::Aggressive);
+        let mems = [
+            MemoryDesc { name: "a".into(), capacity: MIB },
+            MemoryDesc { name: "b".into(), capacity: MIB },
+        ];
+        let mut sink = OnlineGateSim::new(&cacti, cfg, 1.0).unwrap();
+        sink.begin(&mems);
+        sink.on_sample(0, 10, MIB, 0); // transient, overwritten below
+        sink.on_sample(0, 10, 1024, 0);
+        sink.on_sample(1, 20, MIB, 0); // other memory: ignored
+        sink.on_sample(0, 50_000, 0, 0);
+        sink.finish(1_000_000);
+        let streamed = sink.into_report(&AccessStats::default()).unwrap();
+
+        let mut tr = OccupancyTrace::new("a", MIB);
+        tr.record(10, MIB, 0);
+        tr.record(10, 1024, 0);
+        tr.record(50_000, 0, 0);
+        tr.finalize(1_000_000);
+        let reference = replay_trace(&cacti, &tr, &AccessStats::default(), cfg, 1.0)
+            .unwrap();
+        assert_evals_identical(&streamed.eval, &reference.eval);
+        assert_eq!(streamed.stall_cycles, reference.stall_cycles);
+    }
+
+    #[test]
+    fn infeasible_capacity_is_a_typed_error() {
+        let cacti = cacti();
+        let tr = synth_trace(64 * MIB, 40 * MIB, 1_000_000, 10_000_000);
+        let cfg = OnlineConfig::new(16 * MIB, 4, 0.9, GatingPolicy::Aggressive);
+        let err = replay_trace(&cacti, &tr, &stats(), cfg, 1.0).unwrap_err();
+        assert!(matches!(err, OnlineError::InfeasibleCapacity { .. }), "{err}");
+        assert!(err.to_string().contains("peak"), "{err}");
+    }
+
+    #[test]
+    fn invalid_configs_and_unfinalized_traces_are_typed_errors() {
+        let cacti = cacti();
+        let bad_alpha = OnlineConfig::new(MIB, 4, 1.5, GatingPolicy::Aggressive);
+        assert!(matches!(
+            OnlineGateSim::new(&cacti, bad_alpha, 1.0).unwrap_err(),
+            OnlineError::InvalidConfig(_)
+        ));
+        let bad_banks = OnlineConfig::new(MIB, 3, 0.9, GatingPolicy::Aggressive);
+        assert!(matches!(
+            OnlineGateSim::new(&cacti, bad_banks, 1.0).unwrap_err(),
+            OnlineError::InvalidConfig(_)
+        ));
+        let tr = OccupancyTrace::new("m", MIB); // never finalized
+        let cfg = OnlineConfig::new(MIB, 4, 0.9, GatingPolicy::Aggressive);
+        assert_eq!(
+            replay_trace(&cacti, &tr, &stats(), cfg, 1.0).unwrap_err(),
+            OnlineError::UnfinalizedTrace {
+                memory: "m".to_string()
+            }
+        );
+    }
+
+    #[test]
+    fn zero_length_trace_replays_to_zero_everything() {
+        let cacti = cacti();
+        let mut tr = OccupancyTrace::new("m", MIB);
+        tr.finalize(0);
+        let cfg = OnlineConfig::new(MIB, 8, 0.9, GatingPolicy::Aggressive);
+        let r = replay_trace(&cacti, &tr, &AccessStats::default(), cfg, 1.0).unwrap();
+        assert_eq!(r.eval.e_total_j(), 0.0);
+        assert_eq!(r.stall_cycles, 0);
+        assert_eq!(r.end_cycles(), 0);
+        assert_eq!(r.stall_pct(), 0.0);
+        assert!(r.timelines.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn drowsy_wakes_in_one_cycle_and_none_never_stalls() {
+        let cacti = cacti();
+        let tr = synth_trace(64 * MIB, 20 * MIB, 500_000, 20_000_000);
+        let st = stats();
+        let drowsy =
+            replay_trace(&cacti, &tr, &st,
+                OnlineConfig::new(64 * MIB, 8, 0.9, GatingPolicy::drowsy()), 1.0)
+                .unwrap();
+        assert_eq!(drowsy.wake_cycles, 1);
+        assert_eq!(drowsy.stall_cycles, drowsy.wake_events);
+        let none = replay_trace(&cacti, &tr, &st,
+            OnlineConfig::new(64 * MIB, 8, 0.9, GatingPolicy::None), 1.0)
+            .unwrap();
+        assert_eq!(none.stall_cycles, 0);
+        assert_eq!(none.wake_events, 0);
+        assert_eq!(none.wake_cycles, 0);
+    }
+
+    #[test]
+    fn timeline_csv_shape() {
+        let cacti = cacti();
+        let mut tr = OccupancyTrace::new("m", 100);
+        tr.record(10, 60, 0);
+        tr.finalize(20);
+        let mut cfg = OnlineConfig::new(100, 2, 1.0, GatingPolicy::None);
+        cfg.wake_override = Some(0);
+        let r = replay_trace(&cacti, &tr, &AccessStats::default(), cfg, 1.0).unwrap();
+        let csv = r.timeline_csv();
+        assert!(csv.starts_with("bank,state,t0_cycles,t1_cycles\n"), "{csv}");
+        // Bank 0: idle [0,10) then active [10,20); bank 1: idle [0,10),
+        // active [10,20) (60/50-per-bank needs 2 banks).
+        assert!(csv.contains("0,idle,0,10\n"), "{csv}");
+        assert!(csv.contains("0,active,10,20\n"), "{csv}");
+        assert!(csv.contains("1,idle,0,10\n"), "{csv}");
+    }
+}

@@ -1,6 +1,6 @@
 //! Stage-II Pareto optimizer with cross-workload robust selection.
 //!
-//! The sweep ([`super::sweep`]) *evaluates* every (C, B, α, policy)
+//! The sweep ([`super::sweep`](mod@super::sweep)) *evaluates* every (C, B, α, policy)
 //! candidate; this module *chooses* among them — the missing half of the
 //! paper's offline optimization flow. Three passes:
 //!
@@ -194,14 +194,27 @@ impl ConfigKey {
 
     /// Compact deterministic label, e.g. `64MiB/B8/a0.90/aggressive`.
     pub fn label(&self) -> String {
-        format!(
-            "{}MiB/B{}/a{:.2}/{}",
-            self.capacity / MIB,
-            self.banks,
-            self.alpha(),
-            self.policy().label(),
-        )
+        config_label(self.capacity, self.banks, self.alpha(), self.policy())
     }
+}
+
+/// The one deterministic config-label format, e.g.
+/// `64MiB/B8/a0.90/aggressive` — shared by [`ConfigKey::label`] and
+/// `banking::online::OnlineConfig::label` so Stage-II and Stage-III
+/// artifacts can never drift apart.
+pub(crate) fn config_label(
+    capacity: u64,
+    banks: u32,
+    alpha: f64,
+    policy: GatingPolicy,
+) -> String {
+    format!(
+        "{}MiB/B{}/a{:.2}/{}",
+        capacity / MIB,
+        banks,
+        alpha,
+        policy.label(),
+    )
 }
 
 /// One frontier member with its derived wake exposure.

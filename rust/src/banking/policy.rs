@@ -114,6 +114,20 @@ impl GatingPolicy {
     pub fn should_gate(&self, dt: u64, ch: &SramCharacterization, freq_ghz: f64) -> bool {
         self.decider(ch, freq_ghz).gate(dt)
     }
+
+    /// Wake-up latency a bank pays when this policy re-activates it:
+    /// the organization's full power-rail wake for true gating, a single
+    /// cycle for drowsy retention (voltage step, no rail collapse), and
+    /// zero for `None` (nothing is ever turned off). This is the latency
+    /// the Stage-III online co-simulation
+    /// ([`crate::banking::online::OnlineGateSim`]) replays by default.
+    pub fn wake_latency_cycles(&self, ch: &SramCharacterization) -> u64 {
+        match self {
+            GatingPolicy::None => 0,
+            GatingPolicy::Drowsy { .. } => 1,
+            _ => ch.wake_cycles,
+        }
+    }
 }
 
 /// Resolved per-(policy, organization, frequency) gating rule: an idle

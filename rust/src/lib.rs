@@ -14,7 +14,17 @@
 //!   O(1)-memory consumers via [`trace::TraceSink`].
 //! * **Stage II** ([`cacti`], [`banking`]): offline exploration of banked
 //!   SRAM organizations and power-gating policies driven by the Stage-I
-//!   trace (Eqs. 1–5 of the paper).
+//!   trace (Eqs. 1–5 of the paper), plus the Pareto/portfolio optimizer
+//!   ([`banking::optimize`](mod@banking::optimize)) that chooses among
+//!   the evaluated candidates.
+//! * **Stage III** ([`banking::online`]): execution-driven online
+//!   gating co-simulation — one chosen configuration replays cycle by
+//!   cycle against the live Stage-I stream with per-bank state machines
+//!   and wake-latency stalls fed back into timing. Bit-identical to the
+//!   offline evaluator at zero wake latency (the reconciliation
+//!   property), it measures the stall-adjusted end-to-end cycles the
+//!   trace-driven model can only bound (`repro replay`,
+//!   [`api::online_validate`]).
 //! * **Serving** ([`serving`], [`sim::serving`]): multi-tenant request
 //!   workloads — concurrent decode streams over a paged KV arena with
 //!   continuous-batching admission — producing merged occupancy traces

@@ -25,11 +25,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use trapti::analytic;
 use trapti::api::{experiments as exp, ApiContext, BatchRunner, ExperimentSpec};
-use trapti::banking::{evaluate, Constraints, GatingPolicy, SweepSpec};
+use trapti::banking::{
+    evaluate, Constraints, GatingPolicy, OnlineConfig, OnlineGateSim, OnlineReport,
+    SweepSpec,
+};
 use trapti::config::{named, parse::parse_bytes, AccelConfig};
 use trapti::report::{figures, tables};
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
-use trapti::trace::{load_trace, save_trace, trace_to_csv};
+use trapti::trace::{load_trace, save_trace, trace_to_csv, TeeSink};
 use trapti::util::MIB;
 use trapti::workload::{preset, Workload};
 
@@ -109,6 +112,7 @@ fn run(raw: &[String]) -> Result<()> {
         "serve" => serve_cmd(&args),
         "bank" => bank_cmd(&args),
         "optimize" => optimize_cmd(&args),
+        "replay" => replay_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
         "ablate" => ablate(),
@@ -158,7 +162,25 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --max-area-pct X --max-wake-pct X
                             --min-capacity MiB [constraints]
                             --pareto-csv FILE [deterministic frontier CSV]
-                            --report-out FILE [full text report])
+                            --report-out FILE [full text report]
+                            --online-validate 1 [Stage-III replay of every
+                            frontier config; appends the predicted-vs-
+                            observed validation table])
+  repro replay             Stage-III online power-gating co-simulation:
+                           replay ONE (C,B,alpha,policy) configuration
+                           cycle-by-cycle against the live Stage-I
+                           stream with wake-latency stalls fed back into
+                           timing (per-bank Active/Idle/Drowsy/Gated/
+                           Waking state machines)
+                           (--workload MODEL:prefill:SEQ|
+                            MODEL:decode:PROMPT:GEN|
+                            MODEL:serve:REQS:CONC:SEED
+                            --accel NAME
+                            --capacity MiB --banks B --alpha A
+                            --policy none|aggressive|conservative|drowsy
+                            --wake N [override wake latency, cycles]
+                            --timeline-csv FILE [per-bank state spans]
+                            --report-out FILE [deterministic report])
   repro e2e                functional PJRT decode (--model, --steps)
   repro baseline-compare   TRAPTI vs aggregate-statistics DSE
   repro ablate             gating-policy sensitivity study (the paper's
@@ -823,6 +845,21 @@ fn optimize_cmd(args: &Args) -> Result<()> {
             best.mean_regret_pct,
         );
     }
+    // Stage-III pass: replay every frontier configuration online and
+    // append the predicted-vs-observed validation table.
+    let validate = match args.flag("online-validate") {
+        None => false,
+        Some(v) => match v.to_ascii_lowercase().as_str() {
+            "1" | "true" | "yes" | "on" => true,
+            "0" | "false" | "no" | "off" => false,
+            other => bail!("--online-validate wants 0/1 (got `{other}`)"),
+        },
+    };
+    if validate {
+        let vals = trapti::api::online_validate(&ctx, &specs, &run)?;
+        report.push('\n');
+        report.push_str(&tables::validation_table(&vals).render());
+    }
     print!("{report}");
 
     if let Some(path) = args.flag("report-out") {
@@ -833,6 +870,142 @@ fn optimize_cmd(args: &Args) -> Result<()> {
         std::fs::write(path, tables::pareto_csv(r))
             .with_context(|| format!("writing {path}"))?;
         println!("Pareto CSV saved to {path}");
+    }
+    Ok(())
+}
+
+fn parse_policy(name: &str) -> Result<GatingPolicy> {
+    match name {
+        "none" | "no-gating" => Ok(GatingPolicy::None),
+        "aggressive" => Ok(GatingPolicy::Aggressive),
+        "conservative" => Ok(GatingPolicy::conservative()),
+        "drowsy" => Ok(GatingPolicy::drowsy()),
+        other => bail!(
+            "unknown policy `{other}` (want none|aggressive|conservative|drowsy)"
+        ),
+    }
+}
+
+/// Deterministic Stage-III replay report (stable field order and float
+/// formatting), shared by stdout and `--report-out` so two same-seed
+/// runs are byte-comparable (the CI replay determinism gate).
+fn online_replay_report(
+    workload: &str,
+    report: &OnlineReport,
+    zero_wake: &OnlineReport,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Stage III online replay: {workload} @ {}",
+        report.config.label()
+    );
+    let _ = writeln!(
+        out,
+        "trace {} cycles; stalls +{} cycles ({:.4}%) over {} wake event(s) \
+         (wake latency {} cyc)",
+        report.trace_cycles,
+        report.stall_cycles,
+        report.stall_pct(),
+        report.wake_events,
+        report.wake_cycles,
+    );
+    let _ = writeln!(
+        out,
+        "energy online {:.6} J (dyn {:.6} + leak {:.6} + sw {:.6})",
+        report.e_total_j(),
+        report.eval.e_dyn_j,
+        report.eval.e_leak_j,
+        report.eval.e_sw_j,
+    );
+    let _ = writeln!(
+        out,
+        "offline Stage-II prediction {:.6} J (online delta {:+.4}%; the \
+         offline model cannot see stall-extended leakage)",
+        zero_wake.e_total_j(),
+        report.eval.delta_pct(&zero_wake.eval),
+    );
+    out.push_str(&tables::online_bank_table(report).render());
+    out.push('\n');
+    out.push_str(&figures::online_timeline(report, 96));
+    out
+}
+
+/// Stage III: online power-gating co-simulation of one configuration —
+/// the Stage-I simulation streams occupancy straight into the
+/// cycle-level gating replay (`banking::online::OnlineGateSim`), which
+/// feeds wake-latency stalls back into execution timing. A second
+/// zero-wake replay of the same stream supplies the offline-equivalent
+/// prediction (bit-identical to `banking::evaluate`), so the report
+/// quantifies exactly what the offline model missed.
+fn replay_cmd(args: &Args) -> Result<()> {
+    let accel_name = args.flag_or("accel", "baseline");
+    let accel = named(&accel_name)
+        .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+    let descriptor = args.flag_or("workload", "gpt2-xl:decode:512:128");
+    let spec = parse_workload_descriptor(descriptor.trim(), &accel)?;
+
+    let capacity = match args.flag("capacity") {
+        Some(v) => parse_bytes(&format!("{}MiB", v.trim()))?,
+        // Default: the provisioned capacity the trace lives in — the
+        // accelerator's shared SRAM for single-sequence runs, the
+        // closed-form arena bound for serving (occupancy can never
+        // exceed either, so the replay is always feasible).
+        None => match spec.workload {
+            Workload::Serving(_) => {
+                trapti::api::optimize::covering_capacity_bound(&spec)
+            }
+            _ => spec.accel.on_chip[0].capacity,
+        },
+    };
+    let banks: u32 = args.flag_or("banks", "8").parse()?;
+    let alpha: f64 = args.flag_or("alpha", "0.9").parse()?;
+    let policy = parse_policy(&args.flag_or("policy", "aggressive"))?;
+    let mut cfg = OnlineConfig::new(capacity, banks, alpha, policy);
+    if let Some(w) = args.flag("wake") {
+        cfg.wake_override = Some(w.parse()?);
+    }
+    let mut zero_cfg = cfg;
+    zero_cfg.wake_override = Some(0);
+
+    // One Stage-I pass feeds BOTH co-simulators through a TeeSink: the
+    // real replay and its zero-wake offline-equivalent prediction come
+    // out of a single simulation, nothing materialized.
+    let ctx = ApiContext::new();
+    let mut sim = OnlineGateSim::new(&ctx.cacti, cfg, spec.freq_ghz())?;
+    let mut zero_sim = OnlineGateSim::new(&ctx.cacti, zero_cfg, spec.freq_ghz())?;
+    let (label, report, zero_wake) = match spec.workload {
+        Workload::Serving(_) => {
+            let run = {
+                let mut tee = TeeSink::new(vec![&mut sim, &mut zero_sim]);
+                spec.stream_serving(&mut tee)?
+            };
+            let rep = sim.into_report(&run.result.stats)?;
+            let zero = zero_sim.into_report(&run.result.stats)?;
+            (run.result.workload.clone(), rep, zero)
+        }
+        _ => {
+            let summary = {
+                let mut tee = TeeSink::new(vec![&mut sim, &mut zero_sim]);
+                spec.stream_stage1(&ctx, &mut tee)?
+            };
+            let rep = sim.into_report(summary.stats())?;
+            let zero = zero_sim.into_report(summary.stats())?;
+            (trapti::api::optimize::workload_label(&spec), rep, zero)
+        }
+    };
+
+    let text = online_replay_report(&label, &report, &zero_wake);
+    print!("{text}");
+    if let Some(path) = args.flag("report-out") {
+        std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+        println!("replay report saved to {path}");
+    }
+    if let Some(path) = args.flag("timeline-csv") {
+        std::fs::write(path, report.timeline_csv())
+            .with_context(|| format!("writing {path}"))?;
+        println!("timeline CSV saved to {path}");
     }
     Ok(())
 }

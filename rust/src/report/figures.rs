@@ -210,6 +210,60 @@ pub fn fig9_csv(t2: &crate::api::experiments::Table2) -> String {
     out
 }
 
+/// Stage-III state-timeline figure: one character row per bank, sampling
+/// each bank's state over `width` evenly spaced instants of the
+/// stall-adjusted run. Legend: `#` active, `-` idle (powered), `.`
+/// gated, `d` drowsy, `w` waking. Deterministic — same report, same
+/// bytes (the `repro replay` artifact alongside the timeline CSV).
+pub fn online_timeline(r: &crate::banking::online::OnlineReport, width: usize) -> String {
+    use crate::banking::online::BankState;
+    let width = width.max(8);
+    let end = r.end_cycles();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Stage III — per-bank state timeline, {} ({} trace + {} stall cycles, \
+         {} wake event(s))",
+        r.config.label(),
+        r.trace_cycles,
+        r.stall_cycles,
+        r.wake_events,
+    );
+    let _ = writeln!(out, "legend: '#' active  '-' idle  '.' gated  'd' drowsy  'w' waking");
+    if end == 0 || r.timelines.is_empty() {
+        let _ = writeln!(out, "(empty run or timeline recording disabled)");
+        return out;
+    }
+    let glyph = |s: BankState| match s {
+        BankState::Active => '#',
+        BankState::Idle => '-',
+        BankState::Gated => '.',
+        BankState::Drowsy => 'd',
+        BankState::Waking => 'w',
+    };
+    for (b, spans) in r.timelines.iter().enumerate() {
+        let mut row = String::with_capacity(width);
+        let mut idx = 0usize;
+        for i in 0..width {
+            // Sample the state holding at the bucket's start instant.
+            let t = end * i as u64 / width as u64;
+            while idx + 1 < spans.len() && spans[idx].t1 <= t {
+                idx += 1;
+            }
+            row.push(spans.get(idx).map(|s| glyph(s.state)).unwrap_or(' '));
+        }
+        let _ = writeln!(out, "bank {b:>2} |{row}|");
+    }
+    let _ = writeln!(
+        out,
+        "t: 0 .. {} cycles ({} cols, {:.0} cycles/col)",
+        end,
+        width,
+        end as f64 / width as f64
+    );
+    out
+}
+
 /// Fig. 9 — ASCII scatter.
 pub fn fig9(t2: &crate::api::experiments::Table2) -> String {
     let series = |pts: &[crate::banking::SweepPoint]| -> Vec<(f64, f64)> {
@@ -274,6 +328,36 @@ mod tests {
         let s = fig7(&pair);
         assert!(s.contains("Total on-chip"));
         assert!(s.contains("paper 78.47"));
+    }
+
+    #[test]
+    fn online_timeline_renders_states_deterministically() {
+        use crate::banking::{replay_trace, GatingPolicy, OnlineConfig};
+        use crate::cacti::CactiModel;
+        use crate::trace::{AccessStats, OccupancyTrace};
+        let mut tr = OccupancyTrace::new("m", 64 * MIB);
+        let mut t = 0;
+        while t < 10_000_000 {
+            tr.record(t, 20 * MIB, 0);
+            tr.record(t + 100_000, 0, 0);
+            t += 1_000_000;
+        }
+        tr.finalize(10_000_000);
+        let cfg = OnlineConfig::new(64 * MIB, 4, 0.9, GatingPolicy::Aggressive);
+        let r = replay_trace(
+            &CactiModel::default(),
+            &tr,
+            &AccessStats::default(),
+            cfg,
+            1.0,
+        )
+        .unwrap();
+        let s = online_timeline(&r, 80);
+        assert!(s.contains("bank  0"), "{s}");
+        assert!(s.contains("bank  3"), "{s}");
+        assert!(s.contains('#') && s.contains('.'), "needs active+gated: {s}");
+        assert!(s.contains("legend"));
+        assert_eq!(s, online_timeline(&r, 80), "figure must be deterministic");
     }
 
     /// Golden fig9 CSV over synthetic round-number points: the exact

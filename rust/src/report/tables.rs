@@ -1,9 +1,12 @@
-//! Paper-style table renderers (Tables I-III + sizing summary) and the
-//! Stage-II optimizer's frontier/portfolio tables + deterministic CSV.
+//! Paper-style table renderers (Tables I-III + sizing summary), the
+//! Stage-II optimizer's frontier/portfolio tables, and the Stage-III
+//! online-validation table — all with deterministic CSV twins.
 
 use std::fmt::Write as _;
 
 use crate::api::experiments::{Sizing, Table2, Table3};
+use crate::api::OnlineValidation;
+use crate::banking::online::{BankState, OnlineReport};
 use crate::banking::optimize::{OptimizeResult, WorkloadFrontier};
 use crate::banking::SweepPoint;
 use crate::util::table::{fmt_delta_pct, Table};
@@ -246,6 +249,101 @@ pub fn pareto_csv(r: &OptimizeResult) -> String {
     out
 }
 
+/// Stage-III validation table: every replayed frontier configuration's
+/// offline prediction vs its online (stall-adjusted) observation — the
+/// `repro optimize --online-validate 1` artifact.
+pub fn validation_table(vals: &[OnlineValidation]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Online validation — {} frontier config(s) replayed (Stage III)",
+            vals.len()
+        ),
+        &[
+            "Workload", "Config", "E_pred [J]", "E_obs [J]", "dE%",
+            "wake_pred%", "stall_obs%", "stall [cyc]", "wakes",
+        ],
+    );
+    for v in vals {
+        t.row(vec![
+            v.workload.clone(),
+            v.key.label(),
+            format!("{:.3}", v.predicted_e_j),
+            format!("{:.3}", v.observed_e_j),
+            format!("{:+.3}", v.energy_delta_pct),
+            format!("{:.2}", v.predicted_wake_pct),
+            format!("{:.2}", v.observed_stall_pct),
+            v.stall_cycles.to_string(),
+            v.wake_events.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Deterministic CSV of the Stage-III validation pass (fixed field order
+/// and float precision — equal inputs are byte-identical; the golden
+/// test pins the exact bytes).
+pub fn validation_csv(vals: &[OnlineValidation]) -> String {
+    let mut out = String::from(
+        "workload,config,predicted_e_j,observed_e_j,energy_delta_pct,\
+         predicted_wake_pct,observed_stall_pct,trace_cycles,stall_cycles,\
+         wake_events\n",
+    );
+    for v in vals {
+        let _ = writeln!(
+            out,
+            "{},{},{:.6},{:.6},{:.4},{:.4},{:.4},{},{},{}",
+            v.workload,
+            v.key.label(),
+            v.predicted_e_j,
+            v.observed_e_j,
+            v.energy_delta_pct,
+            v.predicted_wake_pct,
+            v.observed_stall_pct,
+            v.trace_cycles,
+            v.stall_cycles,
+            v.wake_events,
+        );
+    }
+    out
+}
+
+/// Per-bank state occupancy of one Stage-III replay: how each bank's
+/// (stall-adjusted) run splits across the five states. Shares are
+/// percentages of the adjusted run length.
+pub fn online_bank_table(r: &OnlineReport) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Per-bank state occupancy — {} (wake {} cyc, {} stall cyc)",
+            r.config.label(),
+            r.wake_cycles,
+            r.stall_cycles
+        ),
+        &[
+            "Bank", "active%", "idle%", "gated%", "drowsy%", "waking%", "spans",
+        ],
+    );
+    let end = r.end_cycles();
+    let pct = |cycles: u64| -> String {
+        if end == 0 {
+            "0.0".to_string()
+        } else {
+            format!("{:.1}", cycles as f64 / end as f64 * 100.0)
+        }
+    };
+    for (b, spans) in r.timelines.iter().enumerate() {
+        t.row(vec![
+            b.to_string(),
+            pct(r.state_cycles(b, BankState::Active)),
+            pct(r.state_cycles(b, BankState::Idle)),
+            pct(r.state_cycles(b, BankState::Gated)),
+            pct(r.state_cycles(b, BankState::Drowsy)),
+            pct(r.state_cycles(b, BankState::Waking)),
+            spans.len().to_string(),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,6 +561,89 @@ mod tests {
                     avg_active_banks,area_mm2,delta_a_pct,wake_exposure_pct\n\
                     wa,64,8,0.900,aggressive,5.000000,-50.000,2.5000,110.000,10.000,20.0000\n";
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn golden_validation_table_and_csv() {
+        // Round numbers make every formatted field hand-computable; any
+        // formatting/column regression fails here in CI instead of
+        // silently corrupting the Stage-III artifacts (the PR-4 golden
+        // pattern).
+        let key = ConfigKey::of(&synth_point(64, 8, 5.0, 110.0, 10.0, 100.0));
+        let vals = vec![crate::api::OnlineValidation {
+            workload: "wa".to_string(),
+            key,
+            predicted_e_j: 5.0,
+            observed_e_j: 5.25,
+            energy_delta_pct: 5.0,
+            predicted_wake_pct: 20.0,
+            observed_stall_pct: 2.5,
+            trace_cycles: 1_000,
+            stall_cycles: 25,
+            wake_events: 5,
+        }];
+        let got = validation_table(&vals).to_csv();
+        let want = "Workload,Config,E_pred [J],E_obs [J],dE%,wake_pred%,\
+                    stall_obs%,stall [cyc],wakes\n\
+                    wa,64MiB/B8/a0.90/aggressive,5.000,5.250,+5.000,20.00,2.50,25,5\n";
+        assert_eq!(got, want);
+        let got_csv = validation_csv(&vals);
+        let want_csv = "workload,config,predicted_e_j,observed_e_j,\
+                        energy_delta_pct,predicted_wake_pct,observed_stall_pct,\
+                        trace_cycles,stall_cycles,wake_events\n\
+                        wa,64MiB/B8/a0.90/aggressive,5.000000,5.250000,5.0000,\
+                        20.0000,2.5000,1000,25,5\n";
+        assert_eq!(got_csv, want_csv);
+        assert!(validation_table(&vals)
+            .render()
+            .contains("1 frontier config(s) replayed"));
+    }
+
+    fn synth_online_report() -> OnlineReport {
+        use crate::banking::online::{OnlineConfig, StateSpan};
+        use crate::banking::GatingPolicy;
+        let point = synth_point(64, 2, 5.0, 110.0, 10.0, 100.0);
+        OnlineReport {
+            config: OnlineConfig::new(64 * MIB, 2, 0.9, GatingPolicy::Aggressive),
+            eval: point.eval,
+            trace_cycles: 900,
+            stall_cycles: 100,
+            wake_events: 1,
+            wake_cycles: 100,
+            timelines: vec![
+                vec![StateSpan { t0: 0, t1: 1000, state: BankState::Active }],
+                vec![
+                    StateSpan { t0: 0, t1: 400, state: BankState::Gated },
+                    StateSpan { t0: 400, t1: 500, state: BankState::Waking },
+                    StateSpan { t0: 500, t1: 900, state: BankState::Active },
+                    StateSpan { t0: 900, t1: 1000, state: BankState::Idle },
+                ],
+            ],
+        }
+    }
+
+    #[test]
+    fn golden_timeline_csv() {
+        let got = synth_online_report().timeline_csv();
+        let want = "bank,state,t0_cycles,t1_cycles\n\
+                    0,active,0,1000\n\
+                    1,gated,0,400\n\
+                    1,waking,400,500\n\
+                    1,active,500,900\n\
+                    1,idle,900,1000\n";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn golden_online_bank_table_csv() {
+        let got = online_bank_table(&synth_online_report()).to_csv();
+        let want = "Bank,active%,idle%,gated%,drowsy%,waking%,spans\n\
+                    0,100.0,0.0,0.0,0.0,0.0,1\n\
+                    1,40.0,10.0,40.0,0.0,10.0,4\n";
+        assert_eq!(got, want);
+        assert!(online_bank_table(&synth_online_report())
+            .render()
+            .contains("64MiB/B2/a0.90/aggressive"));
     }
 
     #[test]

@@ -39,6 +39,32 @@
 //! [`crate::workload::Workload::Serving`] and hashed/validated by
 //! [`crate::api::ExperimentSpec`]), [`generate_requests`], and the
 //! scheduler in [`crate::sim::serving`].
+//!
+//! ```
+//! use trapti::api::{ApiContext, ExperimentSpec};
+//! use trapti::serving::ServingParams;
+//! use trapti::workload::TINY_GQA;
+//!
+//! // 8 requests over a paged KV arena, concurrency 4, seed 7 — then a
+//! // Stage-II sweep on the merged occupancy trace.
+//! let mut p = ServingParams::new(8, 4, 7);
+//! p.prompt_min = 4;
+//! p.prompt_max = 16;
+//! p.gen_min = 2;
+//! p.gen_max = 8;
+//! p.page_tokens = 8;
+//! p.mean_arrival_gap = 50_000;
+//! let spec = ExperimentSpec::builder()
+//!     .model(TINY_GQA)
+//!     .serving(p)
+//!     .accel(trapti::config::tiny())
+//!     .build()
+//!     .unwrap();
+//! let run = spec.run_serving().unwrap();
+//! assert_eq!(run.result.completed, 8);
+//! let s2 = run.stage2(&ApiContext::new()).unwrap();
+//! assert!(!s2.points.is_empty());
+//! ```
 
 pub mod arena;
 pub mod workload;

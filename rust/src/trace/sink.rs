@@ -16,6 +16,11 @@
 //! case only the **last** state at that instant is observable (the
 //! engine emits intra-instant transients in order; sinks that aggregate
 //! must overwrite, exactly as the materialized trace does).
+//!
+//! Beyond the sinks in this module, two engine sinks consume the stream
+//! directly: `banking::SweepSink` (the fused Stage-II sweep) and
+//! `banking::OnlineGateSim` (the Stage-III online gating co-simulation
+//! with wake-stall timing feedback).
 
 use std::io::Write;
 

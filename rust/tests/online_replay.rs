@@ -1,0 +1,301 @@
+//! Integration suite for the Stage-III online gating co-simulation.
+//!
+//! The acceptance property: with wake latency forced to 0, the online
+//! replay's energy is **bit-identical** to the offline
+//! `banking::evaluate` of the same configuration — on prefill, decode,
+//! AND serving traces. Plus: stall monotonicity in the replayed wake
+//! latency, determinism of the streamed path (what the CI `repro
+//! replay` gate compares), and timeline integrity.
+
+use trapti::api::{ApiContext, ExperimentSpec, MaterializedRun};
+use trapti::banking::{
+    evaluate, replay_trace, BankState, GatingPolicy, OnlineConfig,
+};
+use trapti::serving::ServingParams;
+use trapti::workload::{TINY_GQA, TINY_MHA};
+
+fn ctx() -> ApiContext {
+    ApiContext::new()
+}
+
+fn prefill_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap()
+}
+
+fn decode_spec() -> ExperimentSpec {
+    ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .decode(32, 16)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap()
+}
+
+fn serving_spec() -> ExperimentSpec {
+    let mut p = ServingParams::new(16, 4, 7);
+    p.prompt_min = 4;
+    p.prompt_max = 32;
+    p.gen_min = 2;
+    p.gen_max = 16;
+    p.page_tokens = 8;
+    p.mean_arrival_gap = 50_000;
+    ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(p)
+        .accel(trapti::config::tiny())
+        .build()
+        .unwrap()
+}
+
+/// Materialize any workload kind via the shared api helper (the same
+/// path the production validation pass uses).
+fn materialize(spec: &ExperimentSpec) -> MaterializedRun {
+    spec.materialize(&ctx()).unwrap()
+}
+
+fn policies() -> [GatingPolicy; 4] {
+    [
+        GatingPolicy::None,
+        GatingPolicy::Aggressive,
+        GatingPolicy::conservative(),
+        GatingPolicy::drowsy(),
+    ]
+}
+
+/// The ISSUE acceptance property: zero-wake reconciliation holds
+/// bit-for-bit on prefill, decode, and serving traces, across every
+/// policy and several bank counts.
+#[test]
+fn zero_wake_reconciles_on_prefill_decode_and_serving() {
+    let ctx = ctx();
+    for (label, spec) in [
+        ("prefill", prefill_spec()),
+        ("decode", decode_spec()),
+        ("serving", serving_spec()),
+    ] {
+        let run = materialize(&spec);
+        let freq = spec.freq_ghz();
+        // Capacity covering the trace (its declared capacity always
+        // covers the peak), so every config is feasible.
+        let capacity = run.trace().capacity;
+        for policy in policies() {
+            for banks in [1u32, 8, 32] {
+                let mut cfg = OnlineConfig::new(capacity, banks, 0.9, policy);
+                cfg.wake_override = Some(0);
+                let online =
+                    replay_trace(&ctx.cacti, run.trace(), run.stats(), cfg, freq)
+                        .unwrap();
+                let offline = evaluate(
+                    &ctx.cacti, run.trace(), run.stats(), capacity, banks, 0.9,
+                    policy, freq,
+                )
+                .unwrap();
+                assert_eq!(online.stall_cycles, 0, "{label}/{policy:?}/B{banks}");
+                assert_eq!(
+                    online.eval.e_total_j().to_bits(),
+                    offline.e_total_j().to_bits(),
+                    "{label}/{policy:?}/B{banks}: E_total must be bit-identical"
+                );
+                assert_eq!(
+                    online.eval.e_leak_j.to_bits(),
+                    offline.e_leak_j.to_bits(),
+                    "{label}/{policy:?}/B{banks}"
+                );
+                assert_eq!(
+                    online.eval.e_sw_j.to_bits(),
+                    offline.e_sw_j.to_bits(),
+                    "{label}/{policy:?}/B{banks}"
+                );
+                assert_eq!(online.eval.n_switch, offline.n_switch);
+                assert_eq!(
+                    online.eval.avg_active_banks.to_bits(),
+                    offline.avg_active_banks.to_bits()
+                );
+                assert_eq!(
+                    online.eval.gated_fraction.to_bits(),
+                    offline.gated_fraction.to_bits()
+                );
+            }
+        }
+    }
+}
+
+/// Stall monotonicity: raising the replayed wake latency never reduces
+/// the total stall (the gate schedule can only gate more as observed
+/// idle runs stretch, and each wake costs more).
+#[test]
+fn stall_is_monotone_in_wake_latency_on_real_traces() {
+    let ctx = ctx();
+    for spec in [decode_spec(), serving_spec()] {
+        let run = materialize(&spec);
+        let freq = spec.freq_ghz();
+        let capacity = run.trace().capacity;
+        for policy in [GatingPolicy::Aggressive, GatingPolicy::drowsy()] {
+            let mut prev = 0u64;
+            for wake in [0u64, 1, 10, 100, 1_000, 10_000] {
+                let mut cfg = OnlineConfig::new(capacity, 8, 0.9, policy);
+                cfg.wake_override = Some(wake);
+                let r = replay_trace(&ctx.cacti, run.trace(), run.stats(), cfg, freq)
+                    .unwrap();
+                assert_eq!(r.stall_cycles, r.wake_events * wake, "{policy:?}");
+                assert!(
+                    r.stall_cycles >= prev,
+                    "{policy:?}: stall {} < {prev} at wake={wake}",
+                    r.stall_cycles
+                );
+                assert_eq!(r.end_cycles(), r.trace_cycles + r.stall_cycles);
+                prev = r.stall_cycles;
+            }
+        }
+    }
+}
+
+/// Determinism (the CI `repro replay` gate's in-process equivalent):
+/// two streamed replays produce byte-identical timeline CSVs and
+/// bit-identical energies, and the streamed path agrees with the
+/// materialized replay.
+#[test]
+fn streamed_replay_is_deterministic_and_matches_materialized() {
+    let ctx = ctx();
+    let spec = decode_spec();
+    let run = materialize(&spec);
+    let cfg = OnlineConfig::new(run.trace().capacity, 8, 0.9, GatingPolicy::Aggressive);
+
+    let (_, a) = spec.stream_online(&ctx, cfg).unwrap();
+    let (_, b) = spec.stream_online(&ctx, cfg).unwrap();
+    assert_eq!(a.timeline_csv(), b.timeline_csv(), "replay must be deterministic");
+    assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+    assert_eq!(a.stall_cycles, b.stall_cycles);
+
+    let materialized =
+        replay_trace(&ctx.cacti, run.trace(), run.stats(), cfg, spec.freq_ghz())
+            .unwrap();
+    assert_eq!(a.timeline_csv(), materialized.timeline_csv());
+    assert_eq!(
+        a.eval.e_total_j().to_bits(),
+        materialized.eval.e_total_j().to_bits()
+    );
+
+    // Serving twin: serve_online is deterministic too.
+    let sspec = serving_spec();
+    let scfg = OnlineConfig::new(
+        sspec.serving_arena_grid().unwrap().capacities[0],
+        8,
+        0.9,
+        GatingPolicy::Aggressive,
+    );
+    let (_, sa) = sspec.serve_online(&ctx, scfg).unwrap();
+    let (_, sb) = sspec.serve_online(&ctx, scfg).unwrap();
+    assert_eq!(sa.timeline_csv(), sb.timeline_csv());
+    assert_eq!(sa.eval.e_total_j().to_bits(), sb.eval.e_total_j().to_bits());
+}
+
+/// Timeline integrity on real traces: every bank's spans tile
+/// `[0, end_cycles)` with no gaps or overlaps, waking time equals
+/// `wake_events`-consistent stall accounting, and states respect the
+/// policy (no Gated spans under drowsy, no Drowsy spans under
+/// aggressive, neither under `None`).
+#[test]
+fn timelines_are_gapless_and_policy_consistent() {
+    let ctx = ctx();
+    let spec = decode_spec();
+    let run = materialize(&spec);
+    let capacity = run.trace().capacity;
+    for policy in policies() {
+        let cfg = OnlineConfig::new(capacity, 8, 0.9, policy);
+        let r = replay_trace(&ctx.cacti, run.trace(), run.stats(), cfg, spec.freq_ghz())
+            .unwrap();
+        assert_eq!(r.timelines.len(), 8);
+        for (b, spans) in r.timelines.iter().enumerate() {
+            let mut t = 0u64;
+            for s in spans {
+                assert_eq!(s.t0, t, "{policy:?} bank {b}: gap before {s:?}");
+                assert!(s.t1 > s.t0);
+                match s.state {
+                    BankState::Gated => assert!(
+                        !matches!(policy, GatingPolicy::Drowsy { .. } | GatingPolicy::None),
+                        "{policy:?} bank {b} gated"
+                    ),
+                    BankState::Drowsy => assert!(
+                        matches!(policy, GatingPolicy::Drowsy { .. }),
+                        "{policy:?} bank {b} drowsy"
+                    ),
+                    BankState::Waking => assert!(
+                        !matches!(policy, GatingPolicy::None),
+                        "{policy:?} bank {b} waking"
+                    ),
+                    _ => {}
+                }
+                t = s.t1;
+            }
+            assert_eq!(t, r.end_cycles(), "{policy:?} bank {b} must reach the end");
+        }
+    }
+}
+
+/// The portfolio validation pass reconciles with direct replays: each
+/// row's observed energy equals a hand replay of the same config, and
+/// the zero-wake invariant implies observed == predicted when the
+/// frontier config never gates.
+#[test]
+fn online_validate_rows_match_direct_replays() {
+    use trapti::api::PortfolioOptions;
+    use trapti::banking::SweepSpec;
+    use trapti::util::MIB;
+    let ctx = ctx();
+    let specs = vec![decode_spec(), serving_spec()];
+    let grid = SweepSpec {
+        capacities: vec![2 * MIB, 4 * MIB, 8 * MIB],
+        banks: vec![1, 2, 4, 8],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+    };
+    let run = trapti::api::run_portfolio(
+        &ctx,
+        &specs,
+        &PortfolioOptions {
+            grid: Some(grid),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let vals = trapti::api::online_validate(&ctx, &specs, &run).unwrap();
+    assert!(!vals.is_empty());
+    for (spec, frontier) in specs.iter().zip(&run.result.frontiers) {
+        let mat = materialize(spec);
+        for v in vals.iter().filter(|v| v.workload == frontier.workload) {
+            let cfg = OnlineConfig::new(
+                v.key.capacity,
+                v.key.banks,
+                v.key.alpha(),
+                v.key.policy(),
+            );
+            let direct = trapti::banking::replay_trace_with(
+                &ctx.cacti,
+                mat.trace(),
+                mat.stats(),
+                cfg,
+                spec.freq_ghz(),
+                false,
+            )
+            .unwrap();
+            assert_eq!(
+                v.observed_e_j.to_bits(),
+                direct.eval.e_total_j().to_bits(),
+                "{}/{}",
+                v.workload,
+                v.key.label()
+            );
+            assert_eq!(v.stall_cycles, direct.stall_cycles);
+            if v.wake_events == 0 {
+                // Nothing gated -> no stalls -> online == offline exactly.
+                assert_eq!(v.observed_e_j.to_bits(), v.predicted_e_j.to_bits());
+            }
+        }
+    }
+}
