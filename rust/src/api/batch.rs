@@ -7,6 +7,12 @@
 //! sweep grids that share a baseline) simulate exactly once. Simulation
 //! is deterministic, so the batch output is byte-identical to a naive
 //! sequential loop — `run_sequential` exists precisely to assert that.
+//!
+//! Memoization is in-memory per batch; results persist across processes
+//! through the content-addressed lab store: `repro batch --lab DIR`
+//! writes each result via [`crate::lab::store::persist_batch`], and
+//! whole campaigns run resumable through `repro lab run`
+//! ([`crate::lab`]), which skips any job whose artifacts already exist.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};

@@ -406,6 +406,64 @@ pub fn headline(ctx: &ApiContext) -> Result<Headline> {
     })
 }
 
+/// Built-in lab manifests (`repro lab run --manifest @<name>`): the
+/// figure/table batch runners expressed as declarative
+/// [`crate::lab::LabManifest`] TOML, so the standing experiments flow
+/// through the same content-addressed store as ad-hoc ones.
+///
+/// * `@paper` — the headline portfolio: both paper models × decode and
+///   serving × a Table-II-shaped grid (capacities sized so the serving
+///   arena fits and the portfolio is non-empty).
+/// * `@paired-prefill` — the Figs. 5–9 / Table II workhorse pair at the
+///   paper sequence length, grid derived from the Stage-I peaks.
+/// * `@tiny` — a seconds-scale smoke manifest (the CI determinism gate
+///   runs it; mirrors `rust/configs/lab_tiny.toml`).
+pub fn lab_manifest(name: &str) -> Option<&'static str> {
+    // NOTE: the TOML-subset parser reads arrays on a single line only.
+    match name {
+        "paper" => Some(
+            r#"[lab]
+name = "paper"
+accel = "baseline"
+workloads = ["gpt2-xl:decode:512:128", "ds-r1d:decode:512:128", "gpt2-xl:serve:64:8:7", "ds-r1d:serve:64:8:7"]
+# Stage-III replay of every frontier config across four workloads is
+# minutes of work; flip on for the full validation sweep.
+validate = false
+
+[grid]
+capacities = ["128MiB", "256MiB", "512MiB", "768MiB"]
+banks = [1, 2, 4, 8, 16, 32]
+alphas = [0.9]
+policies = ["none", "aggressive", "conservative", "drowsy"]
+"#,
+        ),
+        "paired-prefill" => Some(
+            r#"[lab]
+name = "paired-prefill"
+accel = "baseline"
+workloads = ["gpt2-xl:prefill:2048", "ds-r1d:prefill:2048"]
+validate = false
+# No [grid]: derive the covering grid from the Stage-I peaks.
+"#,
+        ),
+        "tiny" => Some(
+            r#"[lab]
+name = "tiny"
+accel = "tiny"
+workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8", "tiny-gqa:serve:8:2:7"]
+validate = true
+
+[grid]
+capacities = ["2MiB", "4MiB"]
+banks = [1, 2, 4, 8]
+alphas = [0.9]
+policies = ["aggressive", "drowsy"]
+"#,
+        ),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,6 +11,7 @@ use crate::banking::{GatingPolicy, SweepSpec};
 use crate::config::{baseline, AccelConfig};
 use crate::serving::ServingParams;
 use crate::util::fnv::Fnv64 as Fnv;
+use crate::util::json::Json;
 use crate::workload::{FfnKind, ModelPreset, NormKind, Workload};
 
 /// One fully-specified experiment. Construct via [`ExperimentSpec::builder`].
@@ -136,6 +137,75 @@ impl ExperimentSpec {
             }
         }
         h.finish()
+    }
+
+    /// Human-auditable provenance record of this spec for lab store
+    /// manifests (`result/<job-id>/manifest.json`). Every `u64` is
+    /// emitted as a decimal string — `Json::Num` is an `f64` and would
+    /// silently round capacities above 2^53.
+    pub fn manifest_json(&self) -> Json {
+        let u = |v: u64| Json::str(v.to_string());
+        let model = Json::obj(vec![
+            ("name", Json::str(self.model.name)),
+            ("layers", Json::num(self.model.layers)),
+            ("d_model", Json::num(self.model.d_model)),
+            ("heads", Json::num(self.model.heads)),
+            ("kv_heads", Json::num(self.model.kv_heads)),
+            ("d_head", Json::num(self.model.d_head)),
+            ("d_ff", Json::num(self.model.d_ff)),
+            ("ffn", Json::str(format!("{:?}", self.model.ffn))),
+            ("norm", Json::str(format!("{:?}", self.model.norm))),
+        ]);
+        let workload = match self.workload {
+            Workload::Prefill { seq } => Json::obj(vec![
+                ("kind", Json::str("prefill")),
+                ("seq", Json::num(seq)),
+            ]),
+            Workload::Decode { prompt, gen } => Json::obj(vec![
+                ("kind", Json::str("decode")),
+                ("prompt", Json::num(prompt)),
+                ("gen", Json::num(gen)),
+            ]),
+            Workload::Serving(p) => Json::obj(vec![
+                ("kind", Json::str("serving")),
+                ("requests", Json::num(p.requests)),
+                ("concurrency", Json::num(p.concurrency)),
+                ("seed", u(p.seed)),
+                ("mean_arrival_gap", u(p.mean_arrival_gap)),
+                ("prompt_min", Json::num(p.prompt_min)),
+                ("prompt_max", Json::num(p.prompt_max)),
+                ("gen_min", Json::num(p.gen_min)),
+                ("gen_max", Json::num(p.gen_max)),
+                ("page_tokens", Json::num(p.page_tokens)),
+            ]),
+        };
+        let accel = Json::obj(vec![
+            ("name", Json::str(self.accel.name.clone())),
+            (
+                "on_chip_capacity",
+                Json::arr(self.accel.on_chip.iter().map(|m| u(m.capacity))),
+            ),
+            ("freq_ghz", Json::num(self.accel.sa.freq_ghz)),
+        ]);
+        let sweep = match &self.sweep {
+            None => Json::Null,
+            Some(s) => Json::obj(vec![
+                ("capacities", Json::arr(s.capacities.iter().map(|&c| u(c)))),
+                ("banks", Json::arr(s.banks.iter().map(|&b| Json::num(b)))),
+                ("alphas", Json::arr(s.alphas.iter().map(|&a| Json::num(a)))),
+                (
+                    "policies",
+                    Json::arr(s.policies.iter().map(|p| Json::str(p.label()))),
+                ),
+            ]),
+        };
+        Json::obj(vec![
+            ("spec_hash", Json::str(format!("{:016x}", self.content_hash()))),
+            ("model", model),
+            ("workload", workload),
+            ("accel", accel),
+            ("sweep", sweep),
+        ])
     }
 
     /// Validate every field; called by the builder and by `BatchRunner`

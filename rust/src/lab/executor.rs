@@ -1,0 +1,525 @@
+//! Parallel, resumable executor for a planned lab DAG.
+//!
+//! Scheduling is a plain dependency-counting ready queue over
+//! `std::thread::scope` workers (`--jobs N`): a job becomes ready when
+//! every dependency is `Done` or already complete in the store, and the
+//! store's `COMPLETE`-marker protocol ([`crate::lab::store`]) makes the
+//! whole thing crash-safe — jobs whose artifacts exist are skipped,
+//! interrupted jobs are wiped and re-run, and because every job is
+//! bit-deterministic a resumed run converges to the same bytes as an
+//! uninterrupted one.
+//!
+//! Failure policy: by default the first failure cancels everything not
+//! yet running (fail-fast); with `continue_on_failure` only the failed
+//! job's transitive dependents are cancelled and independent branches
+//! keep going. Either way [`execute`] returns a summary, not an error —
+//! callers decide how loud to be.
+//!
+//! Job bodies mirror the `api` layer exactly: sweeps replicate
+//! `api::optimize::collect_sweeps` (fused streaming, nothing
+//! materialized), validation replicates `api::optimize::online_validate`
+//! (one materialized Stage-I run, every frontier config replayed).
+//! Validation rebuilds its frontier from its own persisted sweep — a
+//! per-workload frontier is independent of the other workloads, so the
+//! result is identical to slicing the portfolio run's frontier.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::api::optimize::workload_label;
+use crate::api::{ApiContext, ExperimentSpec, OnlineValidation};
+use crate::banking::online::{replay_trace_with, OnlineConfig};
+use crate::banking::optimize::{optimize, ConfigKey, OptimizeResult, WorkloadSweep};
+use crate::report::tables;
+use crate::util::json::{self, Json};
+use crate::workload::Workload;
+
+use super::manifest::LabManifest;
+use super::planner::{Job, JobKind, Plan};
+use super::store::{self, Store, LAB_SCHEMA_VERSION};
+
+/// Executor knobs (`repro lab run --jobs N --continue-on-failure 1`).
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    /// Worker threads; clamped to at least 1.
+    pub jobs: usize,
+    /// Keep independent branches running after a failure instead of
+    /// cancelling everything not yet started.
+    pub continue_on_failure: bool,
+    /// Print per-job lifecycle lines to stderr.
+    pub progress: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            jobs: 1,
+            continue_on_failure: false,
+            progress: false,
+        }
+    }
+}
+
+/// What one [`execute`] pass did, in plan (topological) order.
+#[derive(Debug, Default)]
+pub struct ExecSummary {
+    /// Jobs actually run to completion this pass.
+    pub executed: Vec<u64>,
+    /// Jobs whose artifacts were already complete (pure cache hits).
+    pub skipped: Vec<u64>,
+    /// Jobs that failed or were cancelled, with the reason.
+    pub failed: Vec<(u64, String)>,
+}
+
+impl ExecSummary {
+    pub fn ok(&self) -> bool {
+        self.failed.is_empty()
+    }
+}
+
+enum St {
+    Waiting,
+    Ready,
+    Running,
+    Done,
+    Skipped,
+    Failed(String),
+    Cancelled(String),
+}
+
+struct Sched {
+    state: Vec<St>,
+    /// Reverse edges: job index -> indices depending on it.
+    dependents: Vec<Vec<usize>>,
+    /// Unfinished-dependency count while `Waiting`.
+    remaining: Vec<usize>,
+    ready: VecDeque<usize>,
+    running: usize,
+    finished: usize,
+}
+
+/// Run every incomplete job of `plan` against `store`. Returns the
+/// pass summary; job failures land in [`ExecSummary::failed`] rather
+/// than erroring, so a partial tree is left in a resumable state.
+pub fn execute(
+    ctx: &ApiContext,
+    store: &Store,
+    plan: &Plan,
+    opts: &ExecOptions,
+) -> Result<ExecSummary> {
+    let n = plan.jobs.len();
+    let index: HashMap<u64, usize> =
+        plan.jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+
+    let mut sched = Sched {
+        state: Vec::with_capacity(n),
+        dependents: vec![Vec::new(); n],
+        remaining: vec![0; n],
+        ready: VecDeque::new(),
+        running: 0,
+        finished: 0,
+    };
+    // Prepass in topological order: complete jobs are cache hits; a job
+    // whose unfinished-dependency count is zero starts ready.
+    for (i, job) in plan.jobs.iter().enumerate() {
+        for d in &job.deps {
+            let di = *index
+                .get(d)
+                .ok_or_else(|| anyhow!("{}: dep {} not in plan", job.label, store::hex(*d)))?;
+            sched.dependents[di].push(i);
+            if !matches!(sched.state[di], St::Skipped) {
+                sched.remaining[i] += 1;
+            }
+        }
+        if store.is_complete(job.id) {
+            sched.state.push(St::Skipped);
+            sched.finished += 1;
+        } else if sched.remaining[i] == 0 {
+            sched.state.push(St::Ready);
+            sched.ready.push_back(i);
+        } else {
+            sched.state.push(St::Waiting);
+        }
+    }
+
+    let total = n - sched.finished;
+    let sched = Mutex::new(sched);
+    let cv = Condvar::new();
+    let workers = opts.jobs.max(1).min(n.max(1));
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let ctx = ctx.clone();
+            let sched = &sched;
+            let cv = &cv;
+            s.spawn(move || loop {
+                // Claim the next ready job, or exit once nothing can
+                // ever become ready again.
+                let idx = {
+                    let mut g = sched.lock().unwrap();
+                    loop {
+                        if let Some(i) = g.ready.pop_front() {
+                            g.state[i] = St::Running;
+                            g.running += 1;
+                            break i;
+                        }
+                        if g.running == 0 {
+                            return;
+                        }
+                        g = cv.wait(g).unwrap();
+                    }
+                };
+                let job = &plan.jobs[idx];
+                if opts.progress {
+                    eprintln!("[lab] run  {} ({})", job.label, store::hex(job.id));
+                }
+                let res = run_job(&ctx, store, plan, job);
+                let mut g = sched.lock().unwrap();
+                g.running -= 1;
+                g.finished += 1;
+                match res {
+                    Ok(()) => {
+                        if opts.progress {
+                            eprintln!(
+                                "[lab] done {} ({}/{total})",
+                                job.label,
+                                g.finished - (n - total)
+                            );
+                        }
+                        g.state[idx] = St::Done;
+                        for t in g.dependents[idx].clone() {
+                            if matches!(g.state[t], St::Waiting) {
+                                g.remaining[t] -= 1;
+                                if g.remaining[t] == 0 {
+                                    g.state[t] = St::Ready;
+                                    g.ready.push_back(t);
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if opts.progress {
+                            eprintln!("[lab] FAIL {}: {e:#}", job.label);
+                        }
+                        g.state[idx] = St::Failed(format!("{e:#}"));
+                        if opts.continue_on_failure {
+                            // Cancel only the transitive dependents.
+                            let mut stack = vec![idx];
+                            while let Some(i) = stack.pop() {
+                                for t in g.dependents[i].clone() {
+                                    if matches!(g.state[t], St::Waiting) {
+                                        g.state[t] = St::Cancelled(format!(
+                                            "upstream {} failed",
+                                            plan.jobs[i].label
+                                        ));
+                                        g.finished += 1;
+                                        stack.push(t);
+                                    }
+                                }
+                            }
+                        } else {
+                            for i in 0..n {
+                                if matches!(g.state[i], St::Waiting | St::Ready) {
+                                    g.state[i] = St::Cancelled(
+                                        "aborted after failure (use \
+                                         --continue-on-failure 1 to keep \
+                                         independent jobs running)"
+                                            .into(),
+                                    );
+                                    g.finished += 1;
+                                }
+                            }
+                            g.ready.clear();
+                        }
+                    }
+                }
+                cv.notify_all();
+            });
+        }
+    });
+
+    let sched = sched.into_inner().unwrap();
+    let mut summary = ExecSummary::default();
+    for (i, job) in plan.jobs.iter().enumerate() {
+        match &sched.state[i] {
+            St::Done => summary.executed.push(job.id),
+            St::Skipped => summary.skipped.push(job.id),
+            St::Failed(e) | St::Cancelled(e) => summary.failed.push((job.id, e.clone())),
+            St::Waiting | St::Ready | St::Running => unreachable!(
+                "job {} left non-terminal — scheduler invariant broken",
+                job.label
+            ),
+        }
+    }
+    Ok(summary)
+}
+
+fn run_job(ctx: &ApiContext, store: &Store, plan: &Plan, job: &Job) -> Result<()> {
+    store.begin(job.id).with_context(|| job.label.clone())?;
+    let artifacts = match job.kind {
+        JobKind::Sweep => run_sweep(ctx, store, plan, job),
+        JobKind::Optimize => run_optimize(store, plan, job),
+        JobKind::Validate => run_validate(ctx, store, plan, job),
+    }
+    .with_context(|| job.label.clone())?;
+    store.finish(job.id, &job_manifest(plan, job, &artifacts))
+}
+
+/// Per-job provenance manifest: schema version, identity, dependency
+/// edges, the originating spec, and the artifact names. Relative names
+/// only — no absolute paths — so two store trees diff clean.
+fn job_manifest(plan: &Plan, job: &Job, artifacts: &[&str]) -> Json {
+    let mut fields = vec![
+        ("schema", Json::num(LAB_SCHEMA_VERSION as u32)),
+        ("kind", Json::str(job.kind.label())),
+        ("label", Json::str(job.label.clone())),
+        ("lab", Json::str(plan.manifest.name.clone())),
+        ("job", Json::str(store::hex(job.id))),
+        (
+            "deps",
+            Json::arr(job.deps.iter().map(|d| Json::str(store::hex(*d)))),
+        ),
+        (
+            "artifacts",
+            Json::arr(artifacts.iter().map(|a| Json::str(*a))),
+        ),
+    ];
+    if let Some(i) = job.spec_index {
+        fields.push(("spec", plan.manifest.specs[i].manifest_json()));
+    }
+    Json::obj(fields)
+}
+
+fn spec_of<'p>(plan: &'p Plan, job: &Job) -> &'p ExperimentSpec {
+    &plan.manifest.specs[job.spec_index.expect("spec-bound job")]
+}
+
+/// Stage I streamed into the fused Stage-II engine — the exact
+/// collection path of `api::optimize::collect_sweeps` for a spec with
+/// an embedded grid.
+fn collect_sweep(ctx: &ApiContext, spec: &ExperimentSpec) -> Result<WorkloadSweep> {
+    let name = workload_label(spec);
+    match spec.workload {
+        Workload::Serving(_) => {
+            let g = spec
+                .sweep
+                .clone()
+                .ok_or_else(|| anyhow!("lab spec lost its embedded grid"))?;
+            let (run, s2) = spec.serve_fused_with(ctx, &g)?;
+            Ok(WorkloadSweep {
+                name,
+                end_cycles: run.result.total_cycles,
+                points: s2.points,
+            })
+        }
+        _ => {
+            let (summary, points) = spec.stream_stage2(ctx)?;
+            Ok(WorkloadSweep {
+                name,
+                end_cycles: summary.total_cycles(),
+                points,
+            })
+        }
+    }
+}
+
+fn run_sweep(
+    ctx: &ApiContext,
+    store: &Store,
+    plan: &Plan,
+    job: &Job,
+) -> Result<Vec<&'static str>> {
+    let ws = collect_sweep(ctx, spec_of(plan, job))?;
+    store.write_artifact(
+        job.id,
+        "sweep.json",
+        store::sweep_to_json(&ws).to_string_pretty().as_bytes(),
+    )?;
+    store.write_artifact(job.id, "sweep.txt", tables::sweep_table(&ws).render().as_bytes())?;
+    Ok(vec!["sweep.json", "sweep.txt"])
+}
+
+fn load_sweep(store: &Store, id: u64) -> Result<WorkloadSweep> {
+    let bytes = store.read_artifact(id, "sweep.json")?;
+    let text = String::from_utf8(bytes).context("sweep.json is not UTF-8")?;
+    store::sweep_from_json(&json::parse(&text)?)
+        .with_context(|| format!("sweep artifact of job {}", store::hex(id)))
+}
+
+/// Deterministic portfolio report — same shape as `repro optimize`'s
+/// stdout, derived entirely from persisted sweeps.
+fn portfolio_report(m: &LabManifest, r: &OptimizeResult) -> String {
+    use std::fmt::Write as _;
+    let mut report = String::new();
+    let _ = writeln!(
+        report,
+        "Stage-II Pareto/portfolio optimization: {} workload(s), grid {} \
+         points, epsilon={:.3}",
+        r.workload_names.len(),
+        m.grid.points(),
+        r.epsilon,
+    );
+    for f in &r.frontiers {
+        let _ = writeln!(
+            report,
+            "\n{}: own optimum {} (E={:.3} J over {} cycles)",
+            f.workload,
+            f.best_key.label(),
+            f.best_energy_j,
+            f.end_cycles,
+        );
+        report.push_str(&tables::pareto_table(f).render());
+    }
+    report.push('\n');
+    report.push_str(&tables::portfolio_table(r, 15).render());
+    if let Some(best) = r.robust_best() {
+        let _ = writeln!(
+            report,
+            "robust-best across all workloads: {}  (worst regret \
+             {:+.1}%, mean {:+.1}%)",
+            best.key.label(),
+            best.worst_regret_pct,
+            best.mean_regret_pct,
+        );
+    }
+    report
+}
+
+fn run_optimize(store: &Store, plan: &Plan, job: &Job) -> Result<Vec<&'static str>> {
+    let m = &plan.manifest;
+    let workloads = job
+        .deps
+        .iter()
+        .map(|&d| load_sweep(store, d))
+        .collect::<Result<Vec<_>>>()?;
+    let r = optimize(&workloads, &m.constraints, m.epsilon, None)?;
+    store.write_artifact(job.id, "pareto.csv", tables::pareto_csv(&r).as_bytes())?;
+    store.write_artifact(job.id, "portfolio.txt", portfolio_report(m, &r).as_bytes())?;
+    Ok(vec!["pareto.csv", "portfolio.txt"])
+}
+
+fn run_validate(
+    ctx: &ApiContext,
+    store: &Store,
+    plan: &Plan,
+    job: &Job,
+) -> Result<Vec<&'static str>> {
+    let m = &plan.manifest;
+    let spec = spec_of(plan, job);
+    let ws = load_sweep(store, job.deps[0])?;
+    // Rebuild this workload's frontier from its persisted sweep (the
+    // frontier is per-workload, so this equals the portfolio run's).
+    let r = optimize(std::slice::from_ref(&ws), &m.constraints, m.epsilon, None)?;
+    let frontier = &r.frontiers[0];
+    // One materialized Stage-I run; every frontier config replays
+    // against the borrowed trace — exactly `api::online_validate`.
+    let run = spec.materialize(ctx)?;
+    let mut vals = Vec::with_capacity(frontier.frontier.len());
+    for fp in &frontier.frontier {
+        let config = OnlineConfig::of_point(&fp.point);
+        let report = replay_trace_with(
+            &ctx.cacti,
+            run.trace(),
+            run.stats(),
+            config,
+            spec.freq_ghz(),
+            false, // totals only; no timelines for a whole frontier
+        )?;
+        vals.push(OnlineValidation {
+            workload: frontier.workload.clone(),
+            key: ConfigKey::of(&fp.point),
+            predicted_e_j: fp.point.eval.e_total_j(),
+            observed_e_j: report.e_total_j(),
+            energy_delta_pct: report.eval.delta_pct(&fp.point.eval),
+            predicted_wake_pct: fp.wake_exposure_pct,
+            observed_stall_pct: report.stall_pct(),
+            trace_cycles: report.trace_cycles,
+            stall_cycles: report.stall_cycles,
+            wake_events: report.wake_events,
+        });
+    }
+    store.write_artifact(job.id, "validation.csv", tables::validation_csv(&vals).as_bytes())?;
+    store.write_artifact(
+        job.id,
+        "validation.txt",
+        tables::validation_table(&vals).render().as_bytes(),
+    )?;
+    Ok(vec!["validation.csv", "validation.txt"])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::manifest::LabManifest;
+
+    const TEXT: &str = r#"
+[lab]
+name = "exec-unit"
+accel = "tiny"
+workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8"]
+
+[grid]
+capacities = ["2MiB", "4MiB"]
+banks = [1, 2, 4]
+alphas = [0.9]
+policies = ["aggressive", "drowsy"]
+"#;
+
+    fn tmp_store(tag: &str) -> Store {
+        let root = std::env::temp_dir()
+            .join(format!("trapti-lab-exec-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        Store::new(root)
+    }
+
+    #[test]
+    fn executes_dag_then_pure_cache_hits() {
+        let ctx = ApiContext::new();
+        let store = tmp_store("cache");
+        let plan = Plan::of(LabManifest::parse(TEXT).unwrap());
+        let opts = ExecOptions {
+            jobs: 2,
+            ..Default::default()
+        };
+        let first = execute(&ctx, &store, &plan, &opts).unwrap();
+        assert!(first.ok(), "{:?}", first.failed);
+        assert_eq!(first.executed.len(), plan.jobs.len());
+        assert!(first.skipped.is_empty());
+        for job in &plan.jobs {
+            assert!(store.is_complete(job.id), "{} complete", job.label);
+        }
+        // Optimize artifacts reload and agree with a fresh in-memory run.
+        let opt = plan.jobs.iter().find(|j| j.kind == JobKind::Optimize).unwrap();
+        let csv = store.read_artifact(opt.id, "pareto.csv").unwrap();
+        assert!(csv.starts_with(b"workload,"), "pareto.csv header");
+        // Second pass: zero jobs executed, all cache hits.
+        let second = execute(&ctx, &store, &plan, &opts).unwrap();
+        assert!(second.executed.is_empty());
+        assert_eq!(second.skipped.len(), plan.jobs.len());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn persisted_sweep_reloads_bit_exact() {
+        let ctx = ApiContext::new();
+        let store = tmp_store("reload");
+        let m = LabManifest::parse(TEXT).unwrap();
+        let plan = Plan::of(m);
+        let opts = ExecOptions::default();
+        assert!(execute(&ctx, &store, &plan, &opts).unwrap().ok());
+        let sweep_job = &plan.jobs[0];
+        let loaded = load_sweep(&store, sweep_job.id).unwrap();
+        let fresh = collect_sweep(&ctx, spec_of(&plan, sweep_job)).unwrap();
+        assert_eq!(loaded.name, fresh.name);
+        assert_eq!(loaded.end_cycles, fresh.end_cycles);
+        assert_eq!(loaded.points.len(), fresh.points.len());
+        for (a, b) in loaded.points.iter().zip(&fresh.points) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+            assert_eq!(a.base_e_j.to_bits(), b.base_e_j.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -1,0 +1,408 @@
+//! Declarative lab manifests: one TOML file describing a whole
+//! experiment campaign — models × workloads × Stage-II grid ×
+//! constraints — expanded by [`crate::lab::planner`] into a job DAG.
+//!
+//! ```text
+//! [lab]
+//! name = "tiny"
+//! accel = "tiny"                       # named accelerator preset
+//! workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8"]
+//! validate = true                      # Stage-III validation jobs
+//! epsilon = 0.0                        # frontier thinning
+//!
+//! [grid]                               # omitted -> covering grid
+//! capacities = ["2MiB", "4MiB"]        # strings w/ suffix, or raw bytes
+//! banks = [1, 2, 4, 8]
+//! alphas = [0.9]
+//! policies = ["aggressive", "drowsy"]
+//!
+//! [constraints]                        # all optional
+//! max_area_pct = 12.0
+//! max_wake_pct = 1.0
+//! min_capacity = "2MiB"
+//! ```
+//!
+//! Workload descriptors use the same grammar as `repro optimize
+//! --workloads`: `MODEL:prefill:SEQ`, `MODEL:decode:PROMPT:GEN`,
+//! `MODEL:serve:REQUESTS:CONCURRENCY:SEED` — [`parse_descriptor`] is
+//! the single parser both the CLI and the lab share. The manifest's
+//! grid is embedded into every expanded [`ExperimentSpec`], so each
+//! spec's FNV content hash — and therefore every job id derived from it
+//! — covers the full (model, workload, accelerator, grid) identity.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::api::optimize::{covering_grid, full_policy_axis};
+use crate::api::{validate_sweep, ExperimentSpec};
+use crate::banking::optimize::Constraints;
+use crate::banking::{GatingPolicy, SweepSpec};
+use crate::config::parse::{parse_bytes, Config, Value};
+use crate::config::{named, AccelConfig};
+use crate::serving::ServingParams;
+use crate::workload::{preset, Workload};
+
+/// A parsed lab manifest: the campaign every job id is derived from.
+#[derive(Debug, Clone)]
+pub struct LabManifest {
+    pub name: String,
+    pub accel: AccelConfig,
+    /// Workload descriptors exactly as written (provenance echo).
+    pub descriptors: Vec<String>,
+    /// One spec per descriptor, with [`LabManifest::grid`] embedded.
+    pub specs: Vec<ExperimentSpec>,
+    pub grid: SweepSpec,
+    pub constraints: Constraints,
+    /// ε for the per-workload frontiers (0 = exact).
+    pub epsilon: f64,
+    /// Plan Stage-III online-validation jobs (one per workload).
+    pub validate: bool,
+}
+
+/// Parse one `MODEL:prefill:SEQ` / `MODEL:decode:PROMPT:GEN` /
+/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED` workload descriptor into a
+/// grid-less spec. Shared by `repro optimize`, `repro replay`, and lab
+/// manifests so the descriptor grammar cannot fork.
+pub fn parse_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpec> {
+    let parts: Vec<&str> = desc.split(':').collect();
+    let model_of = |name: &str| {
+        preset(name).ok_or_else(|| anyhow!("unknown model `{name}` in `{desc}`"))
+    };
+    let (model, workload) = match parts.as_slice() {
+        [m, "prefill", seq] => (
+            model_of(m)?,
+            Workload::Prefill { seq: seq.parse()? },
+        ),
+        [m, "decode", prompt, gen] => (
+            model_of(m)?,
+            Workload::Decode {
+                prompt: prompt.parse()?,
+                gen: gen.parse()?,
+            },
+        ),
+        [m, "serve", requests, concurrency, seed] => (
+            model_of(m)?,
+            Workload::Serving(ServingParams::new(
+                requests.parse()?,
+                concurrency.parse()?,
+                seed.parse()?,
+            )),
+        ),
+        _ => bail!(
+            "workload descriptor `{desc}` wants MODEL:prefill:SEQ | \
+             MODEL:decode:PROMPT:GEN | MODEL:serve:REQS:CONC:SEED"
+        ),
+    };
+    ExperimentSpec::builder()
+        .model(model)
+        .workload(workload)
+        .accel(accel.clone())
+        .build()
+}
+
+/// Parse a gating-policy name (`none|aggressive|conservative|drowsy`)
+/// to its canonical policy — the same mapping as `repro replay
+/// --policy`, with the paper defaults for the parameterized policies.
+pub fn parse_policy_name(name: &str) -> Result<GatingPolicy> {
+    match name {
+        "none" | "no-gating" => Ok(GatingPolicy::None),
+        "aggressive" => Ok(GatingPolicy::Aggressive),
+        "conservative" => Ok(GatingPolicy::conservative()),
+        "drowsy" => Ok(GatingPolicy::drowsy()),
+        other => bail!(
+            "unknown policy `{other}` (want none|aggressive|conservative|drowsy)"
+        ),
+    }
+}
+
+/// A byte quantity: a string with a size suffix (`"48MiB"`) or a bare
+/// integer of raw bytes.
+fn bytes_value(v: &Value, key: &str) -> Result<u64> {
+    match v {
+        Value::Str(s) => parse_bytes(s).with_context(|| format!("`{key}`")),
+        Value::Int(i) if *i >= 0 => Ok(*i as u64),
+        _ => bail!("`{key}`: expected a byte size string like \"48MiB\" or raw bytes"),
+    }
+}
+
+fn opt_array<'c>(cfg: &'c Config, key: &str) -> Result<Option<&'c [Value]>> {
+    match cfg.get(key) {
+        None => Ok(None),
+        Some(Value::Array(items)) => Ok(Some(items)),
+        Some(_) => bail!("`{key}`: expected an array"),
+    }
+}
+
+fn str_items<'v>(items: &'v [Value], key: &str) -> Result<Vec<&'v str>> {
+    items
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .ok_or_else(|| anyhow!("`{key}`: expected an array of strings"))
+        })
+        .collect()
+}
+
+fn f64_items(items: &[Value], key: &str) -> Result<Vec<f64>> {
+    items
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| anyhow!("`{key}`: expected an array of numbers"))
+        })
+        .collect()
+}
+
+fn bool_or(cfg: &Config, key: &str, default: bool) -> Result<bool> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(Value::Bool(b)) => Ok(*b),
+        Some(_) => bail!("`{key}`: expected true/false"),
+    }
+}
+
+fn opt_f64(cfg: &Config, key: &str) -> Result<Option<f64>> {
+    match cfg.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("`{key}`: expected a number")),
+    }
+}
+
+impl LabManifest {
+    /// Resolve a CLI `--manifest` argument: `@name` is a built-in
+    /// manifest ([`crate::api::experiments::lab_manifest`]), anything
+    /// else a TOML file path.
+    pub fn resolve(source: &str) -> Result<LabManifest> {
+        if let Some(name) = source.strip_prefix('@') {
+            let text = crate::api::experiments::lab_manifest(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown built-in lab manifest `@{name}` \
+                     (available: @paper, @paired-prefill, @tiny)"
+                )
+            })?;
+            Self::parse(text).with_context(|| format!("built-in manifest @{name}"))
+        } else {
+            Self::load(Path::new(source))
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<LabManifest> {
+        let cfg = Config::load(path)?;
+        Self::of_config(&cfg).with_context(|| format!("lab manifest {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<LabManifest> {
+        Self::of_config(&Config::parse(text)?)
+    }
+
+    fn of_config(cfg: &Config) -> Result<LabManifest> {
+        let name = cfg.str("lab.name")?.to_string();
+        let accel_name = cfg.str_or("lab.accel", "baseline");
+        let accel = named(accel_name)
+            .ok_or_else(|| anyhow!("unknown accel `{accel_name}`"))?;
+
+        let descriptors: Vec<String> = str_items(
+            opt_array(cfg, "lab.workloads")?
+                .ok_or_else(|| anyhow!("`lab.workloads`: required array"))?,
+            "lab.workloads",
+        )?
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+        ensure!(!descriptors.is_empty(), "`lab.workloads` is empty");
+
+        let mut specs = Vec::with_capacity(descriptors.len());
+        for d in &descriptors {
+            specs.push(parse_descriptor(d.trim(), &accel)?);
+        }
+        // Duplicate descriptors would expand to identical job ids — the
+        // planner's DAG would silently collapse them; reject up front.
+        for i in 0..specs.len() {
+            for j in i + 1..specs.len() {
+                ensure!(
+                    specs[i].content_hash() != specs[j].content_hash(),
+                    "duplicate workload `{}` (== `{}`)",
+                    descriptors[j],
+                    descriptors[i]
+                );
+            }
+        }
+
+        let grid = match opt_array(cfg, "grid.capacities")? {
+            Some(caps) => {
+                let capacities = caps
+                    .iter()
+                    .map(|v| bytes_value(v, "grid.capacities"))
+                    .collect::<Result<Vec<u64>>>()?;
+                let banks: Vec<u32> = match cfg.get("grid.banks") {
+                    Some(_) => cfg
+                        .u64_array("grid.banks")?
+                        .into_iter()
+                        .map(|b| u32::try_from(b).context("`grid.banks` out of range"))
+                        .collect::<Result<Vec<u32>>>()?,
+                    None => vec![1, 2, 4, 8, 16, 32],
+                };
+                let alphas = match opt_array(cfg, "grid.alphas")? {
+                    Some(items) => f64_items(items, "grid.alphas")?,
+                    None => vec![0.9],
+                };
+                let policies = match opt_array(cfg, "grid.policies")? {
+                    Some(items) => str_items(items, "grid.policies")?
+                        .into_iter()
+                        .map(parse_policy_name)
+                        .collect::<Result<Vec<_>>>()?,
+                    None => full_policy_axis(),
+                };
+                SweepSpec {
+                    capacities,
+                    banks,
+                    alphas,
+                    policies,
+                }
+            }
+            None => {
+                if cfg.get("grid.banks").is_some()
+                    || cfg.get("grid.alphas").is_some()
+                    || cfg.get("grid.policies").is_some()
+                {
+                    bail!(
+                        "[grid] needs `capacities` (without it the lab derives \
+                         a covering grid and other grid keys would be dropped)"
+                    );
+                }
+                covering_grid(&specs)
+            }
+        };
+        validate_sweep(&grid)?;
+        // Embed the shared grid into every spec: job identity (the spec
+        // content hash) then covers the grid, so editing the grid
+        // re-keys — and therefore re-runs — every downstream job.
+        for spec in &mut specs {
+            spec.sweep = Some(grid.clone());
+        }
+
+        let constraints = Constraints {
+            max_area_overhead_pct: opt_f64(cfg, "constraints.max_area_pct")?,
+            max_wake_exposure_pct: opt_f64(cfg, "constraints.max_wake_pct")?,
+            min_capacity: match cfg.get("constraints.min_capacity") {
+                None => None,
+                Some(v) => Some(bytes_value(v, "constraints.min_capacity")?),
+            },
+        };
+        let epsilon = cfg.f64_or("lab.epsilon", 0.0);
+        ensure!(epsilon >= 0.0, "`lab.epsilon` must be >= 0");
+        let validate = bool_or(cfg, "lab.validate", true)?;
+
+        Ok(LabManifest {
+            name,
+            accel,
+            descriptors,
+            specs,
+            grid,
+            constraints,
+            epsilon,
+            validate,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MIB;
+
+    const TINY: &str = r#"
+[lab]
+name = "unit"
+accel = "tiny"
+workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8", "tiny-gqa:serve:8:2:7"]
+epsilon = 0.25
+
+[grid]
+capacities = ["2MiB", 4194304]
+banks = [1, 2, 4]
+alphas = [0.9]
+policies = ["aggressive", "drowsy"]
+
+[constraints]
+max_area_pct = 50.0
+min_capacity = "2MiB"
+"#;
+
+    #[test]
+    fn parses_full_manifest() {
+        let m = LabManifest::parse(TINY).unwrap();
+        assert_eq!(m.name, "unit");
+        assert_eq!(m.accel.name, "tiny-test");
+        assert_eq!(m.specs.len(), 3);
+        assert_eq!(m.grid.capacities, vec![2 * MIB, 4 * MIB]);
+        assert_eq!(m.grid.banks, vec![1, 2, 4]);
+        assert_eq!(m.grid.policies.len(), 2);
+        assert_eq!(m.constraints.max_area_overhead_pct, Some(50.0));
+        assert_eq!(m.constraints.min_capacity, Some(2 * MIB));
+        assert_eq!(m.constraints.max_wake_exposure_pct, None);
+        assert!((m.epsilon - 0.25).abs() < 1e-12);
+        assert!(m.validate, "validate defaults on");
+        // The grid is embedded into every spec, so content hashes cover it.
+        for spec in &m.specs {
+            assert_eq!(spec.sweep.as_ref().unwrap().capacities, m.grid.capacities);
+        }
+        match m.specs[2].workload {
+            Workload::Serving(p) => {
+                assert_eq!((p.requests, p.concurrency, p.seed), (8, 2, 7));
+            }
+            _ => panic!("third descriptor is serving"),
+        }
+    }
+
+    #[test]
+    fn grid_defaults_to_covering() {
+        let m = LabManifest::parse(
+            "[lab]\nname = \"d\"\naccel = \"tiny\"\nworkloads = [\"tiny-mha:prefill:64\"]\n",
+        )
+        .unwrap();
+        // covering_grid floors its capacity axis at 128 MiB in 16 MiB steps.
+        assert!(m.grid.capacities.len() >= 8);
+        assert_eq!(m.grid.banks, vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(m.grid.policies.len(), 4);
+        assert!(!m.validate || m.epsilon == 0.0);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_orphan_grid_keys() {
+        let dup = LabManifest::parse(
+            "[lab]\nname = \"d\"\naccel = \"tiny\"\n\
+             workloads = [\"tiny-mha:prefill:64\", \"tiny-mha:prefill:64\"]\n",
+        );
+        assert!(dup.unwrap_err().to_string().contains("duplicate"));
+        let orphan = LabManifest::parse(
+            "[lab]\nname = \"d\"\naccel = \"tiny\"\nworkloads = [\"tiny-mha:prefill:64\"]\n\
+             [grid]\nbanks = [1, 2]\n",
+        );
+        assert!(orphan.is_err(), "banks without capacities");
+    }
+
+    #[test]
+    fn descriptor_and_policy_errors_are_loud() {
+        let accel = crate::config::tiny();
+        assert!(parse_descriptor("tiny-mha:prefill:64", &accel).is_ok());
+        assert!(parse_descriptor("nope:prefill:64", &accel).is_err());
+        assert!(parse_descriptor("tiny-mha:warmup:64", &accel).is_err());
+        assert!(parse_policy_name("drowsy").is_ok());
+        assert!(parse_policy_name("extreme").is_err());
+    }
+
+    #[test]
+    fn builtin_manifests_parse() {
+        for name in ["paper", "paired-prefill", "tiny"] {
+            let m = LabManifest::resolve(&format!("@{name}"))
+                .unwrap_or_else(|e| panic!("@{name}: {e:#}"));
+            assert!(!m.specs.is_empty(), "@{name} has workloads");
+        }
+        assert!(LabManifest::resolve("@nope").is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! `trapti::lab` — content-addressed experiment lab.
+//!
+//! Turns the repo from "one CLI invocation per figure" into an
+//! experiment manager. Four pieces, one per module:
+//!
+//! * [`store`] — the on-disk artifact store (`./result/<job-id>/`): a
+//!   versioned provenance manifest plus every output artifact per job,
+//!   a `COMPLETE` marker written last for crash safety, and a bit-exact
+//!   JSON codec for [`crate::banking::optimize::WorkloadSweep`] so
+//!   persisted Stage-II tables reload with identical float bits.
+//! * [`manifest`] — the declarative TOML lab manifest (`[lab]` +
+//!   `[grid]` + `[constraints]`): models × workloads × grid ×
+//!   constraints, parsed into [`manifest::LabManifest`] with the grid
+//!   embedded into every spec so the FNV spec hash covers it.
+//! * [`planner`] — expands a manifest into a deterministic DAG of
+//!   Stage I/II/III jobs ([`planner::Plan`]), each keyed by an FNV id
+//!   over its inputs; editing an input re-keys exactly the invalidated
+//!   downstream jobs.
+//! * [`executor`] — the parallel, resumable runner (`--jobs N`,
+//!   `--continue-on-failure`): complete jobs are skipped, interrupted
+//!   ones wiped and re-run, and determinism makes a resumed run
+//!   byte-identical to an uninterrupted one.
+//!
+//! The CLI surface is `repro lab run|list|gc|trace-params`; built-in
+//! manifests (`@paper`, `@paired-prefill`, `@tiny`) live in
+//! [`crate::api::experiments::lab_manifest`].
+
+pub mod executor;
+pub mod manifest;
+pub mod planner;
+pub mod store;
+
+pub use executor::{execute, ExecOptions, ExecSummary};
+pub use manifest::LabManifest;
+pub use planner::{Job, JobKind, Plan};
+pub use store::Store;

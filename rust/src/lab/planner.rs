@@ -1,0 +1,255 @@
+//! Job planner: expand a [`LabManifest`] into a deterministic DAG of
+//! Stage I/II/III jobs, each keyed by an FNV-1a id derived from the
+//! work it performs.
+//!
+//! Per manifest the plan is:
+//!
+//! ```text
+//! sweep:<workload>      one per spec  (Stage I streamed into Stage II)
+//! optimize:<lab>        one           (depends on every sweep)
+//! validate:<workload>   one per spec  (depends on its own sweep only)
+//! ```
+//!
+//! Validation depends only on its workload's sweep — not on the
+//! portfolio optimize job — because per-workload frontiers are computed
+//! independently by [`crate::banking::optimize::optimize`] (only the
+//! portfolio ranking is cross-workload), so a validate job can rebuild
+//! its own frontier from its own sweep and run concurrently with
+//! everything else.
+//!
+//! Invalidation is purely structural: a job id hashes the spec content
+//! hash (which embeds the grid), the constraints/ε, and every
+//! dependency's id. Editing any upstream input therefore re-keys — and
+//! re-runs — exactly the affected downstream jobs, while untouched jobs
+//! keep their ids and hit the artifact cache.
+
+use std::collections::BTreeSet;
+
+use crate::banking::optimize::Constraints;
+use crate::util::Fnv64;
+
+use super::manifest::LabManifest;
+use crate::api::optimize::workload_label;
+
+/// Domain-separation key for lab job ids (vs the spec hash's
+/// `trapti-spec-v1`). Bump with [`super::store::LAB_SCHEMA_VERSION`] if
+/// the job semantics ever change incompatibly.
+const LAB_JOB_KEY: &str = "trapti-lab-v1";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Stage I streamed into the fused Stage-II sweep for one workload.
+    Sweep,
+    /// Cross-workload Pareto/portfolio optimization over every sweep.
+    Optimize,
+    /// Stage-III online replay of one workload's frontier configs.
+    Validate,
+}
+
+impl JobKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::Sweep => "sweep",
+            JobKind::Optimize => "optimize",
+            JobKind::Validate => "validate",
+        }
+    }
+}
+
+/// One schedulable unit of the plan.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub kind: JobKind,
+    /// Human-readable `kind:subject` label for listings and logs.
+    pub label: String,
+    /// Index into [`LabManifest::specs`] (`None` for the optimize job).
+    pub spec_index: Option<usize>,
+    /// Ids of jobs that must be complete before this one runs.
+    pub deps: Vec<u64>,
+}
+
+/// A planned manifest: jobs in topological (= execution-safe) order.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub manifest: LabManifest,
+    pub jobs: Vec<Job>,
+}
+
+fn hash_constraints(h: &mut Fnv64, c: &Constraints, epsilon: f64) {
+    for opt in [c.max_area_overhead_pct, c.max_wake_exposure_pct] {
+        match opt {
+            None => h.u64(0),
+            Some(v) => {
+                h.u64(1);
+                h.f64(v);
+            }
+        }
+    }
+    match c.min_capacity {
+        None => h.u64(0),
+        Some(v) => {
+            h.u64(1);
+            h.u64(v);
+        }
+    }
+    h.f64(epsilon);
+}
+
+impl Plan {
+    /// Expand a manifest into its job DAG. Deterministic: equal
+    /// manifests plan equal ids in equal order.
+    pub fn of(manifest: LabManifest) -> Plan {
+        let mut jobs = Vec::with_capacity(2 * manifest.specs.len() + 1);
+        let mut sweep_ids = Vec::with_capacity(manifest.specs.len());
+        for (i, spec) in manifest.specs.iter().enumerate() {
+            let mut h = Fnv64::new();
+            h.str(LAB_JOB_KEY);
+            h.str("sweep");
+            // The spec hash covers model, workload, accelerator, AND the
+            // embedded grid (see LabManifest::of_config).
+            h.u64(spec.content_hash());
+            let id = h.finish();
+            sweep_ids.push(id);
+            jobs.push(Job {
+                id,
+                kind: JobKind::Sweep,
+                label: format!("sweep:{}", workload_label(spec)),
+                spec_index: Some(i),
+                deps: Vec::new(),
+            });
+        }
+
+        let mut h = Fnv64::new();
+        h.str(LAB_JOB_KEY);
+        h.str("optimize");
+        hash_constraints(&mut h, &manifest.constraints, manifest.epsilon);
+        h.u64(sweep_ids.len() as u64);
+        for &id in &sweep_ids {
+            h.u64(id);
+        }
+        jobs.push(Job {
+            id: h.finish(),
+            kind: JobKind::Optimize,
+            label: format!("optimize:{}", manifest.name),
+            spec_index: None,
+            deps: sweep_ids.clone(),
+        });
+
+        if manifest.validate {
+            for (i, spec) in manifest.specs.iter().enumerate() {
+                let mut h = Fnv64::new();
+                h.str(LAB_JOB_KEY);
+                h.str("validate");
+                h.u64(spec.content_hash());
+                hash_constraints(&mut h, &manifest.constraints, manifest.epsilon);
+                h.u64(sweep_ids[i]);
+                jobs.push(Job {
+                    id: h.finish(),
+                    kind: JobKind::Validate,
+                    label: format!("validate:{}", workload_label(spec)),
+                    spec_index: Some(i),
+                    deps: vec![sweep_ids[i]],
+                });
+            }
+        }
+        Plan { manifest, jobs }
+    }
+
+    pub fn job(&self, id: u64) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    /// Every job id this plan can reach — the liveness set `lab gc`
+    /// preserves.
+    pub fn live_ids(&self) -> BTreeSet<u64> {
+        self.jobs.iter().map(|j| j.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::manifest::LabManifest;
+
+    const TEXT: &str = r#"
+[lab]
+name = "unit"
+accel = "tiny"
+workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8"]
+
+[grid]
+capacities = ["2MiB", "4MiB"]
+banks = [1, 2]
+alphas = [0.9]
+policies = ["aggressive"]
+"#;
+
+    fn plan_of(text: &str) -> Plan {
+        Plan::of(LabManifest::parse(text).unwrap())
+    }
+
+    #[test]
+    fn dag_shape_and_topology() {
+        let p = plan_of(TEXT);
+        // 2 sweeps + 1 optimize + 2 validates, in topological order.
+        assert_eq!(p.jobs.len(), 5);
+        assert_eq!(p.jobs[0].kind, JobKind::Sweep);
+        assert_eq!(p.jobs[1].kind, JobKind::Sweep);
+        assert_eq!(p.jobs[2].kind, JobKind::Optimize);
+        assert_eq!(p.jobs[2].deps, vec![p.jobs[0].id, p.jobs[1].id]);
+        assert_eq!(p.jobs[3].kind, JobKind::Validate);
+        assert_eq!(p.jobs[3].deps, vec![p.jobs[0].id]);
+        assert_eq!(p.jobs[4].deps, vec![p.jobs[1].id]);
+        assert_eq!(p.live_ids().len(), 5, "ids are distinct");
+        assert_eq!(p.jobs[0].label, "sweep:tiny-mha-prefill64");
+        assert_eq!(p.jobs[2].label, "optimize:unit");
+        // Every dep appears earlier than its dependent.
+        for (i, j) in p.jobs.iter().enumerate() {
+            for d in &j.deps {
+                assert!(p.jobs[..i].iter().any(|e| e.id == *d), "{} dep order", j.label);
+            }
+        }
+    }
+
+    #[test]
+    fn ids_are_stable_and_input_sensitive() {
+        let a = plan_of(TEXT);
+        let b = plan_of(TEXT);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.id, y.id, "{} replan-stable", x.label);
+        }
+        // Grid edit: embedded in the spec hash, so EVERY job re-keys.
+        let regrid = plan_of(&TEXT.replace("\"4MiB\"", "\"8MiB\""));
+        for (x, y) in a.jobs.iter().zip(&regrid.jobs) {
+            assert_ne!(x.id, y.id, "{} re-keys on grid edit", x.label);
+        }
+        // ε edit: sweeps keep their ids (and artifacts); optimize and
+        // validates re-key — the "re-run only invalidated downstream
+        // stages" rule.
+        let reps = plan_of(&format!("{TEXT}\n")
+            .replace("name = \"unit\"", "name = \"unit\"\nepsilon = 0.5"));
+        assert_eq!(a.jobs[0].id, reps.jobs[0].id);
+        assert_eq!(a.jobs[1].id, reps.jobs[1].id);
+        assert_ne!(a.jobs[2].id, reps.jobs[2].id);
+        assert_ne!(a.jobs[3].id, reps.jobs[3].id);
+    }
+
+    #[test]
+    fn validate_off_drops_stage3_jobs() {
+        let p = plan_of(&TEXT.replace(
+            "accel = \"tiny\"",
+            "accel = \"tiny\"\nvalidate = false",
+        ));
+        assert_eq!(p.jobs.len(), 3);
+        assert!(p.jobs.iter().all(|j| j.kind != JobKind::Validate));
+    }
+
+    #[test]
+    fn job_lookup() {
+        let p = plan_of(TEXT);
+        let id = p.jobs[2].id;
+        assert_eq!(p.job(id).unwrap().label, "optimize:unit");
+        assert!(p.job(0xffff_ffff_ffff_ffff).is_none());
+    }
+}

@@ -1,0 +1,539 @@
+//! Content-addressed artifact store: one directory per job under the
+//! lab root (default `./result/`), named by the 16-hex-digit FNV job id
+//! ([`crate::lab::planner`]).
+//!
+//! Layout of a finished job directory:
+//!
+//! ```text
+//! result/<16-hex job id>/
+//!   manifest.json   # schema version, kind, label, deps, spec provenance
+//!   <artifacts>     # sweep.json / sweep.txt / pareto.csv / ...
+//!   COMPLETE        # completion marker, written LAST
+//! ```
+//!
+//! Crash safety rests on two rules: every file lands via
+//! write-to-temp-then-rename, and the `COMPLETE` marker is the final
+//! write of a job. A directory without the marker is an interrupted
+//! job; [`Store::begin`] wipes it so the executor regenerates it from
+//! scratch (regeneration is bit-deterministic, so a resumed run ends
+//! byte-identical to an uninterrupted one — the CI lab gate `diff -r`s
+//! exactly this).
+//!
+//! Artifacts must round-trip **bit-exact**: [`crate::util::json::Json`]
+//! numbers are f64, which cannot carry a full u64 or guarantee float
+//! round-tripping through decimal text, so every u64 and every f64 (as
+//! its IEEE-754 bit pattern) is persisted as a 16-hex-digit string.
+//! Artifacts never contain absolute paths, so two store trees built
+//! from the same manifest compare equal with `diff -r`.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::banking::optimize::WorkloadSweep;
+use crate::banking::{BankingEval, GatingPolicy, SweepPoint};
+use crate::cacti::SramCharacterization;
+use crate::util::json::{self, Json};
+
+/// Version of the per-job `manifest.json` and artifact JSON schemas.
+/// Bump on any incompatible layout change; readers reject mismatches
+/// instead of misparsing old trees.
+pub const LAB_SCHEMA_VERSION: u64 = 1;
+
+const MANIFEST_FILE: &str = "manifest.json";
+const COMPLETE_MARKER: &str = "COMPLETE";
+
+/// Canonical 16-hex-digit rendering of a job id / u64 value.
+pub fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Inverse of [`hex`]: exactly 16 lowercase hex digits.
+pub fn parse_hex(s: &str) -> Result<u64> {
+    ensure!(
+        s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit()),
+        "`{s}` is not a 16-hex-digit id"
+    );
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex `{s}`: {e}"))
+}
+
+fn hex_json(v: u64) -> Json {
+    Json::str(hex(v))
+}
+
+fn bits_json(v: f64) -> Json {
+    hex_json(v.to_bits())
+}
+
+fn get_hex(obj: &Json, key: &str) -> Result<u64> {
+    let s = obj
+        .expect(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("`{key}`: expected a hex string"))?;
+    parse_hex(s).with_context(|| format!("field `{key}`"))
+}
+
+fn get_bits(obj: &Json, key: &str) -> Result<f64> {
+    Ok(f64::from_bits(get_hex(obj, key)?))
+}
+
+fn get_u32(obj: &Json, key: &str) -> Result<u32> {
+    let v = obj
+        .expect(key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("`{key}`: expected an unsigned integer"))?;
+    u32::try_from(v).with_context(|| format!("field `{key}` out of u32 range"))
+}
+
+/// One content-addressed artifact tree rooted at a lab directory.
+#[derive(Debug, Clone)]
+pub struct Store {
+    root: PathBuf,
+}
+
+impl Store {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Store { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn job_dir(&self, id: u64) -> PathBuf {
+        self.root.join(hex(id))
+    }
+
+    pub fn artifact_path(&self, id: u64, name: &str) -> PathBuf {
+        self.job_dir(id).join(name)
+    }
+
+    /// A job is complete iff both its manifest and the `COMPLETE`
+    /// marker exist — the marker is written last, so this is the
+    /// crash-safe "artifacts are trustworthy" predicate.
+    pub fn is_complete(&self, id: u64) -> bool {
+        let dir = self.job_dir(id);
+        dir.join(COMPLETE_MARKER).is_file() && dir.join(MANIFEST_FILE).is_file()
+    }
+
+    /// Start (or restart) a job: wipe any interrupted remains of its
+    /// directory and create it fresh. Callers must only `begin` jobs
+    /// that are not [`Store::is_complete`].
+    pub fn begin(&self, id: u64) -> Result<()> {
+        let dir = self.job_dir(id);
+        if dir.exists() {
+            fs::remove_dir_all(&dir)
+                .with_context(|| format!("wiping interrupted job {}", dir.display()))?;
+        }
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating job dir {}", dir.display()))?;
+        Ok(())
+    }
+
+    /// Write one artifact atomically (temp file + rename).
+    pub fn write_artifact(&self, id: u64, name: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.artifact_path(id, name);
+        let tmp = self.artifact_path(id, &format!(".tmp.{name}"));
+        fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn read_artifact(&self, id: u64, name: &str) -> Result<Vec<u8>> {
+        let path = self.artifact_path(id, name);
+        fs::read(&path).with_context(|| format!("reading {}", path.display()))
+    }
+
+    /// Finalize a job: persist its manifest, then — last — the
+    /// `COMPLETE` marker. Everything before the marker write is
+    /// recoverable; after it the job is immutable cache.
+    pub fn finish(&self, id: u64, manifest: &Json) -> Result<()> {
+        self.write_artifact(id, MANIFEST_FILE, manifest.to_string_pretty().as_bytes())?;
+        self.write_artifact(id, COMPLETE_MARKER, b"")
+    }
+
+    /// Parsed manifest of a finished job, schema-checked.
+    pub fn manifest(&self, id: u64) -> Result<Json> {
+        let bytes = self.read_artifact(id, MANIFEST_FILE)?;
+        let text = String::from_utf8(bytes).context("manifest.json is not UTF-8")?;
+        let m = json::parse(&text)?;
+        let schema = m
+            .expect("schema")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("manifest `schema` is not an integer"))?;
+        ensure!(
+            schema == LAB_SCHEMA_VERSION,
+            "job {} has manifest schema {schema}, this build reads {LAB_SCHEMA_VERSION}",
+            hex(id)
+        );
+        Ok(m)
+    }
+
+    /// All job ids present in the store (complete or not), sorted.
+    /// A missing root is an empty store, not an error.
+    pub fn jobs(&self) -> Result<Vec<u64>> {
+        let entries = match fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e).with_context(|| format!("listing {}", self.root.display()))
+            }
+        };
+        let mut ids = Vec::new();
+        for entry in entries {
+            let entry = entry?;
+            if !entry.file_type()?.is_dir() {
+                continue;
+            }
+            if let Some(name) = entry.file_name().to_str() {
+                if let Ok(id) = parse_hex(name) {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    /// Remove every job directory NOT in `live` (the ids a manifest's
+    /// plan can reach — [`crate::lab::planner::Plan::live_ids`]).
+    /// Returns the ids removed. Never touches live jobs, complete or
+    /// not, and never touches non-id entries under the root.
+    pub fn gc(&self, live: &BTreeSet<u64>) -> Result<Vec<u64>> {
+        let mut removed = Vec::new();
+        for id in self.jobs()? {
+            if live.contains(&id) {
+                continue;
+            }
+            fs::remove_dir_all(self.job_dir(id))
+                .with_context(|| format!("gc removing job {}", hex(id)))?;
+            removed.push(id);
+        }
+        Ok(removed)
+    }
+}
+
+// --- WorkloadSweep artifact codec (sweep.json) ------------------------
+
+fn policy_to_json(p: &GatingPolicy) -> Json {
+    let (kind, param) = match *p {
+        GatingPolicy::None => ("none", None),
+        GatingPolicy::Aggressive => ("aggressive", None),
+        GatingPolicy::Conservative { min_idle_factor } => {
+            ("conservative", Some(min_idle_factor))
+        }
+        GatingPolicy::Drowsy { retention_factor } => ("drowsy", Some(retention_factor)),
+    };
+    let mut fields = vec![("kind", Json::str(kind))];
+    if let Some(v) = param {
+        fields.push(("param", bits_json(v)));
+    }
+    Json::obj(fields)
+}
+
+fn policy_from_json(j: &Json) -> Result<GatingPolicy> {
+    let kind = j
+        .expect("kind")?
+        .as_str()
+        .ok_or_else(|| anyhow!("policy `kind` is not a string"))?;
+    Ok(match kind {
+        "none" => GatingPolicy::None,
+        "aggressive" => GatingPolicy::Aggressive,
+        "conservative" => GatingPolicy::Conservative {
+            min_idle_factor: get_bits(j, "param")?,
+        },
+        "drowsy" => GatingPolicy::Drowsy {
+            retention_factor: get_bits(j, "param")?,
+        },
+        other => bail!("unknown persisted policy kind `{other}`"),
+    })
+}
+
+fn characterization_to_json(ch: &SramCharacterization) -> Json {
+    Json::obj(vec![
+        ("capacity", hex_json(ch.capacity)),
+        ("banks", Json::num(ch.banks)),
+        ("e_read_j", bits_json(ch.e_read_j)),
+        ("e_write_j", bits_json(ch.e_write_j)),
+        ("p_leak_bank_w", bits_json(ch.p_leak_bank_w)),
+        ("e_switch_j", bits_json(ch.e_switch_j)),
+        ("wake_cycles", hex_json(ch.wake_cycles)),
+        ("area_mm2", bits_json(ch.area_mm2)),
+        ("latency_cycles", hex_json(ch.latency_cycles)),
+    ])
+}
+
+fn characterization_from_json(j: &Json) -> Result<SramCharacterization> {
+    Ok(SramCharacterization {
+        capacity: get_hex(j, "capacity")?,
+        banks: get_u32(j, "banks")?,
+        e_read_j: get_bits(j, "e_read_j")?,
+        e_write_j: get_bits(j, "e_write_j")?,
+        p_leak_bank_w: get_bits(j, "p_leak_bank_w")?,
+        e_switch_j: get_bits(j, "e_switch_j")?,
+        wake_cycles: get_hex(j, "wake_cycles")?,
+        area_mm2: get_bits(j, "area_mm2")?,
+        latency_cycles: get_hex(j, "latency_cycles")?,
+    })
+}
+
+fn point_to_json(p: &SweepPoint) -> Json {
+    let e = &p.eval;
+    Json::obj(vec![
+        ("capacity", hex_json(e.capacity)),
+        ("banks", Json::num(e.banks)),
+        ("alpha", bits_json(e.alpha)),
+        ("policy", policy_to_json(&e.policy)),
+        ("e_dyn_j", bits_json(e.e_dyn_j)),
+        ("e_leak_j", bits_json(e.e_leak_j)),
+        ("e_sw_j", bits_json(e.e_sw_j)),
+        ("n_switch", hex_json(e.n_switch)),
+        ("avg_active_banks", bits_json(e.avg_active_banks)),
+        ("gated_fraction", bits_json(e.gated_fraction)),
+        ("area_mm2", bits_json(e.area_mm2)),
+        ("latency_cycles", hex_json(e.latency_cycles)),
+        ("characterization", characterization_to_json(&e.characterization)),
+        ("base_e_j", bits_json(p.base_e_j)),
+        ("base_area_mm2", bits_json(p.base_area_mm2)),
+    ])
+}
+
+fn point_from_json(j: &Json) -> Result<SweepPoint> {
+    Ok(SweepPoint {
+        eval: BankingEval {
+            capacity: get_hex(j, "capacity")?,
+            banks: get_u32(j, "banks")?,
+            alpha: get_bits(j, "alpha")?,
+            policy: policy_from_json(j.expect("policy")?)?,
+            e_dyn_j: get_bits(j, "e_dyn_j")?,
+            e_leak_j: get_bits(j, "e_leak_j")?,
+            e_sw_j: get_bits(j, "e_sw_j")?,
+            n_switch: get_hex(j, "n_switch")?,
+            avg_active_banks: get_bits(j, "avg_active_banks")?,
+            gated_fraction: get_bits(j, "gated_fraction")?,
+            area_mm2: get_bits(j, "area_mm2")?,
+            latency_cycles: get_hex(j, "latency_cycles")?,
+            characterization: characterization_from_json(j.expect("characterization")?)?,
+        },
+        base_e_j: get_bits(j, "base_e_j")?,
+        base_area_mm2: get_bits(j, "base_area_mm2")?,
+    })
+}
+
+/// Persist a Stage-II sweep bit-exactly (every float as its bit
+/// pattern, every u64 as hex) so downstream optimize/validate jobs can
+/// reload it and reproduce the exact in-memory results.
+pub fn sweep_to_json(w: &WorkloadSweep) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(LAB_SCHEMA_VERSION as u32)),
+        ("name", Json::str(w.name.clone())),
+        ("end_cycles", hex_json(w.end_cycles)),
+        ("points", Json::arr(w.points.iter().map(point_to_json))),
+    ])
+}
+
+/// Inverse of [`sweep_to_json`], schema-checked.
+pub fn sweep_from_json(j: &Json) -> Result<WorkloadSweep> {
+    let schema = j
+        .expect("schema")?
+        .as_u64()
+        .ok_or_else(|| anyhow!("sweep `schema` is not an integer"))?;
+    ensure!(
+        schema == LAB_SCHEMA_VERSION,
+        "sweep artifact has schema {schema}, this build reads {LAB_SCHEMA_VERSION}"
+    );
+    let name = j
+        .expect("name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("sweep `name` is not a string"))?
+        .to_string();
+    let end_cycles = get_hex(j, "end_cycles")?;
+    let points = j
+        .expect("points")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("sweep `points` is not an array"))?
+        .iter()
+        .map(point_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(WorkloadSweep {
+        name,
+        end_cycles,
+        points,
+    })
+}
+
+/// Persist a [`crate::api::BatchRunner`] batch into the store: one job
+/// per unique spec, keyed directly by the spec content hash (batch jobs
+/// are flat — no planner dependencies). Jobs already complete are
+/// skipped, so repeated batches are pure cache hits. Returns the ids
+/// newly written.
+pub fn persist_batch(store: &Store, results: &[crate::api::BatchResult]) -> Result<Vec<u64>> {
+    let mut written = Vec::new();
+    for r in results {
+        if store.is_complete(r.hash) || written.contains(&r.hash) {
+            continue;
+        }
+        store.begin(r.hash)?;
+        store.write_artifact(r.hash, "report.txt", r.report().as_bytes())?;
+        let manifest = Json::obj(vec![
+            ("schema", Json::num(LAB_SCHEMA_VERSION as u32)),
+            ("kind", Json::str("batch")),
+            ("label", Json::str(format!("batch:{}", hex(r.hash)))),
+            ("job", hex_json(r.hash)),
+            ("deps", Json::arr(Vec::new())),
+            ("spec", r.spec.manifest_json()),
+            ("artifacts", Json::arr([Json::str("report.txt")])),
+        ]);
+        store.finish(r.hash, &manifest)?;
+        written.push(r.hash);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> Store {
+        let root = std::env::temp_dir()
+            .join(format!("trapti-lab-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        Store::new(root)
+    }
+
+    fn sample_point(seed: f64) -> SweepPoint {
+        // Deliberately awkward floats: codec must round-trip exact bits,
+        // not pretty decimals.
+        let ch = SramCharacterization {
+            capacity: u64::MAX - 3,
+            banks: 8,
+            e_read_j: 1.0e-12 * seed,
+            e_write_j: 1.3e-12 * seed,
+            p_leak_bank_w: 0.1 / seed,
+            e_switch_j: 2.0e-9,
+            wake_cycles: 12,
+            area_mm2: 3.07,
+            latency_cycles: 2,
+        };
+        SweepPoint {
+            eval: BankingEval {
+                capacity: (1 << 62) + 1,
+                banks: 8,
+                alpha: 0.9,
+                policy: GatingPolicy::Conservative {
+                    min_idle_factor: 4.0 + seed / 3.0,
+                },
+                e_dyn_j: 0.1 + seed,
+                e_leak_j: std::f64::consts::PI,
+                e_sw_j: 1.0 / 3.0,
+                n_switch: 9_007_199_254_740_993, // 2^53 + 1: breaks f64 JSON
+                avg_active_banks: 5.25,
+                gated_fraction: 0.333_333_333_333_333_3,
+                area_mm2: 4.2,
+                latency_cycles: 3,
+                characterization: ch,
+            },
+            base_e_j: 2.5 * seed,
+            base_area_mm2: 3.9,
+        }
+    }
+
+    #[test]
+    fn sweep_codec_round_trips_bit_exact() {
+        let w = WorkloadSweep {
+            name: "tiny-gqa-decode16+8".into(),
+            end_cycles: u64::MAX / 7,
+            points: vec![sample_point(1.0), sample_point(2.0)],
+        };
+        let text = sweep_to_json(&w).to_string_pretty();
+        let back = sweep_from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, w.name);
+        assert_eq!(back.end_cycles, w.end_cycles);
+        assert_eq!(back.points.len(), w.points.len());
+        for (a, b) in back.points.iter().zip(&w.points) {
+            assert_eq!(a.eval.capacity, b.eval.capacity);
+            assert_eq!(a.eval.n_switch, b.eval.n_switch);
+            assert_eq!(a.eval.alpha.to_bits(), b.eval.alpha.to_bits());
+            assert_eq!(a.eval.e_leak_j.to_bits(), b.eval.e_leak_j.to_bits());
+            assert_eq!(a.eval.policy, b.eval.policy);
+            assert_eq!(
+                a.eval.characterization.e_read_j.to_bits(),
+                b.eval.characterization.e_read_j.to_bits()
+            );
+            assert_eq!(a.base_e_j.to_bits(), b.base_e_j.to_bits());
+            assert_eq!(
+                a.eval.e_total_j().to_bits(),
+                b.eval.e_total_j().to_bits()
+            );
+        }
+        // And the serialized form itself is stable (BTreeMap ordering).
+        assert_eq!(sweep_to_json(&back).to_string_pretty(), text);
+    }
+
+    #[test]
+    fn marker_semantics_and_begin_wipe() {
+        let store = tmp_store("marker");
+        let id = 0xdead_beef_0000_0001;
+        assert!(!store.is_complete(id));
+        store.begin(id).unwrap();
+        store.write_artifact(id, "a.txt", b"hello").unwrap();
+        // No marker yet: the job is interrupted, not complete.
+        assert!(!store.is_complete(id));
+        // begin() wipes interrupted remains.
+        store.begin(id).unwrap();
+        assert!(!store.artifact_path(id, "a.txt").exists());
+        store.write_artifact(id, "a.txt", b"hello").unwrap();
+        store
+            .finish(id, &Json::obj(vec![("schema", Json::num(1u32))]))
+            .unwrap();
+        assert!(store.is_complete(id));
+        assert_eq!(store.read_artifact(id, "a.txt").unwrap(), b"hello");
+        let m = store.manifest(id).unwrap();
+        assert_eq!(m.expect("schema").unwrap().as_u64(), Some(1));
+        let _ = fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn jobs_listing_and_gc_preserve_live() {
+        let store = tmp_store("gc");
+        assert!(store.jobs().unwrap().is_empty(), "missing root is empty");
+        for id in [3u64, 1, 2] {
+            store.begin(id).unwrap();
+            store
+                .finish(id, &Json::obj(vec![("schema", Json::num(1u32))]))
+                .unwrap();
+        }
+        // Non-id entries under the root are ignored and never touched.
+        fs::write(store.root().join("README"), b"not a job").unwrap();
+        assert_eq!(store.jobs().unwrap(), vec![1, 2, 3]);
+        let live: BTreeSet<u64> = [1u64, 3].into_iter().collect();
+        let removed = store.gc(&live).unwrap();
+        assert_eq!(removed, vec![2]);
+        assert_eq!(store.jobs().unwrap(), vec![1, 3]);
+        assert!(store.is_complete(1) && store.is_complete(3));
+        assert!(store.root().join("README").is_file());
+        let _ = fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn hex_round_trip_and_rejects() {
+        assert_eq!(hex(0), "0000000000000000");
+        assert_eq!(parse_hex(&hex(u64::MAX)).unwrap(), u64::MAX);
+        assert!(parse_hex("abc").is_err(), "too short");
+        assert!(parse_hex("zzzzzzzzzzzzzzzz").is_err(), "not hex");
+    }
+
+    #[test]
+    fn schema_mismatch_is_rejected() {
+        let bad = Json::obj(vec![("schema", Json::num(99u32))]);
+        assert!(sweep_from_json(&bad).is_err());
+        let store = tmp_store("schema");
+        store.begin(7).unwrap();
+        store.finish(7, &bad).unwrap();
+        assert!(store.manifest(7).is_err());
+        let _ = fs::remove_dir_all(store.root());
+    }
+}

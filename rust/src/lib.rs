@@ -72,6 +72,11 @@
 //! }
 //! ```
 //!
+//! For many specs across many grids, [`lab`] is the experiment
+//! manager: a declarative TOML manifest expands into a DAG of
+//! Stage I/II/III jobs executed in parallel into a content-addressed,
+//! crash-resumable artifact store (`repro lab run|list|gc|trace-params`).
+//!
 //! Other entry points: the `repro` binary (CLI — see `docs/API.md`),
 //! `examples/` (`cargo run --release --example quickstart`), and the
 //! paper benches (`cargo bench`). [`coordinator::Coordinator`] remains
@@ -84,6 +89,7 @@ pub mod cacti;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod lab;
 pub mod memory;
 pub mod report;
 pub mod runtime;

@@ -113,6 +113,7 @@ fn run(raw: &[String]) -> Result<()> {
         "bank" => bank_cmd(&args),
         "optimize" => optimize_cmd(&args),
         "replay" => replay_cmd(&args),
+        "lab" => lab_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
         "ablate" => ablate(),
@@ -181,6 +182,22 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --wake N [override wake latency, cycles]
                             --timeline-csv FILE [per-bank state spans]
                             --report-out FILE [deterministic report])
+  repro lab                content-addressed experiment lab: expand a
+                           TOML manifest (models x workloads x grid x
+                           constraints) into a Stage I/II/III job DAG
+                           and execute it in parallel into a resumable
+                           artifact store (complete jobs are skipped;
+                           a killed run resumes where it stopped)
+                             lab run --manifest FILE|@paper|
+                                     @paired-prefill|@tiny
+                                     --lab DIR [store root, default
+                                     ./result] --jobs N [default: all
+                                     cores] --continue-on-failure 1
+                             lab list [--manifest F]   job/store status
+                             lab gc --manifest F[,F..] remove jobs no
+                                     listed manifest can reach
+                             lab trace-params JOB_ID   print a job's
+                                     provenance manifest
   repro e2e                functional PJRT decode (--model, --steps)
   repro baseline-compare   TRAPTI vs aggregate-statistics DSE
   repro ablate             gating-policy sensitivity study (the paper's
@@ -424,6 +441,18 @@ fn batch_cmd(args: &Args) -> Result<()> {
             best,
         );
     }
+    // --lab DIR: persist every result into the content-addressed lab
+    // store, so batch output survives the process and later `repro lab
+    // list` / `trace-params` can inspect it.
+    if let Some(dir) = args.flag("lab") {
+        let store = trapti::lab::Store::new(dir);
+        let ids = trapti::lab::store::persist_batch(&store, &results)?;
+        println!(
+            "persisted {} new result(s) under {}/",
+            ids.len(),
+            store.root().display()
+        );
+    }
     Ok(())
 }
 
@@ -611,6 +640,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some(path) = args.flag("sweep-out") {
         std::fs::write(path, &table).with_context(|| format!("writing {path}"))?;
         println!("sweep table saved to {path}");
+        eprintln!("note: --sweep-out is superseded by `repro lab run` (sweep.txt per job)");
     }
 
     if let Some(path) = args.flag("trace-csv") {
@@ -689,42 +719,11 @@ fn bank_cmd(args: &Args) -> Result<()> {
 }
 
 /// Parse one `MODEL:prefill:SEQ` / `MODEL:decode:PROMPT:GEN` /
-/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED` workload descriptor.
+/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED` workload descriptor — the
+/// grammar lives in `trapti::lab::manifest` so the CLI and lab
+/// manifests can never fork.
 fn parse_workload_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpec> {
-    let parts: Vec<&str> = desc.split(':').collect();
-    let model_of = |name: &str| {
-        preset(name).ok_or_else(|| anyhow!("unknown model `{name}` in `{desc}`"))
-    };
-    let (model, workload) = match parts.as_slice() {
-        [m, "prefill", seq] => (
-            model_of(m)?,
-            Workload::Prefill { seq: seq.parse()? },
-        ),
-        [m, "decode", prompt, gen] => (
-            model_of(m)?,
-            Workload::Decode {
-                prompt: prompt.parse()?,
-                gen: gen.parse()?,
-            },
-        ),
-        [m, "serve", requests, concurrency, seed] => (
-            model_of(m)?,
-            Workload::Serving(trapti::serving::ServingParams::new(
-                requests.parse()?,
-                concurrency.parse()?,
-                seed.parse()?,
-            )),
-        ),
-        _ => bail!(
-            "workload descriptor `{desc}` wants MODEL:prefill:SEQ | \
-             MODEL:decode:PROMPT:GEN | MODEL:serve:REQS:CONC:SEED"
-        ),
-    };
-    ExperimentSpec::builder()
-        .model(model)
-        .workload(workload)
-        .accel(accel.clone())
-        .build()
+    trapti::lab::manifest::parse_descriptor(desc, accel)
 }
 
 /// Explicit optimizer grid from `--capacities`/`--banks`/`--alpha`
@@ -862,28 +861,170 @@ fn optimize_cmd(args: &Args) -> Result<()> {
     }
     print!("{report}");
 
+    // Deprecated in favour of the lab store: `repro lab run` persists
+    // the same portfolio.txt / pareto.csv content-addressed and
+    // resumable. Kept for one-off runs.
     if let Some(path) = args.flag("report-out") {
         std::fs::write(path, &report).with_context(|| format!("writing {path}"))?;
         println!("report saved to {path}");
+        eprintln!("note: --report-out is superseded by `repro lab run` (portfolio.txt)");
     }
     if let Some(path) = args.flag("pareto-csv") {
         std::fs::write(path, tables::pareto_csv(r))
             .with_context(|| format!("writing {path}"))?;
         println!("Pareto CSV saved to {path}");
+        eprintln!("note: --pareto-csv is superseded by `repro lab run` (pareto.csv)");
     }
     Ok(())
 }
 
-fn parse_policy(name: &str) -> Result<GatingPolicy> {
-    match name {
-        "none" | "no-gating" => Ok(GatingPolicy::None),
-        "aggressive" => Ok(GatingPolicy::Aggressive),
-        "conservative" => Ok(GatingPolicy::conservative()),
-        "drowsy" => Ok(GatingPolicy::drowsy()),
-        other => bail!(
-            "unknown policy `{other}` (want none|aggressive|conservative|drowsy)"
-        ),
+/// `repro lab run|list|gc|trace-params` — the content-addressed
+/// experiment lab (`trapti::lab`). A manifest argument is either a
+/// TOML path or a built-in `@name` (see `api::experiments::lab_manifest`).
+fn lab_cmd(args: &Args) -> Result<()> {
+    use trapti::lab::store::{hex, parse_hex};
+    use trapti::lab::{execute, ExecOptions, JobKind, LabManifest, Plan, Store};
+
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("run");
+    let store = Store::new(args.flag_or("lab", "result"));
+    // `--manifest` accepts a comma-separated list for `gc`, so liveness
+    // can span several campaigns sharing one store.
+    let plans = |required: bool| -> Result<Vec<Plan>> {
+        match args.flag("manifest") {
+            None if required => bail!("lab {sub} needs --manifest FILE|@name"),
+            None => Ok(Vec::new()),
+            Some(list) => list
+                .split(',')
+                .map(|s| Ok(Plan::of(LabManifest::resolve(s.trim())?)))
+                .collect(),
+        }
+    };
+    match sub {
+        "run" => {
+            let plan = Plan::of(LabManifest::resolve(&args.flag_or("manifest", "@tiny"))?);
+            let jobs = match args.flag("jobs") {
+                Some(v) => v.parse::<usize>().context("--jobs")?,
+                None => std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            };
+            let continue_on_failure = match args.flag_or("continue-on-failure", "0").as_str() {
+                "1" | "true" | "yes" | "on" => true,
+                "0" | "false" | "no" | "off" => false,
+                other => bail!("--continue-on-failure wants 0/1 (got `{other}`)"),
+            };
+            let opts = ExecOptions {
+                jobs,
+                continue_on_failure,
+                progress: true,
+            };
+            let ctx = ApiContext::new();
+            let t0 = std::time::Instant::now();
+            let summary = execute(&ctx, &store, &plan, &opts)?;
+            println!(
+                "lab `{}`: executed {}, skipped {} (cache hits), failed {} \
+                 in {:.1} s wall",
+                plan.manifest.name,
+                summary.executed.len(),
+                summary.skipped.len(),
+                summary.failed.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            for (id, why) in &summary.failed {
+                let label = plan.job(*id).map(|j| j.label.as_str()).unwrap_or("?");
+                eprintln!("  FAILED {label} ({}): {why}", hex(*id));
+            }
+            if !summary.ok() {
+                bail!("lab run finished with {} failed job(s)", summary.failed.len());
+            }
+            if let Some(opt) = plan.jobs.iter().find(|j| j.kind == JobKind::Optimize) {
+                let bytes = store.read_artifact(opt.id, "portfolio.txt")?;
+                print!("\n{}", String::from_utf8_lossy(&bytes));
+            }
+            println!("artifacts under {}/", store.root().display());
+            Ok(())
+        }
+        "list" => {
+            let planned = plans(false)?;
+            if planned.is_empty() {
+                // No manifest: list whatever the store holds.
+                let ids = store.jobs()?;
+                if ids.is_empty() {
+                    println!("no jobs under {}/", store.root().display());
+                    return Ok(());
+                }
+                println!("{:<16} {:>10} {}", "job", "kind", "label [lab]");
+                for id in ids {
+                    match store.manifest(id) {
+                        Ok(m) => {
+                            let s = |key: &str| -> String {
+                                m.expect(key)
+                                    .ok()
+                                    .and_then(|v| v.as_str())
+                                    .unwrap_or("?")
+                                    .to_string()
+                            };
+                            println!(
+                                "{} {:>10} {} [{}]",
+                                hex(id),
+                                s("kind"),
+                                s("label"),
+                                s("lab")
+                            );
+                        }
+                        Err(_) => println!("{} {:>10} (incomplete)", hex(id), "-"),
+                    }
+                }
+                return Ok(());
+            }
+            for plan in &planned {
+                println!(
+                    "lab `{}`: {} job(s) against {}/",
+                    plan.manifest.name,
+                    plan.jobs.len(),
+                    store.root().display()
+                );
+                println!("{:<16} {:>8} {}", "job", "status", "label");
+                for j in &plan.jobs {
+                    let status = if store.is_complete(j.id) { "done" } else { "pending" };
+                    println!("{} {:>8} {}", hex(j.id), status, j.label);
+                }
+            }
+            Ok(())
+        }
+        "gc" => {
+            let planned = plans(true)?;
+            let mut live = std::collections::BTreeSet::new();
+            for plan in &planned {
+                live.extend(plan.live_ids());
+            }
+            let removed = store.gc(&live)?;
+            println!(
+                "gc: removed {} job(s), kept {} live under {}/",
+                removed.len(),
+                live.len(),
+                store.root().display()
+            );
+            for id in removed {
+                println!("  removed {}", hex(id));
+            }
+            Ok(())
+        }
+        "trace-params" => {
+            let id = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow!("lab trace-params needs a 16-hex JOB_ID"))?;
+            let id = parse_hex(id)?;
+            println!("{}", store.manifest(id)?.to_string_pretty());
+            Ok(())
+        }
+        other => bail!("unknown lab subcommand `{other}` (run|list|gc|trace-params)"),
     }
+}
+
+fn parse_policy(name: &str) -> Result<GatingPolicy> {
+    trapti::lab::manifest::parse_policy_name(name)
 }
 
 /// Deterministic Stage-III replay report (stable field order and float

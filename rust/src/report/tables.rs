@@ -7,7 +7,7 @@ use std::fmt::Write as _;
 use crate::api::experiments::{Sizing, Table2, Table3};
 use crate::api::OnlineValidation;
 use crate::banking::online::{BankState, OnlineReport};
-use crate::banking::optimize::{OptimizeResult, WorkloadFrontier};
+use crate::banking::optimize::{OptimizeResult, WorkloadFrontier, WorkloadSweep};
 use crate::banking::SweepPoint;
 use crate::util::table::{fmt_delta_pct, Table};
 use crate::util::MIB;
@@ -148,6 +148,40 @@ pub fn sizing_table(s: &Sizing) -> Table {
         format!("{:+.2} ms vs 128 MiB", s.gqa_64mib_delta_s * 1e3),
         "paper: -1.48 ms (22 ns SRAM)".into(),
     ]);
+    t
+}
+
+/// Full Stage-II sweep of one workload, one row per evaluated
+/// (C, B, alpha, policy) cell — the human-readable twin of the lab
+/// store's bit-exact `sweep.json` artifact. Deterministic field order
+/// and float precision, like every renderer here.
+pub fn sweep_table(w: &WorkloadSweep) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Stage-II sweep — {} ({} points over {} cycles)",
+            w.name,
+            w.points.len(),
+            w.end_cycles
+        ),
+        &[
+            "C [MiB]", "B", "alpha", "policy", "E [J]", "dE%", "avgBact",
+            "gated%", "A [mm2]", "dA%",
+        ],
+    );
+    for p in &w.points {
+        t.row(vec![
+            (p.eval.capacity / MIB).to_string(),
+            p.eval.banks.to_string(),
+            format!("{:.2}", p.eval.alpha),
+            p.eval.policy.label().to_string(),
+            format!("{:.3}", p.eval.e_total_j()),
+            fmt_delta_pct(p.eval.e_total_j(), p.base_e_j),
+            format!("{:.2}", p.eval.avg_active_banks),
+            format!("{:.1}", p.eval.gated_fraction * 100.0),
+            format!("{:.1}", p.eval.area_mm2),
+            fmt_delta_pct(p.eval.area_mm2, p.base_area_mm2),
+        ]);
+    }
     t
 }
 

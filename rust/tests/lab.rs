@@ -1,0 +1,165 @@
+//! Lab semantics (ISSUE 6 satellite): resume is byte-identical, a
+//! second run is a pure cache hit, and gc never deletes live artifacts.
+//!
+//! These mirror the CI determinism/resume gate but run in-process so
+//! `cargo test` catches a regression without the workflow.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use trapti::api::ApiContext;
+use trapti::lab::{execute, ExecOptions, JobKind, LabManifest, Plan, Store};
+
+const MANIFEST: &str = r#"
+[lab]
+name = "lab-test"
+accel = "tiny"
+workloads = ["tiny-mha:prefill:64", "tiny-gqa:decode:16:8", "tiny-gqa:serve:8:2:7"]
+validate = true
+
+[grid]
+capacities = ["2MiB", "4MiB"]
+banks = [1, 2, 4, 8]
+alphas = [0.9]
+policies = ["aggressive", "drowsy"]
+"#;
+
+fn tmp_store(tag: &str) -> Store {
+    let root = std::env::temp_dir().join(format!(
+        "trapti-lab-it-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&root);
+    Store::new(root)
+}
+
+fn plan() -> Plan {
+    Plan::of(LabManifest::parse(MANIFEST).unwrap())
+}
+
+/// Every file under `root` as relative-path -> bytes, so two store
+/// trees compare exactly (the in-process `diff -r`).
+fn tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(&path, root, out);
+            } else {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+fn assert_trees_equal(a: &BTreeMap<String, Vec<u8>>, b: &BTreeMap<String, Vec<u8>>) {
+    let ka: Vec<&String> = a.keys().collect();
+    let kb: Vec<&String> = b.keys().collect();
+    assert_eq!(ka, kb, "store trees hold different files");
+    for (name, bytes) in a {
+        assert_eq!(bytes, &b[name], "{name} differs between trees");
+    }
+}
+
+#[test]
+fn parallel_run_matches_sequential_and_second_run_is_free() {
+    let ctx = ApiContext::new();
+    let p = plan();
+
+    let seq = tmp_store("seq");
+    let s = execute(&ctx, &seq, &p, &ExecOptions::default()).unwrap();
+    assert!(s.ok(), "{:?}", s.failed);
+    assert_eq!(s.executed.len(), p.jobs.len());
+
+    let par = tmp_store("par");
+    let opts = ExecOptions {
+        jobs: 4,
+        ..Default::default()
+    };
+    let r = execute(&ctx, &par, &p, &opts).unwrap();
+    assert!(r.ok(), "{:?}", r.failed);
+    assert_trees_equal(&tree(seq.root()), &tree(par.root()));
+
+    // Second pass over a complete store executes nothing.
+    let again = execute(&ctx, &par, &p, &opts).unwrap();
+    assert!(again.executed.is_empty(), "second run must be pure cache hits");
+    assert_eq!(again.skipped.len(), p.jobs.len());
+    assert_trees_equal(&tree(seq.root()), &tree(par.root()));
+
+    let _ = std::fs::remove_dir_all(seq.root());
+    let _ = std::fs::remove_dir_all(par.root());
+}
+
+#[test]
+fn interrupted_run_resumes_to_identical_bytes() {
+    let ctx = ApiContext::new();
+    let p = plan();
+    let store = tmp_store("resume");
+    let opts = ExecOptions {
+        jobs: 2,
+        ..Default::default()
+    };
+    assert!(execute(&ctx, &store, &p, &opts).unwrap().ok());
+    let complete = tree(store.root());
+
+    // Simulate a crash: one sweep job's artifacts vanish entirely, and
+    // another job dies mid-write (COMPLETE marker missing).
+    let killed_sweep = p.jobs.iter().find(|j| j.kind == JobKind::Sweep).unwrap();
+    std::fs::remove_dir_all(store.job_dir(killed_sweep.id)).unwrap();
+    let torn = p.jobs.iter().find(|j| j.kind == JobKind::Optimize).unwrap();
+    std::fs::remove_file(store.job_dir(torn.id).join("COMPLETE")).unwrap();
+
+    let resumed = execute(&ctx, &store, &p, &opts).unwrap();
+    assert!(resumed.ok(), "{:?}", resumed.failed);
+    // Exactly the two damaged jobs re-ran; everything else was skipped.
+    let mut reran = resumed.executed.clone();
+    reran.sort_unstable();
+    let mut expected = vec![killed_sweep.id, torn.id];
+    expected.sort_unstable();
+    assert_eq!(reran, expected, "only unfinished jobs re-run on resume");
+    assert_eq!(resumed.skipped.len(), p.jobs.len() - 2);
+
+    // Regeneration is bit-deterministic: the resumed store equals the
+    // uninterrupted one file for file.
+    assert_trees_equal(&complete, &tree(store.root()));
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn gc_preserves_everything_a_live_manifest_reaches() {
+    let ctx = ApiContext::new();
+    let p = plan();
+    let store = tmp_store("gc");
+    assert!(execute(&ctx, &store, &p, &ExecOptions::default()).unwrap().ok());
+
+    // A stale job from some older campaign.
+    let stale = 0xdead_beef_dead_beef_u64;
+    store.begin(stale).unwrap();
+    store.write_artifact(stale, "sweep.json", b"{}").unwrap();
+
+    let before = tree(store.root());
+    let removed = store.gc(&p.live_ids()).unwrap();
+    assert_eq!(removed, vec![stale], "only the unreachable job goes");
+    for job in &p.jobs {
+        assert!(store.is_complete(job.id), "{} survives gc", job.label);
+    }
+    // Live artifacts are byte-untouched.
+    let after = tree(store.root());
+    for (name, bytes) in &after {
+        assert_eq!(bytes, &before[name], "{name} changed during gc");
+    }
+
+    // gc with nothing live clears the store.
+    let removed = store.gc(&Default::default()).unwrap();
+    assert_eq!(removed.len(), p.jobs.len());
+    assert!(store.jobs().unwrap().is_empty());
+    let _ = std::fs::remove_dir_all(store.root());
+}

@@ -1,0 +1,84 @@
+//! Golden pins for [`ExperimentSpec::content_hash`].
+//!
+//! The hash is the identity of every content-addressed lab artifact
+//! (`result/<job-id>/`, job ids are FNV chains seeded by it) and the
+//! `BatchRunner` memoization key. A silent change — reordered fields, a
+//! different policy encoding, a new hashed field without a version
+//! bump — would invalidate every stored artifact while looking like a
+//! refactor. These exact values (independently recomputed from the
+//! documented serialization, not captured from the code under test)
+//! make that loud: if a pin moves, bump `trapti-spec-v1` /
+//! `LAB_SCHEMA_VERSION` deliberately and regenerate stores.
+
+use trapti::api::ExperimentSpec;
+use trapti::banking::{GatingPolicy, SweepSpec};
+use trapti::config::{baseline, tiny};
+use trapti::serving::ServingParams;
+use trapti::util::MIB;
+use trapti::workload::{GPT2_XL, TINY_GQA, TINY_MHA};
+
+#[test]
+fn tiny_mha_prefill_pin() {
+    let spec = ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(spec.content_hash(), 0xf0956a9f84583979);
+}
+
+#[test]
+fn tiny_gqa_decode_pin() {
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .decode(16, 8)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(spec.content_hash(), 0xaf795202420f86a1);
+}
+
+#[test]
+fn tiny_gqa_serving_pin() {
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(ServingParams::new(8, 2, 7))
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(spec.content_hash(), 0x3c73ee6add37678a);
+}
+
+#[test]
+fn sweep_grid_is_part_of_the_identity() {
+    let spec = ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(tiny())
+        .sweep(SweepSpec {
+            capacities: vec![2 * MIB, 4 * MIB],
+            banks: vec![1, 2, 4, 8],
+            alphas: vec![0.9],
+            policies: vec![
+                GatingPolicy::None,
+                GatingPolicy::Aggressive,
+                GatingPolicy::conservative(),
+                GatingPolicy::drowsy(),
+            ],
+        })
+        .build()
+        .unwrap();
+    assert_eq!(spec.content_hash(), 0x2b9486fa16abff01);
+}
+
+#[test]
+fn paper_scale_decode_pin() {
+    let spec = ExperimentSpec::builder()
+        .model(GPT2_XL)
+        .decode(512, 128)
+        .accel(baseline())
+        .build()
+        .unwrap();
+    assert_eq!(spec.content_hash(), 0x028d7062579eccb1);
+}
