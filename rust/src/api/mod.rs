@@ -82,6 +82,7 @@
 
 pub mod batch;
 pub mod experiments;
+pub mod observe;
 pub mod optimize;
 pub mod serving;
 pub mod spec;

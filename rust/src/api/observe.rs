@@ -1,0 +1,201 @@
+//! WAL-logged materialization: run a spec with a
+//! [`crate::obs::WalSink`] teed into the simulation so every occupancy
+//! sample and run event lands in an on-disk event log *while* the
+//! materialized traces are built in memory.
+//!
+//! The two outputs are redundant by construction — replaying the WAL
+//! ([`crate::obs::replay_wal`]) reconstructs the materialized
+//! [`crate::trace::OccupancyTrace`]s bit-identically, because the
+//! replayer issues the exact `record()` calls the materializing sink
+//! saw. That redundancy is the point: an interrupted run leaves a WAL
+//! prefix that `repro watch` can render and the lab executor can
+//! resume from, and a completed run's WAL is a self-contained,
+//! deterministic artifact (`run_id` = spec content hash, wall clock
+//! only in the segment header).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::energy::energy_breakdown;
+use crate::obs::WalSink;
+use crate::sim::serving::{simulate_serving_with, ServingSimOptions};
+use crate::sim::{simulate_with, SimOptions};
+use crate::workload::{build_workload, Workload};
+
+use super::serving::ServingRun;
+use super::spec::ExperimentSpec;
+use super::stage::{ApiContext, MaterializedRun, Stage1Run};
+
+impl ExperimentSpec {
+    /// [`ExperimentSpec::materialize`] with a write-ahead event log:
+    /// identical results (same traces, same stats, same energy), plus a
+    /// complete WAL under `wal_dir` whose `run_id` is this spec's
+    /// [`ExperimentSpec::content_hash`]. Pass `wall_unix_ms = 0` for
+    /// byte-deterministic logs (the wall clock appears only in segment
+    /// headers); pass the real clock when human-readable provenance
+    /// matters more than `diff`-ability.
+    pub fn materialize_logged(
+        &self,
+        ctx: &ApiContext,
+        wal_dir: &Path,
+        wall_unix_ms: u64,
+    ) -> Result<MaterializedRun> {
+        self.validate()?;
+        let run_id = self.content_hash();
+        let mut wal = WalSink::create(wal_dir, run_id, wall_unix_ms)
+            .with_context(|| format!("creating WAL at {}", wal_dir.display()))?;
+        let run = match self.workload {
+            Workload::Serving(params) => {
+                let result = simulate_serving_with(
+                    &self.model,
+                    params,
+                    &self.accel,
+                    ServingSimOptions {
+                        sink: Some(&mut wal),
+                        materialize: true,
+                    },
+                )?;
+                MaterializedRun::Serving(ServingRun {
+                    spec: self.clone(),
+                    result,
+                })
+            }
+            _ => {
+                let graph = build_workload(&self.model, self.workload)?;
+                let result = simulate_with(
+                    &graph,
+                    &self.accel,
+                    SimOptions {
+                        sink: Some(&mut wal),
+                        materialize: true,
+                    },
+                )?;
+                let energy =
+                    energy_breakdown(&result, &self.accel, &ctx.cacti, &ctx.energy);
+                MaterializedRun::Single(Stage1Run {
+                    spec: self.clone(),
+                    graph,
+                    result,
+                    energy,
+                })
+            }
+        };
+        wal.close(Some(run.stats()))
+            .with_context(|| format!("sealing WAL at {}", wal_dir.display()))?;
+        Ok(run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::tiny;
+    use crate::obs::replay_wal;
+    use crate::serving::ServingParams;
+    use crate::workload::TINY_GQA;
+
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-observe-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn assert_traces_match(
+        got: &[crate::trace::OccupancyTrace],
+        want: &[crate::trace::OccupancyTrace],
+    ) {
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want) {
+            assert_eq!(g.memory, w.memory);
+            assert_eq!(g.capacity, w.capacity);
+            assert_eq!(g.samples(), w.samples());
+            assert_eq!(g.end_time(), w.end_time());
+            assert_eq!(g.avg_needed().to_bits(), w.avg_needed().to_bits());
+        }
+    }
+
+    #[test]
+    fn logged_single_run_matches_plain_and_replays() {
+        let ctx = ApiContext::new();
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        let dir = tmp_dir("single");
+
+        let plain = spec.materialize(&ctx).unwrap();
+        let logged = spec.materialize_logged(&ctx, &dir, 0).unwrap();
+        assert_eq!(logged.trace().samples(), plain.trace().samples());
+        assert_eq!(logged.stats(), plain.stats());
+
+        let replay = replay_wal(&dir).unwrap();
+        assert!(replay.complete);
+        assert_eq!(replay.run_id, spec.content_hash());
+        let MaterializedRun::Single(s) = &logged else {
+            panic!("prefill spec materialized as serving");
+        };
+        assert_traces_match(&replay.traces, &s.result.traces);
+        assert_eq!(replay.stats.as_ref(), Some(plain.stats()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn logged_serving_run_matches_plain_and_replays() {
+        let ctx = ApiContext::new();
+        let mut p = ServingParams::new(12, 3, 7);
+        p.prompt_min = 4;
+        p.prompt_max = 24;
+        p.gen_min = 2;
+        p.gen_max = 12;
+        p.page_tokens = 8;
+        p.mean_arrival_gap = 40_000;
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        let dir = tmp_dir("serving");
+
+        let plain = spec.materialize(&ctx).unwrap();
+        let logged = spec.materialize_logged(&ctx, &dir, 0).unwrap();
+        assert_eq!(logged.trace().samples(), plain.trace().samples());
+        assert_eq!(logged.stats(), plain.stats());
+
+        let replay = replay_wal(&dir).unwrap();
+        assert!(replay.complete);
+        assert_eq!(replay.run_id, spec.content_hash());
+        assert_traces_match(
+            &replay.traces,
+            std::slice::from_ref(logged.trace()),
+        );
+        assert_eq!(replay.stats.as_ref(), Some(plain.stats()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rerun_resets_the_log_instead_of_appending() {
+        let ctx = ApiContext::new();
+        let spec = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(32)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        let dir = tmp_dir("rerun");
+        spec.materialize_logged(&ctx, &dir, 0).unwrap();
+        let first = replay_wal(&dir).unwrap();
+        spec.materialize_logged(&ctx, &dir, 0).unwrap();
+        let second = replay_wal(&dir).unwrap();
+        assert!(second.complete);
+        assert_traces_match(&second.traces, &first.traces);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

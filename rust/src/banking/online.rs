@@ -80,7 +80,7 @@
 use std::fmt;
 
 use crate::cacti::{CactiModel, SramCharacterization};
-use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
 use crate::trace::{AccessStats, OccupancyTrace};
 use crate::util::ceil_div;
 
@@ -290,6 +290,48 @@ impl OnlineReport {
                     .sum()
             })
             .unwrap_or(0)
+    }
+
+    /// The report's timelines as WAL-able [`RunEvent`]s, for appending
+    /// to an observability log after the co-simulation closes.
+    ///
+    /// Stage-III outcomes are **retrospective** — a span's `[t0, t1)` is
+    /// only known once it closes, long after `t0` — so emitting them
+    /// live would violate the stream's non-decreasing-timestamp
+    /// contract. Instead every event carries the envelope stamp
+    /// [`OnlineReport::end_cycles`] (the log stays monotone: the run's
+    /// last trace instant precedes it) while the exact adjusted-cycle
+    /// timing lives in the payload (`t0`/`t1`/`at`). Order is
+    /// deterministic: bank-major, spans in timeline order, each Waking
+    /// span followed by its `WakeStall`. Empty when the sim ran with
+    /// `with_timeline(false)`.
+    pub fn events(&self) -> Vec<(u64, RunEvent)> {
+        let at = self.end_cycles();
+        let mut out = Vec::new();
+        for (bank, spans) in self.timelines.iter().enumerate() {
+            for s in spans {
+                out.push((
+                    at,
+                    RunEvent::BankSpan {
+                        bank: bank as u32,
+                        state: s.state.label(),
+                        t0: s.t0,
+                        t1: s.t1,
+                    },
+                ));
+                if s.state == BankState::Waking {
+                    out.push((
+                        at,
+                        RunEvent::WakeStall {
+                            bank: bank as u32,
+                            at: s.t0,
+                            stall_cycles: s.dt(),
+                        },
+                    ));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -869,6 +911,51 @@ mod tests {
             .sum();
         let want = (r.eval.gated_fraction * (r.end_cycles() as f64) * 8.0).round() as u64;
         assert_eq!(gated, want);
+    }
+
+    #[test]
+    fn report_events_mirror_the_timelines() {
+        let cacti = cacti();
+        let mut rng = Rng::new(11);
+        let tr = random_trace(&mut rng, 32 * MIB);
+        let cfg = OnlineConfig::new(32 * MIB, 8, 0.9, GatingPolicy::Aggressive);
+        let r = replay_trace(&cacti, &tr, &stats(), cfg, 1.0).unwrap();
+        let events = r.events();
+
+        let total_spans: usize = r.timelines.iter().map(Vec::len).sum();
+        let spans = events
+            .iter()
+            .filter(|(_, e)| matches!(e, RunEvent::BankSpan { .. }))
+            .count();
+        let stalls = events
+            .iter()
+            .filter(|(_, e)| matches!(e, RunEvent::WakeStall { .. }))
+            .count();
+        let waking: usize = r
+            .timelines
+            .iter()
+            .flatten()
+            .filter(|s| s.state == BankState::Waking)
+            .count();
+        assert_eq!(spans, total_spans, "one BankSpan per timeline span");
+        assert_eq!(stalls, waking, "one WakeStall per Waking span");
+        assert!(r.wake_events == 0 || stalls > 0);
+        // Retrospective envelope: every event is stamped at the
+        // stall-adjusted end, keeping any log it lands in monotone.
+        assert!(events.iter().all(|(t, _)| *t == r.end_cycles()));
+        // Payload timing is exact: stall cycles reconcile with the
+        // report's waking-state time.
+        let stall_sum: u64 = events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                RunEvent::WakeStall { stall_cycles, .. } => Some(*stall_cycles),
+                _ => None,
+            })
+            .sum();
+        let waking_sum: u64 = (0..8)
+            .map(|b| r.state_cycles(b, BankState::Waking))
+            .sum();
+        assert_eq!(stall_sum, waking_sum);
     }
 
     #[test]

@@ -29,10 +29,12 @@ use std::sync::{Condvar, Mutex};
 use anyhow::{anyhow, Context, Result};
 
 use crate::api::optimize::workload_label;
-use crate::api::{ApiContext, ExperimentSpec, OnlineValidation};
+use crate::api::{ApiContext, ExperimentSpec, MaterializedRun, OnlineValidation};
 use crate::banking::online::{replay_trace_with, OnlineConfig};
 use crate::banking::optimize::{optimize, ConfigKey, OptimizeResult, WorkloadSweep};
+use crate::obs::{replay_wal, WalReplay};
 use crate::report::tables;
+use crate::trace::{AccessStats, OccupancyTrace};
 use crate::util::json::{self, Json};
 use crate::workload::Workload;
 
@@ -400,6 +402,63 @@ fn run_optimize(store: &Store, plan: &Plan, job: &Job) -> Result<Vec<&'static st
     Ok(vec!["pareto.csv", "portfolio.txt"])
 }
 
+/// Where a validate job's Stage-I trace came from: replayed from a
+/// complete WAL left by an earlier (possibly interrupted-then-restarted)
+/// pass, or freshly simulated — in which case the simulation writes the
+/// WAL as it runs, so the *next* pass can take the replay path.
+enum TraceSource {
+    Replayed(WalReplay),
+    Fresh(MaterializedRun),
+}
+
+impl TraceSource {
+    fn trace(&self) -> &OccupancyTrace {
+        match self {
+            TraceSource::Replayed(r) => &r.traces[0],
+            TraceSource::Fresh(run) => run.trace(),
+        }
+    }
+
+    fn stats(&self) -> &AccessStats {
+        match self {
+            // `validate_source` only chooses replay when stats landed in
+            // the `RunEnd` record, so this cannot fail.
+            TraceSource::Replayed(r) => r.stats.as_ref().expect("complete WAL carries stats"),
+            TraceSource::Fresh(run) => run.stats(),
+        }
+    }
+}
+
+/// WAL directory for a spec, keyed by content hash under the store
+/// root. Not a 16-hex job id at the top level (`.wal/` prefix), so
+/// `Store::jobs`/`Store::gc` never touch it, and `Store::begin`'s
+/// job-dir wipe cannot destroy an in-flight log.
+fn wal_dir_of(store: &Store, spec: &ExperimentSpec) -> std::path::PathBuf {
+    store.root().join(".wal").join(store::hex(spec.content_hash()))
+}
+
+/// Obtain the validate job's trace: replay the spec's WAL when a
+/// complete one exists (no re-simulation), otherwise simulate with the
+/// WAL teed in ([`ExperimentSpec::materialize_logged`], `wall_ms = 0`
+/// so two store trees stay `diff -r`-clean). Both paths yield
+/// bit-identical traces — the replay/materialize equivalence property
+/// (`tests/obs_ordering.rs`).
+fn validate_source(
+    ctx: &ApiContext,
+    store: &Store,
+    spec: &ExperimentSpec,
+) -> Result<TraceSource> {
+    let dir = wal_dir_of(store, spec);
+    if let Ok(r) = replay_wal(&dir) {
+        if r.complete && r.run_id == spec.content_hash() && r.stats.is_some()
+            && !r.traces.is_empty()
+        {
+            return Ok(TraceSource::Replayed(r));
+        }
+    }
+    Ok(TraceSource::Fresh(spec.materialize_logged(ctx, &dir, 0)?))
+}
+
 fn run_validate(
     ctx: &ApiContext,
     store: &Store,
@@ -413,9 +472,10 @@ fn run_validate(
     // frontier is per-workload, so this equals the portfolio run's).
     let r = optimize(std::slice::from_ref(&ws), &m.constraints, m.epsilon, None)?;
     let frontier = &r.frontiers[0];
-    // One materialized Stage-I run; every frontier config replays
-    // against the borrowed trace — exactly `api::online_validate`.
-    let run = spec.materialize(ctx)?;
+    // One Stage-I trace — WAL-replayed or freshly simulated-and-logged —
+    // and every frontier config replays against the borrowed trace,
+    // exactly `api::online_validate`.
+    let run = validate_source(ctx, store, spec)?;
     let mut vals = Vec::with_capacity(frontier.frontier.len());
     for fp in &frontier.frontier {
         let config = OnlineConfig::of_point(&fp.point);
@@ -446,7 +506,11 @@ fn run_validate(
         "validation.txt",
         tables::validation_table(&vals).render().as_bytes(),
     )?;
-    Ok(vec!["validation.csv", "validation.txt"])
+    // Store-root-relative pointer to the run's WAL (the log itself lives
+    // outside the job dir so `Store::begin`'s wipe can't lose it).
+    let pointer = format!(".wal/{}\n", store::hex(spec.content_hash()));
+    store.write_artifact(job.id, "wal", pointer.as_bytes())?;
+    Ok(vec!["validation.csv", "validation.txt", "wal"])
 }
 
 #[cfg(test)]
@@ -498,6 +562,38 @@ policies = ["aggressive", "drowsy"]
         let second = execute(&ctx, &store, &plan, &opts).unwrap();
         assert!(second.executed.is_empty());
         assert_eq!(second.skipped.len(), plan.jobs.len());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn validate_resumes_from_complete_wal() {
+        let ctx = ApiContext::new();
+        let store = tmp_store("wal");
+        let plan = Plan::of(LabManifest::parse(TEXT).unwrap());
+        assert!(execute(&ctx, &store, &plan, &ExecOptions::default())
+            .unwrap()
+            .ok());
+        let val = plan.jobs.iter().find(|j| j.kind == JobKind::Validate).unwrap();
+        let spec = spec_of(&plan, val);
+        // The pass left a complete WAL keyed by spec hash, outside any
+        // job dir, and the job carries a pointer artifact to it.
+        let replay = replay_wal(&wal_dir_of(&store, spec)).unwrap();
+        assert!(replay.complete);
+        assert_eq!(replay.run_id, spec.content_hash());
+        assert_eq!(
+            store.read_artifact(val.id, "wal").unwrap(),
+            format!(".wal/{}\n", store::hex(spec.content_hash())).into_bytes()
+        );
+        // A complete WAL short-circuits re-simulation...
+        assert!(matches!(
+            validate_source(&ctx, &store, spec).unwrap(),
+            TraceSource::Replayed(_)
+        ));
+        // ...and a wiped-then-rerun job (interrupted-job shape; begin()
+        // wipes the dir but not the WAL) regenerates identical bytes.
+        let csv = store.read_artifact(val.id, "validation.csv").unwrap();
+        run_job(&ctx, &store, &plan, val).unwrap();
+        assert_eq!(store.read_artifact(val.id, "validation.csv").unwrap(), csv);
         let _ = std::fs::remove_dir_all(store.root());
     }
 

@@ -91,6 +91,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod lab;
 pub mod memory;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serving;

@@ -30,9 +30,10 @@ use trapti::banking::{
     SweepSpec,
 };
 use trapti::config::{named, parse::parse_bytes, AccelConfig};
+use trapti::obs::{EventLog, MetricsSnapshot, WalSink, WatchView};
 use trapti::report::{figures, tables};
 use trapti::runtime::{default_artifact_dir, DecodeSession, Manifest, Runtime};
-use trapti::trace::{load_trace, save_trace, trace_to_csv, TeeSink};
+use trapti::trace::{load_trace, save_trace, trace_to_csv, TeeSink, TraceSink};
 use trapti::util::MIB;
 use trapti::workload::{preset, Workload};
 
@@ -75,6 +76,29 @@ impl Args {
     fn flag_or(&self, key: &str, default: &str) -> String {
         self.flag(key).unwrap_or(default).to_string()
     }
+
+    /// Boolean-valued flag: `--key 1|true|yes|on` (the parser requires
+    /// every flag to carry a value; `--key 0` really means off).
+    fn bool_flag(&self, key: &str) -> Result<bool> {
+        match self.flag(key) {
+            None => Ok(false),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" | "on" => Ok(true),
+                "0" | "false" | "no" | "off" => Ok(false),
+                other => bail!("--{key} wants 0/1 (got `{other}`)"),
+            },
+        }
+    }
+}
+
+/// Wall clock for WAL segment headers (milliseconds since the Unix
+/// epoch). Lands only in the 28-byte header, never in record payloads,
+/// so two same-spec runs still compare equal after stripping headers.
+fn wall_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 fn reports_dir() -> PathBuf {
@@ -113,6 +137,7 @@ fn run(raw: &[String]) -> Result<()> {
         "bank" => bank_cmd(&args),
         "optimize" => optimize_cmd(&args),
         "replay" => replay_cmd(&args),
+        "watch" => watch_cmd(&args),
         "lab" => lab_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
@@ -132,7 +157,11 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                            (table1 fig1 fig5 fig6 fig7 fig8 fig9
                             table2 table3 sizing headline all)
   repro simulate           Stage-I run (--model, --accel, --seq,
-                           --decode P:G, --save-trace FILE, --config F)
+                           --decode P:G, --save-trace FILE, --config F,
+                           --wal-out DIR [append-only event log of the
+                           run; tail it live with `repro watch`],
+                           --metrics-out FILE [Prometheus text metrics
+                           folded from the WAL; needs --wal-out])
   repro batch              run several scenarios as one parallel,
                            memoized batch (--models A,B,.. --seq
                            --accel --threads N --decode P:G)
@@ -147,7 +176,8 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             fused Stage-II engine; no materialized trace]
                             --capacities MiB,.. --banks 1,2,..
                             --alpha A [explicit Stage-II grid]
-                            --sweep-out FILE [write the Stage-II table])
+                            --sweep-out FILE [write the Stage-II table]
+                            --wal-out DIR [event log; not with --fused])
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
   repro optimize           Stage-II Pareto optimizer + cross-workload
@@ -181,7 +211,15 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --policy none|aggressive|conservative|drowsy
                             --wake N [override wake latency, cycles]
                             --timeline-csv FILE [per-bank state spans]
-                            --report-out FILE [deterministic report])
+                            --report-out FILE [deterministic report]
+                            --wal-out DIR [event log incl. per-bank
+                            spans and wake-stall events])
+  repro watch              tail a WAL directory and render live run
+                           progress; exits when the run completes
+                           (--wal DIR --once 1 [render once and exit]
+                            --interval-ms N [poll period, default 500]
+                            --metrics-out FILE [refresh Prometheus
+                            metrics on every poll])
   repro lab                content-addressed experiment lab: expand a
                            TOML manifest (models x workloads x grid x
                            constraints) into a Stage I/II/III job DAG
@@ -350,7 +388,24 @@ fn simulate_cmd(args: &Args) -> Result<()> {
             .build()?
     };
     let ctx = ApiContext::new();
-    let s1 = spec.run_stage1(&ctx)?;
+    // --wal-out: identical run, but every occupancy sample and stage
+    // event also lands in an append-only on-disk log (`repro watch`
+    // tails it; `trapti::obs::replay_wal` reconstructs the trace).
+    let s1 = match args.flag("wal-out") {
+        Some(dir) => {
+            let run = spec.materialize_logged(&ctx, Path::new(dir), wall_unix_ms())?;
+            match run {
+                trapti::api::MaterializedRun::Single(s1) => {
+                    println!("WAL written to {dir}/");
+                    s1
+                }
+                trapti::api::MaterializedRun::Serving(_) => {
+                    unreachable!("simulate builds single-sequence workloads")
+                }
+            }
+        }
+        None => spec.run_stage1(&ctx)?,
+    };
     println!("{}", s1.graph.summary());
     println!("spec hash: {:016x}", s1.spec.content_hash());
     println!(
@@ -381,6 +436,14 @@ fn simulate_cmd(args: &Args) -> Result<()> {
     }
     if args.flag("csv").is_some() {
         emit_csv("trace", &trace_to_csv(s1.trace()))?;
+    }
+    if let Some(path) = args.flag("metrics-out") {
+        let dir = args
+            .flag("wal-out")
+            .ok_or_else(|| anyhow!("--metrics-out folds the WAL; add --wal-out DIR"))?;
+        let log = EventLog::open(Path::new(dir))?;
+        MetricsSnapshot::from_log(&log).write_atomic(Path::new(path))?;
+        println!("metrics written to {path}");
     }
     Ok(())
 }
@@ -574,16 +637,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some(a) = args.flag("arrival") {
         params.mean_arrival_gap = a.parse()?;
     }
-    // Boolean-valued flag: `--fused 1|true|yes|on` (the parser requires
-    // every flag to carry a value; `--fused 0` really means off).
-    let fused = match args.flag("fused") {
-        None => false,
-        Some(v) => match v.to_ascii_lowercase().as_str() {
-            "1" | "true" | "yes" | "on" => true,
-            "0" | "false" | "no" | "off" => false,
-            other => bail!("--fused wants 0/1 (got `{other}`)"),
-        },
-    };
+    let fused = args.bool_flag("fused")?;
 
     let mut builder = ExperimentSpec::builder()
         .model(model)
@@ -596,9 +650,26 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let ctx = ApiContext::new();
 
     let (run, s2) = if fused {
+        if args.flag("wal-out").is_some() {
+            bail!("--wal-out logs a materialized run; drop --fused");
+        }
         spec.serve_fused(&ctx)?
     } else {
-        let run = spec.run_serving()?;
+        let run = match args.flag("wal-out") {
+            Some(dir) => {
+                let run = spec.materialize_logged(&ctx, Path::new(dir), wall_unix_ms())?;
+                match run {
+                    trapti::api::MaterializedRun::Serving(run) => {
+                        println!("WAL written to {dir}/");
+                        run
+                    }
+                    trapti::api::MaterializedRun::Single(_) => {
+                        unreachable!("serve builds serving workloads")
+                    }
+                }
+            }
+            None => spec.run_serving()?,
+        };
         let s2 = run.stage2(&ctx)?;
         (run, s2)
     };
@@ -846,15 +917,7 @@ fn optimize_cmd(args: &Args) -> Result<()> {
     }
     // Stage-III pass: replay every frontier configuration online and
     // append the predicted-vs-observed validation table.
-    let validate = match args.flag("online-validate") {
-        None => false,
-        Some(v) => match v.to_ascii_lowercase().as_str() {
-            "1" | "true" | "yes" | "on" => true,
-            "0" | "false" | "no" | "off" => false,
-            other => bail!("--online-validate wants 0/1 (got `{other}`)"),
-        },
-    };
-    if validate {
+    if args.bool_flag("online-validate")? {
         let vals = trapti::api::online_validate(&ctx, &specs, &run)?;
         report.push('\n');
         report.push_str(&tables::validation_table(&vals).render());
@@ -1116,26 +1179,56 @@ fn replay_cmd(args: &Args) -> Result<()> {
     let ctx = ApiContext::new();
     let mut sim = OnlineGateSim::new(&ctx.cacti, cfg, spec.freq_ghz())?;
     let mut zero_sim = OnlineGateSim::new(&ctx.cacti, zero_cfg, spec.freq_ghz())?;
-    let (label, report, zero_wake) = match spec.workload {
+    // --wal-out: tee the Stage-I stream into an on-disk event log too;
+    // per-bank spans and wake stalls are appended after the replay (they
+    // only exist once the report is final).
+    let wal_dir = args.flag("wal-out").map(str::to_string);
+    let mut wal = match &wal_dir {
+        Some(dir) => Some(
+            WalSink::create(Path::new(dir), spec.content_hash(), wall_unix_ms())
+                .with_context(|| format!("creating WAL at {dir}"))?,
+        ),
+        None => None,
+    };
+    let (label, report, zero_wake, stats) = match spec.workload {
         Workload::Serving(_) => {
             let run = {
-                let mut tee = TeeSink::new(vec![&mut sim, &mut zero_sim]);
+                let mut sinks: Vec<&mut dyn TraceSink> = vec![&mut sim, &mut zero_sim];
+                if let Some(w) = wal.as_mut() {
+                    sinks.push(w);
+                }
+                let mut tee = TeeSink::new(sinks);
                 spec.stream_serving(&mut tee)?
             };
             let rep = sim.into_report(&run.result.stats)?;
             let zero = zero_sim.into_report(&run.result.stats)?;
-            (run.result.workload.clone(), rep, zero)
+            let stats = run.result.stats.clone();
+            (run.result.workload.clone(), rep, zero, stats)
         }
         _ => {
             let summary = {
-                let mut tee = TeeSink::new(vec![&mut sim, &mut zero_sim]);
+                let mut sinks: Vec<&mut dyn TraceSink> = vec![&mut sim, &mut zero_sim];
+                if let Some(w) = wal.as_mut() {
+                    sinks.push(w);
+                }
+                let mut tee = TeeSink::new(sinks);
                 spec.stream_stage1(&ctx, &mut tee)?
             };
             let rep = sim.into_report(summary.stats())?;
             let zero = zero_sim.into_report(summary.stats())?;
-            (trapti::api::optimize::workload_label(&spec), rep, zero)
+            let stats = summary.stats().clone();
+            (trapti::api::optimize::workload_label(&spec), rep, zero, stats)
         }
     };
+    if let Some(mut w) = wal.take() {
+        for (t, ev) in report.events() {
+            w.append_event(t, &ev);
+        }
+        w.close(Some(&stats))?;
+        if let Some(dir) = &wal_dir {
+            println!("WAL written to {dir}/");
+        }
+    }
 
     let text = online_replay_report(&label, &report, &zero_wake);
     print!("{text}");
@@ -1149,6 +1242,34 @@ fn replay_cmd(args: &Args) -> Result<()> {
         println!("timeline CSV saved to {path}");
     }
     Ok(())
+}
+
+/// `repro watch` — tail a WAL directory (written by `simulate`/`serve`/
+/// `replay --wal-out`, or the lab executor's `.wal/` tree) and render
+/// live run progress. Because the log is append-only with a
+/// torn-tail-tolerant reader, every poll is a consistent snapshot that
+/// refines the previous one; the watcher exits once the `RunEnd` record
+/// lands. Can be started before the run: a missing directory renders as
+/// a waiting line, not an error.
+fn watch_cmd(args: &Args) -> Result<()> {
+    let dir = args
+        .flag("wal")
+        .ok_or_else(|| anyhow!("watch needs --wal DIR (from --wal-out)"))?;
+    let dir = Path::new(dir);
+    let once = args.bool_flag("once")?;
+    let interval: u64 = args.flag_or("interval-ms", "500").parse()?;
+    loop {
+        let view = WatchView::load(dir)?;
+        print!("{}", view.render());
+        if let (Some(path), Some(snap)) = (args.flag("metrics-out"), &view.snapshot) {
+            snap.write_atomic(Path::new(path))?;
+        }
+        if once || view.complete() {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval.max(1)));
+        println!();
+    }
 }
 
 fn e2e_cmd(args: &Args) -> Result<()> {

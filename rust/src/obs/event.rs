@@ -1,0 +1,485 @@
+//! The typed WAL record set and its byte codec.
+//!
+//! Every record payload is `seq u64 | t u64 | kind u8 | fields`, all
+//! little-endian, strings length-prefixed (u32) — fully self-describing
+//! and platform-stable, so two identical runs produce byte-identical
+//! payloads (the CI WAL determinism gate `cmp`s them after stripping
+//! the wall-clocked segment headers).
+
+use std::collections::BTreeMap;
+
+use crate::trace::sink::{MemoryDesc, RunEvent};
+use crate::trace::{AccessStats, KindStats};
+
+use super::ObsError;
+
+/// One decoded WAL record: the monotone envelope stamps plus the event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    /// Strictly monotone sequence number, dense from 0.
+    pub seq: u64,
+    /// Simulation-time stamp in cycles, non-decreasing across the log.
+    pub t: u64,
+    pub event: ObsEvent,
+}
+
+/// The observability event vocabulary. A superset of
+/// [`crate::trace::RunEvent`]: the WAL additionally records the run
+/// envelope (`RunStart`/`RunEnd`) and the occupancy samples themselves,
+/// so the log alone reconstructs the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    /// First record of every log: the run identity and memory layout.
+    RunStart {
+        run_id: u64,
+        memories: Vec<MemoryDesc>,
+    },
+    StageStart {
+        stage: u32,
+    },
+    StageEnd {
+        stage: u32,
+    },
+    /// Occupancy change of memory `mem` (same semantics as
+    /// [`crate::trace::TraceSink::on_sample`]: last record at an instant
+    /// wins).
+    Sample {
+        mem: u32,
+        needed: u64,
+        obsolete: u64,
+    },
+    Admit {
+        request: u32,
+    },
+    Complete {
+        request: u32,
+    },
+    /// Stage-III retrospective: bank `bank` held `state` over `[t0, t1)`
+    /// adjusted cycles.
+    BankSpan {
+        bank: u32,
+        state: &'static str,
+        t0: u64,
+        t1: u64,
+    },
+    /// Stage-III retrospective: the wake-up at adjusted cycle `at`
+    /// stalled the machine for `stall_cycles`.
+    WakeStall {
+        bank: u32,
+        at: u64,
+        stall_cycles: u64,
+    },
+    /// Last record of a cleanly closed run: the end time and, when the
+    /// writer had them, the run's access statistics. A log without this
+    /// record is an in-flight or crashed run.
+    RunEnd {
+        end: u64,
+        stats: Option<AccessStats>,
+    },
+}
+
+impl ObsEvent {
+    /// Lift a live stream event into the WAL vocabulary.
+    pub fn of_run_event(ev: &RunEvent) -> ObsEvent {
+        match *ev {
+            RunEvent::StageStart { stage } => ObsEvent::StageStart { stage },
+            RunEvent::StageEnd { stage } => ObsEvent::StageEnd { stage },
+            RunEvent::Admit { request } => ObsEvent::Admit { request },
+            RunEvent::Complete { request } => ObsEvent::Complete { request },
+            RunEvent::BankSpan { bank, state, t0, t1 } => {
+                ObsEvent::BankSpan { bank, state, t0, t1 }
+            }
+            RunEvent::WakeStall { bank, at, stall_cycles } => {
+                ObsEvent::WakeStall { bank, at, stall_cycles }
+            }
+        }
+    }
+
+    /// Short deterministic kind label (metrics/watch rendering).
+    pub fn kind_label(&self) -> &'static str {
+        match self {
+            ObsEvent::RunStart { .. } => "run_start",
+            ObsEvent::StageStart { .. } => "stage_start",
+            ObsEvent::StageEnd { .. } => "stage_end",
+            ObsEvent::Sample { .. } => "sample",
+            ObsEvent::Admit { .. } => "admit",
+            ObsEvent::Complete { .. } => "complete",
+            ObsEvent::BankSpan { .. } => "bank_span",
+            ObsEvent::WakeStall { .. } => "wake_stall",
+            ObsEvent::RunEnd { .. } => "run_end",
+        }
+    }
+}
+
+const KIND_RUN_START: u8 = 0;
+const KIND_STAGE_START: u8 = 1;
+const KIND_STAGE_END: u8 = 2;
+const KIND_SAMPLE: u8 = 3;
+const KIND_ADMIT: u8 = 4;
+const KIND_COMPLETE: u8 = 5;
+const KIND_BANK_SPAN: u8 = 6;
+const KIND_WAKE_STALL: u8 = 7;
+const KIND_RUN_END: u8 = 8;
+
+/// Map a decoded bank-state label back onto the `'static` vocabulary of
+/// `banking::online::BankState::label`. Unknown labels are a decode
+/// error, not a torn write.
+fn bank_state_static(name: &str) -> Option<&'static str> {
+    match name {
+        "active" => Some("active"),
+        "idle" => Some("idle"),
+        "drowsy" => Some("drowsy"),
+        "gated" => Some("gated"),
+        "waking" => Some("waking"),
+        _ => None,
+    }
+}
+
+/// Map a decoded tensor-kind name back onto the `'static` keys used by
+/// `AccessStats::by_kind` (see `sim::engine`'s `sram_read` call sites).
+fn tensor_kind_static(name: &str) -> Option<&'static str> {
+    match name {
+        "act" => Some("act"),
+        "kv" => Some("kv"),
+        "weight" => Some("weight"),
+        _ => None,
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Encode one record payload (the WAL frames it with length + checksum).
+pub fn encode(rec: &EventRecord) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    put_u64(&mut out, rec.seq);
+    put_u64(&mut out, rec.t);
+    match &rec.event {
+        ObsEvent::RunStart { run_id, memories } => {
+            out.push(KIND_RUN_START);
+            put_u64(&mut out, *run_id);
+            put_u32(&mut out, memories.len() as u32);
+            for m in memories {
+                put_str(&mut out, &m.name);
+                put_u64(&mut out, m.capacity);
+            }
+        }
+        ObsEvent::StageStart { stage } => {
+            out.push(KIND_STAGE_START);
+            put_u32(&mut out, *stage);
+        }
+        ObsEvent::StageEnd { stage } => {
+            out.push(KIND_STAGE_END);
+            put_u32(&mut out, *stage);
+        }
+        ObsEvent::Sample { mem, needed, obsolete } => {
+            out.push(KIND_SAMPLE);
+            put_u32(&mut out, *mem);
+            put_u64(&mut out, *needed);
+            put_u64(&mut out, *obsolete);
+        }
+        ObsEvent::Admit { request } => {
+            out.push(KIND_ADMIT);
+            put_u32(&mut out, *request);
+        }
+        ObsEvent::Complete { request } => {
+            out.push(KIND_COMPLETE);
+            put_u32(&mut out, *request);
+        }
+        ObsEvent::BankSpan { bank, state, t0, t1 } => {
+            out.push(KIND_BANK_SPAN);
+            put_u32(&mut out, *bank);
+            put_str(&mut out, state);
+            put_u64(&mut out, *t0);
+            put_u64(&mut out, *t1);
+        }
+        ObsEvent::WakeStall { bank, at, stall_cycles } => {
+            out.push(KIND_WAKE_STALL);
+            put_u32(&mut out, *bank);
+            put_u64(&mut out, *at);
+            put_u64(&mut out, *stall_cycles);
+        }
+        ObsEvent::RunEnd { end, stats } => {
+            out.push(KIND_RUN_END);
+            put_u64(&mut out, *end);
+            match stats {
+                None => out.push(0),
+                Some(s) => {
+                    out.push(1);
+                    for v in [
+                        s.reads,
+                        s.writes,
+                        s.read_bytes,
+                        s.write_bytes,
+                        s.evictions_obsolete,
+                        s.writebacks,
+                        s.writeback_bytes,
+                        s.refetches,
+                        s.dram_read_bytes,
+                        s.dram_write_bytes,
+                    ] {
+                        put_u64(&mut out, v);
+                    }
+                    put_u32(&mut out, s.by_kind.len() as u32);
+                    // BTreeMap iteration order is the key order:
+                    // deterministic bytes.
+                    for (kind, ks) in &s.by_kind {
+                        put_str(&mut out, kind);
+                        put_u64(&mut out, ks.read_bytes);
+                        put_u64(&mut out, ks.write_bytes);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ObsError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ObsError::Decode(format!(
+                "payload truncated: want {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ObsError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ObsError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ObsError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, ObsError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ObsError::Decode("string field is not UTF-8".to_string()))
+    }
+
+    fn done(&self) -> Result<(), ObsError> {
+        if self.pos != self.buf.len() {
+            return Err(ObsError::Decode(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one checksummed payload back into an [`EventRecord`].
+pub fn decode(payload: &[u8]) -> Result<EventRecord, ObsError> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let seq = c.u64()?;
+    let t = c.u64()?;
+    let kind = c.u8()?;
+    let event = match kind {
+        KIND_RUN_START => {
+            let run_id = c.u64()?;
+            let n = c.u32()? as usize;
+            let mut memories = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = c.str()?;
+                let capacity = c.u64()?;
+                memories.push(MemoryDesc { name, capacity });
+            }
+            ObsEvent::RunStart { run_id, memories }
+        }
+        KIND_STAGE_START => ObsEvent::StageStart { stage: c.u32()? },
+        KIND_STAGE_END => ObsEvent::StageEnd { stage: c.u32()? },
+        KIND_SAMPLE => ObsEvent::Sample {
+            mem: c.u32()?,
+            needed: c.u64()?,
+            obsolete: c.u64()?,
+        },
+        KIND_ADMIT => ObsEvent::Admit { request: c.u32()? },
+        KIND_COMPLETE => ObsEvent::Complete { request: c.u32()? },
+        KIND_BANK_SPAN => {
+            let bank = c.u32()?;
+            let state_name = c.str()?;
+            let state = bank_state_static(&state_name).ok_or_else(|| {
+                ObsError::Decode(format!("unknown bank state `{state_name}`"))
+            })?;
+            ObsEvent::BankSpan {
+                bank,
+                state,
+                t0: c.u64()?,
+                t1: c.u64()?,
+            }
+        }
+        KIND_WAKE_STALL => ObsEvent::WakeStall {
+            bank: c.u32()?,
+            at: c.u64()?,
+            stall_cycles: c.u64()?,
+        },
+        KIND_RUN_END => {
+            let end = c.u64()?;
+            let stats = match c.u8()? {
+                0 => None,
+                1 => {
+                    let mut s = AccessStats {
+                        reads: c.u64()?,
+                        writes: c.u64()?,
+                        read_bytes: c.u64()?,
+                        write_bytes: c.u64()?,
+                        evictions_obsolete: c.u64()?,
+                        writebacks: c.u64()?,
+                        writeback_bytes: c.u64()?,
+                        refetches: c.u64()?,
+                        dram_read_bytes: c.u64()?,
+                        dram_write_bytes: c.u64()?,
+                        by_kind: BTreeMap::new(),
+                    };
+                    let n = c.u32()? as usize;
+                    for _ in 0..n {
+                        let name = c.str()?;
+                        let kind = tensor_kind_static(&name).ok_or_else(|| {
+                            ObsError::Decode(format!("unknown tensor kind `{name}`"))
+                        })?;
+                        let ks = KindStats {
+                            read_bytes: c.u64()?,
+                            write_bytes: c.u64()?,
+                        };
+                        s.by_kind.insert(kind, ks);
+                    }
+                    Some(s)
+                }
+                other => {
+                    return Err(ObsError::Decode(format!(
+                        "bad stats flag {other} in RunEnd"
+                    )))
+                }
+            };
+            ObsEvent::RunEnd { end, stats }
+        }
+        other => return Err(ObsError::Decode(format!("unknown record kind {other}"))),
+    };
+    c.done()?;
+    Ok(EventRecord { seq, t, event })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(rec: EventRecord) {
+        let bytes = encode(&rec);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn every_kind_roundtrips() {
+        let mut stats = AccessStats {
+            reads: 10,
+            writes: 5,
+            read_bytes: 640,
+            write_bytes: 320,
+            evictions_obsolete: 1,
+            writebacks: 2,
+            writeback_bytes: 128,
+            refetches: 3,
+            dram_read_bytes: 4096,
+            dram_write_bytes: 2048,
+            by_kind: BTreeMap::new(),
+        };
+        stats.by_kind.insert("act", KindStats { read_bytes: 1, write_bytes: 2 });
+        stats.by_kind.insert("kv", KindStats { read_bytes: 3, write_bytes: 4 });
+        stats.by_kind.insert("weight", KindStats { read_bytes: 5, write_bytes: 6 });
+
+        let events = vec![
+            ObsEvent::RunStart {
+                run_id: 0xdead_beef,
+                memories: vec![
+                    MemoryDesc { name: "sram".into(), capacity: 1 << 27 },
+                    MemoryDesc { name: "kv-arena".into(), capacity: 1 << 24 },
+                ],
+            },
+            ObsEvent::StageStart { stage: 0 },
+            ObsEvent::StageEnd { stage: 0 },
+            ObsEvent::Sample { mem: 1, needed: 123, obsolete: 45 },
+            ObsEvent::Admit { request: 7 },
+            ObsEvent::Complete { request: 7 },
+            ObsEvent::BankSpan { bank: 3, state: "gated", t0: 10, t1: 99 },
+            ObsEvent::WakeStall { bank: 3, at: 99, stall_cycles: 40 },
+            ObsEvent::RunEnd { end: 1000, stats: Some(stats) },
+            ObsEvent::RunEnd { end: 1000, stats: None },
+        ];
+        for (i, event) in events.into_iter().enumerate() {
+            roundtrip(EventRecord { seq: i as u64, t: i as u64 * 10, event });
+        }
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let rec = EventRecord {
+            seq: 42,
+            t: 99,
+            event: ObsEvent::Sample { mem: 0, needed: 1, obsolete: 2 },
+        };
+        assert_eq!(encode(&rec), encode(&rec.clone()));
+    }
+
+    #[test]
+    fn unknown_kind_and_trailing_bytes_are_decode_errors() {
+        let mut bytes = encode(&EventRecord {
+            seq: 0,
+            t: 0,
+            event: ObsEvent::Admit { request: 1 },
+        });
+        let kind_off = 16; // seq + t
+        bytes[kind_off] = 200;
+        assert!(matches!(decode(&bytes).unwrap_err(), ObsError::Decode(_)));
+
+        let mut ok = encode(&EventRecord {
+            seq: 0,
+            t: 0,
+            event: ObsEvent::Admit { request: 1 },
+        });
+        ok.push(0);
+        assert!(matches!(decode(&ok).unwrap_err(), ObsError::Decode(_)));
+    }
+
+    #[test]
+    fn unknown_bank_state_is_a_decode_error() {
+        // Hand-assemble a BankSpan with a foreign state label.
+        let mut out = Vec::new();
+        out.extend_from_slice(&0u64.to_le_bytes());
+        out.extend_from_slice(&0u64.to_le_bytes());
+        out.push(6); // KIND_BANK_SPAN
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&(5u32).to_le_bytes());
+        out.extend_from_slice(b"astra");
+        out.extend_from_slice(&0u64.to_le_bytes());
+        out.extend_from_slice(&1u64.to_le_bytes());
+        let err = decode(&out).unwrap_err();
+        assert!(err.to_string().contains("unknown bank state"), "{err}");
+    }
+}

@@ -1,0 +1,288 @@
+//! Prometheus-text-format export folded from an event log.
+//!
+//! [`MetricsSnapshot::from_log`] is a pure fold over [`EventLog`]
+//! records — no live counters, no sampling window — so a metrics file
+//! is always consistent with *some* prefix of the run, and two
+//! identical runs render byte-identical text (fixed metric order,
+//! memories in announcement order, integer values). The file is
+//! written atomically (tmp + rename) so a scraper never sees a torn
+//! exposition.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use super::event::ObsEvent;
+use super::wal::EventLog;
+use super::ObsError;
+
+/// Per-memory occupancy counters (announcement order).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MemoryMetrics {
+    pub name: String,
+    pub capacity: u64,
+    /// Occupancy (needed + obsolete) at the last observed sample.
+    pub current_occupied: u64,
+    pub current_needed: u64,
+    /// Peak observed occupancy so far.
+    pub peak_occupied: u64,
+    pub peak_needed: u64,
+    pub samples: u64,
+}
+
+/// All counters derivable from one log read. Construct with
+/// [`MetricsSnapshot::from_log`], render with
+/// [`MetricsSnapshot::render`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub run_id: u64,
+    pub events_total: u64,
+    /// Highest simulation time observed (envelope stamps / `RunEnd`).
+    pub cycles: u64,
+    pub complete: bool,
+    pub truncated: bool,
+    pub memories: Vec<MemoryMetrics>,
+    pub stages_started: u64,
+    pub stages_completed: u64,
+    pub requests_admitted: u64,
+    pub requests_completed: u64,
+    /// `(state label, span count, cycles)` per bank state, sorted by
+    /// label for deterministic rendering.
+    pub bank_states: Vec<(&'static str, u64, u64)>,
+    pub wake_stalls: u64,
+    pub wake_stall_cycles: u64,
+}
+
+impl MetricsSnapshot {
+    /// Fold a log into counters.
+    pub fn from_log(log: &EventLog) -> MetricsSnapshot {
+        let mut m = MetricsSnapshot {
+            run_id: log.run_id().unwrap_or(0),
+            events_total: log.records.len() as u64,
+            truncated: log.truncated,
+            ..Default::default()
+        };
+        let mut bank_states: Vec<(&'static str, u64, u64)> = Vec::new();
+        for rec in &log.records {
+            m.cycles = m.cycles.max(rec.t);
+            match rec.event {
+                ObsEvent::RunStart { ref memories, .. } => {
+                    m.memories = memories
+                        .iter()
+                        .map(|d| MemoryMetrics {
+                            name: d.name.clone(),
+                            capacity: d.capacity,
+                            ..Default::default()
+                        })
+                        .collect();
+                }
+                ObsEvent::Sample { mem, needed, obsolete } => {
+                    if let Some(mm) = m.memories.get_mut(mem as usize) {
+                        mm.current_needed = needed;
+                        mm.current_occupied = needed + obsolete;
+                        mm.peak_needed = mm.peak_needed.max(needed);
+                        mm.peak_occupied = mm.peak_occupied.max(needed + obsolete);
+                        mm.samples += 1;
+                    }
+                }
+                ObsEvent::StageStart { .. } => m.stages_started += 1,
+                ObsEvent::StageEnd { .. } => m.stages_completed += 1,
+                ObsEvent::Admit { .. } => m.requests_admitted += 1,
+                ObsEvent::Complete { .. } => m.requests_completed += 1,
+                ObsEvent::BankSpan { state, t0, t1, .. } => {
+                    match bank_states.iter_mut().find(|(s, _, _)| *s == state) {
+                        Some(entry) => {
+                            entry.1 += 1;
+                            entry.2 += t1 - t0;
+                        }
+                        None => bank_states.push((state, 1, t1 - t0)),
+                    }
+                }
+                ObsEvent::WakeStall { stall_cycles, .. } => {
+                    m.wake_stalls += 1;
+                    m.wake_stall_cycles += stall_cycles;
+                }
+                ObsEvent::RunEnd { end, .. } => {
+                    m.cycles = m.cycles.max(end);
+                    m.complete = true;
+                }
+            }
+        }
+        bank_states.sort_by_key(|(s, _, _)| *s);
+        m.bank_states = bank_states;
+        m
+    }
+
+    /// Total samples across memories.
+    pub fn samples_total(&self) -> u64 {
+        self.memories.iter().map(|m| m.samples).sum()
+    }
+
+    /// Wake-stall share of the run, percent (0 when no cycles yet).
+    pub fn stall_pct(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            100.0 * self.wake_stall_cycles as f64 / self.cycles as f64
+        }
+    }
+
+    /// Render the Prometheus text exposition. Deterministic: fixed
+    /// metric order, memory labels in announcement order, bank states
+    /// sorted by label.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let head = |out: &mut String, name: &str, help: &str, kind: &str| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+        };
+
+        head(&mut out, "trapti_run_id", "Run identifier from the WAL header.", "gauge");
+        let _ = writeln!(out, "trapti_run_id {}", self.run_id);
+
+        head(&mut out, "trapti_events_total", "WAL records folded into this snapshot.", "counter");
+        let _ = writeln!(out, "trapti_events_total {}", self.events_total);
+
+        head(&mut out, "trapti_cycles", "Highest simulation cycle observed.", "gauge");
+        let _ = writeln!(out, "trapti_cycles {}", self.cycles);
+
+        head(&mut out, "trapti_samples_total", "Occupancy samples observed.", "counter");
+        let _ = writeln!(out, "trapti_samples_total {}", self.samples_total());
+
+        head(&mut out, "trapti_occupancy_bytes", "Current occupancy (needed+obsolete) per memory.", "gauge");
+        for m in &self.memories {
+            let _ = writeln!(out, "trapti_occupancy_bytes{{memory=\"{}\"}} {}", m.name, m.current_occupied);
+        }
+        head(&mut out, "trapti_occupancy_peak_bytes", "Peak occupancy per memory.", "gauge");
+        for m in &self.memories {
+            let _ = writeln!(out, "trapti_occupancy_peak_bytes{{memory=\"{}\"}} {}", m.name, m.peak_occupied);
+        }
+
+        head(&mut out, "trapti_stages_started_total", "Dataflow stages entered.", "counter");
+        let _ = writeln!(out, "trapti_stages_started_total {}", self.stages_started);
+        head(&mut out, "trapti_stages_completed_total", "Dataflow stages completed.", "counter");
+        let _ = writeln!(out, "trapti_stages_completed_total {}", self.stages_completed);
+
+        head(&mut out, "trapti_requests_admitted_total", "Serving requests admitted.", "counter");
+        let _ = writeln!(out, "trapti_requests_admitted_total {}", self.requests_admitted);
+        head(&mut out, "trapti_requests_completed_total", "Serving requests completed.", "counter");
+        let _ = writeln!(out, "trapti_requests_completed_total {}", self.requests_completed);
+
+        head(&mut out, "trapti_bank_state_spans_total", "Stage-III bank state spans by state.", "counter");
+        for (state, count, _) in &self.bank_states {
+            let _ = writeln!(out, "trapti_bank_state_spans_total{{state=\"{state}\"}} {count}");
+        }
+        head(&mut out, "trapti_bank_state_cycles_total", "Stage-III cycles spent per bank state.", "counter");
+        for (state, _, cycles) in &self.bank_states {
+            let _ = writeln!(out, "trapti_bank_state_cycles_total{{state=\"{state}\"}} {cycles}");
+        }
+
+        head(&mut out, "trapti_wake_stalls_total", "Stage-III wake-up stalls.", "counter");
+        let _ = writeln!(out, "trapti_wake_stalls_total {}", self.wake_stalls);
+        head(&mut out, "trapti_wake_stall_cycles_total", "Cycles lost to wake-up stalls.", "counter");
+        let _ = writeln!(out, "trapti_wake_stall_cycles_total {}", self.wake_stall_cycles);
+
+        head(&mut out, "trapti_run_complete", "1 once RunEnd was observed.", "gauge");
+        let _ = writeln!(out, "trapti_run_complete {}", u8::from(self.complete));
+        head(&mut out, "trapti_log_truncated", "1 when a torn tail was discarded on read.", "gauge");
+        let _ = writeln!(out, "trapti_log_truncated {}", u8::from(self.truncated));
+        out
+    }
+
+    /// Atomically write the rendered exposition to `path` (tmp +
+    /// rename in the same directory, so scrapers never see a torn
+    /// file).
+    pub fn write_atomic(&self, path: &Path) -> Result<(), ObsError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        fs::write(&tmp, self.render())?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
+
+    use super::super::sink::WalSink;
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-metrics-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_log(dir: &Path) -> EventLog {
+        let mut wal = WalSink::create(dir, 0x77, 0).unwrap();
+        wal.begin(&[
+            MemoryDesc { name: "sram".into(), capacity: 1000 },
+            MemoryDesc { name: "kv".into(), capacity: 500 },
+        ]);
+        wal.on_event(0, &RunEvent::StageStart { stage: 0 });
+        wal.on_sample(0, 2, 100, 20);
+        wal.on_sample(0, 6, 40, 0);
+        wal.on_sample(1, 6, 30, 0);
+        wal.on_event(7, &RunEvent::Admit { request: 0 });
+        wal.on_event(9, &RunEvent::StageEnd { stage: 0 });
+        wal.on_event(9, &RunEvent::Complete { request: 0 });
+        wal.finish(10);
+        wal.append_event(10, &RunEvent::BankSpan { bank: 0, state: "gated", t0: 4, t1: 10 });
+        wal.append_event(10, &RunEvent::BankSpan { bank: 0, state: "active", t0: 0, t1: 4 });
+        wal.append_event(10, &RunEvent::WakeStall { bank: 0, at: 4, stall_cycles: 3 });
+        wal.close(None).unwrap();
+        EventLog::open(dir).unwrap()
+    }
+
+    #[test]
+    fn fold_counts_everything_once() {
+        let dir = tmp_dir("fold");
+        let log = sample_log(&dir);
+        let m = MetricsSnapshot::from_log(&log);
+        assert_eq!(m.run_id, 0x77);
+        assert_eq!(m.cycles, 10);
+        assert!(m.complete);
+        assert_eq!(m.samples_total(), 3);
+        assert_eq!(m.memories[0].peak_occupied, 120);
+        assert_eq!(m.memories[0].current_occupied, 40);
+        assert_eq!(m.memories[1].current_occupied, 30);
+        assert_eq!(m.stages_started, 1);
+        assert_eq!(m.stages_completed, 1);
+        assert_eq!(m.requests_admitted, 1);
+        assert_eq!(m.requests_completed, 1);
+        // Sorted by state label: active before gated.
+        assert_eq!(m.bank_states, vec![("active", 1, 4), ("gated", 1, 6)]);
+        assert_eq!(m.wake_stall_cycles, 3);
+        assert!((m.stall_pct() - 30.0).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_atomic_write_lands() {
+        let dir = tmp_dir("render");
+        let log = sample_log(&dir);
+        let m = MetricsSnapshot::from_log(&log);
+        let text = m.render();
+        assert_eq!(text, MetricsSnapshot::from_log(&log).render());
+        assert!(text.contains("trapti_occupancy_peak_bytes{memory=\"sram\"} 120"));
+        assert!(text.contains("trapti_run_complete 1"));
+
+        let out = dir.join("metrics.prom");
+        m.write_atomic(&out).unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), text);
+        assert!(!out.with_extension("prom.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

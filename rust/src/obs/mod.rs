@@ -1,0 +1,100 @@
+//! `trapti::obs` — WAL-backed observability for Stage I/III runs.
+//!
+//! Long runs (a million-cycle serving simulation, a thousand-cell lab
+//! campaign) are opaque until they finish. This module gives every run
+//! an **append-only, ordered, crash-recoverable event log**:
+//!
+//! * [`wal`] — the on-disk write-ahead log: [`WalWriter`] frames each
+//!   record as `len | payload | fnv64(payload)` inside headered
+//!   segments, sealing segments via tmp+rename rotation; the reader
+//!   ([`EventLog::open`]) recovers the longest valid prefix of a torn
+//!   log instead of failing.
+//! * [`event`] — the typed record set ([`ObsEvent`]): run start/end,
+//!   dataflow stage boundaries, occupancy samples, serving scheduler
+//!   admissions/completions, and Stage-III per-bank spans and
+//!   wake-stall events, each stamped with a strictly monotone sequence
+//!   number and a non-decreasing timestamp.
+//! * [`sink`] — [`WalSink`], a [`crate::trace::TraceSink`] that feeds
+//!   the log from a live simulation (tee it next to any other sink).
+//! * [`replay`] — [`replay_wal`]: reconstruct a bit-identical
+//!   [`crate::trace::OccupancyTrace`] (and the run's
+//!   [`crate::trace::AccessStats`]) from the log, so an interrupted
+//!   Stage-I run resumes from the WAL instead of recomputing — the
+//!   lab's validate jobs use exactly this.
+//! * [`metrics`] — fold the log into Prometheus-text-format counters
+//!   ([`MetricsSnapshot`]), written atomically to a `--metrics-out`
+//!   file.
+//! * [`watch`] — the `repro watch` live view: tail a WAL directory and
+//!   render cycles simulated, current/peak occupancy, serving progress,
+//!   bank gating, and stall share.
+//!
+//! ## Ordering guarantees
+//!
+//! Every log this module writes satisfies the invariants ported from
+//! dashflow's ObservabilityOrdering TLA spec (property-tested over
+//! generated schedules in `rust/tests/obs_ordering.rs`):
+//!
+//! 1. **RunStartFirst** — the first record is the only `RunStart`.
+//! 2. **RunEndLast** — `RunEnd`, when present, is the unique last
+//!    record (a log without it is a torn/in-flight run).
+//! 3. **StageStartBeforeEnd** — each stage's `StageStart` precedes its
+//!    `StageEnd`, one of each per stage.
+//! 4. **Monotone stamps** — sequence numbers are strictly increasing
+//!    (dense from 0) and timestamps are non-decreasing.
+//! 5. **Append-only rotation** — a log read at any instant is a prefix
+//!    of every later read, across segment rotation.
+
+pub mod event;
+pub mod metrics;
+pub mod replay;
+pub mod sink;
+pub mod wal;
+pub mod watch;
+
+pub use event::{EventRecord, ObsEvent};
+pub use metrics::MetricsSnapshot;
+pub use replay::{replay_wal, WalReplay};
+pub use sink::WalSink;
+pub use wal::{EventLog, WalHeader, WalWriter};
+pub use watch::WatchView;
+
+use std::fmt;
+
+/// Typed observability error: I/O, framing corruption that is not a
+/// recoverable torn tail, or a record that decodes to nothing we know.
+#[derive(Debug)]
+pub enum ObsError {
+    Io(std::io::Error),
+    /// A checksummed record carries a payload we cannot decode — this is
+    /// a version/foreign-writer problem, not a torn write, so the reader
+    /// refuses instead of truncating.
+    Decode(String),
+    /// The log is structurally unusable for the requested operation
+    /// (e.g. replay of a WAL with no `RunStart`).
+    Incomplete(String),
+}
+
+impl fmt::Display for ObsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ObsError::Io(e) => write!(f, "WAL I/O error: {e}"),
+            ObsError::Decode(why) => write!(f, "WAL record decode error: {why}"),
+            ObsError::Incomplete(why) => write!(f, "WAL incomplete: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ObsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ObsError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ObsError {
+    fn from(e: std::io::Error) -> Self {
+        ObsError::Io(e)
+    }
+}

@@ -1,0 +1,221 @@
+//! Reconstruct Stage-I artifacts from a WAL.
+//!
+//! The log records every occupancy sample the engine streamed, so
+//! replaying it through [`OccupancyTrace::record`] rebuilds exactly the
+//! traces a `MaterializeSink` would have built in the live run — the
+//! same samples, the same coalescing, the same `end_time`, bit for bit.
+//! That is how the lab resumes an interrupted validate job: if the job
+//! directory is gone but its WAL survived, [`replay_wal`] recovers the
+//! trace (and, for a cleanly closed run, the [`AccessStats`]) without
+//! re-simulating.
+
+use std::path::Path;
+
+use crate::trace::{AccessStats, OccupancyTrace};
+
+use super::event::ObsEvent;
+use super::wal::EventLog;
+use super::ObsError;
+
+/// Everything a WAL can give back about its run.
+#[derive(Debug, Clone)]
+pub struct WalReplay {
+    /// Run id from `RunStart` (equals the segment-header id).
+    pub run_id: u64,
+    /// One finalized trace per memory, in announcement order —
+    /// bit-identical to the live run's materialized traces.
+    pub traces: Vec<OccupancyTrace>,
+    /// Access statistics, present only when the run closed cleanly with
+    /// stats attached.
+    pub stats: Option<AccessStats>,
+    /// True when the log ends with `RunEnd` — a cleanly closed run. A
+    /// false here means the replay covers a valid prefix of a crashed or
+    /// still-running simulation (traces are finalized at the last
+    /// observed instant).
+    pub complete: bool,
+    /// End time the traces were finalized at.
+    pub end: u64,
+}
+
+/// Replay a WAL directory into materialized, finalized traces.
+///
+/// Errors: [`ObsError::Incomplete`] when the log has no `RunStart` (too
+/// little survived to reconstruct anything); [`ObsError::Decode`] when
+/// the log is structurally impossible for our writer (sample for an
+/// unannounced memory, duplicate `RunStart`, records after `RunEnd`).
+/// A torn tail is *not* an error — the longest valid prefix replays.
+pub fn replay_wal(dir: &Path) -> Result<WalReplay, ObsError> {
+    let log = EventLog::open(dir)?;
+    replay_log(&log)
+}
+
+/// Replay an already-opened log (see [`replay_wal`]).
+pub fn replay_log(log: &EventLog) -> Result<WalReplay, ObsError> {
+    let mut records = log.records.iter();
+    let Some(first) = records.next() else {
+        return Err(ObsError::Incomplete(
+            "log has no records (no RunStart survived)".to_string(),
+        ));
+    };
+    let ObsEvent::RunStart { run_id, ref memories } = first.event else {
+        return Err(ObsError::Incomplete(format!(
+            "first record is {}, expected run_start",
+            first.event.kind_label()
+        )));
+    };
+
+    let mut traces: Vec<OccupancyTrace> = memories
+        .iter()
+        .map(|m| OccupancyTrace::new(&m.name, m.capacity))
+        .collect();
+    let mut stats: Option<AccessStats> = None;
+    let mut complete = false;
+    let mut last_t = first.t;
+
+    for rec in records {
+        if complete {
+            return Err(ObsError::Decode(format!(
+                "record seq {} follows RunEnd",
+                rec.seq
+            )));
+        }
+        last_t = last_t.max(rec.t);
+        match rec.event {
+            ObsEvent::RunStart { .. } => {
+                return Err(ObsError::Decode(format!(
+                    "duplicate RunStart at seq {}",
+                    rec.seq
+                )));
+            }
+            ObsEvent::Sample { mem, needed, obsolete } => {
+                let Some(trace) = traces.get_mut(mem as usize) else {
+                    return Err(ObsError::Decode(format!(
+                        "sample for unannounced memory index {mem}"
+                    )));
+                };
+                trace.record(rec.t, needed, obsolete);
+            }
+            ObsEvent::RunEnd { end, stats: ref s } => {
+                last_t = last_t.max(end);
+                stats = s.clone();
+                complete = true;
+            }
+            // Structural events don't change occupancy.
+            ObsEvent::StageStart { .. }
+            | ObsEvent::StageEnd { .. }
+            | ObsEvent::Admit { .. }
+            | ObsEvent::Complete { .. }
+            | ObsEvent::BankSpan { .. }
+            | ObsEvent::WakeStall { .. } => {}
+        }
+    }
+
+    for trace in &mut traces {
+        trace.finalize(last_t);
+    }
+    Ok(WalReplay {
+        run_id,
+        traces,
+        stats,
+        complete,
+        end: last_t,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use std::fs;
+    use std::path::PathBuf;
+
+    use crate::trace::sink::{MaterializeSink, MemoryDesc, TraceSink};
+    use crate::trace::TeeSink;
+    use crate::util::rng::Rng;
+
+    use super::super::sink::WalSink;
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-replay-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn mems() -> Vec<MemoryDesc> {
+        vec![
+            MemoryDesc { name: "sram".into(), capacity: 1 << 20 },
+            MemoryDesc { name: "kv".into(), capacity: 1 << 18 },
+        ]
+    }
+
+    fn assert_bit_identical(a: &OccupancyTrace, b: &OccupancyTrace) {
+        assert_eq!(a.memory, b.memory);
+        assert_eq!(a.capacity, b.capacity);
+        assert_eq!(a.samples(), b.samples());
+        assert_eq!(a.end_time(), b.end_time());
+        assert_eq!(a.avg_needed().to_bits(), b.avg_needed().to_bits());
+    }
+
+    #[test]
+    fn replay_matches_materialize_on_random_streams() {
+        crate::util::proptest::check("replay-vs-materialize", 25, |rng: &mut Rng| {
+            let dir = tmp_dir(&format!("prop-{}", rng.below(u32::MAX as u64)));
+            let mut wal = WalSink::create(&dir, 0xfeed, 0)
+                .unwrap()
+                .with_rotate_bytes(256); // force rotation mid-run
+            let mut mat = MaterializeSink::new();
+            {
+                let mut tee = TeeSink::new(vec![&mut mat, &mut wal]);
+                tee.begin(&mems());
+                let mut t = 0u64;
+                for _ in 0..rng.range(1, 120) {
+                    t += rng.below(40);
+                    let mem = rng.below(2) as usize;
+                    tee.on_sample(mem, t, rng.below(1 << 16), rng.below(1 << 10));
+                }
+                tee.finish(t + rng.range(0, 20));
+            }
+            wal.close(None).unwrap();
+
+            let replay = replay_wal(&dir).unwrap();
+            assert!(replay.complete);
+            assert_eq!(replay.run_id, 0xfeed);
+            let live = mat.into_traces();
+            assert_eq!(replay.traces.len(), live.len());
+            for (r, l) in replay.traces.iter().zip(&live) {
+                assert_bit_identical(r, l);
+            }
+            let _ = fs::remove_dir_all(&dir);
+        });
+    }
+
+    #[test]
+    fn incomplete_log_replays_its_prefix() {
+        let dir = tmp_dir("prefix");
+        let mut wal = WalSink::create(&dir, 9, 0).unwrap();
+        wal.begin(&mems());
+        wal.on_sample(0, 3, 77, 0);
+        wal.on_sample(1, 8, 11, 2);
+        drop(wal); // crash: no finish, no close
+
+        let replay = replay_wal(&dir).unwrap();
+        assert!(!replay.complete);
+        assert_eq!(replay.end, 8, "finalized at the last observed instant");
+        assert_eq!(replay.traces[0].samples().last().unwrap().needed, 77);
+        replay.traces[0].validate().unwrap();
+        replay.traces[1].validate().unwrap();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_log_is_incomplete_error() {
+        let dir = tmp_dir("empty");
+        let wal = WalSink::create(&dir, 1, 0).unwrap();
+        drop(wal); // header only, zero records
+        let err = replay_wal(&dir).unwrap_err();
+        assert!(matches!(err, ObsError::Incomplete(_)), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,228 @@
+//! [`WalSink`]: the [`TraceSink`] that feeds a write-ahead log from a
+//! live simulation.
+//!
+//! `TraceSink` methods cannot return errors (the engines treat sinks as
+//! infallible observers), so the sink is **sticky-failing**: the first
+//! I/O error is stored and every later call becomes a no-op; the error
+//! surfaces from [`WalSink::close`]. This keeps a broken disk from
+//! aborting a simulation whose materialized results are still good.
+//!
+//! ## Protocol
+//!
+//! * [`TraceSink::begin`] writes the `RunStart` record (seq 0, t 0).
+//! * Samples and live [`RunEvent`]s append in arrival order with a
+//!   strictly monotone sequence number; envelope timestamps are clamped
+//!   non-decreasing so every written log satisfies the ordering
+//!   invariants of [`super`] by construction.
+//! * [`TraceSink::finish`] only **remembers** the end time — it does
+//!   not write `RunEnd`, because retrospective Stage-III events (bank
+//!   spans, wake stalls) arrive after the trace stream ends, via
+//!   [`WalSink::append_event`].
+//! * [`WalSink::close`] writes the terminal `RunEnd` (with the run's
+//!   [`AccessStats`] when the caller has them) and seals the final
+//!   segment. A log missing `RunEnd` is, by definition, a crashed or
+//!   in-flight run.
+
+use std::path::Path;
+
+use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
+use crate::trace::AccessStats;
+
+use super::event::{encode, EventRecord, ObsEvent};
+use super::wal::WalWriter;
+use super::ObsError;
+
+/// Append-only WAL producer implementing [`TraceSink`]. Tee it next to
+/// a `MaterializeSink` (or any other sink) to observe a run without
+/// changing its results.
+pub struct WalSink {
+    writer: WalWriter,
+    seq: u64,
+    last_t: u64,
+    end: Option<u64>,
+    error: Option<ObsError>,
+}
+
+impl WalSink {
+    /// Create the log directory and segment 0. `run_id` stamps the
+    /// header and the `RunStart` record; pass `wall_unix_ms = 0` for
+    /// byte-deterministic logs (the lab does).
+    pub fn create(dir: &Path, run_id: u64, wall_unix_ms: u64) -> std::io::Result<WalSink> {
+        Ok(WalSink {
+            writer: WalWriter::create(dir, run_id, wall_unix_ms)?,
+            seq: 0,
+            last_t: 0,
+            end: None,
+            error: None,
+        })
+    }
+
+    /// Override the segment rotation threshold (see
+    /// [`WalWriter::with_rotate_bytes`]).
+    pub fn with_rotate_bytes(mut self, bytes: u64) -> WalSink {
+        self.writer = self.writer.with_rotate_bytes(bytes);
+        self
+    }
+
+    pub fn run_id(&self) -> u64 {
+        self.writer.run_id()
+    }
+
+    /// The first I/O error hit so far, if any (the sink is a no-op once
+    /// this is set; [`WalSink::close`] returns it).
+    pub fn error(&self) -> Option<&ObsError> {
+        self.error.as_ref()
+    }
+
+    fn write(&mut self, t: u64, event: ObsEvent) {
+        if self.error.is_some() {
+            return;
+        }
+        // Clamp: retrospective events carry their true times in the
+        // payload; the envelope stamp must never go backwards.
+        let t = t.max(self.last_t);
+        let rec = EventRecord { seq: self.seq, t, event };
+        if let Err(e) = self.writer.append(&encode(&rec)) {
+            self.error = Some(ObsError::Io(e));
+            return;
+        }
+        self.seq += 1;
+        self.last_t = t;
+    }
+
+    /// Append a post-stream event (Stage-III bank spans / wake stalls
+    /// arrive after `finish`). `t` is the envelope stamp and is clamped
+    /// non-decreasing like every other record.
+    pub fn append_event(&mut self, t: u64, event: &RunEvent) {
+        self.write(t, ObsEvent::of_run_event(event));
+    }
+
+    /// Write the terminal `RunEnd` record and seal the log. The end
+    /// time is the one `finish` reported (falling back to the last
+    /// envelope stamp for runs that never finished a trace stream).
+    pub fn close(mut self, stats: Option<&AccessStats>) -> Result<(), ObsError> {
+        let end = self.end.unwrap_or(self.last_t);
+        self.write(end, ObsEvent::RunEnd { end, stats: stats.cloned() });
+        if let Some(e) = self.error {
+            return Err(e);
+        }
+        self.writer.close()?;
+        Ok(())
+    }
+}
+
+impl TraceSink for WalSink {
+    fn begin(&mut self, memories: &[MemoryDesc]) {
+        let run_id = self.writer.run_id();
+        self.write(0, ObsEvent::RunStart { run_id, memories: memories.to_vec() });
+    }
+
+    fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64) {
+        self.write(t, ObsEvent::Sample { mem: mem as u32, needed, obsolete });
+    }
+
+    fn on_event(&mut self, t: u64, event: &RunEvent) {
+        self.write(t, ObsEvent::of_run_event(event));
+    }
+
+    fn finish(&mut self, end: u64) {
+        self.end = Some(end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::fs;
+    use std::path::PathBuf;
+
+    use super::super::wal::EventLog;
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-walsink-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn mems() -> Vec<MemoryDesc> {
+        vec![
+            MemoryDesc { name: "sram".into(), capacity: 1024 },
+            MemoryDesc { name: "kv".into(), capacity: 512 },
+        ]
+    }
+
+    #[test]
+    fn full_protocol_produces_an_ordered_complete_log() {
+        let dir = tmp_dir("protocol");
+        let mut sink = WalSink::create(&dir, 0x51, 0).unwrap();
+        sink.begin(&mems());
+        sink.on_event(0, &RunEvent::StageStart { stage: 0 });
+        sink.on_sample(0, 0, 100, 0);
+        sink.on_sample(1, 5, 40, 8);
+        sink.on_event(9, &RunEvent::StageEnd { stage: 0 });
+        sink.finish(12);
+        sink.append_event(
+            12,
+            &RunEvent::BankSpan { bank: 0, state: "gated", t0: 3, t1: 12 },
+        );
+        sink.close(None).unwrap();
+
+        let log = EventLog::open(&dir).unwrap();
+        assert!(log.complete());
+        assert!(!log.truncated);
+        assert_eq!(log.records.len(), 7);
+        assert!(matches!(log.records[0].event, ObsEvent::RunStart { .. }));
+        assert!(matches!(
+            log.records.last().unwrap().event,
+            ObsEvent::RunEnd { end: 12, .. }
+        ));
+        // Envelope stamps: seq dense from 0, t non-decreasing.
+        for (i, r) in log.records.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+        }
+        for w in log.records.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unclosed_sink_leaves_an_incomplete_log() {
+        let dir = tmp_dir("unclosed");
+        let mut sink = WalSink::create(&dir, 1, 0).unwrap();
+        sink.begin(&mems());
+        sink.on_sample(0, 4, 10, 0);
+        drop(sink);
+        let log = EventLog::open(&dir).unwrap();
+        assert_eq!(log.records.len(), 2);
+        assert!(!log.complete());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn envelope_time_never_goes_backwards() {
+        let dir = tmp_dir("clamp");
+        let mut sink = WalSink::create(&dir, 1, 0).unwrap();
+        sink.begin(&mems());
+        sink.on_sample(0, 50, 1, 0);
+        // Retrospective event stamped "earlier" than the stream head.
+        sink.append_event(
+            10,
+            &RunEvent::WakeStall { bank: 0, at: 10, stall_cycles: 4 },
+        );
+        sink.close(None).unwrap();
+        let log = EventLog::open(&dir).unwrap();
+        for w in log.records.windows(2) {
+            assert!(w[0].t <= w[1].t, "clamped envelope must be monotone");
+        }
+        // ...while the payload keeps the true time.
+        assert!(matches!(
+            log.records[2].event,
+            ObsEvent::WakeStall { at: 10, .. }
+        ));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

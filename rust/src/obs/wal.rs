@@ -1,0 +1,480 @@
+//! The on-disk write-ahead log: headered segments of length-prefixed,
+//! checksummed records.
+//!
+//! ## Layout
+//!
+//! A WAL is a directory. The writer appends to `active.seg`; when the
+//! segment body exceeds the rotation threshold the file is **sealed by
+//! rename** to its final numbered name (`000000.seg`, `000001.seg`, …)
+//! — the tmp+rename idiom, so a numbered segment is always complete up
+//! to at most one torn tail record. A cleanly closed log contains only
+//! numbered segments; a surviving `active.seg` marks an in-flight or
+//! crashed run.
+//!
+//! Each segment opens with a fixed 28-byte header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"TWAL"
+//!      4     4  format version (u32 LE)
+//!      8     8  run id (u64 LE)
+//!     16     4  segment index (u32 LE)
+//!     20     8  wall-clock unix ms at creation (u64 LE)
+//! ```
+//!
+//! The wall clock lives **only** here — record payloads carry
+//! simulation time — so two identical runs differ in at most the first
+//! 28 bytes of each segment (`tail -c +29 | cmp` is the CI determinism
+//! gate), and deterministic producers (the lab) pass `wall_unix_ms = 0`
+//! for fully identical bytes.
+//!
+//! Records are framed `len (u32 LE) | payload | fnv64(payload) (u64
+//! LE)`; payload encoding lives in [`super::event`]. The reader
+//! ([`EventLog::open`]) recovers the **longest valid prefix**: a short
+//! frame, an implausible length, or a checksum mismatch truncates the
+//! log there (`truncated = true`) instead of failing — but a record
+//! that checksums correctly and still does not decode is a real
+//! [`ObsError::Decode`], because silently dropping well-formed foreign
+//! data would hide version skew.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::fnv::Fnv64;
+
+use super::event::{decode, EventRecord, ObsEvent};
+use super::ObsError;
+
+pub const WAL_MAGIC: [u8; 4] = *b"TWAL";
+pub const WAL_VERSION: u32 = 1;
+/// Fixed segment header length in bytes (strip with `tail -c +29`).
+pub const WAL_HEADER_LEN: usize = 28;
+/// The in-flight segment name; sealed segments are `{index:06}.seg`.
+pub const ACTIVE_SEGMENT: &str = "active.seg";
+/// Default segment rotation threshold (body bytes, excluding header).
+pub const DEFAULT_ROTATE_BYTES: u64 = 4 * 1024 * 1024;
+/// Frames claiming more than this are treated as tail corruption.
+const MAX_RECORD_LEN: u32 = 1 << 24;
+
+/// Decoded segment header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalHeader {
+    pub version: u32,
+    pub run_id: u64,
+    pub segment: u32,
+    pub wall_unix_ms: u64,
+}
+
+impl WalHeader {
+    pub fn encode(&self) -> [u8; WAL_HEADER_LEN] {
+        let mut out = [0u8; WAL_HEADER_LEN];
+        out[0..4].copy_from_slice(&WAL_MAGIC);
+        out[4..8].copy_from_slice(&self.version.to_le_bytes());
+        out[8..16].copy_from_slice(&self.run_id.to_le_bytes());
+        out[16..20].copy_from_slice(&self.segment.to_le_bytes());
+        out[20..28].copy_from_slice(&self.wall_unix_ms.to_le_bytes());
+        out
+    }
+
+    /// `None` for a short or foreign header (torn tail, not our file).
+    pub fn decode(bytes: &[u8]) -> Option<WalHeader> {
+        if bytes.len() < WAL_HEADER_LEN || bytes[0..4] != WAL_MAGIC {
+            return None;
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != WAL_VERSION {
+            return None;
+        }
+        Some(WalHeader {
+            version,
+            run_id: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            segment: u32::from_le_bytes(bytes[16..20].try_into().unwrap()),
+            wall_unix_ms: u64::from_le_bytes(bytes[20..28].try_into().unwrap()),
+        })
+    }
+}
+
+fn segment_name(index: u32) -> String {
+    format!("{index:06}.seg")
+}
+
+/// Append-only segment writer. Create one per run; frame payloads with
+/// [`WalWriter::append`]; [`WalWriter::close`] seals the final segment.
+/// Dropping without `close` leaves `active.seg` behind — exactly the
+/// crashed-run shape the reader recovers from.
+pub struct WalWriter {
+    dir: PathBuf,
+    file: File,
+    run_id: u64,
+    wall_unix_ms: u64,
+    segment: u32,
+    body_bytes: u64,
+    rotate_bytes: u64,
+}
+
+impl WalWriter {
+    /// Create (or reset) the log directory and open segment 0. Any
+    /// `*.seg` files from a previous run of the same directory are
+    /// removed first — a WAL is rewritten whole, never appended across
+    /// runs. Pass `wall_unix_ms = 0` for byte-deterministic logs.
+    pub fn create(dir: &Path, run_id: u64, wall_unix_ms: u64) -> std::io::Result<Self> {
+        fs::create_dir_all(dir)?;
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().is_some_and(|e| e == "seg") {
+                fs::remove_file(&path)?;
+            }
+        }
+        let mut w = WalWriter {
+            dir: dir.to_path_buf(),
+            // Placeholder; open_active replaces it immediately.
+            file: File::create(dir.join(ACTIVE_SEGMENT))?,
+            run_id,
+            wall_unix_ms,
+            segment: 0,
+            body_bytes: 0,
+            rotate_bytes: DEFAULT_ROTATE_BYTES,
+        };
+        w.write_header()?;
+        Ok(w)
+    }
+
+    /// Override the rotation threshold (body bytes per segment). Small
+    /// values force rotation early — the tests use this to exercise the
+    /// append-only-across-rotation property.
+    pub fn with_rotate_bytes(mut self, bytes: u64) -> Self {
+        self.rotate_bytes = bytes.max(1);
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn run_id(&self) -> u64 {
+        self.run_id
+    }
+
+    /// Index of the currently active segment.
+    pub fn segment_index(&self) -> u32 {
+        self.segment
+    }
+
+    fn write_header(&mut self) -> std::io::Result<()> {
+        let header = WalHeader {
+            version: WAL_VERSION,
+            run_id: self.run_id,
+            segment: self.segment,
+            wall_unix_ms: self.wall_unix_ms,
+        };
+        self.file.write_all(&header.encode())
+    }
+
+    /// Frame and append one record payload; rotates the segment once
+    /// the body crosses the threshold (a record never spans segments).
+    pub fn append(&mut self, payload: &[u8]) -> std::io::Result<()> {
+        let mut frame = Vec::with_capacity(payload.len() + 12);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(payload);
+        let mut h = Fnv64::new();
+        h.bytes(payload);
+        frame.extend_from_slice(&h.finish().to_le_bytes());
+        self.file.write_all(&frame)?;
+        self.body_bytes += frame.len() as u64;
+        if self.body_bytes >= self.rotate_bytes {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    /// Seal `active.seg` under its final numbered name (atomic rename).
+    fn seal_active(&mut self) -> std::io::Result<()> {
+        self.file.flush()?;
+        self.file.sync_all()?;
+        fs::rename(
+            self.dir.join(ACTIVE_SEGMENT),
+            self.dir.join(segment_name(self.segment)),
+        )
+    }
+
+    fn rotate(&mut self) -> std::io::Result<()> {
+        self.seal_active()?;
+        self.segment += 1;
+        self.body_bytes = 0;
+        self.file = File::create(self.dir.join(ACTIVE_SEGMENT))?;
+        self.write_header()
+    }
+
+    /// Seal the final segment. After a clean close the directory holds
+    /// only numbered segments.
+    pub fn close(mut self) -> std::io::Result<()> {
+        self.seal_active()
+    }
+}
+
+/// A decoded log: every recoverable record of every segment, in order.
+#[derive(Debug, Clone)]
+pub struct EventLog {
+    /// Header of the first segment (`None` for an empty/headerless log).
+    pub header: Option<WalHeader>,
+    pub records: Vec<EventRecord>,
+    /// True when a torn tail (short frame / bad checksum / short
+    /// header) was discarded — the records are the longest valid
+    /// prefix.
+    pub truncated: bool,
+    /// Segment files the reader consumed (including a torn one).
+    pub segments: u32,
+}
+
+impl EventLog {
+    /// Read a WAL directory: numbered segments in index order, then
+    /// `active.seg` if present. Stops at the first torn point.
+    pub fn open(dir: &Path) -> Result<EventLog, ObsError> {
+        let mut numbered: Vec<(u32, PathBuf)> = Vec::new();
+        let mut active: Option<PathBuf> = None;
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if name == ACTIVE_SEGMENT {
+                active = Some(path);
+            } else if let Some(stem) = name.strip_suffix(".seg") {
+                if stem.len() == 6 {
+                    if let Ok(ix) = stem.parse::<u32>() {
+                        numbered.push((ix, path));
+                    }
+                }
+            }
+        }
+        numbered.sort_by_key(|(ix, _)| *ix);
+        let paths: Vec<PathBuf> = numbered
+            .into_iter()
+            .map(|(_, p)| p)
+            .chain(active)
+            .collect();
+
+        let mut log = EventLog {
+            header: None,
+            records: Vec::new(),
+            truncated: false,
+            segments: 0,
+        };
+        for path in paths {
+            let bytes = fs::read(&path)?;
+            log.segments += 1;
+            let Some(header) = WalHeader::decode(&bytes) else {
+                // Short or foreign header: torn tail at a segment
+                // boundary. Everything before it is the valid prefix.
+                log.truncated = true;
+                return Ok(log);
+            };
+            if let Some(first) = log.header {
+                if header.run_id != first.run_id {
+                    return Err(ObsError::Decode(format!(
+                        "segment {} carries run id {:016x}, expected {:016x}",
+                        path.display(),
+                        header.run_id,
+                        first.run_id
+                    )));
+                }
+            } else {
+                log.header = Some(header);
+            }
+            if !read_segment_body(&bytes[WAL_HEADER_LEN..], &mut log.records)? {
+                log.truncated = true;
+                return Ok(log);
+            }
+        }
+        Ok(log)
+    }
+
+    /// Run id from the first segment header.
+    pub fn run_id(&self) -> Option<u64> {
+        self.header.map(|h| h.run_id)
+    }
+
+    /// True when the log ends with the `RunEnd` record — a cleanly
+    /// closed run.
+    pub fn complete(&self) -> bool {
+        matches!(
+            self.records.last(),
+            Some(EventRecord {
+                event: ObsEvent::RunEnd { .. },
+                ..
+            })
+        )
+    }
+}
+
+/// Parse one segment body; push decoded records. Returns `false` when a
+/// torn tail was hit (caller stops reading further segments).
+fn read_segment_body(
+    mut body: &[u8],
+    out: &mut Vec<EventRecord>,
+) -> Result<bool, ObsError> {
+    while !body.is_empty() {
+        if body.len() < 4 {
+            return Ok(false);
+        }
+        let len = u32::from_le_bytes(body[0..4].try_into().unwrap());
+        if len > MAX_RECORD_LEN {
+            return Ok(false);
+        }
+        let frame_len = 4 + len as usize + 8;
+        if body.len() < frame_len {
+            return Ok(false);
+        }
+        let payload = &body[4..4 + len as usize];
+        let sum = u64::from_le_bytes(body[4 + len as usize..frame_len].try_into().unwrap());
+        let mut h = Fnv64::new();
+        h.bytes(payload);
+        if h.finish() != sum {
+            return Ok(false);
+        }
+        out.push(decode(payload)?);
+        body = &body[frame_len..];
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::encode;
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-wal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rec(seq: u64, t: u64) -> EventRecord {
+        EventRecord {
+            seq,
+            t,
+            event: ObsEvent::Sample { mem: 0, needed: seq * 10, obsolete: 0 },
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip_and_clean_close_leaves_no_active_segment() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = WalWriter::create(&dir, 0xabcd, 0).unwrap();
+        let recs: Vec<EventRecord> = (0..10).map(|i| rec(i, i * 7)).collect();
+        for r in &recs {
+            w.append(&encode(r)).unwrap();
+        }
+        w.close().unwrap();
+        assert!(!dir.join(ACTIVE_SEGMENT).exists());
+        assert!(dir.join("000000.seg").exists());
+
+        let log = EventLog::open(&dir).unwrap();
+        assert_eq!(log.run_id(), Some(0xabcd));
+        assert_eq!(log.records, recs);
+        assert!(!log.truncated);
+        assert_eq!(log.segments, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_seals_numbered_segments_in_order() {
+        let dir = tmp_dir("rotate");
+        // ~33-byte frames, rotate every 64 body bytes: 2 records/segment.
+        let mut w = WalWriter::create(&dir, 7, 0).unwrap().with_rotate_bytes(64);
+        let recs: Vec<EventRecord> = (0..9).map(|i| rec(i, i)).collect();
+        for r in &recs {
+            w.append(&encode(r)).unwrap();
+        }
+        assert!(w.segment_index() >= 3, "rotation must have happened");
+        w.close().unwrap();
+        assert!(!dir.join(ACTIVE_SEGMENT).exists());
+        assert!(dir.join("000000.seg").exists());
+        assert!(dir.join("000001.seg").exists());
+
+        let log = EventLog::open(&dir).unwrap();
+        assert_eq!(log.records, recs, "order survives rotation");
+        assert!(log.segments >= 4);
+        // Every segment header agrees on the run id and counts up.
+        for ix in 0..log.segments {
+            let bytes = fs::read(dir.join(segment_name(ix))).unwrap();
+            let h = WalHeader::decode(&bytes).unwrap();
+            assert_eq!(h.run_id, 7);
+            assert_eq!(h.segment, ix);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn uncleanly_dropped_writer_is_still_readable() {
+        let dir = tmp_dir("crash");
+        let mut w = WalWriter::create(&dir, 1, 0).unwrap();
+        w.append(&encode(&rec(0, 0))).unwrap();
+        w.append(&encode(&rec(1, 5))).unwrap();
+        drop(w); // no close: active.seg remains
+        assert!(dir.join(ACTIVE_SEGMENT).exists());
+        let log = EventLog::open(&dir).unwrap();
+        assert_eq!(log.records.len(), 2);
+        assert!(!log.complete());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = tmp_dir("torn");
+        let mut w = WalWriter::create(&dir, 1, 0).unwrap();
+        for i in 0..3 {
+            w.append(&encode(&rec(i, i))).unwrap();
+        }
+        w.close().unwrap();
+        let seg = dir.join("000000.seg");
+        let mut bytes = fs::read(&seg).unwrap();
+        let cut = bytes.len() - 5; // mid-checksum of the last record
+        bytes.truncate(cut);
+        fs::write(&seg, &bytes).unwrap();
+
+        let log = EventLog::open(&dir).unwrap();
+        assert!(log.truncated);
+        assert_eq!(log.records.len(), 2, "longest valid prefix");
+        assert_eq!(log.records, vec![rec(0, 0), rec(1, 1)]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn create_resets_a_previous_log() {
+        let dir = tmp_dir("reset");
+        let mut w = WalWriter::create(&dir, 1, 0).unwrap().with_rotate_bytes(1);
+        w.append(&encode(&rec(0, 0))).unwrap(); // rotates: 000000.seg
+        w.append(&encode(&rec(1, 1))).unwrap();
+        w.close().unwrap();
+        assert!(dir.join("000001.seg").exists());
+
+        let mut w = WalWriter::create(&dir, 2, 0).unwrap();
+        w.append(&encode(&rec(0, 0))).unwrap();
+        w.close().unwrap();
+        let log = EventLog::open(&dir).unwrap();
+        assert_eq!(log.run_id(), Some(2));
+        assert_eq!(log.records.len(), 1, "old segments are gone");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_run_ids_across_segments_are_rejected() {
+        let dir = tmp_dir("mismatch");
+        let mut w = WalWriter::create(&dir, 1, 0).unwrap().with_rotate_bytes(1);
+        w.append(&encode(&rec(0, 0))).unwrap();
+        w.close().unwrap(); // 000000.seg + 000001.seg (empty body)
+        // Forge the second segment's run id.
+        let seg = dir.join("000001.seg");
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes[8..16].copy_from_slice(&99u64.to_le_bytes());
+        fs::write(&seg, &bytes).unwrap();
+        let err = EventLog::open(&dir).unwrap_err();
+        assert!(matches!(err, ObsError::Decode(_)), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,166 @@
+//! The `repro watch` live view: tail a WAL directory and render the
+//! run's progress as a small text panel.
+//!
+//! A view is a pure function of one log read ([`WatchView::load`] →
+//! [`WatchView::render`]), so watching is just re-reading the directory
+//! on an interval — the WAL's append-only prefix property guarantees
+//! each render is a refinement of the previous one. A directory that
+//! does not exist yet (run not started) renders as a waiting line
+//! rather than an error, so `repro watch` can be started before the
+//! run it observes.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::table::fmt_mib;
+
+use super::metrics::MetricsSnapshot;
+use super::wal::EventLog;
+use super::ObsError;
+
+/// One rendered observation of a WAL directory.
+#[derive(Debug, Clone)]
+pub struct WatchView {
+    /// `None` while the WAL directory does not exist yet.
+    pub snapshot: Option<MetricsSnapshot>,
+}
+
+impl WatchView {
+    /// Read the log and fold it. A missing directory yields the
+    /// "waiting" view; anything else propagates.
+    pub fn load(dir: &Path) -> Result<WatchView, ObsError> {
+        match EventLog::open(dir) {
+            Ok(log) => Ok(WatchView {
+                snapshot: Some(MetricsSnapshot::from_log(&log)),
+            }),
+            Err(ObsError::Io(e)) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(WatchView { snapshot: None })
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// True once the observed run has written its `RunEnd` record —
+    /// the watcher's stop condition.
+    pub fn complete(&self) -> bool {
+        self.snapshot.as_ref().is_some_and(|s| s.complete)
+    }
+
+    /// Render the panel. Deterministic for a given log state.
+    pub fn render(&self) -> String {
+        let Some(s) = &self.snapshot else {
+            return "watch: waiting for WAL directory to appear\n".to_string();
+        };
+        let mut out = String::with_capacity(512);
+        let status = if s.complete {
+            "complete"
+        } else if s.truncated {
+            "torn tail"
+        } else {
+            "in flight"
+        };
+        let _ = writeln!(out, "run {:016x}  [{status}]", s.run_id);
+        let _ = writeln!(out, "  cycles   {}", s.cycles);
+        let _ = writeln!(
+            out,
+            "  events   {}  ({} samples)",
+            s.events_total,
+            s.samples_total()
+        );
+        let _ = writeln!(
+            out,
+            "  stages   {} started / {} completed",
+            s.stages_started, s.stages_completed
+        );
+        if s.requests_admitted > 0 || s.requests_completed > 0 {
+            let _ = writeln!(
+                out,
+                "  serving  {} admitted / {} completed",
+                s.requests_admitted, s.requests_completed
+            );
+        }
+        for m in &s.memories {
+            let _ = writeln!(
+                out,
+                "  mem {:<10} cur {:>10}  peak {:>10}  cap {:>10}",
+                m.name,
+                fmt_mib(m.current_occupied),
+                fmt_mib(m.peak_occupied),
+                fmt_mib(m.capacity)
+            );
+        }
+        if !s.bank_states.is_empty() {
+            let states = s
+                .bank_states
+                .iter()
+                .map(|(state, count, cycles)| format!("{state} {count}x/{cycles}cy"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            let _ = writeln!(out, "  banks    {states}");
+        }
+        if s.wake_stalls > 0 {
+            let _ = writeln!(
+                out,
+                "  stalls   {} wakes, {} cycles ({:.2}%)",
+                s.wake_stalls,
+                s.wake_stall_cycles,
+                s.stall_pct()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
+
+    use super::super::sink::WalSink;
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-watch-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn missing_directory_renders_waiting() {
+        let dir = tmp_dir("waiting");
+        let view = WatchView::load(&dir).unwrap();
+        assert!(view.snapshot.is_none());
+        assert!(!view.complete());
+        assert!(view.render().contains("waiting"));
+    }
+
+    #[test]
+    fn in_flight_then_complete() {
+        let dir = tmp_dir("flight");
+        let mut wal = WalSink::create(&dir, 0xab, 0).unwrap();
+        wal.begin(&[MemoryDesc { name: "sram".into(), capacity: 1 << 20 }]);
+        wal.on_sample(0, 5, 4096, 0);
+
+        // Note: the live segment is readable mid-run.
+        let view = WatchView::load(&dir).unwrap();
+        assert!(!view.complete());
+        let text = view.render();
+        assert!(text.contains("[in flight]"), "{text}");
+        assert!(text.contains("cycles   5"), "{text}");
+        assert!(text.contains("mem sram"), "{text}");
+
+        wal.finish(10);
+        wal.append_event(10, &RunEvent::WakeStall { bank: 0, at: 7, stall_cycles: 2 });
+        wal.close(None).unwrap();
+        let view = WatchView::load(&dir).unwrap();
+        assert!(view.complete());
+        let text = view.render();
+        assert!(text.contains("[complete]"), "{text}");
+        assert!(text.contains("stalls   1 wakes"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

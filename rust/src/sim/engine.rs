@@ -27,7 +27,7 @@ use anyhow::{Context, Result};
 
 use crate::config::AccelConfig;
 use crate::memory::MemorySystem;
-use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
 use crate::workload::{
     KvResidency, OpClass, OpId, OpKind, TensorKind, WorkloadGraph,
 };
@@ -135,6 +135,14 @@ pub struct Simulator<'g> {
     /// Last (needed, obsolete) forwarded to the sink, per memory
     /// (suppresses no-change emissions between events).
     last_emitted: Vec<(u64, u64)>,
+    /// Ops per dataflow stage (for StageStart/StageEnd events).
+    stage_total: BTreeMap<u32, u32>,
+    stage_issued: BTreeMap<u32, u32>,
+    stage_done: BTreeMap<u32, u32>,
+    /// Structural events raised during the current event batch, all at
+    /// `now`; flushed to the sink at batch boundaries beside the
+    /// occupancy emission (dropped when no sink is attached).
+    pending_events: Vec<RunEvent>,
 }
 
 impl<'g> Simulator<'g> {
@@ -167,6 +175,10 @@ impl<'g> Simulator<'g> {
         let mut mem_groups: Vec<u8> = cfg.topology.mem_of_sa.clone();
         mem_groups.sort_unstable();
         mem_groups.dedup();
+        let mut stage_total: BTreeMap<u32, u32> = BTreeMap::new();
+        for op in &graph.ops {
+            *stage_total.entry(op.stage).or_insert(0) += 1;
+        }
         Ok(Self {
             graph,
             cfg: cfg.clone(),
@@ -185,6 +197,10 @@ impl<'g> Simulator<'g> {
             mem_unit_free: 0,
             mem_groups,
             last_emitted: vec![(0, 0); cfg.on_chip.len()],
+            stage_total,
+            stage_issued: BTreeMap::new(),
+            stage_done: BTreeMap::new(),
+            pending_events: Vec::new(),
         })
     }
 
@@ -224,6 +240,16 @@ impl<'g> Simulator<'g> {
         }
     }
 
+    /// Forward structural events raised during this event batch (stage
+    /// boundaries), stamped at the batch time. Emitted after the
+    /// occupancy samples so an event never precedes the state it
+    /// annotates at the same instant.
+    fn flush_run_events(&mut self, sink: &mut dyn TraceSink) {
+        for ev in self.pending_events.drain(..) {
+            sink.on_event(self.now, &ev);
+        }
+    }
+
     fn run_inner(&mut self, opts: &mut SimOptions<'_>) -> Result<SimResult> {
         if !opts.materialize {
             self.mem.set_sample_recording(false);
@@ -244,6 +270,9 @@ impl<'g> Simulator<'g> {
         self.dispatch_sa();
         if let Some(sink) = opts.sink.as_deref_mut() {
             self.emit_occupancy(sink);
+            self.flush_run_events(sink);
+        } else {
+            self.pending_events.clear();
         }
 
         while let Some(Reverse((t, seq))) = self.events.pop() {
@@ -258,6 +287,9 @@ impl<'g> Simulator<'g> {
             self.dispatch_sa();
             if let Some(sink) = opts.sink.as_deref_mut() {
                 self.emit_occupancy(sink);
+                self.flush_run_events(sink);
+            } else {
+                self.pending_events.clear();
             }
         }
 
@@ -272,6 +304,7 @@ impl<'g> Simulator<'g> {
         let end = self.now;
         self.mem.finalize(end);
         if let Some(sink) = opts.sink.as_deref_mut() {
+            self.flush_run_events(sink);
             sink.finish(end);
         }
         let traces: Vec<_> = self.mem.on_chip.iter().map(|m| m.trace.clone()).collect();
@@ -349,10 +382,16 @@ impl<'g> Simulator<'g> {
 
     fn issue_op(&mut self, op_id: OpId) -> Result<()> {
         let i = op_id.0 as usize;
-        let mem = self.assign_mem(self.graph.ops[i].stage);
+        let stage = self.graph.ops[i].stage;
+        let mem = self.assign_mem(stage);
         self.ops[i].issued = true;
         self.ops[i].t_issue = self.now;
         self.ops[i].mem = mem;
+        let issued = self.stage_issued.entry(stage).or_insert(0);
+        *issued += 1;
+        if *issued == 1 {
+            self.pending_events.push(RunEvent::StageStart { stage });
+        }
 
         let mut ready = self.now;
         let reads = self.graph.ops[i].reads.clone();
@@ -544,6 +583,12 @@ impl<'g> Simulator<'g> {
     fn complete_op(&mut self, op_id: OpId) -> Result<()> {
         let i = op_id.0 as usize;
         self.ops[i].done = true;
+        let stage = self.graph.ops[i].stage;
+        let done = self.stage_done.entry(stage).or_insert(0);
+        *done += 1;
+        if *done == self.stage_total[&stage] {
+            self.pending_events.push(RunEvent::StageEnd { stage });
+        }
         // Unblock dependents.
         for d in std::mem::take(&mut self.dependents[i]) {
             debug_assert!(self.deps_remaining[d as usize] > 0);
@@ -713,6 +758,48 @@ mod tests {
         assert!(
             (m.avg_needed() - reference.sram_trace().avg_needed()).abs() < 1e-9
         );
+    }
+
+    #[test]
+    fn stage_events_bracket_every_stage_exactly_once() {
+        struct Recorder(Vec<(u64, RunEvent)>);
+        impl TraceSink for Recorder {
+            fn on_sample(&mut self, _m: usize, _t: u64, _n: u64, _o: u64) {}
+            fn on_event(&mut self, t: u64, event: &RunEvent) {
+                self.0.push((t, *event));
+            }
+        }
+        let g = build_prefill(&TINY_GQA, 64).unwrap();
+        let mut rec = Recorder(Vec::new());
+        simulate_with(
+            &g,
+            &tiny(),
+            SimOptions { sink: Some(&mut rec), materialize: false },
+        )
+        .unwrap();
+
+        let stages: std::collections::BTreeSet<u32> =
+            g.ops.iter().map(|o| o.stage).collect();
+        for &stage in &stages {
+            let start = rec
+                .0
+                .iter()
+                .position(|(_, e)| *e == RunEvent::StageStart { stage });
+            let end = rec
+                .0
+                .iter()
+                .position(|(_, e)| *e == RunEvent::StageEnd { stage });
+            let (Some(start), Some(end)) = (start, end) else {
+                panic!("stage {stage} missing start/end event");
+            };
+            assert!(start < end, "stage {stage} start must precede end");
+        }
+        // Exactly one start + one end per stage, nothing else.
+        assert_eq!(rec.0.len(), 2 * stages.len());
+        // Event timestamps never go backwards.
+        for w in rec.0.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
     }
 
     #[test]

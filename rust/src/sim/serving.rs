@@ -29,7 +29,7 @@ use anyhow::{Context, Result};
 
 use crate::config::AccelConfig;
 use crate::serving::{generate_requests, PagedKvArena, ServingParams};
-use crate::trace::sink::{MemoryDesc, TraceSink};
+use crate::trace::sink::{MemoryDesc, RunEvent, TraceSink};
 use crate::trace::{AccessStats, OccupancyTrace};
 use crate::util::ceil_div;
 use crate::util::fnv::Fnv64;
@@ -285,6 +285,9 @@ pub fn simulate_serving_with(
                 &mut opts.sink,
                 &mut last_emitted,
             );
+            if let Some(s) = opts.sink.as_deref_mut() {
+                s.on_event(now, &RunEvent::Admit { request: r.id });
+            }
         }
 
         if active.is_empty() {
@@ -310,7 +313,8 @@ pub fn simulate_serving_with(
                 .with_context(|| format!("decode step of request {}", s.id))?;
             stats.sram_read(s.ctx as u64 * cost.kv_token_bytes, cost.word, "kv");
             stats.sram_write(cost.kv_token_bytes, cost.word, "kv");
-            if s.remaining == 0 {
+            let finished = s.remaining == 0;
+            if finished {
                 arena
                     .release(s.id)
                     .with_context(|| format!("completing request {}", s.id))?;
@@ -326,6 +330,11 @@ pub fn simulate_serving_with(
                 &mut opts.sink,
                 &mut last_emitted,
             );
+            if finished {
+                if let Some(snk) = opts.sink.as_deref_mut() {
+                    snk.on_event(now, &RunEvent::Complete { request: s.id });
+                }
+            }
         }
     }
 
@@ -433,6 +442,45 @@ mod tests {
         assert_eq!(r.arena_capacity, arena_capacity(&TINY_GQA, &p));
         // The provisioned bound always covers the observed occupancy.
         assert!(r.peak_occupied() <= r.arena_capacity);
+    }
+
+    #[test]
+    fn every_request_is_admitted_then_completed() {
+        struct Recorder(Vec<(u64, RunEvent)>);
+        impl TraceSink for Recorder {
+            fn on_sample(&mut self, _m: usize, _t: u64, _n: u64, _o: u64) {}
+            fn on_event(&mut self, t: u64, event: &RunEvent) {
+                self.0.push((t, *event));
+            }
+        }
+        let p = params(20, 4, 13);
+        let mut rec = Recorder(Vec::new());
+        let r = simulate_serving_with(
+            &TINY_GQA,
+            p,
+            &tiny(),
+            ServingSimOptions { sink: Some(&mut rec), materialize: false },
+        )
+        .unwrap();
+        assert_eq!(r.completed, 20);
+        for id in 0..20u32 {
+            let admit = rec
+                .0
+                .iter()
+                .position(|(_, e)| *e == RunEvent::Admit { request: id });
+            let done = rec
+                .0
+                .iter()
+                .position(|(_, e)| *e == RunEvent::Complete { request: id });
+            let (Some(admit), Some(done)) = (admit, done) else {
+                panic!("request {id} missing admit/complete event");
+            };
+            assert!(admit < done, "request {id} admitted after completing");
+        }
+        assert_eq!(rec.0.len(), 40, "one admit + one complete per request");
+        for w in rec.0.windows(2) {
+            assert!(w[0].0 <= w[1].0, "event time went backwards");
+        }
     }
 
     #[test]

@@ -84,6 +84,36 @@ pub fn load_trace(path: &Path) -> Result<OccupancyTrace> {
 /// Header emitted by [`super::sink::CsvStreamSink`].
 pub const STREAM_CSV_HEADER: &str = "memory,t_cycles,needed_bytes,obsolete_bytes";
 
+/// Typed error for a stream-CSV row whose timestamp precedes an earlier
+/// row of the same memory — the input violates
+/// [`OccupancyTrace::record`]'s monotonicity contract, so the trace
+/// cannot be reconstructed. Carried inside the `anyhow::Error` returned
+/// by [`stream_csv_to_traces`]; recover it with
+/// `err.downcast_ref::<StreamOrderError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamOrderError {
+    /// Memory column of the offending row.
+    pub memory: String,
+    /// 1-based CSV line number of the offending row (header = line 1).
+    pub row: usize,
+    /// Timestamp of the latest earlier row for this memory.
+    pub prev_t: u64,
+    /// The offending (earlier) timestamp.
+    pub t: u64,
+}
+
+impl std::fmt::Display for StreamOrderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "stream CSV row {}: time went backwards for `{}` ({} after {})",
+            self.row, self.memory, self.t, self.prev_t
+        )
+    }
+}
+
+impl std::error::Error for StreamOrderError {}
+
 /// Parse a [`super::sink::CsvStreamSink`] export back into one finalized
 /// trace per memory.
 ///
@@ -133,11 +163,15 @@ pub fn stream_csv_to_traces(
                 .with_context(|| format!("stream CSV row {}: bad {what} `{s}`", n + 2))
         };
         let t = parse_u64(t, "t_cycles")?;
-        ensure!(
-            last_row_t[i] <= t,
-            "stream CSV row {}: time went backwards for `{name}`",
-            n + 2
-        );
+        if t < last_row_t[i] {
+            return Err(StreamOrderError {
+                memory: name.to_string(),
+                row: n + 2,
+                prev_t: last_row_t[i],
+                t,
+            }
+            .into());
+        }
         last_row_t[i] = t;
         traces[i].record(
             t,
@@ -269,6 +303,32 @@ mod tests {
         let csv = format!("{STREAM_CSV_HEADER}\n");
         let traces = stream_csv_to_traces(&csv, &mems, 10).unwrap();
         assert_eq!(traces[0].samples().len(), 1);
+    }
+
+    #[test]
+    fn backwards_time_is_a_typed_stream_order_error() {
+        let mems = vec![
+            MemoryDesc { name: "sram".into(), capacity: 100 },
+            MemoryDesc { name: "dm1".into(), capacity: 100 },
+        ];
+        // The no-op row at t=9 coalesces away in the trace, so only the
+        // independent per-memory row clock can catch the regression; the
+        // interleaved dm1 row must not reset sram's clock.
+        let csv = format!("{STREAM_CSV_HEADER}\nsram,9,0,0\ndm1,1,2,0\nsram,5,1,0\n");
+        let err = stream_csv_to_traces(&csv, &mems, 10).unwrap_err();
+        let typed = err
+            .downcast_ref::<StreamOrderError>()
+            .expect("out-of-order timestamps must surface the typed error");
+        assert_eq!(
+            typed,
+            &StreamOrderError {
+                memory: "sram".to_string(),
+                row: 4,
+                prev_t: 9,
+                t: 5,
+            }
+        );
+        assert!(err.to_string().contains("time went backwards"), "{err}");
     }
 
     #[test]

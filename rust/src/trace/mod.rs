@@ -9,10 +9,10 @@ pub mod sink;
 pub use access::{AccessStats, KindStats};
 pub use io::{
     load_trace, save_trace, stream_csv_to_traces, trace_from_json, trace_to_csv,
-    trace_to_json, STREAM_CSV_HEADER,
+    trace_to_json, StreamOrderError, STREAM_CSV_HEADER,
 };
 pub use occupancy::{OccupancyTrace, Sample, Segment};
 pub use sink::{
     CsvStreamSink, MaterializeSink, MemoryDesc, OnlineMemStats, OnlineStatsSink,
-    TeeSink, TraceSink,
+    RunEvent, TeeSink, TraceSink,
 };

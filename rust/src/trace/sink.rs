@@ -33,6 +33,41 @@ pub struct MemoryDesc {
     pub capacity: u64,
 }
 
+/// A structural (non-occupancy) run event, forwarded to sinks through
+/// [`TraceSink::on_event`]. Occupancy changes keep their dedicated
+/// [`TraceSink::on_sample`] channel; these events annotate the stream
+/// with schedule structure: dataflow stage boundaries (`sim::engine`),
+/// serving-scheduler admissions/completions (`sim::serving`), and the
+/// Stage-III per-bank outcomes (`banking::online::OnlineReport::events`,
+/// emitted retrospectively once the co-simulation has closed its spans).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunEvent {
+    /// First op of dataflow stage `stage` issued.
+    StageStart { stage: u32 },
+    /// Last op of dataflow stage `stage` completed.
+    StageEnd { stage: u32 },
+    /// Serving scheduler admitted request `request` into the batch.
+    Admit { request: u32 },
+    /// Serving request `request` completed and released its KV pages.
+    Complete { request: u32 },
+    /// Retrospective: bank `bank` held `state` (a
+    /// `banking::online::BankState::label`) over `[t0, t1)` in
+    /// stall-adjusted cycles.
+    BankSpan {
+        bank: u32,
+        state: &'static str,
+        t0: u64,
+        t1: u64,
+    },
+    /// Retrospective: a wake-up at adjusted cycle `at` stalled the
+    /// machine for `stall_cycles` while bank `bank` powered up.
+    WakeStall {
+        bank: u32,
+        at: u64,
+        stall_cycles: u64,
+    },
+}
+
 /// Receiver of streamed occupancy samples for every on-chip memory.
 pub trait TraceSink {
     /// Called once before simulation with the on-chip memory layout
@@ -43,6 +78,13 @@ pub trait TraceSink {
 
     /// Occupancy state of memory `mem` changed at cycle `t`.
     fn on_sample(&mut self, mem: usize, t: u64, needed: u64, obsolete: u64);
+
+    /// A structural run event occurred at cycle `t` (default no-op, so
+    /// occupancy-only sinks are unaffected). Events arrive with
+    /// non-decreasing `t`, interleaved with samples in stream order.
+    fn on_event(&mut self, t: u64, event: &RunEvent) {
+        let _ = (t, event);
+    }
 
     /// Simulation finished at cycle `end`; the last state of each memory
     /// extends to here.
@@ -307,6 +349,12 @@ impl TraceSink for TeeSink<'_> {
         }
     }
 
+    fn on_event(&mut self, t: u64, event: &RunEvent) {
+        for s in &mut self.sinks {
+            s.on_event(t, event);
+        }
+    }
+
     fn finish(&mut self, end: u64) {
         for s in &mut self.sinks {
             s.finish(end);
@@ -425,5 +473,34 @@ mod tests {
         }
         assert_eq!(a.traces()[0].peak_needed(), 7);
         assert_eq!(b.shared().unwrap().peak_needed(), 7);
+    }
+
+    #[test]
+    fn tee_forwards_events_and_default_sinks_ignore_them() {
+        struct Recorder(Vec<(u64, RunEvent)>);
+        impl TraceSink for Recorder {
+            fn on_sample(&mut self, _m: usize, _t: u64, _n: u64, _o: u64) {}
+            fn on_event(&mut self, t: u64, event: &RunEvent) {
+                self.0.push((t, *event));
+            }
+        }
+        let mut mat = MaterializeSink::new(); // default on_event: no-op
+        let mut rec = Recorder(Vec::new());
+        {
+            let mut tee = TeeSink::new(vec![&mut mat, &mut rec]);
+            tee.begin(&mems());
+            tee.on_event(0, &RunEvent::StageStart { stage: 0 });
+            tee.on_sample(0, 4, 7, 0);
+            tee.on_event(9, &RunEvent::StageEnd { stage: 0 });
+            tee.finish(9);
+        }
+        assert_eq!(
+            rec.0,
+            vec![
+                (0, RunEvent::StageStart { stage: 0 }),
+                (9, RunEvent::StageEnd { stage: 0 }),
+            ]
+        );
+        assert_eq!(mat.traces()[0].peak_needed(), 7);
     }
 }

@@ -163,3 +163,70 @@ fn gc_preserves_everything_a_live_manifest_reaches() {
     assert!(store.jobs().unwrap().is_empty());
     let _ = std::fs::remove_dir_all(store.root());
 }
+
+// --- Manifest negative paths (ISSUE 7 satellite) ----------------------
+//
+// A bad manifest must fail with a message that names the actual
+// mistake — three different mistakes must produce three different
+// messages, or the user is left grepping a lab file against a generic
+// "invalid manifest".
+
+#[test]
+fn duplicate_grid_key_is_rejected_by_name_and_line() {
+    let err = LabManifest::parse(
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\n\
+         workloads = [\"tiny-mha:prefill:64\"]\n\
+         [grid]\ncapacities = [\"2MiB\"]\ncapacities = [\"4MiB\"]\n",
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("duplicate key `grid.capacities`"), "{err}");
+    assert!(err.contains("line 7"), "points at the offending line: {err}");
+}
+
+#[test]
+fn empty_workload_list_is_rejected() {
+    let err = LabManifest::parse(
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\nworkloads = []\n",
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("`lab.workloads` is empty"), "{err}");
+}
+
+#[test]
+fn unknown_gating_policy_is_rejected_with_the_valid_set() {
+    let err = LabManifest::parse(
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\n\
+         workloads = [\"tiny-mha:prefill:64\"]\n\
+         [grid]\ncapacities = [\"2MiB\"]\npolicies = [\"warp\"]\n",
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unknown policy `warp`"), "{err}");
+    assert!(
+        err.contains("none|aggressive|conservative|drowsy"),
+        "lists the valid policies: {err}"
+    );
+}
+
+#[test]
+fn distinct_manifest_mistakes_produce_distinct_messages() {
+    let msgs: Vec<String> = [
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\n\
+         workloads = [\"tiny-mha:prefill:64\"]\n\
+         [grid]\ncapacities = [\"2MiB\"]\ncapacities = [\"4MiB\"]\n",
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\nworkloads = []\n",
+        "[lab]\nname = \"d\"\naccel = \"tiny\"\n\
+         workloads = [\"tiny-mha:prefill:64\"]\n\
+         [grid]\ncapacities = [\"2MiB\"]\npolicies = [\"warp\"]\n",
+    ]
+    .iter()
+    .map(|m| LabManifest::parse(m).unwrap_err().to_string())
+    .collect();
+    for i in 0..msgs.len() {
+        for j in i + 1..msgs.len() {
+            assert_ne!(msgs[i], msgs[j], "mistakes {i} and {j} are conflated");
+        }
+    }
+}

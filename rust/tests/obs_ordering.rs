@@ -1,0 +1,355 @@
+//! Property tests for the WAL's ordering guarantees — the executable
+//! port of the event-log spec's invariants (docs/ARCHITECTURE.md
+//! §Observability):
+//!
+//! 1. `RunStartFirst`  — the first record of every log is `RunStart`.
+//! 2. `RunEndLast`     — `RunEnd` appears only as the final record.
+//! 3. `StageBracketed` — every `StageEnd` is preceded by its stage's
+//!    `StageStart`, each stage starts and ends at most once.
+//! 4. `MonotoneStamps` — `seq` is dense from 0 (strictly monotone), the
+//!    envelope `t` is non-decreasing.
+//! 5. `PrefixStable`   — the log is append-only: after every write, the
+//!    readable records extend (never rewrite) the previous read, across
+//!    segment rotation.
+//!
+//! Checked two ways: over arbitrary synthetic schedules driven through
+//! [`trapti::obs::WalSink`] with tiny rotation thresholds, and over the
+//! real Stage-I engines (prefill, decode, multi-memory, serving) via
+//! `materialize_logged` — whose WAL must additionally replay into
+//! bit-identical occupancy traces (the replay/materialize equivalence
+//! this whole subsystem rests on).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use trapti::api::{ApiContext, ExperimentSpec, MaterializedRun};
+use trapti::config::{multilevel, tiny};
+use trapti::obs::{replay_wal, EventLog, ObsEvent, WalSink};
+use trapti::serving::ServingParams;
+use trapti::trace::sink::{MemoryDesc, RunEvent, TraceSink};
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::workload::TINY_GQA;
+
+/// Honors `PROPTEST_CASES` (the CI knob) with a local default.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "trapti-obs-ordering-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Assert invariants 1–4 on a decoded log.
+fn assert_ordering_invariants(log: &EventLog) {
+    assert!(!log.records.is_empty(), "a written log is never empty");
+    assert!(
+        matches!(log.records[0].event, ObsEvent::RunStart { .. }),
+        "RunStartFirst: first record is {:?}",
+        log.records[0].event
+    );
+    let mut started: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut ended: BTreeMap<u32, usize> = BTreeMap::new();
+    for (i, r) in log.records.iter().enumerate() {
+        assert_eq!(r.seq, i as u64, "MonotoneStamps: seq dense from 0");
+        if i > 0 {
+            assert!(
+                log.records[i - 1].t <= r.t,
+                "MonotoneStamps: t regressed at seq {i}: {} -> {}",
+                log.records[i - 1].t,
+                r.t
+            );
+            assert!(
+                !matches!(r.event, ObsEvent::RunStart { .. }),
+                "RunStartFirst: duplicate RunStart at seq {i}"
+            );
+        }
+        match r.event {
+            ObsEvent::RunEnd { .. } => assert_eq!(
+                i,
+                log.records.len() - 1,
+                "RunEndLast: RunEnd at seq {i} is not final"
+            ),
+            ObsEvent::StageStart { stage } => {
+                assert!(
+                    started.insert(stage, i).is_none(),
+                    "StageBracketed: stage {stage} started twice"
+                );
+            }
+            ObsEvent::StageEnd { stage } => {
+                assert!(
+                    started.contains_key(&stage),
+                    "StageBracketed: stage {stage} ended before starting"
+                );
+                assert!(
+                    ended.insert(stage, i).is_none(),
+                    "StageBracketed: stage {stage} ended twice"
+                );
+            }
+            _ => {}
+        }
+    }
+    for (stage, end_ix) in &ended {
+        assert!(
+            started[stage] < *end_ix,
+            "StageBracketed: stage {stage} end precedes start"
+        );
+    }
+}
+
+/// Drive one random-but-valid schedule through a `WalSink` (tiny
+/// rotation threshold so multi-segment logs are the common case) and
+/// return the directory for inspection.
+fn random_schedule(rng: &mut Rng, dir: &PathBuf) -> usize {
+    let run_id = rng.next_u64();
+    let mut sink = WalSink::create(dir, run_id, 0)
+        .unwrap()
+        .with_rotate_bytes(32 + rng.below(256));
+    let n_mems = 1 + rng.below(3) as usize;
+    let mems: Vec<MemoryDesc> = (0..n_mems)
+        .map(|i| MemoryDesc {
+            name: format!("mem{i}"),
+            capacity: 1 << 20,
+        })
+        .collect();
+    sink.begin(&mems);
+
+    let mut t = 0u64;
+    let mut written = 1usize;
+    let mut next_stage = 0u32;
+    let mut open_stages: Vec<u32> = Vec::new();
+    let mut next_req = 0u32;
+    let mut in_flight: Vec<u32> = Vec::new();
+    for _ in 0..rng.below(60) {
+        t += rng.below(50); // sometimes zero: same-instant records
+        match rng.below(6) {
+            0 | 1 => {
+                let mem = rng.below(n_mems as u64) as usize;
+                sink.on_sample(mem, t, rng.below(1 << 20), rng.below(1 << 10));
+            }
+            2 => {
+                sink.on_event(t, &RunEvent::StageStart { stage: next_stage });
+                open_stages.push(next_stage);
+                next_stage += 1;
+            }
+            3 if !open_stages.is_empty() => {
+                let ix = rng.below(open_stages.len() as u64) as usize;
+                let stage = open_stages.swap_remove(ix);
+                sink.on_event(t, &RunEvent::StageEnd { stage });
+            }
+            4 => {
+                sink.on_event(t, &RunEvent::Admit { request: next_req });
+                in_flight.push(next_req);
+                next_req += 1;
+            }
+            5 if !in_flight.is_empty() => {
+                let ix = rng.below(in_flight.len() as u64) as usize;
+                let request = in_flight.swap_remove(ix);
+                sink.on_event(t, &RunEvent::Complete { request });
+            }
+            _ => continue, // guard not met: skip the slot
+        }
+        written += 1;
+    }
+    for stage in std::mem::take(&mut open_stages) {
+        sink.on_event(t, &RunEvent::StageEnd { stage });
+        written += 1;
+    }
+    let end = t + rng.below(100);
+    sink.finish(end);
+    // Retrospective Stage-III tail (events stamped at the end envelope).
+    for bank in 0..rng.below(4) as u32 {
+        sink.append_event(
+            end,
+            &RunEvent::BankSpan { bank, state: "gated", t0: 0, t1: end },
+        );
+        written += 1;
+    }
+    sink.close(None).unwrap();
+    written + 1 // + RunEnd
+}
+
+#[test]
+fn arbitrary_schedules_satisfy_the_ordering_invariants() {
+    check("obs-ordering", cases(32), |rng| {
+        let dir = tmp_dir("arb");
+        let expected = random_schedule(rng, &dir);
+        let log = EventLog::open(&dir).unwrap();
+        assert!(!log.truncated);
+        assert!(log.complete());
+        assert_eq!(log.records.len(), expected);
+        assert_ordering_invariants(&log);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn log_reads_are_prefix_stable_across_rotation() {
+    check("obs-prefix-stable", cases(16), |rng| {
+        let dir = tmp_dir("prefix");
+        let mut sink = WalSink::create(&dir, 9, 0)
+            .unwrap()
+            .with_rotate_bytes(48 + rng.below(64)); // rotate every 1-2 records
+        sink.begin(&[MemoryDesc { name: "sram".into(), capacity: 1 << 20 }]);
+        let mut prev = EventLog::open(&dir).unwrap().records;
+        let mut t = 0;
+        for _ in 0..12 {
+            t += rng.below(20);
+            sink.on_sample(0, t, rng.below(1 << 16), 0);
+            let now = EventLog::open(&dir).unwrap();
+            assert!(!now.truncated, "live log must read clean");
+            assert!(
+                now.records.starts_with(&prev),
+                "PrefixStable: a later read rewrote earlier records"
+            );
+            assert_eq!(now.records.len(), prev.len() + 1);
+            prev = now.records;
+        }
+        sink.finish(t);
+        sink.close(None).unwrap();
+        let closed = EventLog::open(&dir).unwrap();
+        assert!(closed.records.starts_with(&prev), "close preserves the prefix");
+        assert!(closed.complete());
+        assert!(closed.segments > 1, "rotation must have happened");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+// --- Real engines: invariants + replay/materialize bit-identity -------
+
+/// The acceptance criterion: the WAL alone reconstructs the
+/// materialized traces bit-identically (same samples, same `to_bits`
+/// floats) and carries the exact run statistics.
+fn assert_wal_mirrors_run(dir: &PathBuf, spec: &ExperimentSpec, run: &MaterializedRun) {
+    let log = EventLog::open(dir).unwrap();
+    assert!(log.complete() && !log.truncated);
+    assert_eq!(log.run_id(), Some(spec.content_hash()));
+    assert_ordering_invariants(&log);
+
+    let replay = replay_wal(dir).unwrap();
+    assert!(replay.complete);
+    assert_eq!(replay.run_id, spec.content_hash());
+    let materialized: Vec<&OccupancyTrace> = match run {
+        MaterializedRun::Single(s) => s.result.traces.iter().collect(),
+        MaterializedRun::Serving(r) => vec![r.trace()],
+    };
+    assert_eq!(replay.traces.len(), materialized.len());
+    for (got, want) in replay.traces.iter().zip(&materialized) {
+        assert_eq!(got.memory, want.memory);
+        assert_eq!(got.capacity, want.capacity);
+        assert_eq!(got.samples(), want.samples(), "bit-identical sample lists");
+        assert_eq!(got.end_time(), want.end_time());
+        assert_eq!(got.peak_needed(), want.peak_needed());
+        assert_eq!(
+            got.avg_needed().to_bits(),
+            want.avg_needed().to_bits(),
+            "bit-identical derived floats"
+        );
+    }
+    let stats: &AccessStats = run.stats();
+    assert_eq!(replay.stats.as_ref(), Some(stats));
+}
+
+fn logged_roundtrip(tag: &str, spec: ExperimentSpec) {
+    let ctx = ApiContext::new();
+    let dir = tmp_dir(tag);
+    let run = spec.materialize_logged(&ctx, &dir, 0).unwrap();
+    assert_wal_mirrors_run(&dir, &spec, &run);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prefill_run_log_is_ordered_and_replays_bit_identical() {
+    logged_roundtrip(
+        "prefill",
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap(),
+    );
+}
+
+#[test]
+fn decode_run_log_is_ordered_and_replays_bit_identical() {
+    logged_roundtrip(
+        "decode",
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .decode(32, 16)
+            .accel(tiny())
+            .build()
+            .unwrap(),
+    );
+}
+
+#[test]
+fn multi_memory_run_logs_every_trace() {
+    logged_roundtrip(
+        "multilevel",
+        ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .prefill(64)
+            .accel(multilevel())
+            .build()
+            .unwrap(),
+    );
+}
+
+#[test]
+fn serving_run_log_brackets_every_request() {
+    let mut p = ServingParams::new(16, 4, 7);
+    p.prompt_min = 4;
+    p.prompt_max = 24;
+    p.gen_min = 2;
+    p.gen_max = 12;
+    p.page_tokens = 8;
+    p.mean_arrival_gap = 40_000;
+    let spec = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(p)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    let ctx = ApiContext::new();
+    let dir = tmp_dir("serving");
+    let run = spec.materialize_logged(&ctx, &dir, 0).unwrap();
+    assert_wal_mirrors_run(&dir, &spec, &run);
+
+    // Serving-specific ordering: every request admits before it
+    // completes, and all 16 requests appear in both roles.
+    let log = EventLog::open(&dir).unwrap();
+    let mut admitted: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut completed: BTreeMap<u32, usize> = BTreeMap::new();
+    for (i, r) in log.records.iter().enumerate() {
+        match r.event {
+            ObsEvent::Admit { request } => {
+                assert!(admitted.insert(request, i).is_none());
+            }
+            ObsEvent::Complete { request } => {
+                assert!(completed.insert(request, i).is_none());
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(admitted.len(), 16);
+    assert_eq!(completed.len(), 16);
+    for (req, done_ix) in &completed {
+        assert!(admitted[req] < *done_ix, "request {req} completed before admit");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,279 @@
+//! Crash-recovery and format-stability tests for the WAL.
+//!
+//! * Torn-tail sweep: truncate a known log at **every** byte offset and
+//!   check the reader recovers exactly the longest valid record prefix
+//!   (and that `replay_wal` still yields finalize-able traces from it).
+//! * Golden byte pins: the 28-byte segment header and the Prometheus
+//!   text exposition are on-disk/exported formats — external tooling
+//!   (the CI determinism gate's `tail -c +29`, scrapers) depends on
+//!   their exact bytes, so they are pinned literally here. If one of
+//!   these tests fails, you are changing a serialization format: bump
+//!   `WAL_VERSION` / update the consumers, then re-pin.
+
+use std::fs;
+use std::path::PathBuf;
+
+use trapti::obs::wal::{ACTIVE_SEGMENT, WAL_HEADER_LEN, WAL_VERSION};
+use trapti::obs::{
+    replay_wal, EventLog, MetricsSnapshot, ObsError, WalHeader, WalSink,
+};
+use trapti::trace::sink::{MemoryDesc, RunEvent, TraceSink};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "trapti-obs-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Write a small, fully known log (6 records) and return the bytes of
+/// its single sealed segment.
+fn known_log(dir: &PathBuf) -> Vec<u8> {
+    let mut sink = WalSink::create(dir, 0xABCD, 0).unwrap();
+    sink.begin(&[MemoryDesc { name: "sram".into(), capacity: 4096 }]);
+    sink.on_event(0, &RunEvent::StageStart { stage: 0 });
+    sink.on_sample(0, 4, 640, 0);
+    sink.on_sample(0, 9, 512, 64);
+    sink.on_event(11, &RunEvent::StageEnd { stage: 0 });
+    sink.finish(16);
+    sink.close(None).unwrap();
+    fs::read(dir.join("000000.seg")).unwrap()
+}
+
+/// Byte offsets that end a complete frame (including `WAL_HEADER_LEN`,
+/// the zero-record boundary), parsed straight from the framing.
+fn frame_boundaries(bytes: &[u8]) -> Vec<usize> {
+    let mut cuts = vec![WAL_HEADER_LEN];
+    let mut off = WAL_HEADER_LEN;
+    while off < bytes.len() {
+        let len =
+            u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4 + len + 8;
+        cuts.push(off);
+    }
+    cuts
+}
+
+#[test]
+fn every_truncation_point_recovers_the_longest_valid_prefix() {
+    let src = tmp_dir("trunc-src");
+    let bytes = known_log(&src);
+    let full = EventLog::open(&src).unwrap();
+    assert_eq!(full.records.len(), 6);
+    assert!(full.complete());
+
+    let boundaries = frame_boundaries(&bytes);
+    assert_eq!(*boundaries.last().unwrap(), bytes.len(), "framing parses");
+
+    let scratch = tmp_dir("trunc-scratch");
+    fs::create_dir_all(&scratch).unwrap();
+    let seg = scratch.join(ACTIVE_SEGMENT);
+    for cut in 0..=bytes.len() {
+        fs::write(&seg, &bytes[..cut]).unwrap();
+        let log = EventLog::open(&scratch).unwrap();
+        if cut < WAL_HEADER_LEN {
+            // Not even a header survived: empty log, flagged torn.
+            assert!(log.truncated, "cut {cut}");
+            assert!(log.header.is_none(), "cut {cut}");
+            assert!(log.records.is_empty(), "cut {cut}");
+            continue;
+        }
+        let k = boundaries.iter().filter(|b| **b <= cut).count() - 1;
+        assert_eq!(
+            log.records,
+            full.records[..k],
+            "cut {cut}: longest valid prefix has {k} records"
+        );
+        assert_eq!(
+            log.truncated,
+            !boundaries.contains(&cut),
+            "cut {cut}: torn iff mid-frame"
+        );
+        assert_eq!(log.header, full.header, "header survives any body cut");
+
+        // Whatever survived must still replay into finalized traces.
+        match replay_wal(&scratch) {
+            Ok(replay) => {
+                assert!(k >= 1, "replay needs RunStart (cut {cut})");
+                assert_eq!(replay.run_id, 0xABCD);
+                assert_eq!(replay.complete, k == full.records.len());
+                assert_eq!(replay.traces.len(), 1);
+                replay.traces[0].validate().unwrap();
+                assert_eq!(replay.traces[0].end_time(), Some(replay.end));
+            }
+            Err(ObsError::Incomplete(_)) => {
+                assert_eq!(k, 0, "only a RunStart-less log refuses replay");
+            }
+            Err(e) => panic!("cut {cut}: unexpected error {e}"),
+        }
+    }
+    let _ = fs::remove_dir_all(&src);
+    let _ = fs::remove_dir_all(&scratch);
+}
+
+#[test]
+fn truncated_log_surfaces_in_metrics_flags() {
+    let src = tmp_dir("trunc-metrics-src");
+    let bytes = known_log(&src);
+    let scratch = tmp_dir("trunc-metrics");
+    fs::create_dir_all(&scratch).unwrap();
+    // Cut mid-way through the final (RunEnd) frame.
+    fs::write(scratch.join(ACTIVE_SEGMENT), &bytes[..bytes.len() - 3]).unwrap();
+
+    let log = EventLog::open(&scratch).unwrap();
+    let m = MetricsSnapshot::from_log(&log);
+    assert!(!m.complete);
+    assert!(m.truncated);
+    let text = m.render();
+    assert!(text.contains("trapti_run_complete 0"));
+    assert!(text.contains("trapti_log_truncated 1"));
+    let _ = fs::remove_dir_all(&src);
+    let _ = fs::remove_dir_all(&scratch);
+}
+
+/// The 28-byte segment header, pinned byte for byte. The CI determinism
+/// gate strips exactly this much (`tail -c +29`) before comparing runs;
+/// changing any offset here breaks that contract.
+#[test]
+fn segment_header_bytes_are_pinned() {
+    #[rustfmt::skip]
+    const GOLDEN: [u8; 28] = [
+        // magic "TWAL"
+        0x54, 0x57, 0x41, 0x4C,
+        // version = 1 (u32 LE)
+        0x01, 0x00, 0x00, 0x00,
+        // run id = 0x0123456789ABCDEF (u64 LE)
+        0xEF, 0xCD, 0xAB, 0x89, 0x67, 0x45, 0x23, 0x01,
+        // segment index = 0 (u32 LE)
+        0x00, 0x00, 0x00, 0x00,
+        // wall clock = 1000 unix ms (u64 LE)
+        0xE8, 0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00,
+    ];
+    assert_eq!(GOLDEN.len(), WAL_HEADER_LEN);
+
+    let header = WalHeader {
+        version: WAL_VERSION,
+        run_id: 0x0123_4567_89AB_CDEF,
+        segment: 0,
+        wall_unix_ms: 1000,
+    };
+    assert_eq!(header.encode(), GOLDEN);
+    assert_eq!(WalHeader::decode(&GOLDEN), Some(header));
+
+    // And the writer puts exactly these bytes at the front of segment 0.
+    let dir = tmp_dir("header-pin");
+    let sink = WalSink::create(&dir, 0x0123_4567_89AB_CDEF, 1000).unwrap();
+    let bytes = fs::read(dir.join(ACTIVE_SEGMENT)).unwrap();
+    assert_eq!(&bytes[..WAL_HEADER_LEN], &GOLDEN);
+    drop(sink);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Two identical runs stamped with different wall clocks must differ in
+/// nothing but the header — the exact assumption behind the CI gate's
+/// `tail -c +29 | cmp`.
+#[test]
+fn wall_clock_only_ever_touches_the_header() {
+    let write = |dir: &PathBuf, wall: u64| {
+        let mut sink = WalSink::create(dir, 0x5EED, wall).unwrap();
+        sink.begin(&[MemoryDesc { name: "sram".into(), capacity: 1 << 20 }]);
+        sink.on_sample(0, 3, 999, 0);
+        sink.on_event(5, &RunEvent::Admit { request: 0 });
+        sink.finish(9);
+        sink.close(None).unwrap();
+        fs::read(dir.join("000000.seg")).unwrap()
+    };
+    let dir_a = tmp_dir("wall-a");
+    let dir_b = tmp_dir("wall-b");
+    let a = write(&dir_a, 0);
+    let b = write(&dir_b, 1_700_000_000_000);
+    assert_ne!(a[..WAL_HEADER_LEN], b[..WAL_HEADER_LEN]);
+    assert_eq!(a[WAL_HEADER_LEN..], b[WAL_HEADER_LEN..], "bodies identical");
+    let _ = fs::remove_dir_all(&dir_a);
+    let _ = fs::remove_dir_all(&dir_b);
+}
+
+/// The Prometheus exposition, pinned literally: scrapers parse this
+/// text, so metric names, label spelling, and ordering are a contract.
+#[test]
+fn prometheus_exposition_is_pinned() {
+    let dir = tmp_dir("prom-pin");
+    let mut sink = WalSink::create(&dir, 42, 0).unwrap();
+    sink.begin(&[
+        MemoryDesc { name: "sram".into(), capacity: 1024 },
+        MemoryDesc { name: "kv".into(), capacity: 512 },
+    ]);
+    sink.on_event(0, &RunEvent::StageStart { stage: 0 });
+    sink.on_sample(0, 5, 100, 28);
+    sink.on_sample(1, 9, 64, 0);
+    sink.on_event(12, &RunEvent::StageEnd { stage: 0 });
+    sink.finish(20);
+    sink.append_event(
+        20,
+        &RunEvent::BankSpan { bank: 0, state: "gated", t0: 8, t1: 20 },
+    );
+    sink.append_event(
+        20,
+        &RunEvent::WakeStall { bank: 0, at: 8, stall_cycles: 2 },
+    );
+    sink.close(None).unwrap();
+
+    let log = EventLog::open(&dir).unwrap();
+    let rendered = MetricsSnapshot::from_log(&log).render();
+    const GOLDEN: &str = "\
+# HELP trapti_run_id Run identifier from the WAL header.
+# TYPE trapti_run_id gauge
+trapti_run_id 42
+# HELP trapti_events_total WAL records folded into this snapshot.
+# TYPE trapti_events_total counter
+trapti_events_total 8
+# HELP trapti_cycles Highest simulation cycle observed.
+# TYPE trapti_cycles gauge
+trapti_cycles 20
+# HELP trapti_samples_total Occupancy samples observed.
+# TYPE trapti_samples_total counter
+trapti_samples_total 2
+# HELP trapti_occupancy_bytes Current occupancy (needed+obsolete) per memory.
+# TYPE trapti_occupancy_bytes gauge
+trapti_occupancy_bytes{memory=\"sram\"} 128
+trapti_occupancy_bytes{memory=\"kv\"} 64
+# HELP trapti_occupancy_peak_bytes Peak occupancy per memory.
+# TYPE trapti_occupancy_peak_bytes gauge
+trapti_occupancy_peak_bytes{memory=\"sram\"} 128
+trapti_occupancy_peak_bytes{memory=\"kv\"} 64
+# HELP trapti_stages_started_total Dataflow stages entered.
+# TYPE trapti_stages_started_total counter
+trapti_stages_started_total 1
+# HELP trapti_stages_completed_total Dataflow stages completed.
+# TYPE trapti_stages_completed_total counter
+trapti_stages_completed_total 1
+# HELP trapti_requests_admitted_total Serving requests admitted.
+# TYPE trapti_requests_admitted_total counter
+trapti_requests_admitted_total 0
+# HELP trapti_requests_completed_total Serving requests completed.
+# TYPE trapti_requests_completed_total counter
+trapti_requests_completed_total 0
+# HELP trapti_bank_state_spans_total Stage-III bank state spans by state.
+# TYPE trapti_bank_state_spans_total counter
+trapti_bank_state_spans_total{state=\"gated\"} 1
+# HELP trapti_bank_state_cycles_total Stage-III cycles spent per bank state.
+# TYPE trapti_bank_state_cycles_total counter
+trapti_bank_state_cycles_total{state=\"gated\"} 12
+# HELP trapti_wake_stalls_total Stage-III wake-up stalls.
+# TYPE trapti_wake_stalls_total counter
+trapti_wake_stalls_total 1
+# HELP trapti_wake_stall_cycles_total Cycles lost to wake-up stalls.
+# TYPE trapti_wake_stall_cycles_total counter
+trapti_wake_stall_cycles_total 2
+# HELP trapti_run_complete 1 once RunEnd was observed.
+# TYPE trapti_run_complete gauge
+trapti_run_complete 1
+# HELP trapti_log_truncated 1 when a torn tail was discarded on read.
+# TYPE trapti_log_truncated gauge
+trapti_log_truncated 0
+";
+    assert_eq!(rendered, GOLDEN);
+    let _ = fs::remove_dir_all(&dir);
+}
