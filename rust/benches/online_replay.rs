@@ -10,26 +10,35 @@
 //! config with O(B) state). Also asserts the module's two structural
 //! properties on full-scale traces: zero-wake bit-identical
 //! reconciliation with the offline evaluator, and determinism.
+//!
+//! `TRAPTI_BENCH_SMOKE=1` shrinks the workloads to the CI optimizer
+//! gate's scale (both structural assertions still run). Emits
+//! `BENCH_online_replay.json` for the perf trajectory either way.
 
 use trapti::api::{optimize as api_opt, ApiContext, ExperimentSpec, MaterializedRun};
 use trapti::banking::{evaluate, replay_trace_with, OnlineConfig};
-use trapti::util::bench::{bench, default_iters};
+use trapti::util::bench::{bench, default_iters, emit_json, smoke};
+use trapti::util::json::Json;
 use trapti::workload::{DS_R1D_Q15B, GPT2_XL};
 
 fn main() {
     let ctx = ApiContext::new();
+    let smoke = smoke();
+    // Smoke scale mirrors the CI optimizer-determinism gate's workloads.
+    let (dp, dg) = if smoke { (64, 16) } else { (512, 128) };
+    let (sreq, sconc) = if smoke { (16, 4) } else { (64, 8) };
 
     let serving = |model: trapti::workload::ModelPreset| {
         ExperimentSpec::builder()
             .model(model)
-            .serving(trapti::serving::ServingParams::new(64, 8, 7))
+            .serving(trapti::serving::ServingParams::new(sreq, sconc, 7))
             .build()
             .expect("serving spec")
     };
     let decode = |model: trapti::workload::ModelPreset| {
         ExperimentSpec::builder()
             .model(model)
-            .decode(512, 128)
+            .decode(dp, dg)
             .build()
             .expect("decode spec")
     };
@@ -140,4 +149,14 @@ fn main() {
     }
 
     println!("replay pass mean: {:?}", stats.mean);
+
+    let trace_cycles_total: u64 = reports.iter().map(|r| r.trace_cycles).sum();
+    let mut fields = stats.to_json();
+    fields.extend([
+        ("workloads", Json::num(workloads.len() as f64)),
+        ("trace_cycles_total", Json::num(trace_cycles_total as f64)),
+        ("smoke", Json::Bool(smoke)),
+    ]);
+    let path = emit_json("online_replay", fields).expect("bench artifact");
+    println!("wrote {}", path.display());
 }

@@ -90,8 +90,8 @@ pub mod stage;
 
 pub use batch::{BatchResult, BatchRunner};
 pub use optimize::{
-    online_validate, run_portfolio, OnlineValidation, PortfolioOptions,
-    PortfolioRun,
+    online_validate, online_validate_with, run_portfolio, validate_frontier,
+    OnlineValidation, PortfolioOptions, PortfolioRun,
 };
 pub use serving::{ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};

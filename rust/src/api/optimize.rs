@@ -22,9 +22,12 @@ use anyhow::{ensure, Result};
 
 use crate::banking::online::{replay_trace_with, OnlineConfig};
 use crate::banking::optimize::{
-    optimize, ConfigKey, Constraints, OptimizeResult, WorkloadSweep,
+    optimize, ConfigKey, Constraints, FrontierPoint, OptimizeResult,
+    WorkloadFrontier, WorkloadSweep,
 };
 use crate::banking::SweepSpec;
+use crate::cacti::CactiModel;
+use crate::trace::{AccessStats, OccupancyTrace};
 use crate::workload::Workload;
 
 use super::serving::ServingSweep;
@@ -250,10 +253,39 @@ impl OnlineValidation {
 /// every frontier configuration replays against that trace. Output
 /// order is deterministic: workloads in input order, frontier
 /// configurations in canonical frontier order.
+///
+/// The per-configuration replays are independent, so they shard across
+/// scoped worker threads (one detected core each) the same way
+/// [`crate::banking::fused::sweep_fused`] shards ladder groups. Rows are
+/// reassembled in frontier order regardless of completion order, so the
+/// output — and anything rendered from it
+/// ([`crate::report::tables::validation_csv`] /
+/// [`crate::report::tables::validation_table`]) — is byte-identical at
+/// any thread count. Use [`online_validate_with`] to pin the worker
+/// count explicitly.
 pub fn online_validate(
     ctx: &ApiContext,
     specs: &[ExperimentSpec],
     run: &PortfolioRun,
+) -> Result<Vec<OnlineValidation>> {
+    online_validate_with(ctx, specs, run, default_validate_jobs())
+}
+
+/// Default Stage-III validation parallelism: one worker per detected
+/// core (1 when detection fails).
+pub fn default_validate_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// [`online_validate`] with an explicit worker count. `jobs <= 1` runs
+/// strictly sequentially; any value produces byte-identical output.
+pub fn online_validate_with(
+    ctx: &ApiContext,
+    specs: &[ExperimentSpec],
+    run: &PortfolioRun,
+    jobs: usize,
 ) -> Result<Vec<OnlineValidation>> {
     ensure!(
         specs.len() == run.result.frontiers.len(),
@@ -274,31 +306,81 @@ pub fn online_validate(
         // One materialized Stage-I run per workload; every frontier
         // config replays against its borrowed trace.
         let run = spec.materialize(ctx)?;
-        for fp in &frontier.frontier {
-            let config = OnlineConfig::of_point(&fp.point);
-            let report = replay_trace_with(
-                &ctx.cacti,
-                run.trace(),
-                run.stats(),
-                config,
-                spec.freq_ghz(),
-                false, // totals only; no timelines for a whole frontier
-            )?;
-            out.push(OnlineValidation {
-                workload: frontier.workload.clone(),
-                key: ConfigKey::of(&fp.point),
-                predicted_e_j: fp.point.eval.e_total_j(),
-                observed_e_j: report.e_total_j(),
-                energy_delta_pct: report.eval.delta_pct(&fp.point.eval),
-                predicted_wake_pct: fp.wake_exposure_pct,
-                observed_stall_pct: report.stall_pct(),
-                trace_cycles: report.trace_cycles,
-                stall_cycles: report.stall_cycles,
-                wake_events: report.wake_events,
-            });
-        }
+        out.extend(validate_frontier(
+            &ctx.cacti,
+            run.trace(),
+            run.stats(),
+            frontier,
+            spec.freq_ghz(),
+            jobs,
+        )?);
     }
     Ok(out)
+}
+
+/// Replay every configuration of one workload frontier against an
+/// already-materialized trace, sharding the independent replays across
+/// up to `jobs` scoped worker threads.
+///
+/// Determinism: workers own contiguous frontier *chunks* and results are
+/// concatenated in chunk order (never completion order), so the rows
+/// come back in frontier order and the output is byte-identical at any
+/// `jobs`. The first failing configuration's error (in frontier order)
+/// propagates. The lab executor's `validate` jobs and
+/// [`online_validate`] share this single implementation.
+pub fn validate_frontier(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    frontier: &WorkloadFrontier,
+    freq_ghz: f64,
+    jobs: usize,
+) -> Result<Vec<OnlineValidation>> {
+    let replay_one = |fp: &FrontierPoint| -> Result<OnlineValidation> {
+        let config = OnlineConfig::of_point(&fp.point);
+        let report = replay_trace_with(
+            cacti,
+            trace,
+            stats,
+            config,
+            freq_ghz,
+            false, // totals only; no timelines for a whole frontier
+        )?;
+        Ok(OnlineValidation {
+            workload: frontier.workload.clone(),
+            key: ConfigKey::of(&fp.point),
+            predicted_e_j: fp.point.eval.e_total_j(),
+            observed_e_j: report.e_total_j(),
+            energy_delta_pct: report.eval.delta_pct(&fp.point.eval),
+            predicted_wake_pct: fp.wake_exposure_pct,
+            observed_stall_pct: report.stall_pct(),
+            trace_cycles: report.trace_cycles,
+            stall_cycles: report.stall_cycles,
+            wake_events: report.wake_events,
+        })
+    };
+    let fps = &frontier.frontier;
+    let jobs = jobs.clamp(1, fps.len().max(1));
+    if jobs <= 1 {
+        return fps.iter().map(replay_one).collect();
+    }
+    let per = fps.len().div_ceil(jobs);
+    let replay_one = &replay_one;
+    let chunks: Result<Vec<Vec<OnlineValidation>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = fps
+            .chunks(per)
+            .map(|chunk| {
+                scope.spawn(move || {
+                    chunk.iter().map(replay_one).collect::<Result<Vec<_>>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("validation worker panicked"))
+            .collect()
+    });
+    Ok(chunks?.into_iter().flatten().collect())
 }
 
 impl PortfolioRun {
@@ -558,6 +640,49 @@ mod tests {
         }
         // Mismatched spec slices are a typed error, not a silent zip.
         assert!(online_validate(&ctx, &specs[..1], &run).is_err());
+    }
+
+    #[test]
+    fn parallel_validation_is_byte_identical_to_sequential() {
+        // The Stage-III validation pass shards frontier replays across
+        // worker threads; the assembled report must not depend on
+        // completion order. Compare the *rendered* artifacts — the CSV
+        // and the text table, the bytes the CI gates diff — across
+        // jobs=1, jobs=8, and the auto default.
+        use crate::report::tables::{validation_csv, validation_table};
+        let ctx = ApiContext::new();
+        let specs = vec![decode_spec(TINY_GQA), serving_spec()];
+        let opts = PortfolioOptions {
+            grid: Some(shared_grid()),
+            ..Default::default()
+        };
+        let run = run_portfolio(&ctx, &specs, &opts).unwrap();
+        let seq = online_validate_with(&ctx, &specs, &run, 1).unwrap();
+        let par = online_validate_with(&ctx, &specs, &run, 8).unwrap();
+        let auto = online_validate(&ctx, &specs, &run).unwrap();
+        assert!(
+            seq.len() > 1,
+            "need a multi-config frontier to exercise sharding"
+        );
+        assert_eq!(validation_csv(&seq), validation_csv(&par));
+        assert_eq!(validation_csv(&seq), validation_csv(&auto));
+        assert_eq!(
+            validation_table(&seq).render(),
+            validation_table(&par).render()
+        );
+        // Row-level bit identity too (the CSV already implies it, but a
+        // field-level failure message is more useful than a text diff).
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.observed_e_j.to_bits(), b.observed_e_j.to_bits());
+            assert_eq!(
+                a.energy_delta_pct.to_bits(),
+                b.energy_delta_pct.to_bits()
+            );
+            assert_eq!(a.stall_cycles, b.stall_cycles);
+            assert_eq!(a.wake_events, b.wake_events);
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Fused single-pass Stage-II sweep engine.
+//! Fused single-pass Stage-II sweep engine (structure-of-arrays).
 //!
 //! The naive sweep ([`super::sweep::sweep_naive`]) re-walks the full
 //! occupancy trace once per grid point (`bank_activity` is O(segments)
@@ -9,31 +9,46 @@
 //! a cheap offline pass.
 //!
 //! This engine makes **one traversal** of the occupancy segments and
-//! updates *every* (C, B, α, policy) candidate incrementally. Each
-//! candidate holds O(B) state:
+//! updates *every* (C, B, α, policy) candidate incrementally, organized
+//! by what candidates actually share rather than one struct per grid
+//! point:
 //!
-//! * the current `banks_required` level, maintained through its
-//!   **threshold ladder** (occupancy bands `(k·usable, (k+1)·usable]`):
-//!   successive segments usually stay in or near the current band, so
-//!   the level update is a couple of comparisons, not a division;
-//! * one open-idle-run start time per bank (banks pack low-to-high, so
-//!   bank `b` idles exactly while `level <= b`; a level rise closes runs,
-//!   a level fall opens them);
-//! * accumulators for the time-weighted active-bank integral, gated
-//!   cycles, and switch counts.
+//! * [`OrgShared`] — one entry per (C, B) SRAM organization: the CACTI
+//!   characterization (α/policy-independent, so `characterize` runs once
+//!   per organization, not once per grid point) and one resolved
+//!   [`GateDecider`] per policy lane
+//!   ([`GateDecider::for_policies`] — the same decision path as
+//!   `evaluate`, hoisted out of the traversal).
+//! * [`LadderGroup`] — one entry per (C, B, α): candidates that agree on
+//!   (C, B, α) have an identical `usable_per_bank`, hence an identical
+//!   Eq. 1 `banks_required` ladder, identical level timeline, and
+//!   identical per-bank idle runs. The group holds that state **once**
+//!   (current level, per-bank open-run starts, the shared activity
+//!   integral) plus structure-of-arrays accumulator lanes — contiguous
+//!   `gated_cycles[lane]` / `n_switch[lane]` slices, one lane per
+//!   policy — so closing an idle run fans the one shared `dt` out across
+//!   policies in a tight, autovectorizable lane loop.
+//!
+//! The ladder itself is precomputed as **band boundaries**
+//! (`bounds[k] = (k+1)·usable`): a segment whose occupancy stays in the
+//! current band costs two comparisons, and a band change is one
+//! O(log B) `partition_point` over the boundary array — never a walk,
+//! never a division.
 //!
 //! No per-candidate timeline is ever materialized, and the traversal is
-//! allocation-free. Gate decisions go through the *same*
-//! [`GatingPolicy::decider`] path as `evaluate`, and the floating-point
-//! reductions replicate `evaluate`'s expressions exactly, so the fused
+//! allocation-free. The floating-point reductions replicate
+//! [`super::energy::evaluate`]'s expressions exactly, so the fused
 //! results are bit-identical to the naive oracle (asserted by
-//! `tests/sweep_fused.rs` and the `stage2_sweep` bench).
+//! `tests/sweep_fused.rs`, `tests/sweep_soa_props.rs`, and the
+//! `stage2_sweep` bench).
 //!
-//! Two front ends:
+//! Two front ends share the engine bit-identically:
 //!
 //! * [`sweep_fused`] — drop-in behind [`super::sweep::sweep`] for
-//!   materialized traces; shards candidates across threads on large
-//!   grid × trace products (same spawn pattern as `api::BatchRunner`).
+//!   materialized traces; shards **whole ladder groups** across threads
+//!   on large grid × trace products (no group's state is ever duplicated
+//!   or split across workers; chunk-order reassembly keeps the output
+//!   byte-identical at any thread count).
 //! * [`SweepSink`] — a [`TraceSink`] that consumes the Stage-I stream
 //!   directly, so Stage I + Stage II run fused during simulation with
 //!   **no materialized trace at all** (`ExperimentSpec::stream_stage2`,
@@ -48,18 +63,40 @@ use super::energy::{BankingEval, EnergyError};
 use super::policy::{GateDecider, GatingPolicy};
 use super::sweep::{SweepPoint, SweepSpec};
 
-/// Incremental Stage-II state of one (C, B, α, policy) candidate.
-#[derive(Debug, Clone)]
-struct Candidate {
+/// Read-only per-(C, B) organization state shared by every α group and
+/// policy lane of that organization: one CACTI characterization and one
+/// resolved gate decider per policy lane. Built once at engine
+/// construction, then only borrowed — including across shard threads.
+#[derive(Debug)]
+struct OrgShared {
     capacity: u64,
     banks: u32,
-    alpha: f64,
-    policy: GatingPolicy,
     ch: SramCharacterization,
-    decider: GateDecider,
+    /// Lane axis: the spec's policies in order, plus (on the B=1
+    /// reference organization, when the spec lacks `None`) one trailing
+    /// ungated reference lane.
+    policies: Vec<GatingPolicy>,
+    /// Parallel to `policies`.
+    deciders: Vec<GateDecider>,
+}
+
+/// Mutable traversal state of one (C, B, α) group: the shared threshold
+/// ladder plus structure-of-arrays accumulator lanes (one per policy of
+/// the group's organization).
+#[derive(Debug, Clone)]
+struct LadderGroup {
+    /// Index of the group's [`OrgShared`] in the engine's org table.
+    org: usize,
+    alpha: f64,
+    banks: u32,
     /// Eq. 1 denominator `floor(alpha * C / B)`; 0 means "any occupancy
     /// pins every bank" (degenerate tiny-capacity case).
     usable_per_bank: u64,
+    /// Precomputed ladder band boundaries: `bounds[k] = (k+1) · usable`
+    /// (saturating), so `banks_required(needed)` is the band index that
+    /// brackets `needed` — two comparisons on the fast path, one
+    /// `partition_point` on a band change.
+    bounds: Vec<u64>,
     /// Current `banks_required` level. Starts at `banks` ("everything
     /// busy, nothing open") so the first segment opens the right runs.
     level: u32,
@@ -67,92 +104,102 @@ struct Candidate {
     /// integral).
     run_start: u64,
     /// Per-bank open idle-run start; entry `b` is meaningful iff
-    /// `b >= level`.
+    /// `b >= level`. Shared by every policy lane (the ladder does not
+    /// depend on the policy).
     open_since: Vec<u64>,
-    /// Σ level · dt over the traversal (integer, order-independent).
+    /// Σ level · dt over the traversal (integer, order-independent);
+    /// shared by every lane.
     active_weighted: u128,
-    gated_cycles: u128,
-    n_switch: u64,
     started: bool,
+    /// SoA lane accumulators, parallel to the organization's deciders.
+    gated_cycles: Vec<u128>,
+    n_switch: Vec<u64>,
 }
 
-impl Candidate {
-    fn new(
-        cacti: &CactiModel,
-        capacity: u64,
-        banks: u32,
-        alpha: f64,
-        policy: GatingPolicy,
-        freq_ghz: f64,
-    ) -> Self {
+impl LadderGroup {
+    fn new(org_idx: usize, org: &OrgShared, alpha: f64) -> Self {
         assert!(alpha > 0.0 && alpha <= 1.0, "alpha={alpha}");
-        assert!(banks >= 1);
-        let ch = cacti.characterize(capacity, banks);
-        let decider = policy.decider(&ch, freq_ghz);
+        assert!(org.banks >= 1);
         // Exactly `banks_required`'s denominator (same float expression).
-        let usable_per_bank = (alpha * (capacity as f64 / banks as f64)).floor() as u64;
+        let usable_per_bank =
+            (alpha * (org.capacity as f64 / org.banks as f64)).floor() as u64;
+        let bounds = (0..org.banks)
+            .map(|k| usable_per_bank.saturating_mul((k + 1) as u64))
+            .collect();
+        let lanes = org.deciders.len();
         Self {
-            capacity,
-            banks,
+            org: org_idx,
             alpha,
-            policy,
-            ch,
-            decider,
+            banks: org.banks,
             usable_per_bank,
-            level: banks,
+            bounds,
+            level: org.banks,
             run_start: 0,
-            open_since: vec![0; banks as usize],
+            open_since: vec![0; org.banks as usize],
             active_weighted: 0,
-            gated_cycles: 0,
-            n_switch: 0,
             started: false,
+            gated_cycles: vec![0; lanes],
+            n_switch: vec![0; lanes],
         }
     }
 
-    /// Eq. 1 via the threshold ladder: walk the current level down/up
-    /// until `needed` falls inside its band. Amortized O(level delta);
-    /// equal to `ceil(needed / usable).min(banks)` exactly.
+    /// Eq. 1 via the precomputed band boundaries: if `needed` still falls
+    /// in the current level's band, two comparisons; otherwise one
+    /// O(log B) `partition_point`. Equal to
+    /// `ceil(needed / usable).min(banks)` exactly.
     #[inline]
     fn level_for(&self, needed: u64) -> u32 {
         if needed == 0 {
             return 0;
         }
-        let usable = self.usable_per_bank;
-        if usable == 0 {
+        if self.usable_per_bank == 0 {
             return self.banks;
         }
-        let mut l = self.level.max(1);
-        while l > 1 && needed <= usable.saturating_mul((l - 1) as u64) {
-            l -= 1;
-        }
-        while l < self.banks && needed > usable.saturating_mul(l as u64) {
-            l += 1;
-        }
+        let bounds = &self.bounds;
+        let l = self.level;
+        // Band-delta fast path: level l (l >= 1) covers
+        // (bounds[l-2], bounds[l-1]], with the top band unbounded above
+        // (the ladder clamps at `banks`).
+        let new = if l >= 1
+            && (l == 1 || needed > bounds[(l - 2) as usize])
+            && (l == self.banks || needed <= bounds[(l - 1) as usize])
+        {
+            l
+        } else {
+            (bounds.partition_point(|&b| b < needed) as u32 + 1).min(self.banks)
+        };
         debug_assert_eq!(
-            l as u64,
-            ceil_div(needed, usable).min(self.banks as u64),
-            "ladder diverged from Eq. 1 at needed={needed}"
+            new as u64,
+            ceil_div(needed, self.usable_per_bank).min(self.banks as u64),
+            "ladder bounds diverged from Eq. 1 at needed={needed}"
         );
-        l
+        new
     }
 
-    /// Close the idle run of bank `b` at time `t`, paying a transition
-    /// pair iff the policy gates it.
+    /// Close the idle run of bank `b` at time `t`: the one shared `dt`
+    /// fans out across the policy lanes (contiguous accumulators, so the
+    /// lane loop vectorizes).
     #[inline]
-    fn close_run(&mut self, b: u32, t: u64) {
+    fn close_run(&mut self, b: u32, t: u64, deciders: &[GateDecider]) {
         let dt = t - self.open_since[b as usize];
-        if dt > 0 && self.decider.gate(dt) {
-            self.gated_cycles += dt as u128;
-            self.n_switch += 2;
+        if dt == 0 {
+            return;
+        }
+        for (lane, d) in deciders.iter().enumerate() {
+            if d.gate(dt) {
+                self.gated_cycles[lane] += dt as u128;
+                self.n_switch[lane] += 2;
+            }
         }
     }
 
     /// Consume the occupancy change at segment boundary `t0`: from here
     /// until the next boundary (or the run's end) `needed` bytes are
     /// resident. Segments are contiguous, so only the left edge matters —
-    /// the open run closes at the next call's `t0` or at [`Candidate::seal`].
+    /// the open run closes at the next call's `t0` or at
+    /// [`LadderGroup::seal`].
     #[inline]
-    fn advance(&mut self, t0: u64, needed: u64) {
+    fn advance(&mut self, t0: u64, needed: u64, deciders: &[GateDecider]) {
         if !self.started {
             self.started = true;
             debug_assert_eq!(t0, 0, "occupancy streams start at t=0");
@@ -162,7 +209,7 @@ impl Candidate {
         if new != old {
             if new > old {
                 for b in old..new {
-                    self.close_run(b, t0);
+                    self.close_run(b, t0, deciders);
                 }
             } else {
                 for b in new..old {
@@ -176,7 +223,7 @@ impl Candidate {
     }
 
     /// Close every open run and the activity integral at the run's end.
-    fn seal(&mut self, end: u64) {
+    fn seal(&mut self, end: u64, deciders: &[GateDecider]) {
         if !self.started {
             // Zero-segment trace (end == 0): nothing was ever active or
             // idle, matching the empty activity timeline of the oracle.
@@ -184,17 +231,25 @@ impl Candidate {
             return;
         }
         for b in self.level..self.banks {
-            self.close_run(b, end);
+            self.close_run(b, end, deciders);
         }
         self.active_weighted += self.level as u128 * (end - self.run_start) as u128;
         self.run_start = end;
     }
 
-    /// Assemble the final evaluation. Float expressions replicate
+    /// Assemble one lane's final evaluation. Float expressions replicate
     /// [`super::energy::evaluate`] term for term so the result is
     /// bit-identical to the naive path.
-    fn into_eval(self, stats: &AccessStats, end: u64, freq_ghz: f64) -> BankingEval {
-        let ch = self.ch;
+    fn eval_lane(
+        &self,
+        lane: usize,
+        org: &OrgShared,
+        stats: &AccessStats,
+        end: u64,
+        freq_ghz: f64,
+    ) -> BankingEval {
+        let ch = org.ch;
+        let policy = org.policies[lane];
         let cyc_to_s = 1.0 / (freq_ghz * 1e9);
         let end_f = end as f64;
 
@@ -207,27 +262,29 @@ impl Candidate {
         };
 
         let total_bank_cycles = end_f * self.banks as f64;
-        let retained = self.policy.idle_leak_factor();
-        let leak_cycles = total_bank_cycles - self.gated_cycles as f64 * (1.0 - retained);
+        let retained = policy.idle_leak_factor();
+        let gated = self.gated_cycles[lane];
+        let leak_cycles = total_bank_cycles - gated as f64 * (1.0 - retained);
         let e_leak = ch.p_leak_bank_w * leak_cycles * cyc_to_s;
-        let per_switch = match self.policy {
+        let per_switch = match policy {
             GatingPolicy::Drowsy { .. } => ch.e_switch_j * 0.01,
             _ => ch.e_switch_j,
         };
-        let e_sw = self.n_switch as f64 * per_switch;
+        let n_switch = self.n_switch[lane];
+        let e_sw = n_switch as f64 * per_switch;
 
         BankingEval {
-            capacity: self.capacity,
+            capacity: org.capacity,
             banks: self.banks,
             alpha: self.alpha,
-            policy: self.policy,
+            policy,
             e_dyn_j: e_dyn,
             e_leak_j: e_leak,
             e_sw_j: e_sw,
-            n_switch: self.n_switch,
+            n_switch,
             avg_active_banks: avg,
             gated_fraction: if total_bank_cycles > 0.0 {
-                self.gated_cycles as f64 / total_bank_cycles
+                gated as f64 / total_bank_cycles
             } else {
                 0.0
             },
@@ -238,62 +295,133 @@ impl Candidate {
     }
 }
 
-/// One (capacity, alpha) group of the grid: the shared B=1 ungated
-/// reference plus one candidate per (policy, banks) cell, in the naive
-/// sweep's output order.
-struct Group {
-    capacity: u64,
-    base: Candidate,
-    /// `policies.len() * banks.len()` candidates, policy-major.
-    cells: Vec<Candidate>,
-}
-
 /// Single-pass evaluator of a whole [`SweepSpec`] grid over a stream of
 /// occupancy segments. Feed segments with [`FusedSweep::push_segment`]
 /// (non-overlapping, time-ordered, starting at 0), then
 /// [`FusedSweep::finish`] once with the run's end time.
 pub struct FusedSweep {
     freq_ghz: f64,
-    groups: Vec<Group>,
+    capacities: Vec<u64>,
+    alphas: Vec<f64>,
+    /// The emitted bank axis (the spec's, verbatim).
+    cell_banks: Vec<u32>,
+    /// The emitted policy axis (the spec's, verbatim).
+    policies: Vec<GatingPolicy>,
+    /// Layout bank axis: the spec's banks, with B=1 prepended when the
+    /// spec lacks it (the ΔE/ΔA reference needs a B=1 ladder group at
+    /// every (C, α) regardless of the grid).
+    bank_axis: Vec<u32>,
+    /// `cell_banks[j]` lives at `bank_axis[bank_cell_offset + j]`.
+    bank_cell_offset: usize,
+    /// Index of the B=1 reference organization within `bank_axis`.
+    base_bank_idx: usize,
+    /// Lane of the ungated reference within the B=1 organization.
+    base_lane: usize,
+    /// `capacities.len() × bank_axis.len()` organizations, capacity-major.
+    orgs: Vec<OrgShared>,
+    /// `capacities.len() × alphas.len() × bank_axis.len()` groups, in
+    /// (capacity, alpha, bank) order — the unit of thread sharding.
+    groups: Vec<LadderGroup>,
     end: Option<u64>,
 }
 
 impl FusedSweep {
     /// Build the engine for every candidate of `spec`. Capacities known
     /// to be infeasible may be pre-filtered by the caller; otherwise
-    /// [`FusedSweep::finish`] filters by the observed peak.
+    /// [`FusedSweep::into_points`] filters by the observed peak.
     pub fn new(cacti: &CactiModel, spec: &SweepSpec, freq_ghz: f64) -> Self {
-        let mut groups = Vec::with_capacity(spec.capacities.len() * spec.alphas.len());
-        for &cap in &spec.capacities {
-            for &alpha in &spec.alphas {
-                let base =
-                    Candidate::new(cacti, cap, 1, alpha, GatingPolicy::None, freq_ghz);
-                let mut cells =
-                    Vec::with_capacity(spec.policies.len() * spec.banks.len());
-                for &policy in &spec.policies {
-                    for &banks in &spec.banks {
-                        cells.push(Candidate::new(
-                            cacti, cap, banks, alpha, policy, freq_ghz,
-                        ));
+        let capacities = spec.capacities.clone();
+        let alphas = spec.alphas.clone();
+        let cell_banks = spec.banks.clone();
+        let policies = spec.policies.clone();
+
+        let one_pos = cell_banks.iter().position(|&b| b == 1);
+        let (bank_axis, bank_cell_offset, base_bank_idx) = match one_pos {
+            Some(i) => (cell_banks.clone(), 0, i),
+            None => {
+                let mut axis = Vec::with_capacity(cell_banks.len() + 1);
+                axis.push(1);
+                axis.extend_from_slice(&cell_banks);
+                (axis, 1, 0)
+            }
+        };
+        // The ungated reference lane: the spec's own `None` lane when it
+        // has one, a trailing extra lane on the B=1 organization when it
+        // does not, and the only lane of a synthetic B=1 organization
+        // when the grid itself lacks B=1.
+        let base_lane = match one_pos {
+            Some(_) => policies
+                .iter()
+                .position(|&p| p == GatingPolicy::None)
+                .unwrap_or(policies.len()),
+            None => 0,
+        };
+
+        let mut orgs = Vec::with_capacity(capacities.len() * bank_axis.len());
+        for &cap in &capacities {
+            for (bi, &banks) in bank_axis.iter().enumerate() {
+                assert!(banks >= 1);
+                // Once per (C, B): α and policy do not affect the
+                // characterization, so no per-grid-point re-derivation.
+                let ch = cacti.characterize(cap, banks);
+                let lane_policies: Vec<GatingPolicy> = if bi == base_bank_idx {
+                    if one_pos.is_some() {
+                        let mut ps = policies.clone();
+                        if !ps.contains(&GatingPolicy::None) {
+                            ps.push(GatingPolicy::None);
+                        }
+                        ps
+                    } else {
+                        vec![GatingPolicy::None]
                     }
-                }
-                groups.push(Group {
+                } else {
+                    policies.clone()
+                };
+                let deciders = GateDecider::for_policies(&lane_policies, &ch, freq_ghz);
+                orgs.push(OrgShared {
                     capacity: cap,
-                    base,
-                    cells,
+                    banks,
+                    ch,
+                    policies: lane_policies,
+                    deciders,
                 });
             }
         }
+
+        let mut groups =
+            Vec::with_capacity(capacities.len() * alphas.len() * bank_axis.len());
+        for ci in 0..capacities.len() {
+            for &alpha in &alphas {
+                for bi in 0..bank_axis.len() {
+                    let org_idx = ci * bank_axis.len() + bi;
+                    groups.push(LadderGroup::new(org_idx, &orgs[org_idx], alpha));
+                }
+            }
+        }
+
         Self {
             freq_ghz,
+            capacities,
+            alphas,
+            cell_banks,
+            policies,
+            bank_axis,
+            bank_cell_offset,
+            base_bank_idx,
+            base_lane,
+            orgs,
             groups,
             end: None,
         }
     }
 
-    /// Total candidates held (cells + references).
+    /// Total candidate lanes held across all groups (grid cells plus the
+    /// ungated references).
     pub fn candidates(&self) -> usize {
-        self.groups.iter().map(|g| g.cells.len() + 1).sum()
+        self.groups
+            .iter()
+            .map(|g| self.orgs[g.org].deciders.len())
+            .sum()
     }
 
     /// Consume one piecewise-constant occupancy segment `[t0, t1)`
@@ -303,23 +431,19 @@ impl FusedSweep {
     pub fn push_segment(&mut self, t0: u64, t1: u64, needed: u64) {
         debug_assert!(t1 > t0, "empty segment [{t0}, {t1})");
         debug_assert!(self.end.is_none(), "push after finish");
+        let orgs = &self.orgs;
         for g in &mut self.groups {
-            g.base.advance(t0, needed);
-            for c in &mut g.cells {
-                c.advance(t0, needed);
-            }
+            g.advance(t0, needed, &orgs[g.org].deciders);
         }
     }
 
-    /// Seal every candidate at the run's end time.
+    /// Seal every group at the run's end time.
     pub fn finish(&mut self, end: u64) {
         assert!(self.end.is_none(), "finish called twice");
         self.end = Some(end);
+        let orgs = &self.orgs;
         for g in &mut self.groups {
-            g.base.seal(end);
-            for c in &mut g.cells {
-                c.seal(end);
-            }
+            g.seal(end, &orgs[g.org].deciders);
         }
     }
 
@@ -330,38 +454,61 @@ impl FusedSweep {
     pub fn into_points(self, stats: &AccessStats, peak_needed: u64) -> Vec<SweepPoint> {
         let end = self.end.expect("finish() before into_points()");
         let freq = self.freq_ghz;
+        let nb = self.bank_axis.len();
+        let na = self.alphas.len();
         let mut out = Vec::new();
-        for g in self.groups {
-            if g.capacity < peak_needed {
+        for (ci, &cap) in self.capacities.iter().enumerate() {
+            if cap < peak_needed {
                 continue;
             }
-            let base = g.base.into_eval(stats, end, freq);
-            let base_e = base.e_total_j();
-            let base_a = base.area_mm2;
-            for cell in g.cells {
-                // The exact (B=1, no-gating) cell IS the reference; reuse
-                // it like the oracle does (identical by construction).
-                let eval = if cell.banks == 1 && cell.policy == GatingPolicy::None {
-                    base.clone()
-                } else {
-                    cell.into_eval(stats, end, freq)
-                };
-                out.push(SweepPoint {
-                    eval,
-                    base_e_j: base_e,
-                    base_area_mm2: base_a,
-                });
+            for ai in 0..na {
+                let row = (ci * na + ai) * nb;
+                let base = self.groups[row + self.base_bank_idx].eval_lane(
+                    self.base_lane,
+                    &self.orgs[ci * nb + self.base_bank_idx],
+                    stats,
+                    end,
+                    freq,
+                );
+                let base_e = base.e_total_j();
+                let base_a = base.area_mm2;
+                for (pi, &policy) in self.policies.iter().enumerate() {
+                    for (bj, &banks) in self.cell_banks.iter().enumerate() {
+                        let bi = self.bank_cell_offset + bj;
+                        // The exact (B=1, no-gating) cell IS the
+                        // reference; reuse it like the oracle does
+                        // (identical by construction).
+                        let eval = if banks == 1 && policy == GatingPolicy::None {
+                            base.clone()
+                        } else {
+                            self.groups[row + bi].eval_lane(
+                                pi,
+                                &self.orgs[ci * nb + bi],
+                                stats,
+                                end,
+                                freq,
+                            )
+                        };
+                        out.push(SweepPoint {
+                            eval,
+                            base_e_j: base_e,
+                            base_area_mm2: base_a,
+                        });
+                    }
+                }
             }
         }
         out
     }
 
-    /// Split the engine's candidate groups into up to `n` shards for
+    /// Split the engine's ladder groups into up to `n` shards for
     /// thread-parallel traversal; reassemble with [`FusedSweep::reunite`].
-    fn split(&mut self, n: usize) -> Vec<Vec<Group>> {
+    /// A group is never split — all of a (C, B, α) candidate family's
+    /// state lives on exactly one shard.
+    fn split(&mut self, n: usize) -> Vec<Vec<LadderGroup>> {
         let groups = std::mem::take(&mut self.groups);
         let per = groups.len().div_ceil(n.max(1));
-        let mut shards: Vec<Vec<Group>> = Vec::new();
+        let mut shards: Vec<Vec<LadderGroup>> = Vec::new();
         let mut it = groups.into_iter().peekable();
         while it.peek().is_some() {
             shards.push(it.by_ref().take(per).collect());
@@ -369,22 +516,23 @@ impl FusedSweep {
         shards
     }
 
-    fn reunite(&mut self, shards: Vec<Vec<Group>>) {
+    fn reunite(&mut self, shards: Vec<Vec<LadderGroup>>) {
         self.groups = shards.into_iter().flatten().collect();
     }
 }
 
 /// Work threshold (segments × candidates) above which the materialized
-/// sweep shards candidates across threads. Below it, spawn overhead
+/// sweep shards groups across threads. Below it, spawn overhead
 /// outweighs the win (~a quarter-million O(1) updates run in well under
 /// a millisecond).
 const PARALLEL_WORK_THRESHOLD: u128 = 1 << 18;
 
 /// Fused implementation behind [`super::sweep::sweep`]: one traversal of
-/// the (finalized) trace evaluates the whole grid, sharding candidate
-/// groups across OS threads when the grid × trace product is large.
-/// Per-candidate results are independent, so the output is byte-identical
-/// at any thread count.
+/// the (finalized) trace evaluates the whole grid, sharding ladder
+/// groups across OS threads when the grid × trace product is large. The
+/// shared org table is read-only during traversal, per-group results are
+/// independent, and shards reassemble in chunk order, so the output is
+/// byte-identical at any thread count.
 ///
 /// Errors with [`EnergyError::UnfinalizedTrace`] instead of panicking
 /// when the trace has no end time.
@@ -421,19 +569,18 @@ pub fn sweep_fused(
         .map(|n| n.get())
         .unwrap_or(1);
     if work >= PARALLEL_WORK_THRESHOLD && threads > 1 && engine.groups.len() > 1 {
-        // Shard groups across threads; each walks the trace once over its
-        // shard (same scoped-spawn pattern as api::BatchRunner). Scope
-        // joins every worker before returning.
+        // Shard whole groups across threads; each worker walks the trace
+        // once over its shard, borrowing the shared org table read-only
+        // (same scoped-spawn pattern as api::BatchRunner). Scope joins
+        // every worker before returning.
         let mut shards = engine.split(threads.min(engine.groups.len()));
+        let orgs = &engine.orgs;
         std::thread::scope(|scope| {
             for shard in &mut shards {
                 scope.spawn(move || {
                     for seg in trace.segments() {
                         for g in shard.iter_mut() {
-                            g.base.advance(seg.t0, seg.needed);
-                            for c in &mut g.cells {
-                                c.advance(seg.t0, seg.needed);
-                            }
+                            g.advance(seg.t0, seg.needed, &orgs[g.org].deciders);
                         }
                     }
                 });
@@ -659,6 +806,79 @@ mod tests {
     }
 
     #[test]
+    fn grid_without_bank_one_matches_naive() {
+        // The ΔE/ΔA reference needs a B=1 ladder group even when the grid
+        // omits B=1; the engine synthesizes one (single ungated lane).
+        let cacti = CactiModel::default();
+        let mut rng = Rng::new(11);
+        let tr = random_trace(&mut rng, 64 * MIB);
+        let spec = SweepSpec {
+            capacities: vec![64 * MIB],
+            banks: vec![2, 8, 32],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::None, GatingPolicy::Aggressive],
+        };
+        let st = stats();
+        assert_points_identical(
+            &sweep_fused(&cacti, &tr, &st, &spec, 1.0).unwrap(),
+            &sweep_naive(&cacti, &tr, &st, &spec, 1.0).unwrap(),
+        );
+    }
+
+    #[test]
+    fn grid_without_none_policy_keeps_reference_lane() {
+        // When the spec has no `None` policy, the B=1 organization grows
+        // a trailing ungated lane so base_e_j/base_area_mm2 still exist.
+        let cacti = CactiModel::default();
+        let mut rng = Rng::new(12);
+        let tr = random_trace(&mut rng, 64 * MIB);
+        let spec = SweepSpec {
+            capacities: vec![64 * MIB, 96 * MIB],
+            banks: vec![1, 4],
+            alphas: vec![0.9, 1.0],
+            policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+        };
+        let st = stats();
+        assert_points_identical(
+            &sweep_fused(&cacti, &tr, &st, &spec, 1.0).unwrap(),
+            &sweep_naive(&cacti, &tr, &st, &spec, 1.0).unwrap(),
+        );
+    }
+
+    #[test]
+    fn ladder_bounds_match_eq1_over_random_needed() {
+        // The band-boundary level lookup equals ceil(needed/usable)
+        // clamped at B — including after arbitrary level history.
+        let cacti = CactiModel::default();
+        let org_src = FusedSweep::new(
+            &cacti,
+            &SweepSpec {
+                capacities: vec![1000],
+                banks: vec![7],
+                alphas: vec![0.33],
+                policies: vec![GatingPolicy::Aggressive],
+            },
+            1.0,
+        );
+        let mut g = org_src.groups[org_src.bank_cell_offset].clone();
+        assert_eq!(g.banks, 7);
+        let usable = g.usable_per_bank;
+        assert!(usable > 0);
+        let mut rng = Rng::new(5);
+        for _ in 0..2000 {
+            let needed = rng.below(3 * usable * 8 + 2);
+            let want = if needed == 0 {
+                0
+            } else {
+                ceil_div(needed, usable).min(g.banks as u64) as u32
+            };
+            let got = g.level_for(needed);
+            assert_eq!(got, want, "needed={needed} from level={}", g.level);
+            g.level = got; // exercise the band-delta fast path next round
+        }
+    }
+
+    #[test]
     fn sink_matches_materialized_sweep() {
         let cacti = CactiModel::default();
         let mut rng = Rng::new(99);
@@ -746,5 +966,31 @@ mod tests {
         let fused = sweep_fused(&cacti, &tr, &st, &spec, 1.0).unwrap();
         let naive = sweep_naive(&cacti, &tr, &st, &spec, 1.0).unwrap();
         assert_points_identical(&fused, &naive);
+    }
+
+    #[test]
+    fn characterization_hoisted_once_per_organization() {
+        // Every α group of one (C, B) organization shares the same org
+        // entry (and thus the same characterization and deciders).
+        let cacti = CactiModel::default();
+        let engine = FusedSweep::new(
+            &cacti,
+            &SweepSpec {
+                capacities: vec![16 * MIB, 32 * MIB],
+                banks: vec![1, 4],
+                alphas: vec![0.5, 0.9, 1.0],
+                policies: vec![GatingPolicy::Aggressive, GatingPolicy::drowsy()],
+            },
+            1.0,
+        );
+        assert_eq!(engine.orgs.len(), 2 * 2, "one org per (C, B)");
+        assert_eq!(engine.groups.len(), 2 * 3 * 2, "one group per (C, B, α)");
+        for g in &engine.groups {
+            let org = &engine.orgs[g.org];
+            assert_eq!(g.banks, org.banks);
+            assert_eq!(org.ch, cacti.characterize(org.capacity, org.banks));
+            assert_eq!(g.gated_cycles.len(), org.deciders.len());
+            assert_eq!(g.n_switch.len(), org.deciders.len());
+        }
     }
 }

@@ -143,6 +143,19 @@ pub enum GateDecider {
 }
 
 impl GateDecider {
+    /// Resolve one decider per policy for a single SRAM organization.
+    /// The decision thresholds depend only on (policy, organization,
+    /// frequency) — not on α — so the fused sweep engine hoists this to
+    /// once per (C, B) and shares the slice across every α group and the
+    /// whole trace traversal.
+    pub fn for_policies(
+        policies: &[GatingPolicy],
+        ch: &SramCharacterization,
+        freq_ghz: f64,
+    ) -> Vec<GateDecider> {
+        policies.iter().map(|p| p.decider(ch, freq_ghz)).collect()
+    }
+
     #[inline]
     pub fn gate(&self, dt: u64) -> bool {
         match *self {
@@ -237,6 +250,22 @@ mod tests {
             for dt in [0, 1, 2, be / 2, be, be + 1, be * 4, be * 4 + 101, be * 10] {
                 assert_eq!(d.gate(dt), p.should_gate(dt, &ch, 1.0), "{p:?} dt={dt}");
             }
+        }
+    }
+
+    #[test]
+    fn for_policies_matches_each_decider() {
+        let ch = ch();
+        let policies = [
+            GatingPolicy::None,
+            GatingPolicy::Aggressive,
+            GatingPolicy::conservative(),
+            GatingPolicy::drowsy(),
+        ];
+        let shared = GateDecider::for_policies(&policies, &ch, 1.0);
+        assert_eq!(shared.len(), policies.len());
+        for (p, d) in policies.iter().zip(&shared) {
+            assert_eq!(*d, p.decider(&ch, 1.0), "{p:?}");
         }
     }
 

@@ -17,11 +17,14 @@
 //!
 //! Job bodies mirror the `api` layer exactly: sweeps replicate
 //! `api::optimize::collect_sweeps` (fused streaming, nothing
-//! materialized), validation replicates `api::optimize::online_validate`
-//! (one materialized Stage-I run, every frontier config replayed).
-//! Validation rebuilds its frontier from its own persisted sweep — a
-//! per-workload frontier is independent of the other workloads, so the
-//! result is identical to slicing the portfolio run's frontier.
+//! materialized), and validation *shares*
+//! [`crate::api::validate_frontier`] with `api::online_validate` — one
+//! materialized Stage-I run, every frontier config replayed across
+//! worker threads, rows reassembled in frontier order (byte-identical at
+//! any thread count). Validation rebuilds its frontier from its own
+//! persisted sweep — a per-workload frontier is independent of the other
+//! workloads, so the result is identical to slicing the portfolio run's
+//! frontier.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -29,9 +32,10 @@ use std::sync::{Condvar, Mutex};
 use anyhow::{anyhow, Context, Result};
 
 use crate::api::optimize::workload_label;
-use crate::api::{ApiContext, ExperimentSpec, MaterializedRun, OnlineValidation};
-use crate::banking::online::{replay_trace_with, OnlineConfig};
-use crate::banking::optimize::{optimize, ConfigKey, OptimizeResult, WorkloadSweep};
+use crate::api::{
+    validate_frontier, ApiContext, ExperimentSpec, MaterializedRun,
+};
+use crate::banking::optimize::{optimize, OptimizeResult, WorkloadSweep};
 use crate::obs::{replay_wal, WalReplay};
 use crate::report::tables;
 use crate::trace::{AccessStats, OccupancyTrace};
@@ -476,30 +480,14 @@ fn run_validate(
     // and every frontier config replays against the borrowed trace,
     // exactly `api::online_validate`.
     let run = validate_source(ctx, store, spec)?;
-    let mut vals = Vec::with_capacity(frontier.frontier.len());
-    for fp in &frontier.frontier {
-        let config = OnlineConfig::of_point(&fp.point);
-        let report = replay_trace_with(
-            &ctx.cacti,
-            run.trace(),
-            run.stats(),
-            config,
-            spec.freq_ghz(),
-            false, // totals only; no timelines for a whole frontier
-        )?;
-        vals.push(OnlineValidation {
-            workload: frontier.workload.clone(),
-            key: ConfigKey::of(&fp.point),
-            predicted_e_j: fp.point.eval.e_total_j(),
-            observed_e_j: report.e_total_j(),
-            energy_delta_pct: report.eval.delta_pct(&fp.point.eval),
-            predicted_wake_pct: fp.wake_exposure_pct,
-            observed_stall_pct: report.stall_pct(),
-            trace_cycles: report.trace_cycles,
-            stall_cycles: report.stall_cycles,
-            wake_events: report.wake_events,
-        });
-    }
+    let vals = validate_frontier(
+        &ctx.cacti,
+        run.trace(),
+        run.stats(),
+        frontier,
+        spec.freq_ghz(),
+        crate::api::optimize::default_validate_jobs(),
+    )?;
     store.write_artifact(job.id, "validation.csv", tables::validation_csv(&vals).as_bytes())?;
     store.write_artifact(
         job.id,

@@ -139,6 +139,7 @@ fn run(raw: &[String]) -> Result<()> {
         "replay" => replay_cmd(&args),
         "watch" => watch_cmd(&args),
         "lab" => lab_cmd(&args),
+        "bench" => bench_cmd(&args),
         "e2e" => e2e_cmd(&args),
         "baseline-compare" => baseline_compare(),
         "ablate" => ablate(),
@@ -236,6 +237,14 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                                      listed manifest can reach
                              lab trace-params JOB_ID   print a job's
                                      provenance manifest
+  repro bench              perf-trajectory tooling for the BENCH_*.json
+                           artifacts the bench targets emit
+                             bench check --baseline FILE ARTIFACT.json..
+                                     compare each artifact against its
+                                     committed baseline entry (keyed by
+                                     `name`; rules are max_<field>/
+                                     min_<field> numeric bounds) and
+                                     fail on any violation
   repro e2e                functional PJRT decode (--model, --steps)
   repro baseline-compare   TRAPTI vs aggregate-statistics DSE
   repro ablate             gating-policy sensitivity study (the paper's
@@ -1270,6 +1279,69 @@ fn watch_cmd(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(interval.max(1)));
         println!();
     }
+}
+
+/// `repro bench check --baseline FILE ARTIFACT.json..` — compare each
+/// `BENCH_*.json` artifact (emitted by the bench targets) against the
+/// committed baseline's entry of the same `name`. Rules are generous
+/// `max_<field>` / `min_<field>` numeric bounds
+/// ([`trapti::util::bench::baseline_violations`]); an artifact whose
+/// name has no baseline entry is a failure too, so new benches must be
+/// enrolled in the trajectory.
+fn bench_cmd(args: &Args) -> Result<()> {
+    use trapti::util::bench::baseline_violations;
+    use trapti::util::json;
+
+    let sub = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("bench needs a subcommand (try `bench check`)"))?;
+    if sub != "check" {
+        bail!("unknown bench subcommand `{sub}` (try `bench check`)");
+    }
+    let baseline_path = args
+        .flag("baseline")
+        .ok_or_else(|| anyhow!("bench check needs --baseline FILE"))?;
+    let artifacts = &args.positional[2..];
+    if artifacts.is_empty() {
+        bail!("bench check needs at least one BENCH_*.json artifact path");
+    }
+    let baseline = json::parse(
+        &std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )
+    .with_context(|| format!("parsing baseline {baseline_path}"))?;
+
+    let mut failures = 0usize;
+    for path in artifacts {
+        let artifact = json::parse(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading artifact {path}"))?,
+        )
+        .with_context(|| format!("parsing artifact {path}"))?;
+        let name = artifact
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("{path}: artifact has no `name` field"))?;
+        let violations = match baseline.get(name) {
+            None => vec![format!("no baseline entry for `{name}`")],
+            Some(rules) => baseline_violations(&artifact, rules),
+        };
+        if violations.is_empty() {
+            println!("OK   {name} ({path})");
+        } else {
+            failures += 1;
+            println!("FAIL {name} ({path})");
+            for v in &violations {
+                println!("     {v}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("bench check: {failures} artifact(s) violate the baseline");
+    }
+    Ok(())
 }
 
 fn e2e_cmd(args: &Args) -> Result<()> {

@@ -4,8 +4,21 @@
 //! one paper table/figure through `api::experiments` and times
 //! the end-to-end generation with warmup + repeated measurement,
 //! reporting mean / min / max / stddev like criterion's summary line.
+//!
+//! Perf trajectory: benches also [`emit_json`] a `BENCH_<name>.json`
+//! artifact (wall-ms, derived ratios, problem size) under
+//! `TRAPTI_BENCH_DIR`. CI runs the benches in smoke mode
+//! (`TRAPTI_BENCH_SMOKE=1`, shrunken workloads), uploads the artifacts,
+//! and `repro bench check` compares them against the committed
+//! `rust/configs/bench_baseline.json` with generous tolerances
+//! ([`baseline_violations`]) — a trajectory of the hot path's cost over
+//! time, not a microbenchmark gate.
 
+use std::io;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -71,6 +84,94 @@ pub fn default_iters() -> usize {
         .max(1)
 }
 
+/// `TRAPTI_BENCH_SMOKE=1` shrinks bench workloads to CI scale: same code
+/// paths and correctness assertions, wall-clock in seconds not minutes.
+/// Speedup-threshold assertions that only hold at full scale are gated
+/// off in smoke mode (the JSON artifact still records the ratio).
+pub fn smoke() -> bool {
+    std::env::var("TRAPTI_BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
+/// Directory `BENCH_*.json` artifacts land in (`TRAPTI_BENCH_DIR`,
+/// default: the working directory).
+pub fn bench_dir() -> PathBuf {
+    std::env::var_os("TRAPTI_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+impl BenchResult {
+    /// Timing fields as JSON (milliseconds), for [`emit_json`].
+    pub fn to_json(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("wall_ms", Json::num(self.mean.as_secs_f64() * 1e3)),
+            ("min_ms", Json::num(self.min.as_secs_f64() * 1e3)),
+            ("max_ms", Json::num(self.max.as_secs_f64() * 1e3)),
+        ]
+    }
+}
+
+/// Write `BENCH_<name>.json` under [`bench_dir`]: the `name` field plus
+/// `fields`, keys emitted in `Json::obj`'s sorted order. Returns the
+/// written path. Benches call this once, after their correctness
+/// assertions pass.
+pub fn emit_json(name: &str, fields: Vec<(&str, Json)>) -> io::Result<PathBuf> {
+    write_json_to(&bench_dir(), name, fields)
+}
+
+/// [`emit_json`] with an explicit directory (testable without env races).
+pub fn write_json_to(
+    dir: &Path,
+    name: &str,
+    fields: Vec<(&str, Json)>,
+) -> io::Result<PathBuf> {
+    let mut pairs = vec![("name", Json::str(name))];
+    pairs.extend(fields);
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(&path, format!("{}\n", Json::obj(pairs).to_string_pretty()))?;
+    Ok(path)
+}
+
+/// Compare one bench artifact against its baseline rules. Each rule is
+/// `max_<field>` (artifact field must be `<=` the bound) or
+/// `min_<field>` (`>=`); unknown rule shapes and missing/non-numeric
+/// artifact fields are violations too, so a malformed baseline cannot
+/// silently pass. Returns human-readable violation lines (empty = ok).
+pub fn baseline_violations(artifact: &Json, rules: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some(rules) = rules.as_obj() else {
+        return vec!["baseline entry is not an object".to_string()];
+    };
+    for (rule, bound) in rules {
+        let Some(bound) = bound.as_f64() else {
+            out.push(format!("baseline rule `{rule}` is not numeric"));
+            continue;
+        };
+        let (field, is_max) = if let Some(f) = rule.strip_prefix("max_") {
+            (f, true)
+        } else if let Some(f) = rule.strip_prefix("min_") {
+            (f, false)
+        } else {
+            out.push(format!(
+                "baseline rule `{rule}` must start with max_ or min_"
+            ));
+            continue;
+        };
+        let Some(value) = artifact.get(field).and_then(Json::as_f64) else {
+            out.push(format!("artifact is missing numeric field `{field}`"));
+            continue;
+        };
+        if is_max && value > bound {
+            out.push(format!("{field} = {value} exceeds max {bound}"));
+        } else if !is_max && value < bound {
+            out.push(format!("{field} = {value} below min {bound}"));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +187,56 @@ mod tests {
     #[test]
     fn default_iters_floor() {
         assert!(default_iters() >= 1);
+    }
+
+    #[test]
+    fn emit_json_writes_named_artifact() {
+        let dir = std::env::temp_dir()
+            .join(format!("trapti-bench-emit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (r, _) = bench("unit_emit", 2, || 1 + 1);
+        let mut fields = r.to_json();
+        fields.push(("grid_points", Json::num(144.0)));
+        let path = write_json_to(&dir, "unit_emit", fields).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_unit_emit.json");
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("unit_emit"));
+        assert_eq!(parsed.get("grid_points").unwrap().as_f64(), Some(144.0));
+        assert!(parsed.get("wall_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn baseline_violations_bounds_and_malformed_rules() {
+        let artifact = Json::obj(vec![
+            ("name", Json::str("stage2_sweep")),
+            ("wall_ms", Json::num(50.0)),
+            ("speedup_vs_naive", Json::num(8.0)),
+        ]);
+        // In bounds: no violations.
+        let ok = Json::obj(vec![
+            ("max_wall_ms", Json::num(100.0)),
+            ("min_speedup_vs_naive", Json::num(2.0)),
+        ]);
+        assert!(baseline_violations(&artifact, &ok).is_empty());
+        // Out of bounds both directions.
+        let bad = Json::obj(vec![
+            ("max_wall_ms", Json::num(10.0)),
+            ("min_speedup_vs_naive", Json::num(20.0)),
+        ]);
+        let v = baseline_violations(&artifact, &bad);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|m| m.contains("wall_ms") && m.contains("exceeds")));
+        assert!(v.iter().any(|m| m.contains("below min")));
+        // Malformed rules and missing fields are loud, not silent passes.
+        let malformed = Json::obj(vec![
+            ("wall_ms", Json::num(10.0)),
+            ("max_nonexistent", Json::num(1.0)),
+            ("max_name", Json::num(1.0)),
+        ]);
+        let v = baseline_violations(&artifact, &malformed);
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert!(baseline_violations(&artifact, &Json::num(1.0)).len() == 1);
     }
 }

@@ -1,0 +1,272 @@
+//! Property suite for the SoA fused-sweep engine: on randomized traces
+//! and randomized grids, the group-deduplicated structure-of-arrays path
+//! (`banking::sweep`) must be **bit-identical** to the per-point naive
+//! oracle (`banking::sweep_naive`) — every float compared via
+//! `to_bits`, not a tolerance. The targeted generators pin the shapes
+//! that stress the group layout specifically:
+//!
+//! - `usable_per_bank == 0` (alpha * C/B < 1): every positive demand
+//!   saturates the ladder at B banks;
+//! - zero-segment traces (finalized with no records, including end 0);
+//! - B = 1-only grids (the reference organization *is* the whole grid);
+//! - grids **without** bank 1 and **without** policy `None` — the
+//!   engine synthesizes the unbanked/ungated reference out-of-grid, and
+//!   that synthetic lane must not perturb the in-grid results;
+//! - single- vs multi-policy grids (one vs many decider lanes per
+//!   ladder group).
+//!
+//! Case count honors `PROPTEST_CASES` (CI sets 64).
+
+use trapti::api::ApiContext;
+use trapti::banking::{sweep, sweep_naive, GatingPolicy, SweepPoint, SweepSpec};
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+
+/// Honors `PROPTEST_CASES` (the CI knob) with a local default.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Strict comparator: every field of every point identical, floats by
+/// `to_bits`. The SoA engine recomputes nothing per-candidate that the
+/// naive oracle derives — it *shares* state — so the outputs are the
+/// same float expressions evaluated in the same order, and anything
+/// short of bit-identity is a real divergence.
+fn assert_bit_identical(fused: &[SweepPoint], naive: &[SweepPoint]) {
+    assert_eq!(fused.len(), naive.len(), "point count");
+    for (f, n) in fused.iter().zip(naive) {
+        let at = format!(
+            "C={} B={} alpha={} {:?}",
+            n.eval.capacity, n.eval.banks, n.eval.alpha, n.eval.policy
+        );
+        assert_eq!(f.eval.capacity, n.eval.capacity, "{at}");
+        assert_eq!(f.eval.banks, n.eval.banks, "{at}");
+        assert_eq!(f.eval.alpha.to_bits(), n.eval.alpha.to_bits(), "{at}");
+        assert_eq!(f.eval.policy, n.eval.policy, "{at}");
+        assert_eq!(f.eval.n_switch, n.eval.n_switch, "{at}");
+        assert_eq!(f.eval.latency_cycles, n.eval.latency_cycles, "{at}");
+        for (a, b, what) in [
+            (f.eval.e_dyn_j, n.eval.e_dyn_j, "e_dyn_j"),
+            (f.eval.e_leak_j, n.eval.e_leak_j, "e_leak_j"),
+            (f.eval.e_sw_j, n.eval.e_sw_j, "e_sw_j"),
+            (f.eval.avg_active_banks, n.eval.avg_active_banks, "avg_active"),
+            (f.eval.gated_fraction, n.eval.gated_fraction, "gated_fraction"),
+            (f.eval.area_mm2, n.eval.area_mm2, "area_mm2"),
+            (f.base_e_j, n.base_e_j, "base_e_j"),
+            (f.base_area_mm2, n.base_area_mm2, "base_area_mm2"),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b} at {at}");
+        }
+        assert_eq!(f.eval.characterization, n.eval.characterization, "{at}");
+    }
+}
+
+/// Random monotone occupancy trace on one memory. `max_needed == 0`
+/// produces a trace whose every sample needs zero bytes (peak 0).
+fn random_trace(
+    rng: &mut Rng,
+    capacity: u64,
+    max_needed: u64,
+    max_segments: u64,
+) -> OccupancyTrace {
+    let mut tr = OccupancyTrace::new("mem", capacity);
+    let mut t = 0u64;
+    for _ in 0..rng.below(max_segments + 1) {
+        t += rng.range(1, 10_000);
+        let needed = if max_needed == 0 || rng.below(6) == 0 {
+            0
+        } else {
+            rng.below(max_needed + 1)
+        };
+        tr.record(t, needed, 0);
+    }
+    tr.finalize(t + rng.range(1, 2_000));
+    tr
+}
+
+fn random_stats(rng: &mut Rng) -> AccessStats {
+    AccessStats {
+        reads: rng.below(20_000_000),
+        writes: rng.below(5_000_000),
+        ..Default::default()
+    }
+}
+
+const POLICY_POOL: [GatingPolicy; 4] = [
+    GatingPolicy::None,
+    GatingPolicy::Aggressive,
+    GatingPolicy::Conservative { min_idle_factor: 4.0 },
+    GatingPolicy::Drowsy { retention_factor: 0.25 },
+];
+
+/// Random subset (in pool order, possibly with None absent / present)
+/// of the policy pool; never empty.
+fn random_policies(rng: &mut Rng) -> Vec<GatingPolicy> {
+    let mask = rng.range(1, 15); // inclusive: at least one of the four
+    POLICY_POOL
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1 << i) != 0)
+        .map(|(_, p)| *p)
+        .collect()
+}
+
+/// Random subset of the power-of-two bank pool; never empty.
+fn random_banks(rng: &mut Rng, pool: &[u32]) -> Vec<u32> {
+    let mask = rng.range(1, (1u64 << pool.len()) - 1);
+    pool.iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1u64 << i) != 0)
+        .map(|(_, b)| *b)
+        .collect()
+}
+
+fn diff(ctx: &ApiContext, tr: &OccupancyTrace, stats: &AccessStats, grid: &SweepSpec, freq: f64) {
+    let fused = sweep(&ctx.cacti, tr, stats, grid, freq).unwrap();
+    let naive = sweep_naive(&ctx.cacti, tr, stats, grid, freq).unwrap();
+    assert_bit_identical(&fused, &naive);
+}
+
+#[test]
+fn prop_soa_matches_naive_on_random_grids_and_traces() {
+    let ctx = ApiContext::new();
+    check("soa-random-grid", cases(48), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 26);
+        let tr = random_trace(rng, cap, cap, 60);
+        let peak = tr.peak_needed();
+        // Capacity axis straddles the peak so the infeasibility filter
+        // drops some capacities on the fused side too.
+        let grid = SweepSpec {
+            capacities: vec![(peak / 2).max(1), peak.max(1), peak.max(1) * 2, cap.max(1) * 2],
+            banks: random_banks(rng, &[1, 2, 4, 8, 16, 32, 64]),
+            alphas: vec![0.05 + rng.f64() * 0.95, 1.0],
+            policies: random_policies(rng),
+        };
+        diff(&ctx, &tr, &random_stats(rng), &grid, 0.5 + rng.f64() * 1.5);
+    });
+}
+
+#[test]
+fn prop_soa_handles_usable_per_bank_zero() {
+    let ctx = ApiContext::new();
+    check("soa-usable-zero", cases(32), |rng: &mut Rng| {
+        // alpha * C / B < 1: floor() yields usable_per_bank == 0, so any
+        // positive demand pins the ladder at B banks. Capacity stays at
+        // or above the peak so the grid point is feasible.
+        let banks = 32u32;
+        let cap = rng.range(1, banks as u64); // alpha < 1 and C <= B => alpha*C/B < 1
+        let tr = random_trace(rng, cap, cap, 40);
+        let grid = SweepSpec {
+            capacities: vec![cap.max(tr.peak_needed())],
+            banks: vec![1, banks],
+            alphas: vec![0.05 + rng.f64() * 0.9],
+            policies: random_policies(rng),
+        };
+        diff(&ctx, &tr, &random_stats(rng), &grid, 1.0);
+    });
+}
+
+#[test]
+fn prop_soa_handles_zero_segment_traces() {
+    let ctx = ApiContext::new();
+    check("soa-zero-segments", cases(24), |rng: &mut Rng| {
+        // A trace finalized with no recorded samples — including the
+        // fully degenerate end == 0 case every other round.
+        let mut tr = OccupancyTrace::new("mem", 1 << 20);
+        let end = if rng.below(2) == 0 { 0 } else { rng.range(1, 50_000) };
+        tr.finalize(end);
+        let grid = SweepSpec {
+            capacities: vec![1, 1 << 20],
+            banks: random_banks(rng, &[1, 2, 8, 32]),
+            alphas: vec![0.9],
+            policies: random_policies(rng),
+        };
+        diff(&ctx, &tr, &random_stats(rng), &grid, 1.0);
+    });
+}
+
+#[test]
+fn prop_soa_handles_bank_one_only_grids() {
+    let ctx = ApiContext::new();
+    check("soa-b1-only", cases(24), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 24);
+        let tr = random_trace(rng, cap, cap, 50);
+        let grid = SweepSpec {
+            capacities: vec![tr.peak_needed().max(1), cap.max(1) * 2],
+            banks: vec![1],
+            alphas: vec![0.5 + rng.f64() * 0.5],
+            policies: random_policies(rng),
+        };
+        diff(&ctx, &tr, &random_stats(rng), &grid, 1.0);
+    });
+}
+
+#[test]
+fn prop_soa_synthesizes_reference_outside_grid() {
+    let ctx = ApiContext::new();
+    check("soa-synthetic-reference", cases(32), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 24);
+        let tr = random_trace(rng, cap, cap, 50);
+        // Neither bank 1 nor policy None appears in the grid: the B=1
+        // ungated reference behind base_e_j/base_area_mm2 is synthetic.
+        let grid = SweepSpec {
+            capacities: vec![tr.peak_needed().max(1) * 2],
+            banks: random_banks(rng, &[2, 4, 8, 16, 32]),
+            alphas: vec![0.9, 1.0],
+            policies: vec![
+                GatingPolicy::Aggressive,
+                GatingPolicy::Conservative { min_idle_factor: 2.0 + rng.f64() * 6.0 },
+            ],
+        };
+        diff(&ctx, &tr, &random_stats(rng), &grid, 1.0);
+    });
+}
+
+#[test]
+fn prop_soa_single_policy_lane_matches_multi() {
+    let ctx = ApiContext::new();
+    check("soa-lane-count", cases(24), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 24);
+        let tr = random_trace(rng, cap, cap, 50);
+        let stats = random_stats(rng);
+        let banks = random_banks(rng, &[1, 4, 16]);
+        let caps = vec![tr.peak_needed().max(1), cap.max(1) * 2];
+        // Multi-policy grid once...
+        let multi = SweepSpec {
+            capacities: caps.clone(),
+            banks: banks.clone(),
+            alphas: vec![0.9],
+            policies: POLICY_POOL.to_vec(),
+        };
+        diff(&ctx, &tr, &stats, &multi, 1.0);
+        let all = sweep(&ctx.cacti, &tr, &stats, &multi, 1.0).unwrap();
+        // ...then each policy alone: a single-lane group must reproduce
+        // the matching slice of the multi-lane run bit-for-bit (lane
+        // fan-out is pure bookkeeping, not arithmetic).
+        for policy in POLICY_POOL {
+            let single = SweepSpec {
+                capacities: caps.clone(),
+                banks: banks.clone(),
+                alphas: vec![0.9],
+                policies: vec![policy],
+            };
+            diff(&ctx, &tr, &stats, &single, 1.0);
+            let solo = sweep(&ctx.cacti, &tr, &stats, &single, 1.0).unwrap();
+            let slice: Vec<&SweepPoint> =
+                all.iter().filter(|p| p.eval.policy == policy).collect();
+            assert_eq!(solo.len(), slice.len(), "{policy:?}");
+            for (s, m) in solo.iter().zip(slice) {
+                assert_eq!(
+                    s.eval.e_total_j().to_bits(),
+                    m.eval.e_total_j().to_bits(),
+                    "{policy:?}: single-lane vs multi-lane"
+                );
+                assert_eq!(s.eval.n_switch, m.eval.n_switch, "{policy:?}");
+            }
+        }
+    });
+}
