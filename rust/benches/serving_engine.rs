@@ -1,0 +1,87 @@
+//! Bench: event-driven serving engine vs. the retained round-robin
+//! oracle on a bursty, heavy-tailed trace at fig10-and-beyond scale
+//! (tiny-gqa, one million requests, concurrency 64).
+//! Run: `cargo bench --bench serving_engine`.
+//!
+//! Both engines run in throughput mode (no sink, no materialized
+//! trace); the event engine must be differentially identical to the
+//! oracle and at least 10x faster at full scale — the closed-form
+//! fast-forward across quiescent gaps is what makes million-request
+//! traces tractable, and this bench is the regression tripwire for it.
+//!
+//! `TRAPTI_BENCH_SMOKE=1` shrinks the trace to CI scale (the speedup
+//! threshold is waived there — at a few thousand requests the ratio is
+//! noise — but the differential identity always holds). Emits
+//! `BENCH_serving_engine.json` (events/sec, speedup) either way.
+
+use trapti::serving::{generate_requests, ServingParams};
+use trapti::sim::serving::{round_robin, simulate_serving_with, ServingSimOptions};
+use trapti::util::bench::{bench, default_iters, emit_json, smoke};
+use trapti::util::json::Json;
+use trapti::workload::TINY_GQA;
+
+fn main() {
+    let accel = trapti::config::tiny();
+    let smoke = smoke();
+    // Smoke scale keeps CI in seconds; full scale is the acceptance
+    // trace: 1M bursty heavy-tailed requests through a 64-wide server.
+    let (requests, concurrency) = if smoke { (2_000, 16) } else { (1_000_000, 64) };
+    let params = ServingParams::new(requests, concurrency, 7).with_bursty_traffic();
+
+    // Simulated event count: one arrival + one completion + one decode
+    // step per generated token, per request (scheduling rounds excluded
+    // — they are engine bookkeeping, not workload events).
+    let events: u64 = generate_requests(&params)
+        .iter()
+        .map(|r| r.gen as u64 + 2)
+        .sum();
+    println!(
+        "bursty trace: {requests} requests, {events} simulated events{}",
+        if smoke { " [smoke]" } else { "" },
+    );
+
+    // One measured iteration at full scale: the oracle alone walks
+    // ~1M requests round by round and dominates the wall clock.
+    let iters = if smoke { default_iters() } else { 1 };
+    let throughput = || ServingSimOptions { sink: None, materialize: false };
+    let (oracle_stats, oracle) = bench("serving_round_robin", iters, || {
+        round_robin(&TINY_GQA, params, &accel, throughput()).expect("oracle run")
+    });
+    let (event_stats, event) = bench("serving_engine", iters, || {
+        simulate_serving_with(&TINY_GQA, params, &accel, throughput())
+            .expect("event run")
+    });
+
+    // Differential identity: the event engine IS the production path.
+    assert_eq!(event.total_cycles, oracle.total_cycles);
+    assert_eq!(event.completed, oracle.completed);
+    assert_eq!(event.peak_concurrent, oracle.peak_concurrent);
+    assert_eq!(event.stats, oracle.stats);
+    assert_eq!(event.workload, oracle.workload);
+    assert_eq!(event.completed, requests);
+
+    let speedup = oracle_stats.mean.as_secs_f64() / event_stats.mean.as_secs_f64();
+    let events_per_sec = events as f64 / event_stats.mean.as_secs_f64();
+    println!(
+        "event engine speedup over round-robin: {speedup:.1}x \
+         ({:?} -> {:?}, {events_per_sec:.0} events/s)",
+        oracle_stats.mean, event_stats.mean
+    );
+    assert!(
+        smoke || speedup >= 10.0,
+        "event engine must be >= 10x faster than the round-robin oracle \
+         on the 1M-request bursty trace (got {speedup:.2}x)"
+    );
+
+    let mut fields = event_stats.to_json();
+    fields.extend([
+        ("round_robin_wall_ms", Json::num(oracle_stats.mean.as_secs_f64() * 1e3)),
+        ("speedup_vs_round_robin", Json::num(speedup)),
+        ("events_per_sec", Json::num(events_per_sec)),
+        ("requests", Json::num(requests as f64)),
+        ("events", Json::num(events as f64)),
+        ("smoke", Json::Bool(smoke)),
+    ]);
+    let path = emit_json("serving_engine", fields).expect("bench artifact");
+    println!("wrote {}", path.display());
+}

@@ -93,6 +93,6 @@ pub use optimize::{
     online_validate, online_validate_with, run_portfolio, validate_frontier,
     OnlineValidation, PortfolioOptions, PortfolioRun,
 };
-pub use serving::{ServingRun, ServingSweep};
+pub use serving::{ServingEngine, ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};
 pub use stage::{ApiContext, MaterializedRun, Stage1Run, Stage1Summary, Stage2Run};

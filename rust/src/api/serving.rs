@@ -8,15 +8,19 @@
 //! [`crate::banking::sweep`](fn@crate::banking::sweep) entry point as
 //! single-sequence traces.
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use crate::banking::online::{replay_trace, OnlineConfig, OnlineGateSim, OnlineReport};
 use crate::banking::{sweep, GatingPolicy, SweepPoint, SweepSink, SweepSpec};
+use crate::obs::WalSink;
 use crate::serving::ServingParams;
 use crate::sim::serving::{
-    simulate_serving, simulate_serving_with, ServingResult, ServingSimOptions,
+    round_robin, simulate_serving, simulate_serving_with, ServingResult,
+    ServingSimOptions,
 };
-use crate::trace::{OccupancyTrace, TraceSink};
+use crate::trace::{OccupancyTrace, TeeSink, TraceSink};
 use crate::util::MIB;
 use crate::workload::Workload;
 
@@ -29,6 +33,20 @@ use super::stage::ApiContext;
 pub struct ServingRun {
     pub spec: ExperimentSpec,
     pub result: ServingResult,
+}
+
+/// Which scheduler executes a serving spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServingEngine {
+    /// The event-driven engine ([`simulate_serving_with`]) — the
+    /// default, and the only one that handles priority tiers, shared
+    /// prefixes, and multi-model tenancy.
+    #[default]
+    Event,
+    /// The retained round-by-round differential oracle
+    /// ([`round_robin`]); bit-identical to the event engine on legacy
+    /// scheduling and rejects the extensions.
+    RoundRobin,
 }
 
 impl ExperimentSpec {
@@ -45,11 +63,26 @@ impl ExperimentSpec {
         }
     }
 
-    /// Execute the serving scenario (materialized trace).
+    /// Execute the serving scenario (materialized trace) on the default
+    /// event-driven engine.
     pub fn run_serving(&self) -> Result<ServingRun> {
+        self.run_serving_with_engine(ServingEngine::Event)
+    }
+
+    /// Execute the serving scenario on an explicit engine — the CLI's
+    /// `--engine round-robin` differential path.
+    pub fn run_serving_with_engine(&self, engine: ServingEngine) -> Result<ServingRun> {
         self.validate()?;
         let params = self.serving_params()?;
-        let result = simulate_serving(&self.model, params, &self.accel)?;
+        let result = match engine {
+            ServingEngine::Event => simulate_serving(&self.model, params, &self.accel)?,
+            ServingEngine::RoundRobin => round_robin(
+                &self.model,
+                params,
+                &self.accel,
+                ServingSimOptions::default(),
+            )?,
+        };
         Ok(ServingRun {
             spec: self.clone(),
             result,
@@ -87,7 +120,10 @@ impl ExperimentSpec {
     /// tightens the capacity to the *observed* peak; pass the same
     /// explicit grid to both paths when comparing them.
     pub fn serving_arena_grid(&self) -> Result<SweepSpec> {
-        self.serving_params()?; // typed error for single-sequence specs
+        // Typed errors for single-sequence specs and for degenerate
+        // serving params (zero requests/concurrency would otherwise
+        // produce a nonsensical zero-capacity grid downstream).
+        self.serving_params()?.validate()?;
         // Shared bound/rounding formula with the optimizer's covering
         // grids — one definition, no drift.
         let capacity = super::optimize::covering_capacity_bound(self);
@@ -153,6 +189,60 @@ impl ExperimentSpec {
             workload: result.workload.clone(),
             end_cycles: result.total_cycles,
             spec: grid.clone(),
+            points,
+        };
+        Ok((
+            ServingRun {
+                spec: self.clone(),
+                result,
+            },
+            sweep,
+        ))
+    }
+
+    /// [`ExperimentSpec::serve_fused`] with a write-ahead event log: the
+    /// fused occupancy stream is teed into a [`WalSink`] *alongside* the
+    /// single-pass sweep engine, so a fused run no longer has to choose
+    /// between the Stage-II answer and the WAL artifact. Results are
+    /// identical to `serve_fused` (the tee only observes), and the
+    /// sealed log replays ([`crate::obs::replay_wal`]) to the exact
+    /// merged trace a materialized run would record, with the run's
+    /// stats attached. `run_id` is the spec's content hash; pass
+    /// `wall_unix_ms = 0` for byte-deterministic logs.
+    pub fn serve_fused_logged(
+        &self,
+        ctx: &ApiContext,
+        wal_dir: &Path,
+        wall_unix_ms: u64,
+    ) -> Result<(ServingRun, ServingSweep)> {
+        self.validate()?;
+        let params = self.serving_params()?;
+        let grid = match &self.sweep {
+            Some(g) => g.clone(),
+            None => self.serving_arena_grid()?,
+        };
+        let mut wal = WalSink::create(wal_dir, self.content_hash(), wall_unix_ms)
+            .with_context(|| format!("creating WAL at {}", wal_dir.display()))?;
+        let mut sink = SweepSink::new(&ctx.cacti, &grid, self.freq_ghz());
+        let result = {
+            let mut tee = TeeSink::new(vec![&mut sink, &mut wal]);
+            simulate_serving_with(
+                &self.model,
+                params,
+                &self.accel,
+                ServingSimOptions {
+                    sink: Some(&mut tee),
+                    materialize: false,
+                },
+            )?
+        };
+        wal.close(Some(&result.stats))
+            .with_context(|| format!("sealing WAL at {}", wal_dir.display()))?;
+        let points = sink.into_points(&result.stats);
+        let sweep = ServingSweep {
+            workload: result.workload.clone(),
+            end_cycles: result.total_cycles,
+            spec: grid,
             points,
         };
         Ok((
@@ -392,6 +482,72 @@ mod tests {
             materialized.eval.e_total_j().to_bits()
         );
         assert_eq!(streamed.timeline_csv(), materialized.timeline_csv());
+    }
+
+    #[test]
+    fn engine_selection_matches_and_oracle_rejects_extensions() {
+        let spec = serving_spec();
+        let ev = spec.run_serving_with_engine(ServingEngine::Event).unwrap();
+        let rr = spec.run_serving_with_engine(ServingEngine::RoundRobin).unwrap();
+        assert_eq!(ev.result.trace_hash(), rr.result.trace_hash());
+        assert_eq!(ev.result.stats, rr.result.stats);
+        assert_eq!(ev.result.total_cycles, rr.result.total_cycles);
+
+        let mut p = spec.serving_params().unwrap();
+        p.tiers = 2;
+        let ext = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap();
+        assert!(ext.run_serving_with_engine(ServingEngine::RoundRobin).is_err());
+        assert!(ext.run_serving_with_engine(ServingEngine::Event).is_ok());
+    }
+
+    #[test]
+    fn serving_arena_grid_rejects_degenerate_specs() {
+        let mut spec = serving_spec();
+        let Workload::Serving(p) = &mut spec.workload else {
+            unreachable!();
+        };
+        p.concurrency = 0;
+        let err = spec.serving_arena_grid().unwrap_err();
+        assert!(err.to_string().contains("concurrency"), "{err}");
+    }
+
+    #[test]
+    fn serve_fused_logged_tees_wal_without_changing_results() {
+        use crate::obs::replay_wal;
+        let ctx = ApiContext::new();
+        let spec = serving_spec();
+        let dir = std::env::temp_dir().join(format!(
+            "trapti-fused-wal-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let (run_a, sweep_a) = spec.serve_fused(&ctx).unwrap();
+        let (run_b, sweep_b) = spec.serve_fused_logged(&ctx, &dir, 0).unwrap();
+        assert_eq!(run_a.result.total_cycles, run_b.result.total_cycles);
+        assert_eq!(run_a.result.stats, run_b.result.stats);
+        assert_eq!(sweep_a.points.len(), sweep_b.points.len());
+        for (a, b) in sweep_a.points.iter().zip(&sweep_b.points) {
+            assert_eq!(a.eval.e_total_j().to_bits(), b.eval.e_total_j().to_bits());
+            assert_eq!(a.eval.policy, b.eval.policy);
+        }
+
+        // The sealed WAL replays to the same merged trace a
+        // materialized run records, stats attached.
+        let replay = replay_wal(&dir).unwrap();
+        assert!(replay.complete);
+        assert_eq!(replay.run_id, spec.content_hash());
+        let reference = spec.run_serving().unwrap();
+        assert_eq!(replay.traces.len(), 1);
+        assert_eq!(replay.traces[0].samples(), reference.trace().samples());
+        assert_eq!(replay.traces[0].end_time(), reference.trace().end_time());
+        assert_eq!(replay.stats.as_ref(), Some(&run_b.result.stats));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

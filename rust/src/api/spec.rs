@@ -83,6 +83,22 @@ impl ExperimentSpec {
                 h.u64(p.gen_min as u64);
                 h.u64(p.gen_max as u64);
                 h.u64(p.page_tokens as u64);
+                // Spec-hash extension rule: traffic/scheduling extensions
+                // join the hash only when at least one is enabled (marker
+                // word first, so an extended spec can never collide with a
+                // legacy spec whose trailing fields happen to match).
+                // Pre-extension serving specs therefore keep their exact
+                // original hashes — pinned in `tests/spec_hash_pin.rs`.
+                if p.has_extensions() {
+                    h.u64(0x5f37_59df);
+                    h.u64(p.burst_gap);
+                    h.u64(p.burst_len as u64);
+                    h.u64(p.calm_len as u64);
+                    h.u64(p.len_tail_q8 as u64);
+                    h.u64(p.tiers as u64);
+                    h.u64(p.prefix_tokens as u64);
+                    h.u64(p.tenants as u64);
+                }
             }
         }
 
@@ -166,18 +182,32 @@ impl ExperimentSpec {
                 ("prompt", Json::num(prompt)),
                 ("gen", Json::num(gen)),
             ]),
-            Workload::Serving(p) => Json::obj(vec![
-                ("kind", Json::str("serving")),
-                ("requests", Json::num(p.requests)),
-                ("concurrency", Json::num(p.concurrency)),
-                ("seed", u(p.seed)),
-                ("mean_arrival_gap", u(p.mean_arrival_gap)),
-                ("prompt_min", Json::num(p.prompt_min)),
-                ("prompt_max", Json::num(p.prompt_max)),
-                ("gen_min", Json::num(p.gen_min)),
-                ("gen_max", Json::num(p.gen_max)),
-                ("page_tokens", Json::num(p.page_tokens)),
-            ]),
+            Workload::Serving(p) => {
+                let mut fields = vec![
+                    ("kind", Json::str("serving")),
+                    ("requests", Json::num(p.requests)),
+                    ("concurrency", Json::num(p.concurrency)),
+                    ("seed", u(p.seed)),
+                    ("mean_arrival_gap", u(p.mean_arrival_gap)),
+                    ("prompt_min", Json::num(p.prompt_min)),
+                    ("prompt_max", Json::num(p.prompt_max)),
+                    ("gen_min", Json::num(p.gen_min)),
+                    ("gen_max", Json::num(p.gen_max)),
+                    ("page_tokens", Json::num(p.page_tokens)),
+                ];
+                // Mirrors the hash's extension rule: legacy manifests
+                // stay byte-identical, extended specs are fully recorded.
+                if p.has_extensions() {
+                    fields.push(("burst_gap", u(p.burst_gap)));
+                    fields.push(("burst_len", Json::num(p.burst_len)));
+                    fields.push(("calm_len", Json::num(p.calm_len)));
+                    fields.push(("len_tail_q8", Json::num(p.len_tail_q8)));
+                    fields.push(("tiers", Json::num(p.tiers)));
+                    fields.push(("prefix_tokens", Json::num(p.prefix_tokens)));
+                    fields.push(("tenants", Json::num(p.tenants)));
+                }
+                Json::obj(fields)
+            }
         };
         let accel = Json::obj(vec![
             ("name", Json::str(self.accel.name.clone())),
@@ -237,7 +267,17 @@ impl ExperimentSpec {
             Workload::Decode { gen, .. } => {
                 ensure!(gen >= 1, "decode needs gen >= 1 (got {gen})");
             }
-            Workload::Serving(p) => p.validate()?,
+            Workload::Serving(p) => {
+                p.validate()?;
+                ensure!(
+                    p.tenants <= 1
+                        || crate::workload::paper_counterpart(m.name).is_some(),
+                    "model `{}` has no paper counterpart for multi-model \
+                     tenancy (tenants={})",
+                    m.name,
+                    p.tenants
+                );
+            }
         }
         self.accel.validate()?;
         if let Some(s) = &self.sweep {
@@ -525,6 +565,67 @@ mod tests {
                 .unwrap();
             assert_ne!(a.content_hash(), c.content_hash(), "field {i}");
         }
+    }
+
+    #[test]
+    fn serving_extension_fields_are_semantic() {
+        let p = ServingParams::new(64, 8, 7);
+        let spec_of = |q: ServingParams| {
+            ExperimentSpec::builder()
+                .model(TINY_GQA)
+                .serving(q)
+                .accel(tiny())
+                .build()
+                .unwrap()
+        };
+        let base = spec_of(p);
+        let edits: [fn(&mut ServingParams); 5] = [
+            |p| *p = p.with_bursty_traffic(),
+            |p| p.len_tail_q8 = 64,
+            |p| p.tiers = 2,
+            |p| p.prefix_tokens = 8,
+            |p| p.tenants = 2,
+        ];
+        for (i, f) in edits.into_iter().enumerate() {
+            let mut q = p;
+            f(&mut q);
+            assert_ne!(
+                base.content_hash(),
+                spec_of(q).content_hash(),
+                "extension edit {i} must change the hash"
+            );
+        }
+        // Legacy manifests carry no extension fields; extended ones do.
+        let legacy = base.manifest_json().to_string_compact();
+        assert!(!legacy.contains("burst_gap"), "{legacy}");
+        let extended = spec_of(p.with_bursty_traffic())
+            .manifest_json()
+            .to_string_compact();
+        assert!(extended.contains("burst_gap"), "{extended}");
+        assert!(extended.contains("tenants"), "{extended}");
+    }
+
+    #[test]
+    fn builder_rejects_tenancy_without_counterpart() {
+        let mut m = TINY_GQA.clone();
+        m.name = "mystery-model";
+        let mut p = ServingParams::new(8, 2, 7);
+        p.tenants = 2;
+        let err = ExperimentSpec::builder()
+            .model(m)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("no paper counterpart"), "{err}");
+        // The paired preset builds fine.
+        p.tenants = 2;
+        assert!(ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(p)
+            .accel(tiny())
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //!
 //! Workload descriptors use the same grammar as `repro optimize
 //! --workloads`: `MODEL:prefill:SEQ`, `MODEL:decode:PROMPT:GEN`,
-//! `MODEL:serve:REQUESTS:CONCURRENCY:SEED` — [`parse_descriptor`] is
+//! `MODEL:serve:REQUESTS:CONCURRENCY:SEED[:bursty]` — [`parse_descriptor`] is
 //! the single parser both the CLI and the lab share. The manifest's
 //! grid is embedded into every expanded [`ExperimentSpec`], so each
 //! spec's FNV content hash — and therefore every job id derived from it
@@ -61,9 +61,11 @@ pub struct LabManifest {
 }
 
 /// Parse one `MODEL:prefill:SEQ` / `MODEL:decode:PROMPT:GEN` /
-/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED` workload descriptor into a
-/// grid-less spec. Shared by `repro optimize`, `repro replay`, and lab
-/// manifests so the descriptor grammar cannot fork.
+/// `MODEL:serve:REQUESTS:CONCURRENCY:SEED[:bursty]` workload descriptor
+/// into a grid-less spec (the optional `bursty` suffix applies
+/// [`ServingParams::with_bursty_traffic`] — MMPP arrivals plus
+/// heavy-tailed lengths). Shared by `repro optimize`, `repro replay`,
+/// and lab manifests so the descriptor grammar cannot fork.
 pub fn parse_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpec> {
     let parts: Vec<&str> = desc.split(':').collect();
     let model_of = |name: &str| {
@@ -89,9 +91,20 @@ pub fn parse_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpe
                 seed.parse()?,
             )),
         ),
+        [m, "serve", requests, concurrency, seed, "bursty"] => (
+            model_of(m)?,
+            Workload::Serving(
+                ServingParams::new(
+                    requests.parse()?,
+                    concurrency.parse()?,
+                    seed.parse()?,
+                )
+                .with_bursty_traffic(),
+            ),
+        ),
         _ => bail!(
             "workload descriptor `{desc}` wants MODEL:prefill:SEQ | \
-             MODEL:decode:PROMPT:GEN | MODEL:serve:REQS:CONC:SEED"
+             MODEL:decode:PROMPT:GEN | MODEL:serve:REQS:CONC:SEED[:bursty]"
         ),
     };
     ExperimentSpec::builder()
@@ -392,6 +405,23 @@ min_capacity = "2MiB"
         assert!(parse_descriptor("tiny-mha:prefill:64", &accel).is_ok());
         assert!(parse_descriptor("nope:prefill:64", &accel).is_err());
         assert!(parse_descriptor("tiny-mha:warmup:64", &accel).is_err());
+        assert!(parse_descriptor("tiny-gqa:serve:8:2:7:turbo", &accel).is_err());
+    }
+
+    #[test]
+    fn bursty_serve_descriptor_enables_the_traffic_extensions() {
+        let accel = crate::config::tiny();
+        let plain = parse_descriptor("tiny-gqa:serve:8:2:7", &accel).unwrap();
+        let bursty = parse_descriptor("tiny-gqa:serve:8:2:7:bursty", &accel).unwrap();
+        assert_ne!(plain.content_hash(), bursty.content_hash());
+        let Workload::Serving(p) = bursty.workload else {
+            panic!("serve descriptor must build a serving workload");
+        };
+        assert!(p.burst_gap > 0 && p.len_tail_q8 > 0);
+        let Workload::Serving(q) = plain.workload else {
+            panic!("serve descriptor must build a serving workload");
+        };
+        assert!(!q.has_extensions());
         assert!(parse_policy_name("drowsy").is_ok());
         assert!(parse_policy_name("extreme").is_err());
     }

@@ -24,7 +24,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use trapti::analytic;
-use trapti::api::{experiments as exp, ApiContext, BatchRunner, ExperimentSpec};
+use trapti::api::{
+    experiments as exp, ApiContext, BatchRunner, ExperimentSpec, ServingEngine,
+};
 use trapti::banking::{
     evaluate, Constraints, GatingPolicy, OnlineConfig, OnlineGateSim, OnlineReport,
     SweepSpec,
@@ -167,18 +169,29 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                            memoized batch (--models A,B,.. --seq
                            --accel --threads N --decode P:G)
   repro serve              multi-tenant serving: concurrent decode
-                           streams over a paged KV arena, then a
-                           Stage-II sweep on the merged trace
+                           streams over a paged KV arena (event-driven
+                           engine), then a Stage-II sweep on the merged
+                           trace
                            (--model --accel --concurrency --requests
                             --seed --prompt MIN:MAX --gen MIN:MAX
                             --page-tokens N --arrival CYCLES
+                            --burst-gap CYCLES --burst-len N --calm-len N
+                            [two-state MMPP bursty arrivals]
+                            --tail-q8 0..255 [heavy-tailed lengths]
+                            --tiers N [priority preemption w/ KV
+                            evict/restore] --prefix-tokens N [shared
+                            system-prompt pages] --tenants 1|2 [co-
+                            resident paper-pair models]
+                            --engine event|round-robin [round-robin =
+                            the legacy differential oracle]
                             --trace-csv FILE --save-trace FILE
                             --fused 1 [stream Stage I straight into the
                             fused Stage-II engine; no materialized trace]
                             --capacities MiB,.. --banks 1,2,..
                             --alpha A [explicit Stage-II grid]
                             --sweep-out FILE [write the Stage-II table]
-                            --wal-out DIR [event log; not with --fused])
+                            --wal-out DIR [event log; with --fused the
+                            stream tees into the WAL])
   repro bank               Stage-II sweep over a saved trace
                            (--trace FILE --alpha --banks --capacities)
   repro optimize           Stage-II Pareto optimizer + cross-workload
@@ -646,6 +659,38 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if let Some(a) = args.flag("arrival") {
         params.mean_arrival_gap = a.parse()?;
     }
+    if let Some(b) = args.flag("burst-gap") {
+        params.burst_gap = b.parse()?;
+        if params.burst_gap > 0 {
+            // Dwell defaults so `--burst-gap N` alone is a valid bursty
+            // spec; override with --burst-len / --calm-len.
+            params.burst_len = 8;
+            params.calm_len = 32;
+        }
+    }
+    if let Some(b) = args.flag("burst-len") {
+        params.burst_len = b.parse()?;
+    }
+    if let Some(c) = args.flag("calm-len") {
+        params.calm_len = c.parse()?;
+    }
+    if let Some(q) = args.flag("tail-q8") {
+        params.len_tail_q8 = q.parse()?;
+    }
+    if let Some(t) = args.flag("tiers") {
+        params.tiers = t.parse()?;
+    }
+    if let Some(p) = args.flag("prefix-tokens") {
+        params.prefix_tokens = p.parse()?;
+    }
+    if let Some(t) = args.flag("tenants") {
+        params.tenants = t.parse()?;
+    }
+    let engine = match args.flag_or("engine", "event").as_str() {
+        "event" => ServingEngine::Event,
+        "round-robin" => ServingEngine::RoundRobin,
+        other => bail!("unknown --engine `{other}` (event|round-robin)"),
+    };
     let fused = args.bool_flag("fused")?;
 
     let mut builder = ExperimentSpec::builder()
@@ -659,13 +704,26 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let ctx = ApiContext::new();
 
     let (run, s2) = if fused {
-        if args.flag("wal-out").is_some() {
-            bail!("--wal-out logs a materialized run; drop --fused");
+        if engine == ServingEngine::RoundRobin {
+            bail!("--engine round-robin is the materialized differential oracle; drop --fused");
         }
-        spec.serve_fused(&ctx)?
+        match args.flag("wal-out") {
+            Some(dir) => {
+                // The fused stream tees into the WAL alongside the
+                // single-pass sweep engine — same results, plus the log.
+                let out =
+                    spec.serve_fused_logged(&ctx, Path::new(dir), wall_unix_ms())?;
+                println!("WAL written to {dir}/");
+                out
+            }
+            None => spec.serve_fused(&ctx)?,
+        }
     } else {
         let run = match args.flag("wal-out") {
             Some(dir) => {
+                if engine == ServingEngine::RoundRobin {
+                    bail!("--wal-out logging runs the event engine; drop --engine round-robin");
+                }
                 let run = spec.materialize_logged(&ctx, Path::new(dir), wall_unix_ms())?;
                 match run {
                     trapti::api::MaterializedRun::Serving(run) => {
@@ -677,7 +735,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
                     }
                 }
             }
-            None => spec.run_serving()?,
+            None => spec.run_serving_with_engine(engine)?,
         };
         let s2 = run.stage2(&ctx)?;
         (run, s2)
@@ -692,6 +750,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         r.total_cycles,
         r.peak_concurrent,
     );
+    if r.evicted > 0 {
+        println!(
+            "preemption: {} evictions, {} restores",
+            r.evicted, r.restored
+        );
+    }
     if fused {
         println!(
             "arena: {:.1} MiB capacity, {:.1} KiB pages  trace: streamed \

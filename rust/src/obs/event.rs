@@ -54,6 +54,16 @@ pub enum ObsEvent {
     Complete {
         request: u32,
     },
+    /// Serving scheduler preempted request `request` (KV spilled to
+    /// DRAM, arena pages freed).
+    Evict {
+        request: u32,
+    },
+    /// Serving scheduler re-admitted preempted request `request` (KV
+    /// streamed back from DRAM).
+    Restore {
+        request: u32,
+    },
     /// Stage-III retrospective: bank `bank` held `state` over `[t0, t1)`
     /// adjusted cycles.
     BankSpan {
@@ -86,6 +96,8 @@ impl ObsEvent {
             RunEvent::StageEnd { stage } => ObsEvent::StageEnd { stage },
             RunEvent::Admit { request } => ObsEvent::Admit { request },
             RunEvent::Complete { request } => ObsEvent::Complete { request },
+            RunEvent::Evict { request } => ObsEvent::Evict { request },
+            RunEvent::Restore { request } => ObsEvent::Restore { request },
             RunEvent::BankSpan { bank, state, t0, t1 } => {
                 ObsEvent::BankSpan { bank, state, t0, t1 }
             }
@@ -104,6 +116,8 @@ impl ObsEvent {
             ObsEvent::Sample { .. } => "sample",
             ObsEvent::Admit { .. } => "admit",
             ObsEvent::Complete { .. } => "complete",
+            ObsEvent::Evict { .. } => "evict",
+            ObsEvent::Restore { .. } => "restore",
             ObsEvent::BankSpan { .. } => "bank_span",
             ObsEvent::WakeStall { .. } => "wake_stall",
             ObsEvent::RunEnd { .. } => "run_end",
@@ -120,6 +134,8 @@ const KIND_COMPLETE: u8 = 5;
 const KIND_BANK_SPAN: u8 = 6;
 const KIND_WAKE_STALL: u8 = 7;
 const KIND_RUN_END: u8 = 8;
+const KIND_EVICT: u8 = 9;
+const KIND_RESTORE: u8 = 10;
 
 /// Map a decoded bank-state label back onto the `'static` vocabulary of
 /// `banking::online::BankState::label`. Unknown labels are a decode
@@ -194,6 +210,14 @@ pub fn encode(rec: &EventRecord) -> Vec<u8> {
         }
         ObsEvent::Complete { request } => {
             out.push(KIND_COMPLETE);
+            put_u32(&mut out, *request);
+        }
+        ObsEvent::Evict { request } => {
+            out.push(KIND_EVICT);
+            put_u32(&mut out, *request);
+        }
+        ObsEvent::Restore { request } => {
+            out.push(KIND_RESTORE);
             put_u32(&mut out, *request);
         }
         ObsEvent::BankSpan { bank, state, t0, t1 } => {
@@ -321,6 +345,8 @@ pub fn decode(payload: &[u8]) -> Result<EventRecord, ObsError> {
         },
         KIND_ADMIT => ObsEvent::Admit { request: c.u32()? },
         KIND_COMPLETE => ObsEvent::Complete { request: c.u32()? },
+        KIND_EVICT => ObsEvent::Evict { request: c.u32()? },
+        KIND_RESTORE => ObsEvent::Restore { request: c.u32()? },
         KIND_BANK_SPAN => {
             let bank = c.u32()?;
             let state_name = c.str()?;
@@ -427,6 +453,8 @@ mod tests {
             ObsEvent::Sample { mem: 1, needed: 123, obsolete: 45 },
             ObsEvent::Admit { request: 7 },
             ObsEvent::Complete { request: 7 },
+            ObsEvent::Evict { request: 9 },
+            ObsEvent::Restore { request: 9 },
             ObsEvent::BankSpan { bank: 3, state: "gated", t0: 10, t1: 99 },
             ObsEvent::WakeStall { bank: 3, at: 99, stall_cycles: 40 },
             ObsEvent::RunEnd { end: 1000, stats: Some(stats) },

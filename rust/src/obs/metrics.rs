@@ -46,6 +46,8 @@ pub struct MetricsSnapshot {
     pub stages_completed: u64,
     pub requests_admitted: u64,
     pub requests_completed: u64,
+    pub requests_evicted: u64,
+    pub requests_restored: u64,
     /// `(state label, span count, cycles)` per bank state, sorted by
     /// label for deterministic rendering.
     pub bank_states: Vec<(&'static str, u64, u64)>,
@@ -89,6 +91,8 @@ impl MetricsSnapshot {
                 ObsEvent::StageEnd { .. } => m.stages_completed += 1,
                 ObsEvent::Admit { .. } => m.requests_admitted += 1,
                 ObsEvent::Complete { .. } => m.requests_completed += 1,
+                ObsEvent::Evict { .. } => m.requests_evicted += 1,
+                ObsEvent::Restore { .. } => m.requests_restored += 1,
                 ObsEvent::BankSpan { state, t0, t1, .. } => {
                     match bank_states.iter_mut().find(|(s, _, _)| *s == state) {
                         Some(entry) => {
@@ -167,6 +171,10 @@ impl MetricsSnapshot {
         let _ = writeln!(out, "trapti_requests_admitted_total {}", self.requests_admitted);
         head(&mut out, "trapti_requests_completed_total", "Serving requests completed.", "counter");
         let _ = writeln!(out, "trapti_requests_completed_total {}", self.requests_completed);
+        head(&mut out, "trapti_requests_evicted_total", "Serving requests preempted (KV spilled to DRAM).", "counter");
+        let _ = writeln!(out, "trapti_requests_evicted_total {}", self.requests_evicted);
+        head(&mut out, "trapti_requests_restored_total", "Preempted serving requests re-admitted.", "counter");
+        let _ = writeln!(out, "trapti_requests_restored_total {}", self.requests_restored);
 
         head(&mut out, "trapti_bank_state_spans_total", "Stage-III bank state spans by state.", "counter");
         for (state, count, _) in &self.bank_states {
@@ -236,6 +244,8 @@ mod tests {
         wal.on_sample(0, 6, 40, 0);
         wal.on_sample(1, 6, 30, 0);
         wal.on_event(7, &RunEvent::Admit { request: 0 });
+        wal.on_event(8, &RunEvent::Evict { request: 0 });
+        wal.on_event(8, &RunEvent::Restore { request: 0 });
         wal.on_event(9, &RunEvent::StageEnd { stage: 0 });
         wal.on_event(9, &RunEvent::Complete { request: 0 });
         wal.finish(10);
@@ -262,6 +272,8 @@ mod tests {
         assert_eq!(m.stages_completed, 1);
         assert_eq!(m.requests_admitted, 1);
         assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.requests_evicted, 1);
+        assert_eq!(m.requests_restored, 1);
         // Sorted by state label: active before gated.
         assert_eq!(m.bank_states, vec![("active", 1, 4), ("gated", 1, 6)]);
         assert_eq!(m.wake_stall_cycles, 3);

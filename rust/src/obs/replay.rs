@@ -100,11 +100,14 @@ pub fn replay_log(log: &EventLog) -> Result<WalReplay, ObsError> {
                 stats = s.clone();
                 complete = true;
             }
-            // Structural events don't change occupancy.
+            // Structural events don't change occupancy (evict/restore
+            // page movement arrives via its own Sample records).
             ObsEvent::StageStart { .. }
             | ObsEvent::StageEnd { .. }
             | ObsEvent::Admit { .. }
             | ObsEvent::Complete { .. }
+            | ObsEvent::Evict { .. }
+            | ObsEvent::Restore { .. }
             | ObsEvent::BankSpan { .. }
             | ObsEvent::WakeStall { .. } => {}
         }

@@ -24,6 +24,11 @@ pub struct PagedKvArena {
     capacity_pages: u64,
     allocated_pages: u64,
     needed_bytes: u64,
+    /// Pages pinned by [`PagedKvArena::reserve_shared`] for run-lifetime
+    /// state (shared system-prompt prefix KV); counted in
+    /// `allocated_pages` but owned by no stream and never freed.
+    shared_pages: u64,
+    shared_bytes: u64,
     /// `(stream id, alloc)` — sorted by id; streams are few (≤
     /// concurrency cap), so linear search beats hashing and stays
     /// deterministic.
@@ -39,6 +44,8 @@ impl PagedKvArena {
             capacity_pages: capacity_bytes / page_bytes,
             allocated_pages: 0,
             needed_bytes: 0,
+            shared_pages: 0,
+            shared_bytes: 0,
             streams: Vec::new(),
         }
     }
@@ -88,12 +95,52 @@ impl PagedKvArena {
 
     /// Free every page of a completed stream.
     pub fn release(&mut self, id: u32) -> Result<()> {
+        self.evict(id).map(|_| ())
+    }
+
+    /// Preempt a resident stream: free all of its pages and return its
+    /// live byte count so the scheduler can spill the KV to DRAM and
+    /// later [`PagedKvArena::restore`] it. A stream is either resident
+    /// or gone — evicting a non-resident id fails, so pages cannot
+    /// double-free across an evict/restore cycle.
+    pub fn evict(&mut self, id: u32) -> Result<u64> {
         let Some(i) = self.index_of(id) else {
             bail!("stream {id} not resident in the arena");
         };
         let (_, s) = self.streams.remove(i);
         self.allocated_pages -= s.pages;
         self.needed_bytes -= s.live_bytes;
+        Ok(s.live_bytes)
+    }
+
+    /// Re-admit an evicted stream and re-materialize `live_bytes` of KV
+    /// in one step (the DRAM→SRAM restore). Atomic: when the arena lacks
+    /// pages, the stream is left non-resident and state is unchanged.
+    pub fn restore(&mut self, id: u32, live_bytes: u64) -> Result<()> {
+        self.admit(id)?;
+        if let Err(e) = self.grow(id, live_bytes) {
+            let i = self.index_of(id).expect("just admitted");
+            self.streams.remove(i);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Pin pages for run-lifetime shared state (the system-prompt prefix
+    /// KV): allocated and needed like a stream's pages, but owned by the
+    /// run itself and never freed — the occupancy floor every sample
+    /// sits on.
+    pub fn reserve_shared(&mut self, bytes: u64) -> Result<()> {
+        let pages = bytes.div_ceil(self.page_bytes);
+        let free = self.capacity_pages - self.allocated_pages;
+        ensure!(
+            pages <= free,
+            "arena exhausted: shared reservation needs {pages} page(s), {free} free"
+        );
+        self.allocated_pages += pages;
+        self.needed_bytes += bytes;
+        self.shared_pages += pages;
+        self.shared_bytes += bytes;
         Ok(())
     }
 
@@ -120,6 +167,12 @@ impl PagedKvArena {
 
     pub fn active_streams(&self) -> usize {
         self.streams.len()
+    }
+
+    /// Bytes pinned by [`PagedKvArena::reserve_shared`] (included in
+    /// [`PagedKvArena::needed_bytes`]).
+    pub fn shared_bytes(&self) -> u64 {
+        self.shared_bytes
     }
 }
 
@@ -181,5 +234,53 @@ mod tests {
         assert!(a.admit(1).is_err());
         assert!(a.grow(2, 10).is_err());
         assert!(a.release(2).is_err());
+    }
+
+    #[test]
+    fn evict_returns_live_bytes_and_restore_round_trips() {
+        let mut a = PagedKvArena::new(100, 1000);
+        a.admit(5).unwrap();
+        a.grow(5, 230).unwrap();
+        let live = a.evict(5).unwrap();
+        assert_eq!(live, 230);
+        assert_eq!(a.allocated_bytes(), 0);
+        assert_eq!(a.needed_bytes(), 0);
+        // Double eviction is an error, not a silent double-free.
+        assert!(a.evict(5).is_err());
+        a.restore(5, live).unwrap();
+        assert_eq!(a.allocated_bytes(), 300);
+        assert_eq!(a.needed_bytes(), 230);
+        assert_eq!(a.active_streams(), 1);
+    }
+
+    #[test]
+    fn restore_failure_is_atomic() {
+        let mut a = PagedKvArena::new(100, 300);
+        a.admit(0).unwrap();
+        a.grow(0, 250).unwrap();
+        // 0 pages free: a 100-byte restore cannot fit.
+        assert!(a.restore(9, 100).is_err());
+        assert_eq!(a.active_streams(), 1);
+        assert!(a.grow(9, 1).is_err(), "failed restore must not leave 9 resident");
+        assert_eq!(a.needed_bytes(), 250);
+    }
+
+    #[test]
+    fn shared_reservation_sets_the_occupancy_floor() {
+        let mut a = PagedKvArena::new(100, 1000);
+        a.reserve_shared(150).unwrap();
+        assert_eq!(a.shared_bytes(), 150);
+        assert_eq!(a.allocated_bytes(), 200);
+        assert_eq!(a.needed_bytes(), 150);
+        assert_eq!(a.obsolete_bytes(), 50);
+        // Streams allocate on top of the floor and release back to it.
+        a.admit(0).unwrap();
+        a.grow(0, 100).unwrap();
+        assert_eq!(a.allocated_bytes(), 300);
+        a.release(0).unwrap();
+        assert_eq!(a.allocated_bytes(), 200);
+        assert_eq!(a.needed_bytes(), 150);
+        // The reservation is capacity-checked like everything else.
+        assert!(a.reserve_shared(10_000).is_err());
     }
 }

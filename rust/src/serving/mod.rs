@@ -70,4 +70,4 @@ pub mod arena;
 pub mod workload;
 
 pub use arena::PagedKvArena;
-pub use workload::{generate_requests, Request, ServingParams};
+pub use workload::{generate_requests, Request, ServingParams, ServingParamsError};

@@ -5,8 +5,45 @@
 //! and hashes stably into [`crate::api::ExperimentSpec::content_hash`].
 //! [`generate_requests`] expands it into a concrete arrival schedule with
 //! the crate's seeded PRNG: same params, same requests, bit-for-bit.
+//!
+//! ## Traffic model
+//!
+//! The base model is Poisson-ish: inter-arrival gaps uniform in
+//! `[0, 2 * mean_arrival_gap]`, prompt/generation lengths uniform in
+//! their inclusive ranges. Four orthogonal extensions widen it toward
+//! production-shaped traffic, each **off by default** so legacy specs
+//! keep their request schedules (and spec hashes) bit-for-bit:
+//!
+//! * **Bursty arrivals** (`burst_gap` > 0): a two-state MMPP-style
+//!   process. The schedule alternates between a *calm* state using
+//!   `mean_arrival_gap` and a *burst* state using the (much tighter)
+//!   `burst_gap`; after each request the state flips with probability
+//!   `1/dwell`, giving geometric dwell times of mean `burst_len` /
+//!   `calm_len` requests.
+//! * **Heavy-tailed lengths** (`len_tail_q8` > 0): bounded-Pareto prompt
+//!   and generation lengths via octave-geometric integer sampling — from
+//!   the range floor, each doubling of the length scale survives with
+//!   probability `len_tail_q8/256`, then the length is uniform within
+//!   the chosen octave. The tail index is `alpha = -log2(q8/256)`
+//!   (`128` gives `alpha = 1`). All-integer: no `powf`, no libm,
+//!   platform-stable.
+//! * **Priority tiers** (`tiers` > 1): each request draws a uniform tier
+//!   in `0..tiers` (lower = higher priority). The event engine preempts
+//!   resident low-priority streams for waiting high-priority ones.
+//! * **Multi-model tenancy** (`tenants` == 2): each request draws a
+//!   uniform lane; lane 0 is the spec's model, lane 1 its paper
+//!   counterpart ([`crate::workload::paper_counterpart`]), co-resident
+//!   in one arena.
+//!
+//! `prefix_tokens` (shared system-prompt KV) does not alter generation;
+//! it reserves arena pages for the whole run (see [`crate::sim::serving`]).
+//!
+//! RNG draw order per request is part of the deterministic contract:
+//! gap, optional burst-dwell flip, prompt, gen, optional tier, optional
+//! lane. Disabled extensions draw nothing, which is what keeps legacy
+//! schedules unchanged.
 
-use anyhow::{ensure, Result};
+use std::fmt;
 
 use crate::util::rng::Rng;
 
@@ -14,7 +51,8 @@ use crate::util::rng::Rng;
 ///
 /// Inter-arrival gaps are uniform in `[0, 2 * mean_arrival_gap]` cycles
 /// (mean `mean_arrival_gap`); prompt and generation lengths are uniform
-/// in their inclusive ranges. `page_tokens` sets the KV page granularity
+/// in their inclusive ranges unless the heavy-tail knob is set (see the
+/// [module docs](self)). `page_tokens` sets the KV page granularity
 /// of the paged arena (see [`super::arena::PagedKvArena`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServingParams {
@@ -24,7 +62,8 @@ pub struct ServingParams {
     pub concurrency: u32,
     /// Arrival/length RNG seed.
     pub seed: u64,
-    /// Mean inter-arrival gap in cycles.
+    /// Mean inter-arrival gap in cycles (the *calm* state's gap when
+    /// bursts are enabled).
     pub mean_arrival_gap: u64,
     /// Prompt length range (tokens, inclusive).
     pub prompt_min: u32,
@@ -34,11 +73,33 @@ pub struct ServingParams {
     pub gen_max: u32,
     /// KV page granularity in tokens.
     pub page_tokens: u32,
+    /// Mean inter-arrival gap in cycles during a burst; 0 disables the
+    /// two-state burst process entirely.
+    pub burst_gap: u64,
+    /// Mean burst dwell in requests (geometric); required >= 1 when
+    /// `burst_gap` > 0, must be 0 otherwise.
+    pub burst_len: u32,
+    /// Mean calm dwell in requests (geometric); same rules as
+    /// `burst_len`.
+    pub calm_len: u32,
+    /// Heavy-tail knob: per-octave survival probability in Q8 fixed
+    /// point (`q8/256`); 0 disables (uniform lengths), 255 max.
+    pub len_tail_q8: u32,
+    /// Priority tiers, lower = higher priority; 1 = no priorities.
+    pub tiers: u32,
+    /// Shared system-prompt prefix tokens, resident in the arena for the
+    /// whole run; 0 disables.
+    pub prefix_tokens: u32,
+    /// Co-resident models sharing the arena: 1 = single-tenant, 2 adds
+    /// the spec model's paper counterpart as lane 1.
+    pub tenants: u32,
 }
 
 impl ServingParams {
     /// Defaults for the paper-shaped serving scenario: prompts 64–512,
     /// generations 16–128, 16-token pages, 1M-cycle mean arrival gap.
+    /// Every traffic extension starts disabled, so defaulted params
+    /// describe exactly the pre-extension workload.
     pub fn new(requests: u32, concurrency: u32, seed: u64) -> Self {
         Self {
             requests,
@@ -50,7 +111,25 @@ impl ServingParams {
             gen_min: 16,
             gen_max: 128,
             page_tokens: 16,
+            burst_gap: 0,
+            burst_len: 0,
+            calm_len: 0,
+            len_tail_q8: 0,
+            tiers: 1,
+            prefix_tokens: 0,
+            tenants: 1,
         }
+    }
+
+    /// The `:bursty` traffic preset (lab descriptors, `repro serve`):
+    /// heavy-tailed lengths riding a two-state burst process whose burst
+    /// gaps are 20× tighter than the calm gap.
+    pub fn with_bursty_traffic(mut self) -> Self {
+        self.burst_gap = (self.mean_arrival_gap / 20).max(1);
+        self.burst_len = 8;
+        self.calm_len = 32;
+        self.len_tail_q8 = 128;
+        self
     }
 
     /// Longest possible per-stream context (prompt + generated tokens).
@@ -58,30 +137,133 @@ impl ServingParams {
         self.prompt_max + self.gen_max
     }
 
-    pub fn validate(&self) -> Result<()> {
-        ensure!(self.requests >= 1, "serving needs requests >= 1");
-        ensure!(self.concurrency >= 1, "serving needs concurrency >= 1");
-        ensure!(
-            self.prompt_min <= self.prompt_max,
-            "serving prompt range inverted: {}..{}",
-            self.prompt_min,
-            self.prompt_max
-        );
-        ensure!(
-            self.gen_min >= 1,
-            "serving needs gen_min >= 1 (got {})",
-            self.gen_min
-        );
-        ensure!(
-            self.gen_min <= self.gen_max,
-            "serving gen range inverted: {}..{}",
-            self.gen_min,
-            self.gen_max
-        );
-        ensure!(self.page_tokens >= 1, "serving needs page_tokens >= 1");
+    /// True when any post-v1 traffic field departs from its default.
+    /// Gates the conditional spec-hash extension block
+    /// ([`crate::api::ExperimentSpec::content_hash`]): defaulted params
+    /// hash exactly like pre-extension specs.
+    pub fn has_extensions(&self) -> bool {
+        self.burst_gap != 0
+            || self.burst_len != 0
+            || self.calm_len != 0
+            || self.len_tail_q8 != 0
+            || self.tiers != 1
+            || self.prefix_tokens != 0
+            || self.tenants != 1
+    }
+
+    pub fn validate(&self) -> Result<(), ServingParamsError> {
+        use ServingParamsError as E;
+        if self.requests < 1 {
+            return Err(E::ZeroRequests);
+        }
+        if self.concurrency < 1 {
+            return Err(E::ZeroConcurrency);
+        }
+        if self.prompt_min > self.prompt_max {
+            return Err(E::PromptRangeInverted {
+                min: self.prompt_min,
+                max: self.prompt_max,
+            });
+        }
+        if self.gen_min < 1 {
+            return Err(E::ZeroGenMin);
+        }
+        if self.gen_min > self.gen_max {
+            return Err(E::GenRangeInverted {
+                min: self.gen_min,
+                max: self.gen_max,
+            });
+        }
+        if self.page_tokens < 1 {
+            return Err(E::ZeroPageTokens);
+        }
+        if self.burst_gap > 0 {
+            if self.burst_len < 1 || self.calm_len < 1 {
+                return Err(E::BurstDwellMissing);
+            }
+        } else if self.burst_len != 0 || self.calm_len != 0 {
+            // One canonical encoding of "bursts off" keeps the spec hash
+            // unambiguous.
+            return Err(E::BurstDwellWithoutGap);
+        }
+        if self.len_tail_q8 > 255 {
+            return Err(E::TailOutOfRange { q8: self.len_tail_q8 });
+        }
+        if self.len_tail_q8 > 0 && self.prompt_min < 1 {
+            // The octave sampler needs a positive range floor.
+            return Err(E::TailNeedsPositivePromptMin);
+        }
+        if self.tiers < 1 {
+            return Err(E::ZeroTiers);
+        }
+        if !(1..=2).contains(&self.tenants) {
+            return Err(E::BadTenants { tenants: self.tenants });
+        }
         Ok(())
     }
 }
+
+/// Typed validation error for [`ServingParams`] — callers that build
+/// degenerate specs (zero requests, zero concurrency, …) get a
+/// matchable error from the builder instead of a downstream panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingParamsError {
+    ZeroRequests,
+    ZeroConcurrency,
+    PromptRangeInverted { min: u32, max: u32 },
+    ZeroGenMin,
+    GenRangeInverted { min: u32, max: u32 },
+    ZeroPageTokens,
+    /// `burst_gap` > 0 without both dwell means.
+    BurstDwellMissing,
+    /// Dwell means set while `burst_gap` == 0.
+    BurstDwellWithoutGap,
+    TailOutOfRange { q8: u32 },
+    TailNeedsPositivePromptMin,
+    ZeroTiers,
+    BadTenants { tenants: u32 },
+}
+
+impl fmt::Display for ServingParamsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use ServingParamsError as E;
+        match *self {
+            E::ZeroRequests => write!(f, "serving needs requests >= 1"),
+            E::ZeroConcurrency => write!(f, "serving needs concurrency >= 1"),
+            E::PromptRangeInverted { min, max } => {
+                write!(f, "serving prompt range inverted: {min}..{max}")
+            }
+            E::ZeroGenMin => write!(f, "serving needs gen_min >= 1 (got 0)"),
+            E::GenRangeInverted { min, max } => {
+                write!(f, "serving gen range inverted: {min}..{max}")
+            }
+            E::ZeroPageTokens => write!(f, "serving needs page_tokens >= 1"),
+            E::BurstDwellMissing => write!(
+                f,
+                "burst_gap > 0 needs burst_len >= 1 and calm_len >= 1"
+            ),
+            E::BurstDwellWithoutGap => write!(
+                f,
+                "burst_len/calm_len set while burst_gap == 0 (bursts off \
+                 must leave the dwells 0)"
+            ),
+            E::TailOutOfRange { q8 } => {
+                write!(f, "len_tail_q8 {q8} out of range (0..=255)")
+            }
+            E::TailNeedsPositivePromptMin => write!(
+                f,
+                "len_tail_q8 > 0 needs prompt_min >= 1 (octave sampler floor)"
+            ),
+            E::ZeroTiers => write!(f, "serving needs tiers >= 1"),
+            E::BadTenants { tenants } => write!(
+                f,
+                "serving tenants must be 1 or 2 (got {tenants})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServingParamsError {}
 
 /// One generated request of the serving workload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,21 +275,64 @@ pub struct Request {
     pub prompt: u32,
     /// Tokens to generate before the request completes.
     pub gen: u32,
+    /// Priority tier, `0..tiers` (lower = higher priority; always 0
+    /// when tiers are disabled).
+    pub tier: u32,
+    /// Model lane, `0..tenants` (always 0 when single-tenant).
+    pub lane: u32,
+}
+
+/// Bounded-Pareto length via octave-geometric escalation (see the
+/// [module docs](self)). With `tail_q8 == 0` this is *exactly* the
+/// legacy uniform draw — one `range` call, nothing else — so disabled
+/// tails leave the RNG stream untouched.
+fn sample_len(rng: &mut Rng, min: u32, max: u32, tail_q8: u32) -> u32 {
+    if tail_q8 == 0 {
+        return rng.range(min as u64, max as u64) as u32;
+    }
+    let hi = max as u64;
+    let mut o_lo = min as u64; // validate(): >= 1 when tails are on
+    if hi <= o_lo {
+        return max;
+    }
+    loop {
+        let next = o_lo * 2;
+        if next > hi || rng.below(256) >= tail_q8 as u64 {
+            break;
+        }
+        o_lo = next;
+    }
+    let o_hi = (o_lo * 2 - 1).min(hi);
+    rng.range(o_lo, o_hi) as u32
 }
 
 /// Expand params into the concrete, deterministic arrival schedule.
 pub fn generate_requests(p: &ServingParams) -> Vec<Request> {
     let mut rng = Rng::new(p.seed);
     let mut t = 0u64;
+    let mut in_burst = false;
     (0..p.requests)
         .map(|id| {
-            t += rng.below(2 * p.mean_arrival_gap + 1);
-            Request {
-                id,
-                arrival: t,
-                prompt: rng.range(p.prompt_min as u64, p.prompt_max as u64) as u32,
-                gen: rng.range(p.gen_min as u64, p.gen_max as u64) as u32,
+            let gap = if p.burst_gap > 0 && in_burst {
+                p.burst_gap
+            } else {
+                p.mean_arrival_gap
+            };
+            t += rng.below(2 * gap + 1);
+            if p.burst_gap > 0 {
+                // Geometric dwell: flip states with probability 1/dwell.
+                let dwell = if in_burst { p.burst_len } else { p.calm_len };
+                if rng.below(dwell as u64) == 0 {
+                    in_burst = !in_burst;
+                }
             }
+            let prompt =
+                sample_len(&mut rng, p.prompt_min, p.prompt_max, p.len_tail_q8);
+            let gen = sample_len(&mut rng, p.gen_min, p.gen_max, p.len_tail_q8);
+            let tier = if p.tiers > 1 { rng.below(p.tiers as u64) as u32 } else { 0 };
+            let lane =
+                if p.tenants > 1 { rng.below(p.tenants as u64) as u32 } else { 0 };
+            Request { id, arrival: t, prompt, gen, tier, lane }
         })
         .collect()
 }
@@ -136,6 +361,8 @@ mod tests {
         for r in &reqs {
             assert!((p.prompt_min..=p.prompt_max).contains(&r.prompt));
             assert!((p.gen_min..=p.gen_max).contains(&r.gen));
+            assert_eq!(r.tier, 0);
+            assert_eq!(r.lane, 0);
         }
     }
 
@@ -149,12 +376,83 @@ mod tests {
     }
 
     #[test]
+    fn disabled_extensions_leave_the_legacy_schedule_untouched() {
+        // Explicitly-defaulted extension fields draw nothing from the
+        // RNG: the schedule is bit-identical to a params value that
+        // never heard of them.
+        let p = ServingParams::new(64, 8, 11);
+        let mut q = p;
+        q.burst_gap = 0;
+        q.len_tail_q8 = 0;
+        q.tiers = 1;
+        q.tenants = 1;
+        assert_eq!(generate_requests(&p), generate_requests(&q));
+        assert!(!p.has_extensions());
+    }
+
+    #[test]
+    fn bursty_arrivals_tighten_gaps_and_stay_monotone() {
+        let base = ServingParams::new(400, 8, 5);
+        let bursty = base.with_bursty_traffic();
+        assert!(bursty.has_extensions());
+        bursty.validate().unwrap();
+        let calm_reqs = generate_requests(&base);
+        let burst_reqs = generate_requests(&bursty);
+        for w in burst_reqs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        // Bursts compress the schedule: same request count arrives in
+        // (much) less total time.
+        assert!(
+            burst_reqs.last().unwrap().arrival < calm_reqs.last().unwrap().arrival
+        );
+    }
+
+    #[test]
+    fn heavy_tail_lengths_stay_bounded_and_skew_low() {
+        let mut p = ServingParams::new(2000, 8, 9);
+        p.len_tail_q8 = 128; // alpha = 1
+        let reqs = generate_requests(&p);
+        let mut below_midpoint = 0usize;
+        for r in &reqs {
+            assert!((p.prompt_min..=p.prompt_max).contains(&r.prompt));
+            assert!((p.gen_min..=p.gen_max).contains(&r.gen));
+            if r.prompt < p.prompt_min.midpoint(p.prompt_max) {
+                below_midpoint += 1;
+            }
+        }
+        // Heavy tail = most mass near the floor, a long upper tail.
+        assert!(
+            below_midpoint * 3 > reqs.len() * 2,
+            "expected >2/3 of prompts below the midpoint, got {below_midpoint}/{}",
+            reqs.len()
+        );
+        assert!(reqs.iter().any(|r| r.prompt > p.prompt_max / 2), "no tail");
+    }
+
+    #[test]
+    fn tiers_and_lanes_draw_in_range() {
+        let mut p = ServingParams::new(300, 8, 2);
+        p.tiers = 3;
+        p.tenants = 2;
+        let reqs = generate_requests(&p);
+        assert!(reqs.iter().all(|r| r.tier < 3 && r.lane < 2));
+        // All values actually occur.
+        for tier in 0..3 {
+            assert!(reqs.iter().any(|r| r.tier == tier), "tier {tier} never drawn");
+        }
+        for lane in 0..2 {
+            assert!(reqs.iter().any(|r| r.lane == lane), "lane {lane} never drawn");
+        }
+    }
+
+    #[test]
     fn validate_rejects_bad_params() {
         assert!(ServingParams::new(1, 1, 0).validate().is_ok());
         let mut p = ServingParams::new(0, 1, 0);
-        assert!(p.validate().is_err());
+        assert_eq!(p.validate(), Err(ServingParamsError::ZeroRequests));
         p = ServingParams::new(1, 0, 0);
-        assert!(p.validate().is_err());
+        assert_eq!(p.validate(), Err(ServingParamsError::ZeroConcurrency));
         p = ServingParams::new(1, 1, 0);
         p.gen_min = 0;
         assert!(p.validate().is_err());
@@ -165,5 +463,43 @@ mod tests {
         p = ServingParams::new(1, 1, 0);
         p.page_tokens = 0;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_extensions() {
+        let mut p = ServingParams::new(4, 2, 0);
+        p.burst_gap = 100;
+        assert_eq!(p.validate(), Err(ServingParamsError::BurstDwellMissing));
+        p.burst_len = 4;
+        p.calm_len = 8;
+        assert!(p.validate().is_ok());
+
+        let mut p = ServingParams::new(4, 2, 0);
+        p.burst_len = 4; // dwell without a gap: ambiguous encoding
+        assert_eq!(p.validate(), Err(ServingParamsError::BurstDwellWithoutGap));
+
+        let mut p = ServingParams::new(4, 2, 0);
+        p.len_tail_q8 = 256;
+        assert!(matches!(
+            p.validate(),
+            Err(ServingParamsError::TailOutOfRange { q8: 256 })
+        ));
+        p.len_tail_q8 = 128;
+        p.prompt_min = 0;
+        assert_eq!(
+            p.validate(),
+            Err(ServingParamsError::TailNeedsPositivePromptMin)
+        );
+
+        let mut p = ServingParams::new(4, 2, 0);
+        p.tiers = 0;
+        assert_eq!(p.validate(), Err(ServingParamsError::ZeroTiers));
+
+        let mut p = ServingParams::new(4, 2, 0);
+        p.tenants = 3;
+        assert_eq!(
+            p.validate(),
+            Err(ServingParamsError::BadTenants { tenants: 3 })
+        );
     }
 }

@@ -10,8 +10,8 @@ pub mod systolic;
 
 pub use engine::{simulate, simulate_with, SimOptions, Simulator};
 pub use serving::{
-    arena_capacity, simulate_serving, simulate_serving_with, ServingResult,
-    ServingSimOptions,
+    arena_capacity, round_robin, simulate_serving, simulate_serving_with,
+    ServingResult, ServingSimOptions,
 };
 pub use stats::{OpBreakdown, SimResult};
 pub use systolic::{matmul_efficiency, matmul_timing, split_subops, MatmulTiming};

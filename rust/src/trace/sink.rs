@@ -50,6 +50,12 @@ pub enum RunEvent {
     Admit { request: u32 },
     /// Serving request `request` completed and released its KV pages.
     Complete { request: u32 },
+    /// Serving scheduler preempted request `request`: its live KV
+    /// spilled to DRAM and its arena pages were freed.
+    Evict { request: u32 },
+    /// Serving scheduler re-admitted a preempted request `request`,
+    /// streaming its KV back from DRAM into fresh arena pages.
+    Restore { request: u32 },
     /// Retrospective: bank `bank` held `state` (a
     /// `banking::online::BankState::label`) over `[t0, t1)` in
     /// stall-adjusted cycles.

@@ -204,6 +204,23 @@ pub fn all_presets() -> Vec<ModelPreset> {
     vec![GPT2_XL, DS_R1D_Q15B, TINY_MHA, TINY_GQA]
 }
 
+/// The paper's MHA↔GQA co-residency pairing: the preset that shares a
+/// serving arena with `name` under multi-model tenancy
+/// (`ServingParams::tenants == 2`). Each matched pair contrasts the two
+/// attention families at comparable scale, so co-residency turns the
+/// paper's MHA-vs-GQA comparison into one experiment.
+pub fn paper_counterpart(name: &str) -> Option<ModelPreset> {
+    match name {
+        "gpt2-xl" => Some(DS_R1D_Q15B),
+        "ds-r1d-qwen-1.5b" => Some(GPT2_XL),
+        "tiny-mha" => Some(TINY_GQA),
+        "tiny-gqa" => Some(TINY_MHA),
+        "fig1-mha-124m" => Some(FIG1_GQA),
+        "fig1-gqa-124m" => Some(FIG1_MHA),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +283,17 @@ mod tests {
         assert_eq!(preset("deepseek").unwrap(), DS_R1D_Q15B);
         assert!(preset("nope").is_none());
         assert_eq!(all_presets().len(), 4);
+    }
+
+    #[test]
+    fn paper_counterpart_is_a_symmetric_mha_gqa_pairing() {
+        for m in [GPT2_XL, DS_R1D_Q15B, TINY_MHA, TINY_GQA, FIG1_MHA, FIG1_GQA] {
+            let c = paper_counterpart(m.name).unwrap();
+            assert_ne!(c.name, m.name);
+            assert_eq!(paper_counterpart(c.name).unwrap(), m, "not symmetric");
+            assert_ne!(c.attn_kind() == AttnKind::Mha, m.attn_kind() == AttnKind::Mha);
+        }
+        assert!(paper_counterpart("nope").is_none());
     }
 
     #[test]

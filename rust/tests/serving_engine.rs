@@ -1,0 +1,293 @@
+//! Event-engine integration suite: the differential harness against the
+//! retained round-robin oracle (byte-identical materialized traces on
+//! every workload the oracle covers), stream-order and page-lifecycle
+//! invariants under preemption, bit-determinism of evict/restore, and
+//! the typed rejection of degenerate specs.
+
+use trapti::serving::{ServingParams, ServingParamsError};
+use trapti::sim::serving::{round_robin, simulate_serving, simulate_serving_with, ServingSimOptions};
+use trapti::trace::{MemoryDesc, RunEvent, TraceSink};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::workload::TINY_GQA;
+
+/// Random legacy-schedulable params (no tiers/prefix/tenancy — the
+/// oracle's domain), optionally with bursty arrivals and a heavy tail,
+/// which only reshape the request schedule and stay oracle-comparable.
+fn random_oracle_params(rng: &mut Rng) -> ServingParams {
+    let mut p = ServingParams::new(
+        rng.range(1, 48) as u32,
+        rng.range(1, 8) as u32,
+        rng.next_u64(),
+    );
+    p.prompt_min = rng.range(1, 8) as u32;
+    p.prompt_max = p.prompt_min + rng.range(0, 40) as u32;
+    p.gen_min = rng.range(1, 6) as u32;
+    p.gen_max = p.gen_min + rng.range(0, 24) as u32;
+    p.page_tokens = rng.range(1, 32) as u32;
+    p.mean_arrival_gap = rng.below(200_000);
+    if rng.below(2) == 0 {
+        p = p.with_bursty_traffic();
+    }
+    if rng.below(2) == 0 {
+        p.len_tail_q8 = rng.range(1, 255) as u32;
+    }
+    p
+}
+
+/// The tentpole acceptance property: on every workload the round-robin
+/// oracle can express, the event-driven engine materializes the exact
+/// same trace — sample for sample — and the same stats and makespan.
+#[test]
+fn event_engine_matches_oracle_on_random_workloads() {
+    let accel = trapti::config::tiny();
+    check("event-vs-oracle", 16, |rng: &mut Rng| {
+        let p = random_oracle_params(rng);
+        let event = simulate_serving(&TINY_GQA, p, &accel).unwrap();
+        let oracle =
+            round_robin(&TINY_GQA, p, &accel, ServingSimOptions::default()).unwrap();
+        assert_eq!(event.trace.samples(), oracle.trace.samples());
+        assert_eq!(event.trace.end_time(), oracle.trace.end_time());
+        assert_eq!(event.trace_hash(), oracle.trace_hash());
+        assert_eq!(event.stats, oracle.stats);
+        assert_eq!(event.total_cycles, oracle.total_cycles);
+        assert_eq!(event.completed, oracle.completed);
+        assert_eq!(event.peak_concurrent, oracle.peak_concurrent);
+        assert_eq!(event.workload, oracle.workload);
+        assert_eq!(event.evicted, 0);
+        assert_eq!(event.restored, 0);
+    });
+}
+
+/// Records the cycle stamp of everything the engine streams out, in
+/// arrival order, to check the heap's total order from the outside.
+#[derive(Default)]
+struct StreamOrderRecorder {
+    stamps: Vec<u64>,
+    admits: u32,
+    completes: u32,
+    evicts: u32,
+    restores: u32,
+}
+
+impl TraceSink for StreamOrderRecorder {
+    fn begin(&mut self, _memories: &[MemoryDesc]) {}
+
+    fn on_sample(&mut self, _mem: usize, t: u64, _needed: u64, _obsolete: u64) {
+        self.stamps.push(t);
+    }
+
+    fn on_event(&mut self, t: u64, event: &RunEvent) {
+        self.stamps.push(t);
+        match event {
+            RunEvent::Admit { .. } => self.admits += 1,
+            RunEvent::Complete { .. } => self.completes += 1,
+            RunEvent::Evict { .. } => self.evicts += 1,
+            RunEvent::Restore { .. } => self.restores += 1,
+            _ => {}
+        }
+    }
+}
+
+/// The event heap's (t, seq) total order is externally visible as a
+/// non-decreasing stream of cycle stamps — samples and structural
+/// events interleaved — even under preemption, where restores replay
+/// evicted KV at later cycles.
+#[test]
+fn stream_timestamps_never_go_backwards() {
+    let accel = trapti::config::tiny();
+    check("stream-order", 10, |rng: &mut Rng| {
+        let mut p = random_oracle_params(rng);
+        p.tiers = rng.range(1, 4) as u32;
+        let mut rec = StreamOrderRecorder::default();
+        let r = simulate_serving_with(
+            &TINY_GQA,
+            p,
+            &accel,
+            ServingSimOptions {
+                sink: Some(&mut rec),
+                materialize: false,
+            },
+        )
+        .unwrap();
+        assert!(
+            rec.stamps.windows(2).all(|w| w[0] <= w[1]),
+            "stream must be time-ordered"
+        );
+        assert_eq!(*rec.stamps.last().unwrap(), r.total_cycles);
+        assert_eq!(rec.admits, p.requests, "restores are not fresh admits");
+        assert_eq!(rec.completes, p.requests);
+        assert_eq!(rec.evicts, r.evicted);
+        assert_eq!(rec.restores, r.restored);
+    });
+}
+
+/// Page lifecycle under preemption: every evicted request is restored
+/// exactly once, every request still completes, occupancy never exceeds
+/// the sized arena capacity (a double-free would wrap the page
+/// accounting and blow straight past it), and the arena drains to zero.
+#[test]
+fn preemption_never_double_frees_pages() {
+    let accel = trapti::config::tiny();
+    check("preemption-pages", 12, |rng: &mut Rng| {
+        let mut p = ServingParams::new(
+            rng.range(8, 48) as u32,
+            rng.range(1, 4) as u32,
+            rng.next_u64(),
+        );
+        p.prompt_min = 2;
+        p.prompt_max = 2 + rng.range(0, 24) as u32;
+        p.gen_min = 2;
+        p.gen_max = 2 + rng.range(0, 16) as u32;
+        p.page_tokens = rng.range(1, 16) as u32;
+        // Tight arrivals + tiers: admissions pile up behind running
+        // streams, so higher-priority waiters force evictions.
+        p.mean_arrival_gap = rng.below(2_000);
+        p.tiers = rng.range(2, 4) as u32;
+        let r = simulate_serving(&TINY_GQA, p, &accel).unwrap();
+        assert_eq!(r.completed, p.requests);
+        assert_eq!(r.evicted, r.restored);
+        let samples = r.trace.samples();
+        assert!(samples
+            .iter()
+            .all(|s| s.needed + s.obsolete <= r.arena_capacity));
+        let last = samples.last().unwrap();
+        assert_eq!((last.needed, last.obsolete), (0, 0), "arena must drain");
+    });
+}
+
+/// Preemption and restore are bit-deterministic: the same tiered spec
+/// yields the same trace hash, eviction count, and makespan every run.
+#[test]
+fn preemption_is_bit_deterministic() {
+    let accel = trapti::config::tiny();
+    let mut p = ServingParams::new(40, 2, 11);
+    p.prompt_min = 4;
+    p.prompt_max = 32;
+    p.gen_min = 2;
+    p.gen_max = 16;
+    p.page_tokens = 8;
+    p.mean_arrival_gap = 500;
+    p.tiers = 3;
+    let a = simulate_serving(&TINY_GQA, p, &accel).unwrap();
+    let b = simulate_serving(&TINY_GQA, p, &accel).unwrap();
+    assert_eq!(a.trace_hash(), b.trace_hash());
+    assert_eq!(a.trace.samples(), b.trace.samples());
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!((a.evicted, a.restored), (b.evicted, b.restored));
+    assert_eq!(a.stats, b.stats);
+}
+
+/// Degenerate specs die in the typed validator, not deep inside the
+/// engine: every `ServingParamsError` variant is reachable and precise.
+#[test]
+fn degenerate_specs_fail_with_typed_errors() {
+    use ServingParamsError as E;
+    let base = || ServingParams::new(8, 2, 7);
+    let cases: Vec<(ServingParams, E)> = vec![
+        (
+            {
+                let mut p = base();
+                p.requests = 0;
+                p
+            },
+            E::ZeroRequests,
+        ),
+        (
+            {
+                let mut p = base();
+                p.concurrency = 0;
+                p
+            },
+            E::ZeroConcurrency,
+        ),
+        (
+            {
+                let mut p = base();
+                p.prompt_min = 9;
+                p.prompt_max = 3;
+                p
+            },
+            E::PromptRangeInverted { min: 9, max: 3 },
+        ),
+        (
+            {
+                let mut p = base();
+                p.gen_min = 0;
+                p
+            },
+            E::ZeroGenMin,
+        ),
+        (
+            {
+                let mut p = base();
+                p.gen_min = 8;
+                p.gen_max = 2;
+                p
+            },
+            E::GenRangeInverted { min: 8, max: 2 },
+        ),
+        (
+            {
+                let mut p = base();
+                p.page_tokens = 0;
+                p
+            },
+            E::ZeroPageTokens,
+        ),
+        (
+            {
+                let mut p = base();
+                p.burst_gap = 100;
+                p
+            },
+            E::BurstDwellMissing,
+        ),
+        (
+            {
+                let mut p = base();
+                p.burst_len = 8;
+                p
+            },
+            E::BurstDwellWithoutGap,
+        ),
+        (
+            {
+                let mut p = base();
+                p.len_tail_q8 = 256;
+                p
+            },
+            E::TailOutOfRange { q8: 256 },
+        ),
+        (
+            {
+                let mut p = base();
+                p.prompt_min = 0;
+                p.len_tail_q8 = 128;
+                p
+            },
+            E::TailNeedsPositivePromptMin,
+        ),
+        (
+            {
+                let mut p = base();
+                p.tiers = 0;
+                p
+            },
+            E::ZeroTiers,
+        ),
+        (
+            {
+                let mut p = base();
+                p.tenants = 3;
+                p
+            },
+            E::BadTenants { tenants: 3 },
+        ),
+    ];
+    for (p, want) in cases {
+        assert_eq!(p.validate(), Err(want), "params: {p:?}");
+    }
+    assert!(base().validate().is_ok());
+    assert!(base().with_bursty_traffic().validate().is_ok());
+}

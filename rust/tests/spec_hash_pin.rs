@@ -50,6 +50,44 @@ fn tiny_gqa_serving_pin() {
     assert_eq!(spec.content_hash(), 0x3c73ee6add37678a);
 }
 
+/// The scheduling-extension fields (bursty arrivals, heavy tails,
+/// tiers, shared prefix, tenancy) hash under a version marker that is
+/// only mixed in when at least one extension is enabled — so every
+/// pre-extension serving spec (all defaults) keeps its exact pin above,
+/// and no stored lab artifact is invalidated. Enabling any extension
+/// must move the hash. This is the documented extension rule
+/// (docs/ARCHITECTURE.md, "Spec identity"): new `ServingParams` fields
+/// may only be hashed behind a default-off gate.
+#[test]
+fn serving_extensions_preserve_legacy_pin_and_are_semantic() {
+    let legacy = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(ServingParams::new(8, 2, 7))
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(legacy.content_hash(), 0x3c73ee6add37678a);
+
+    let bursty = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(ServingParams::new(8, 2, 7).with_bursty_traffic())
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_ne!(bursty.content_hash(), legacy.content_hash());
+
+    let mut tiered_params = ServingParams::new(8, 2, 7);
+    tiered_params.tiers = 2;
+    let tiered = ExperimentSpec::builder()
+        .model(TINY_GQA)
+        .serving(tiered_params)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_ne!(tiered.content_hash(), legacy.content_hash());
+    assert_ne!(tiered.content_hash(), bursty.content_hash());
+}
+
 #[test]
 fn sweep_grid_is_part_of_the_identity() {
     let spec = ExperimentSpec::builder()
