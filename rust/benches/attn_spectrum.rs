@@ -1,0 +1,66 @@
+//! Bench: the attention-variant spectrum runner (`repro spectrum`) —
+//! five matched presets (MHA → GQA → MQA → MLA → SWA), each through the
+//! full Stage I decode → Stage II sweep pipeline plus the PIM-offload
+//! closed form. Run: `cargo bench --bench attn_spectrum`.
+//!
+//! `TRAPTI_BENCH_SMOKE=1` shrinks the decode to CI scale. Either way the
+//! run asserts the tentpole invariants — the peak-occupancy curve is
+//! monotone across the shrinking-KV chain and a repeat run is
+//! bit-identical — and emits `BENCH_attn_spectrum.json` for the perf
+//! trajectory.
+
+use trapti::api::experiments::spectrum;
+use trapti::api::ApiContext;
+use trapti::util::bench::{bench, default_iters, emit_json, smoke};
+use trapti::util::json::Json;
+
+fn main() {
+    let ctx = ApiContext::new();
+    let smoke = smoke();
+    let (prompt, gen) = if smoke { (32u32, 4u32) } else { (256, 32) };
+    println!(
+        "spectrum decode {prompt}+{gen}{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let iters = default_iters();
+    let (stats, s) = bench("attn_spectrum", iters, || {
+        spectrum(&ctx, prompt, gen, None, false).expect("spectrum run")
+    });
+
+    assert_eq!(s.rows.len(), 5, "MHA, GQA, MQA, MLA, SWA");
+    assert!(s.peak_is_monotone(), "peak curve must shrink with the KV");
+    for r in &s.rows {
+        println!(
+            "  {:<14} peak {:>12} B  best dE {:+.1}%  E_pim {:.3e} J",
+            r.name, r.peak_needed, r.best_delta_pct, r.pim_e_j
+        );
+        assert!(r.best_delta_pct <= 0.0, "{}: gating never hurts", r.name);
+        assert!(r.pim_e_j > 0.0 && r.peak_needed > 0, "{}", r.name);
+    }
+
+    // Determinism: the report the CI gate diffs must be reproducible.
+    let again = spectrum(&ctx, prompt, gen, None, false).expect("spectrum rerun");
+    for (a, b) in s.rows.iter().zip(&again.rows) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kv_bytes, b.kv_bytes);
+        assert_eq!(a.peak_needed, b.peak_needed);
+        assert_eq!(a.best_delta_pct.to_bits(), b.best_delta_pct.to_bits());
+        assert_eq!(a.best_energy_j.to_bits(), b.best_energy_j.to_bits());
+        assert_eq!(a.pim_e_j.to_bits(), b.pim_e_j.to_bits());
+    }
+
+    let spread = s.rows[0].peak_needed as f64 / s.rows[3].peak_needed.max(1) as f64;
+    println!("MHA/MLA peak spread: {spread:.2}x");
+
+    let mut fields = stats.to_json();
+    fields.extend([
+        ("variants", Json::num(s.rows.len() as f64)),
+        ("prompt", Json::num(prompt as f64)),
+        ("gen", Json::num(gen as f64)),
+        ("peak_spread_mha_over_mla", Json::num(spread)),
+        ("smoke", Json::Bool(smoke)),
+    ]);
+    let path = emit_json("attn_spectrum", fields).expect("bench artifact");
+    println!("wrote {}", path.display());
+}

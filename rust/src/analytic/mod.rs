@@ -1,6 +1,10 @@
-//! Aggregate-statistics (Timeloop/MAESTRO-class) baseline estimator —
-//! the prior-work comparator that lacks time-resolved occupancy.
+//! Analytic comparators: the aggregate-statistics
+//! (Timeloop/MAESTRO-class) baseline that lacks time-resolved
+//! occupancy, and the PIM-offload baseline where attention never
+//! touches SRAM.
 
 pub mod baseline;
+pub mod pim;
 
 pub use baseline::{estimate, AggregateEstimate, AggregateView};
+pub use pim::{estimate_pim, PimEstimate, E_PIM_MAC_J, E_PIM_WRITE_J_PER_BYTE};

@@ -1,0 +1,145 @@
+//! PIM-offload baseline: attention computed in memory, KV never
+//! SRAM-resident (the X-Former-class comparator from PAPERS.md).
+//!
+//! Processing-in-memory accelerators hold the KV cache inside the
+//! compute arrays and evaluate the score/context matmuls there, so the
+//! on-chip SRAM only ever sees weights and activations. As a
+//! comparison column this answers: how much of TRAPTI's banking +
+//! gating headroom would an architectural change (offload) capture
+//! instead? The estimate is closed-form over the model/workload shape —
+//! deliberately trace-free, like the aggregate baseline next door — and
+//! charges the PIM side per MAC and per KV byte written into the
+//! arrays.
+
+use crate::workload::{ModelPreset, Workload};
+
+/// Energy per in-memory MAC, joules (~0.4 pJ — ReRAM crossbar figure,
+/// X-Former §V).
+pub const E_PIM_MAC_J: f64 = 0.4e-12;
+
+/// Energy per KV byte written into the PIM arrays, joules (~10 pJ —
+/// NVM writes dominate the offload's dynamic cost).
+pub const E_PIM_WRITE_J_PER_BYTE: f64 = 10e-12;
+
+/// Closed-form PIM-offload estimate for one (model, workload) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PimEstimate {
+    /// Attention MACs moved into the arrays (score + context).
+    pub attn_macs: u64,
+    /// KV bytes written into the arrays (every token's KV, once).
+    pub kv_write_bytes: u64,
+    /// PIM-side energy: `attn_macs * E_PIM_MAC_J + kv_write_bytes *
+    /// E_PIM_WRITE_J_PER_BYTE`.
+    pub e_pim_j: f64,
+    /// KV footprint that no longer competes for SRAM (window/latent
+    /// aware — this is `ModelPreset::kv_cache_bytes` at the final
+    /// context).
+    pub kv_cache_bytes: u64,
+}
+
+impl PimEstimate {
+    /// SRAM peak with the KV evicted to the arrays. Conservative: the
+    /// KV may not all be resident at the observed peak instant, so the
+    /// true relieved peak is at least this.
+    pub fn relieved_peak(&self, peak_needed: u64) -> u64 {
+        peak_needed.saturating_sub(self.kv_cache_bytes)
+    }
+}
+
+/// Estimate the PIM offload for `workload` on `model`. Serving has no
+/// single closed form (per-request contexts vary) — returns `None`.
+pub fn estimate_pim(model: &ModelPreset, workload: &Workload) -> Option<PimEstimate> {
+    let (attn_macs, final_ctx) = match *workload {
+        Workload::Prefill { seq } => {
+            let macs = model.layers as u64
+                * 2
+                * model.heads as u64
+                * seq as u64
+                * model.kv_horizon(seq as u64)
+                * model.d_head as u64;
+            (macs, seq as u64)
+        }
+        Workload::Decode { prompt, gen } => {
+            // One query token per step; context grows (window-capped).
+            let mut per_layer = 0u64;
+            for t in 0..gen as u64 {
+                let ctx = model.kv_horizon(prompt as u64 + t + 1);
+                per_layer += 2 * model.heads as u64 * ctx * model.d_head as u64;
+            }
+            (
+                model.layers as u64 * per_layer,
+                prompt as u64 + gen as u64,
+            )
+        }
+        Workload::Serving(_) => return None,
+    };
+    // Every token's KV enters the arrays exactly once; a sliding window
+    // saves *capacity* (old entries overwritten), not write traffic.
+    let kv_write_bytes = model.layers as u64 * final_ctx * model.kv_token_bytes();
+    Some(PimEstimate {
+        attn_macs,
+        kv_write_bytes,
+        e_pim_j: attn_macs as f64 * E_PIM_MAC_J
+            + kv_write_bytes as f64 * E_PIM_WRITE_J_PER_BYTE,
+        kv_cache_bytes: model.kv_cache_bytes(final_ctx),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::ServingParams;
+    use crate::workload::{FIG1_MHA, FIG1_MLA, FIG1_MQA, FIG1_SWA, TINY_GQA};
+
+    #[test]
+    fn prefill_macs_match_closed_form() {
+        let est = estimate_pim(&TINY_GQA, &Workload::Prefill { seq: 64 }).unwrap();
+        let m = &TINY_GQA;
+        assert_eq!(
+            est.attn_macs,
+            m.layers as u64 * 2 * m.heads as u64 * 64 * 64 * m.d_head as u64
+        );
+        assert_eq!(
+            est.kv_write_bytes,
+            m.layers as u64 * 64 * m.kv_token_bytes()
+        );
+        assert_eq!(est.kv_cache_bytes, m.kv_cache_bytes(64));
+        assert!(est.e_pim_j > 0.0);
+    }
+
+    #[test]
+    fn window_caps_macs_but_not_write_traffic() {
+        let wl = Workload::Decode { prompt: 512, gen: 8 };
+        let full = estimate_pim(&FIG1_MHA, &wl).unwrap();
+        let swa = estimate_pim(&FIG1_SWA, &wl).unwrap();
+        assert!(swa.attn_macs < full.attn_macs, "window must cap context MACs");
+        assert_eq!(swa.kv_write_bytes, full.kv_write_bytes);
+        assert!(swa.kv_cache_bytes < full.kv_cache_bytes);
+    }
+
+    #[test]
+    fn latent_kv_shrinks_array_writes() {
+        let wl = Workload::Prefill { seq: 256 };
+        let mha = estimate_pim(&FIG1_MHA, &wl).unwrap();
+        let mqa = estimate_pim(&FIG1_MQA, &wl).unwrap();
+        let mla = estimate_pim(&FIG1_MLA, &wl).unwrap();
+        assert!(mqa.kv_write_bytes < mha.kv_write_bytes);
+        assert!(mla.kv_write_bytes < mqa.kv_write_bytes);
+    }
+
+    #[test]
+    fn serving_has_no_closed_form() {
+        let wl = Workload::Serving(ServingParams::new(8, 2, 7));
+        assert!(estimate_pim(&TINY_GQA, &wl).is_none());
+    }
+
+    #[test]
+    fn relieved_peak_saturates() {
+        let est = estimate_pim(&TINY_GQA, &Workload::Prefill { seq: 64 }).unwrap();
+        assert_eq!(est.relieved_peak(est.kv_cache_bytes / 2), 0);
+        assert_eq!(
+            est.relieved_peak(est.kv_cache_bytes + 10),
+            10
+        );
+    }
+}

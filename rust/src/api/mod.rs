@@ -91,7 +91,7 @@ pub mod stage;
 pub use batch::{BatchResult, BatchRunner};
 pub use optimize::{
     online_validate, online_validate_with, run_portfolio, validate_frontier,
-    OnlineValidation, PortfolioOptions, PortfolioRun,
+    validate_frontier_with, OnlineValidation, PortfolioOptions, PortfolioRun,
 };
 pub use serving::{ServingEngine, ServingRun, ServingSweep};
 pub use spec::{validate_sweep, ExperimentSpec, ExperimentSpecBuilder};

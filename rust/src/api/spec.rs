@@ -7,7 +7,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::banking::{GatingPolicy, SweepSpec};
+use crate::banking::{GatingPolicy, HierarchyConfig, SweepSpec};
 use crate::config::{baseline, AccelConfig};
 use crate::serving::ServingParams;
 use crate::util::fnv::Fnv64 as Fnv;
@@ -23,6 +23,10 @@ pub struct ExperimentSpec {
     /// Stage-II sweep grid. `None` means "derive the paper grid from the
     /// Stage-I peak" when Stage II is requested.
     pub sweep: Option<SweepSpec>,
+    /// Hierarchy-aware Stage II/III: banked L1 backed by an L2 spill
+    /// pool (see [`crate::banking::hierarchy`]). `None` (the default)
+    /// keeps the flat single-SRAM sweep and does not join the hash.
+    pub hierarchy: Option<HierarchyConfig>,
 }
 
 impl ExperimentSpec {
@@ -60,6 +64,14 @@ impl ExperimentSpec {
             NormKind::LayerNorm => 0,
             NormKind::RmsNorm => 1,
         });
+        // Spec-hash extension rule (same as the serving gate below):
+        // attention-variant fields join the hash only when enabled, so
+        // every pre-spectrum preset keeps its exact original pin.
+        if self.model.has_attn_extensions() {
+            h.u64(0x4d1a_77a1);
+            h.u64(self.model.latent_dim as u64);
+            h.u64(self.model.window as u64);
+        }
 
         // Workload.
         match self.workload {
@@ -152,6 +164,14 @@ impl ExperimentSpec {
                 }
             }
         }
+
+        // Hierarchy (default-off; extension rule again — a flat spec
+        // keeps its pre-hierarchy hash bit-for-bit).
+        if let Some(hc) = &self.hierarchy {
+            h.u64(0x4c32_5350);
+            h.u64(hc.l2_capacity);
+            h.f64(hc.migrate_energy_per_byte_j);
+        }
         h.finish()
     }
 
@@ -161,7 +181,7 @@ impl ExperimentSpec {
     /// silently round capacities above 2^53.
     pub fn manifest_json(&self) -> Json {
         let u = |v: u64| Json::str(v.to_string());
-        let model = Json::obj(vec![
+        let mut model_fields = vec![
             ("name", Json::str(self.model.name)),
             ("layers", Json::num(self.model.layers)),
             ("d_model", Json::num(self.model.d_model)),
@@ -171,7 +191,14 @@ impl ExperimentSpec {
             ("d_ff", Json::num(self.model.d_ff)),
             ("ffn", Json::str(format!("{:?}", self.model.ffn))),
             ("norm", Json::str(format!("{:?}", self.model.norm))),
-        ]);
+        ];
+        // Mirrors the hash's attention-extension rule: pre-spectrum
+        // manifests stay byte-identical.
+        if self.model.has_attn_extensions() {
+            model_fields.push(("latent_dim", Json::num(self.model.latent_dim)));
+            model_fields.push(("window", Json::num(self.model.window)));
+        }
+        let model = Json::obj(model_fields);
         let workload = match self.workload {
             Workload::Prefill { seq } => Json::obj(vec![
                 ("kind", Json::str("prefill")),
@@ -229,13 +256,24 @@ impl ExperimentSpec {
                 ),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("spec_hash", Json::str(format!("{:016x}", self.content_hash()))),
             ("model", model),
             ("workload", workload),
             ("accel", accel),
             ("sweep", sweep),
-        ])
+        ];
+        // Same extension rule: the key only appears when hierarchy is on.
+        if let Some(hc) = &self.hierarchy {
+            fields.push((
+                "hierarchy",
+                Json::obj(vec![
+                    ("l2_capacity", u(hc.l2_capacity)),
+                    ("migrate_energy_per_byte_j", Json::num(hc.migrate_energy_per_byte_j)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Validate every field; called by the builder and by `BatchRunner`
@@ -260,6 +298,18 @@ impl ExperimentSpec {
             m.heads,
             m.kv_heads
         );
+        if m.latent_dim > 0 {
+            // Latent KV is a *compression*: the per-token latent must not
+            // exceed the uncompressed per-token KV it replaces.
+            ensure!(
+                m.latent_dim as u64 <= 2 * (m.kv_heads * m.d_head) as u64,
+                "model `{}`: latent_dim ({}) exceeds the uncompressed \
+                 per-token KV bytes ({})",
+                m.name,
+                m.latent_dim,
+                2 * (m.kv_heads * m.d_head) as u64
+            );
+        }
         match self.workload {
             Workload::Prefill { seq } => {
                 ensure!(seq >= 1, "prefill needs seq >= 1 (got {seq})");
@@ -282,6 +332,24 @@ impl ExperimentSpec {
         self.accel.validate()?;
         if let Some(s) = &self.sweep {
             validate_sweep(s)?;
+        }
+        if let Some(hc) = &self.hierarchy {
+            ensure!(
+                hc.l2_capacity >= 1,
+                "hierarchy: l2_capacity must be >= 1 byte"
+            );
+            ensure!(
+                hc.migrate_energy_per_byte_j.is_finite()
+                    && hc.migrate_energy_per_byte_j >= 0.0,
+                "hierarchy: migrate_energy_per_byte_j must be finite and >= 0 \
+                 (got {})",
+                hc.migrate_energy_per_byte_j
+            );
+            ensure!(
+                !matches!(self.workload, Workload::Serving(_)),
+                "hierarchy-aware sweeps need a materializable single-run \
+                 trace; serving workloads are not supported"
+            );
         }
         Ok(())
     }
@@ -335,6 +403,7 @@ pub struct ExperimentSpecBuilder {
     workload: Option<Workload>,
     accel: Option<AccelConfig>,
     sweep: Option<SweepSpec>,
+    hierarchy: Option<HierarchyConfig>,
 }
 
 impl ExperimentSpecBuilder {
@@ -379,6 +448,14 @@ impl ExperimentSpecBuilder {
         self
     }
 
+    /// Enable hierarchy-aware Stage II/III (banked L1 + L2 spill).
+    /// Omit for the flat single-SRAM sweep — the default, and the only
+    /// mode that keeps pre-hierarchy spec hashes.
+    pub fn hierarchy(mut self, config: HierarchyConfig) -> Self {
+        self.hierarchy = Some(config);
+        self
+    }
+
     pub fn build(self) -> Result<ExperimentSpec> {
         let Some(model) = self.model else {
             bail!("ExperimentSpec: model not set");
@@ -391,6 +468,7 @@ impl ExperimentSpecBuilder {
             workload,
             accel: self.accel.unwrap_or_else(baseline),
             sweep: self.sweep,
+            hierarchy: self.hierarchy,
         };
         spec.validate()?;
         Ok(spec)
@@ -603,6 +681,56 @@ mod tests {
             .to_string_compact();
         assert!(extended.contains("burst_gap"), "{extended}");
         assert!(extended.contains("tenants"), "{extended}");
+    }
+
+    #[test]
+    fn attn_extension_fields_are_semantic_and_gated() {
+        let flat = base();
+        let mut mla = base();
+        mla.model.latent_dim = 16;
+        assert_ne!(flat.content_hash(), mla.content_hash());
+        let mut win = base();
+        win.model.window = 32;
+        assert_ne!(flat.content_hash(), win.content_hash());
+        assert_ne!(mla.content_hash(), win.content_hash());
+        // Manifests mirror the gate: legacy stays byte-identical.
+        let legacy = flat.manifest_json().to_string_compact();
+        assert!(!legacy.contains("latent_dim"), "{legacy}");
+        let extended = mla.manifest_json().to_string_compact();
+        assert!(extended.contains("latent_dim"), "{extended}");
+        assert!(extended.contains("window"), "{extended}");
+    }
+
+    #[test]
+    fn hierarchy_is_default_off_and_semantic() {
+        let flat = base();
+        let mut h = base();
+        h.hierarchy = Some(HierarchyConfig::new(8 * MIB));
+        assert_ne!(flat.content_hash(), h.content_hash());
+        let mut h2 = base();
+        h2.hierarchy = Some(HierarchyConfig {
+            l2_capacity: 8 * MIB,
+            migrate_energy_per_byte_j: 1e-12,
+        });
+        assert_ne!(h.content_hash(), h2.content_hash());
+        assert!(!flat.manifest_json().to_string_compact().contains("hierarchy"));
+        assert!(h.manifest_json().to_string_compact().contains("l2_capacity"));
+    }
+
+    #[test]
+    fn builder_rejects_bad_latent_and_serving_hierarchy() {
+        let mut m = TINY_GQA.clone();
+        m.latent_dim = 1 << 20; // far above 2 * kv_heads * d_head
+        assert!(ExperimentSpec::builder().model(m).prefill(64).build().is_err());
+
+        let err = ExperimentSpec::builder()
+            .model(TINY_GQA)
+            .serving(ServingParams::new(8, 2, 7))
+            .accel(tiny())
+            .hierarchy(HierarchyConfig::new(8 * MIB))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("serving"), "{err}");
     }
 
     #[test]

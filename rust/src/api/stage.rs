@@ -219,12 +219,18 @@ impl Stage1Run {
     }
 
     /// The sweep grid this run will use: the spec's, or the derived
-    /// paper grid when the spec left it open.
+    /// paper grid when the spec left it open. With a hierarchy config
+    /// the derived grid's capacity floor drops by the L2 pool size —
+    /// spill candidates below the flat peak are exactly the points the
+    /// hierarchy makes feasible.
     fn effective_sweep(&self) -> SweepSpec {
-        self.spec
-            .sweep
-            .clone()
-            .unwrap_or_else(|| self.paper_sweep())
+        self.spec.sweep.clone().unwrap_or_else(|| {
+            let mut floor = self.result.peak_needed();
+            if let Some(hc) = &self.spec.hierarchy {
+                floor = floor.saturating_sub(hc.l2_capacity);
+            }
+            SweepSpec::paper_grid(floor)
+        })
     }
 
     /// Stage II over the shared-SRAM trace with the run's aggregate
@@ -236,16 +242,34 @@ impl Stage1Run {
         self.stage2_with(ctx, &spec)
     }
 
-    /// Stage II over the shared-SRAM trace with an explicit grid.
+    /// Stage II over the shared-SRAM trace with an explicit grid. When
+    /// the spec carries a [`crate::banking::HierarchyConfig`] the sweep
+    /// runs hierarchy-aware (banked L1 + L2 spill, migration and L2
+    /// leakage folded into each point via
+    /// [`crate::banking::HierarchyPoint::collapse`]); without one this
+    /// is the flat engine, bit for bit.
     pub fn stage2_with(&self, ctx: &ApiContext, spec: &SweepSpec) -> Result<Stage2Run<'_>> {
         let trace = self.result.sram_trace();
-        let points = sweep(
-            &ctx.cacti,
-            trace,
-            &self.result.stats,
-            spec,
-            self.spec.freq_ghz(),
-        )?;
+        let points = match &self.spec.hierarchy {
+            None => sweep(
+                &ctx.cacti,
+                trace,
+                &self.result.stats,
+                spec,
+                self.spec.freq_ghz(),
+            )?,
+            Some(hc) => crate::banking::sweep_hierarchy(
+                &ctx.cacti,
+                trace,
+                &self.result.stats,
+                spec,
+                self.spec.freq_ghz(),
+                Some(hc),
+            )?
+            .into_iter()
+            .map(crate::banking::HierarchyPoint::collapse)
+            .collect(),
+        };
         Ok(Stage2Run {
             stage1: self,
             spec: spec.clone(),
@@ -378,6 +402,28 @@ impl Stage2Run<'_> {
             &self.stage1.result.stats,
             config,
             self.stage1.spec.freq_ghz(),
+        )?)
+    }
+
+    /// Hierarchy-aware Stage III: like [`Stage2Run::replay_online`] but
+    /// honoring the spec's [`crate::banking::HierarchyConfig`] — an L1
+    /// capacity below the trace peak replays against the clamped trace
+    /// with the L2 spill charged alongside. With no hierarchy on the
+    /// spec (or a capacity covering the peak) the inner report is the
+    /// flat replay bit for bit and `l2` is `None`.
+    pub fn replay_online_hierarchy(
+        &self,
+        ctx: &ApiContext,
+        config: OnlineConfig,
+    ) -> Result<crate::banking::HierarchyReplay> {
+        Ok(crate::banking::replay_hierarchy(
+            &ctx.cacti,
+            self.stage1.trace(),
+            &self.stage1.result.stats,
+            config,
+            self.stage1.spec.freq_ghz(),
+            true,
+            self.stage1.spec.hierarchy.as_ref(),
         )?)
     }
 }
@@ -546,6 +592,37 @@ mod tests {
             reference.eval.e_total_j().to_bits()
         );
         assert_eq!(streamed.timelines, reference.timelines);
+    }
+
+    #[test]
+    fn hierarchy_spec_stage2_matches_flat_above_peak_and_admits_spill() {
+        use crate::banking::HierarchyConfig;
+        let ctx = ApiContext::new();
+        let flat = tiny_spec().run_stage1(&ctx).unwrap();
+        let flat_s2 = flat.stage2(&ctx).unwrap();
+
+        let mut spec = tiny_spec();
+        spec.hierarchy = Some(HierarchyConfig::new(4 * MIB));
+        let run = spec.run_stage1(&ctx).unwrap();
+        let hier_s2 = run.stage2(&ctx).unwrap();
+        let peak = run.result.peak_needed();
+
+        // Flat-feasible capacities reappear bit-identically (the flat
+        // engine only ever emits capacities >= peak).
+        let covering: Vec<_> = hier_s2
+            .shared()
+            .iter()
+            .filter(|p| p.eval.capacity >= peak)
+            .collect();
+        assert_eq!(flat_s2.shared().len(), covering.len());
+        for (a, b) in flat_s2.shared().iter().zip(&covering) {
+            assert_eq!(
+                a.eval.e_total_j().to_bits(),
+                b.eval.e_total_j().to_bits()
+            );
+        }
+        // The hierarchy can only add (spill) candidates, never drop any.
+        assert!(hier_s2.shared().len() >= flat_s2.shared().len());
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! Hierarchy-aware Stage II/III: a banked L1 backed by an L2 spill pool.
+//!
+//! The flat sweep ([`super::sweep`]) declares any capacity below the
+//! trace's peak infeasible. With a hierarchy, such capacities become
+//! *spill* candidates instead: the occupancy above the L1 capacity is
+//! held in a second-level SRAM pool and migrated across the boundary as
+//! the working set breathes. The L1 still runs the ordinary banked
+//! sweep — against a trace clamped at its capacity — while the L2 is
+//! charged separately: migration traffic at a per-byte energy and
+//! leakage only while spill is resident (the pool is power-gated
+//! otherwise, the same gating assumption Stage II applies to L1 banks).
+//!
+//! Degenerate-config rule (the tentpole's bit-identity contract): with
+//! `config = None`, or for any capacity at or above the peak, the
+//! result wraps the flat engine's output untouched — same `sweep_fused`
+//! / `replay_trace_with` call on the same inputs, so every `f64` is
+//! `to_bits`-identical to today's flat path. `tests/hierarchy_diff.rs`
+//! holds the differential wall.
+
+use crate::cacti::CactiModel;
+use crate::trace::{AccessStats, OccupancyTrace};
+
+use super::energy::EnergyError;
+use super::fused::sweep_fused;
+use super::online::{replay_trace_with, OnlineConfig, OnlineError, OnlineReport};
+use super::sweep::{SweepPoint, SweepSpec};
+
+/// Default migration energy: ~2 pJ/byte, an on-chip-interconnect figure
+/// between the CACTI SRAM access energies and a DRAM transfer.
+pub const DEFAULT_MIGRATE_ENERGY_PER_BYTE_J: f64 = 2e-12;
+
+/// L2 spill-pool description. Part of [`crate::api::ExperimentSpec`]
+/// (default-off; joins the spec hash only when present).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HierarchyConfig {
+    /// L2 pool capacity in bytes. Spill beyond it is infeasible (the
+    /// flat sweep's below-peak rule, lifted one level).
+    pub l2_capacity: u64,
+    /// Energy per byte crossing the L1/L2 boundary, joules.
+    pub migrate_energy_per_byte_j: f64,
+}
+
+impl HierarchyConfig {
+    pub fn new(l2_capacity: u64) -> Self {
+        Self {
+            l2_capacity,
+            migrate_energy_per_byte_j: DEFAULT_MIGRATE_ENERGY_PER_BYTE_J,
+        }
+    }
+}
+
+/// The L2 side of one spilled candidate: what the flat L1 evaluation
+/// cannot see.
+#[derive(Debug, Clone, PartialEq)]
+pub struct L2Charge {
+    /// Peak bytes resident in the L2 pool (`peak_needed - l1_capacity`).
+    pub spilled_peak_bytes: u64,
+    /// Total bytes migrated across the L1/L2 boundary (both directions).
+    pub migrate_bytes: u64,
+    /// `migrate_bytes * migrate_energy_per_byte_j`.
+    pub e_migrate_j: f64,
+    /// L2 leakage while spill is resident (pool gated otherwise).
+    pub e_l2_leak_j: f64,
+    /// Cycles with any spill resident in the L2.
+    pub l2_resident_cycles: u64,
+}
+
+impl L2Charge {
+    pub fn e_total_j(&self) -> f64 {
+        self.e_migrate_j + self.e_l2_leak_j
+    }
+}
+
+/// One hierarchy-aware sweep point: the flat L1 evaluation plus the L2
+/// charge when this capacity spills (`None` = no spill at this point).
+#[derive(Debug, Clone)]
+pub struct HierarchyPoint {
+    pub point: SweepPoint,
+    pub l2: Option<L2Charge>,
+}
+
+impl HierarchyPoint {
+    /// End-to-end energy: L1 evaluation plus any L2 charge.
+    pub fn e_total_j(&self) -> f64 {
+        self.point.eval.e_total_j() + self.l2.as_ref().map_or(0.0, L2Charge::e_total_j)
+    }
+
+    /// Fold the L2 charge into the flat point so downstream consumers
+    /// (pareto/portfolio, report tables) need no hierarchy awareness:
+    /// migration is dynamic energy, L2 residence is leakage. With no
+    /// spill this returns the inner point unchanged (bit-identical).
+    pub fn collapse(self) -> SweepPoint {
+        let mut p = self.point;
+        if let Some(l2) = self.l2 {
+            p.eval.e_dyn_j += l2.e_migrate_j;
+            p.eval.e_leak_j += l2.e_l2_leak_j;
+        }
+        p
+    }
+}
+
+/// One hierarchy-aware Stage-III replay: the flat online report plus
+/// the L2 charge when the configured capacity spills.
+#[derive(Debug, Clone)]
+pub struct HierarchyReplay {
+    pub report: OnlineReport,
+    pub l2: Option<L2Charge>,
+}
+
+impl HierarchyReplay {
+    pub fn e_total_j(&self) -> f64 {
+        self.report.e_total_j() + self.l2.as_ref().map_or(0.0, L2Charge::e_total_j)
+    }
+}
+
+/// Clamp a trace's needed bytes at `cap` (the L1 view of a spilled
+/// run). Obsolete bytes only keep whatever L1 room the clamped needed
+/// bytes leave — spill space is for required data first.
+fn clamp_trace(trace: &OccupancyTrace, cap: u64) -> OccupancyTrace {
+    let mut out = OccupancyTrace::new(&trace.memory, cap);
+    for s in trace.samples() {
+        let needed = s.needed.min(cap);
+        let obsolete = s.obsolete.min(cap - needed);
+        out.record(s.t, needed, obsolete);
+    }
+    out.finalize(trace.end_time().expect("caller checked finalization"));
+    out
+}
+
+/// Charge the L2 side of running `trace` with an L1 of `cap` bytes:
+/// migration traffic follows the spill level's changes, leakage accrues
+/// only while spill is resident.
+fn l2_charge(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    cap: u64,
+    cfg: &HierarchyConfig,
+    freq_ghz: f64,
+) -> L2Charge {
+    let mut migrate_bytes = 0u64;
+    let mut prev_excess = 0u64;
+    for s in trace.samples() {
+        let excess = s.needed.saturating_sub(cap);
+        migrate_bytes += excess.abs_diff(prev_excess);
+        prev_excess = excess;
+    }
+    let l2_resident_cycles: u64 = trace
+        .segments()
+        .filter(|seg| seg.needed > cap)
+        .map(|seg| seg.dt())
+        .sum();
+    let resident_s = l2_resident_cycles as f64 / (freq_ghz * 1e9);
+    let p_leak_w = cacti.characterize(cfg.l2_capacity, 1).p_leak_total_w();
+    L2Charge {
+        spilled_peak_bytes: trace.peak_needed().saturating_sub(cap),
+        migrate_bytes,
+        e_migrate_j: migrate_bytes as f64 * cfg.migrate_energy_per_byte_j,
+        e_l2_leak_j: p_leak_w * resident_s,
+        l2_resident_cycles,
+    }
+}
+
+/// Hierarchy-aware Stage-II sweep. `config = None` wraps the flat
+/// [`sweep_fused`] output bit-identically (every `l2` is `None`). With
+/// a config, capacities at or above the peak still take the flat path
+/// verbatim; capacities below it become spill candidates when the
+/// excess fits the L2, and are skipped (infeasible) otherwise.
+pub fn sweep_hierarchy(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    spec: &SweepSpec,
+    freq_ghz: f64,
+    config: Option<&HierarchyConfig>,
+) -> Result<Vec<HierarchyPoint>, EnergyError> {
+    let Some(cfg) = config else {
+        return Ok(sweep_fused(cacti, trace, stats, spec, freq_ghz)?
+            .into_iter()
+            .map(|point| HierarchyPoint { point, l2: None })
+            .collect());
+    };
+    if trace.end_time().is_none() {
+        return Err(EnergyError::UnfinalizedTrace {
+            memory: trace.memory.clone(),
+        });
+    }
+    let peak = trace.peak_needed();
+    let mut out = Vec::with_capacity(spec.points());
+    // Per-capacity dispatch preserves the flat engine's output order:
+    // capacity-major, then alpha x policy x banks inside the engine.
+    for &cap in &spec.capacities {
+        let sub = SweepSpec {
+            capacities: vec![cap],
+            ..spec.clone()
+        };
+        if cap >= peak {
+            // No spill: the literal flat sweep on the original trace —
+            // bit-identical to today's path by construction.
+            out.extend(
+                sweep_fused(cacti, trace, stats, &sub, freq_ghz)?
+                    .into_iter()
+                    .map(|point| HierarchyPoint { point, l2: None }),
+            );
+        } else if peak - cap <= cfg.l2_capacity {
+            let clamped = clamp_trace(trace, cap);
+            let charge = l2_charge(cacti, trace, cap, cfg, freq_ghz);
+            out.extend(
+                sweep_fused(cacti, &clamped, stats, &sub, freq_ghz)?
+                    .into_iter()
+                    .map(|point| HierarchyPoint {
+                        point,
+                        l2: Some(charge.clone()),
+                    }),
+            );
+        }
+        // else: the excess exceeds the L2 pool — infeasible, skipped.
+    }
+    Ok(out)
+}
+
+/// Hierarchy-aware Stage-III replay. Without a config — or when the
+/// configured L1 capacity already covers the peak — this is the literal
+/// flat [`replay_trace_with`] (bit-identical, `l2 = None`). A spilled
+/// capacity replays the clamped trace and attaches the L2 charge;
+/// spill beyond the L2 pool errors with [`OnlineError::InfeasibleCapacity`]
+/// carrying the combined L1+L2 capacity.
+pub fn replay_hierarchy(
+    cacti: &CactiModel,
+    trace: &OccupancyTrace,
+    stats: &AccessStats,
+    config: OnlineConfig,
+    freq_ghz: f64,
+    record_timeline: bool,
+    hierarchy: Option<&HierarchyConfig>,
+) -> Result<HierarchyReplay, OnlineError> {
+    let peak = trace.peak_needed();
+    let cfg = match hierarchy {
+        Some(cfg) if config.capacity < peak => cfg,
+        _ => {
+            let report =
+                replay_trace_with(cacti, trace, stats, config, freq_ghz, record_timeline)?;
+            return Ok(HierarchyReplay { report, l2: None });
+        }
+    };
+    if trace.end_time().is_none() {
+        return Err(OnlineError::UnfinalizedTrace {
+            memory: trace.memory.clone(),
+        });
+    }
+    if peak - config.capacity > cfg.l2_capacity {
+        return Err(OnlineError::InfeasibleCapacity {
+            capacity: config.capacity + cfg.l2_capacity,
+            peak_needed: peak,
+        });
+    }
+    let clamped = clamp_trace(trace, config.capacity);
+    let charge = l2_charge(cacti, trace, config.capacity, cfg, freq_ghz);
+    let report =
+        replay_trace_with(cacti, &clamped, stats, config, freq_ghz, record_timeline)?;
+    Ok(HierarchyReplay {
+        report,
+        l2: Some(charge),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::banking::policy::GatingPolicy;
+    use crate::util::MIB;
+
+    fn synth_trace() -> OccupancyTrace {
+        // Peak 40 MiB, breathing down to 8 MiB.
+        let mut tr = OccupancyTrace::new("sram", 128 * MIB);
+        let mut t = 0;
+        while t < 10_000_000 {
+            tr.record(t, 40 * MIB, 0);
+            tr.record(t + 300_000, 8 * MIB, MIB);
+            t += 600_000;
+        }
+        tr.finalize(10_000_000);
+        tr
+    }
+
+    fn stats() -> AccessStats {
+        AccessStats {
+            reads: 5_000_000,
+            writes: 2_000_000,
+            ..Default::default()
+        }
+    }
+
+    fn grid() -> SweepSpec {
+        SweepSpec {
+            capacities: vec![16 * MIB, 64 * MIB],
+            banks: vec![1, 4],
+            alphas: vec![0.9],
+            policies: vec![GatingPolicy::None, GatingPolicy::Aggressive],
+        }
+    }
+
+    #[test]
+    fn no_config_is_bitwise_flat() {
+        let tr = synth_trace();
+        let cacti = CactiModel::default();
+        let flat = sweep_fused(&cacti, &tr, &stats(), &grid(), 1.0).unwrap();
+        let hier = sweep_hierarchy(&cacti, &tr, &stats(), &grid(), 1.0, None).unwrap();
+        assert_eq!(flat.len(), hier.len());
+        for (f, h) in flat.iter().zip(&hier) {
+            assert!(h.l2.is_none());
+            assert_eq!(
+                f.eval.e_total_j().to_bits(),
+                h.point.eval.e_total_j().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn spill_capacity_becomes_feasible_and_charges_l2() {
+        let tr = synth_trace(); // peak 40 MiB
+        let cacti = CactiModel::default();
+        let cfg = HierarchyConfig::new(64 * MIB);
+        let pts =
+            sweep_hierarchy(&cacti, &tr, &stats(), &grid(), 1.0, Some(&cfg)).unwrap();
+        // Flat would skip 16 MiB; the hierarchy admits it with spill.
+        let spilled: Vec<_> = pts
+            .iter()
+            .filter(|p| p.point.eval.capacity == 16 * MIB)
+            .collect();
+        assert_eq!(spilled.len(), 4, "2 policies x 2 banks at the spill cap");
+        for p in &spilled {
+            let l2 = p.l2.as_ref().expect("below-peak cap must carry L2");
+            assert_eq!(l2.spilled_peak_bytes, 24 * MIB);
+            assert!(l2.migrate_bytes >= l2.spilled_peak_bytes);
+            assert!(l2.e_migrate_j > 0.0 && l2.e_l2_leak_j > 0.0);
+            assert!(l2.l2_resident_cycles > 0);
+            assert!(p.e_total_j() > p.point.eval.e_total_j());
+        }
+        // The at-peak capacity stays flat and bit-identical.
+        let flat_sub = SweepSpec {
+            capacities: vec![64 * MIB],
+            ..grid()
+        };
+        let flat = sweep_fused(&cacti, &tr, &stats(), &flat_sub, 1.0).unwrap();
+        let wide: Vec<_> = pts
+            .iter()
+            .filter(|p| p.point.eval.capacity == 64 * MIB)
+            .collect();
+        assert_eq!(flat.len(), wide.len());
+        for (f, h) in flat.iter().zip(&wide) {
+            assert!(h.l2.is_none());
+            assert_eq!(
+                f.eval.e_total_j().to_bits(),
+                h.point.eval.e_total_j().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_spill_is_skipped() {
+        let tr = synth_trace(); // 16 MiB cap would spill 24 MiB
+        let cfg = HierarchyConfig::new(8 * MIB);
+        let pts = sweep_hierarchy(
+            &CactiModel::default(),
+            &tr,
+            &stats(),
+            &grid(),
+            1.0,
+            Some(&cfg),
+        )
+        .unwrap();
+        assert!(pts.iter().all(|p| p.point.eval.capacity == 64 * MIB));
+    }
+
+    #[test]
+    fn collapse_folds_l2_into_energy_components() {
+        let tr = synth_trace();
+        let cfg = HierarchyConfig::new(64 * MIB);
+        let pts = sweep_hierarchy(
+            &CactiModel::default(),
+            &tr,
+            &stats(),
+            &grid(),
+            1.0,
+            Some(&cfg),
+        )
+        .unwrap();
+        for p in pts {
+            let total = p.e_total_j();
+            let collapsed = p.collapse();
+            assert!(
+                (collapsed.eval.e_total_j() - total).abs() <= 1e-12 * total.abs().max(1.0),
+                "collapse must conserve total energy"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_flat_when_capacity_covers_peak() {
+        let tr = synth_trace();
+        let cacti = CactiModel::default();
+        let cfg = HierarchyConfig::new(64 * MIB);
+        let config = OnlineConfig::new(64 * MIB, 4, 0.9, GatingPolicy::Aggressive);
+        let flat = replay_trace_with(&cacti, &tr, &stats(), config, 1.0, false).unwrap();
+        let hier = replay_hierarchy(
+            &cacti,
+            &tr,
+            &stats(),
+            config,
+            1.0,
+            false,
+            Some(&cfg),
+        )
+        .unwrap();
+        assert!(hier.l2.is_none());
+        assert_eq!(
+            flat.e_total_j().to_bits(),
+            hier.report.e_total_j().to_bits()
+        );
+        assert_eq!(flat.stall_cycles, hier.report.stall_cycles);
+    }
+
+    #[test]
+    fn replay_spill_charges_l2_and_rejects_overflow() {
+        let tr = synth_trace();
+        let cacti = CactiModel::default();
+        let config = OnlineConfig::new(16 * MIB, 4, 0.9, GatingPolicy::Aggressive);
+        // Flat replay refuses a below-peak capacity outright.
+        assert!(matches!(
+            replay_trace_with(&cacti, &tr, &stats(), config, 1.0, false),
+            Err(OnlineError::InfeasibleCapacity { .. })
+        ));
+        // The hierarchy admits it and charges the spill.
+        let cfg = HierarchyConfig::new(64 * MIB);
+        let rep = replay_hierarchy(&cacti, &tr, &stats(), config, 1.0, false, Some(&cfg))
+            .unwrap();
+        let l2 = rep.l2.expect("spilled replay must carry L2");
+        assert_eq!(l2.spilled_peak_bytes, 24 * MIB);
+        assert!(rep.e_total_j() > rep.report.e_total_j());
+        // ...but not past the L2 pool.
+        let tiny = HierarchyConfig::new(MIB);
+        assert!(matches!(
+            replay_hierarchy(&cacti, &tr, &stats(), config, 1.0, false, Some(&tiny)),
+            Err(OnlineError::InfeasibleCapacity { .. })
+        ));
+    }
+
+    #[test]
+    fn clamped_trace_preserves_timing_and_caps_occupancy() {
+        let tr = synth_trace();
+        let clamped = clamp_trace(&tr, 16 * MIB);
+        assert_eq!(clamped.end_time(), tr.end_time());
+        assert_eq!(clamped.peak_needed(), 16 * MIB);
+        clamped.validate().unwrap();
+    }
+}

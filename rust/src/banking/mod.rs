@@ -34,6 +34,7 @@
 pub mod activity;
 pub mod energy;
 pub mod fused;
+pub mod hierarchy;
 pub mod online;
 pub mod optimize;
 pub mod policy;
@@ -45,6 +46,10 @@ pub use activity::{
 };
 pub use energy::{evaluate, BankingEval, EnergyError};
 pub use fused::{sweep_fused, FusedSweep, SweepSink};
+pub use hierarchy::{
+    replay_hierarchy, sweep_hierarchy, HierarchyConfig, HierarchyPoint,
+    HierarchyReplay, L2Charge, DEFAULT_MIGRATE_ENERGY_PER_BYTE_J,
+};
 pub use online::{
     replay_trace, replay_trace_with, BankState, OnlineConfig, OnlineError,
     OnlineGateSim, OnlineReport, StateSpan,

@@ -66,10 +66,56 @@ pub struct LabManifest {
 /// [`ServingParams::with_bursty_traffic`] — MMPP arrivals plus
 /// heavy-tailed lengths). Shared by `repro optimize`, `repro replay`,
 /// and lab manifests so the descriptor grammar cannot fork.
+///
+/// Trailing `:mla=DIM` / `:window=N` attention modifiers rewrite the
+/// base preset (latent-KV dimension / sliding-window horizon) before the
+/// spec builds, so any preset can be swept along the attention spectrum
+/// without a dedicated const: `gpt2-xl:decode:512:128:window=256`. The
+/// modified preset gets a derived name (`gpt2-xl+w256`), keeping labels
+/// and provenance distinct from the base model's.
 pub fn parse_descriptor(desc: &str, accel: &AccelConfig) -> Result<ExperimentSpec> {
-    let parts: Vec<&str> = desc.split(':').collect();
-    let model_of = |name: &str| {
-        preset(name).ok_or_else(|| anyhow!("unknown model `{name}` in `{desc}`"))
+    let mut parts: Vec<&str> = desc.split(':').collect();
+    // Peel attention modifiers off the tail. No base grammar token
+    // contains `=`, so any `key=value` tail is either a modifier or a
+    // loud error here (never a confusing main-grammar mismatch).
+    let (mut latent_dim, mut window): (u32, u32) = (0, 0);
+    while let Some(last) = parts.last() {
+        let Some((key, val)) = last.split_once('=') else { break };
+        let n: u32 = val
+            .parse()
+            .with_context(|| format!("`{last}` in `{desc}`"))?;
+        ensure!(n > 0, "`{last}` in `{desc}`: modifier value must be > 0");
+        match key {
+            "mla" => latent_dim = n,
+            "window" => window = n,
+            other => bail!(
+                "unknown attention modifier `{other}=` in `{desc}` \
+                 (want mla=DIM | window=N)"
+            ),
+        }
+        parts.pop();
+    }
+    let model_of = |name: &str| -> Result<crate::workload::ModelPreset> {
+        let base =
+            preset(name).ok_or_else(|| anyhow!("unknown model `{name}` in `{desc}`"))?;
+        if latent_dim == 0 && window == 0 {
+            return Ok(base);
+        }
+        let mut m = base;
+        m.latent_dim = latent_dim;
+        m.window = window;
+        // Derived presets need a distinct &'static name for labels and
+        // the hashed model identity. The leak is bounded: one small
+        // string per parsed descriptor.
+        let mut derived = String::from(base.name);
+        if latent_dim > 0 {
+            derived.push_str(&format!("+mla{latent_dim}"));
+        }
+        if window > 0 {
+            derived.push_str(&format!("+w{window}"));
+        }
+        m.name = Box::leak(derived.into_boxed_str());
+        Ok(m)
     };
     let (model, workload) = match parts.as_slice() {
         [m, "prefill", seq] => (
@@ -424,6 +470,33 @@ min_capacity = "2MiB"
         assert!(!q.has_extensions());
         assert!(parse_policy_name("drowsy").is_ok());
         assert!(parse_policy_name("extreme").is_err());
+    }
+
+    #[test]
+    fn attention_modifiers_rewrite_the_preset() {
+        let accel = crate::config::tiny();
+        let base = parse_descriptor("tiny-mha:decode:16:8", &accel).unwrap();
+        let swa = parse_descriptor("tiny-mha:decode:16:8:window=4", &accel).unwrap();
+        assert_eq!(swa.model.name, "tiny-mha+w4");
+        assert_eq!(swa.model.window, 4);
+        assert_eq!(swa.model.latent_dim, 0);
+        assert_ne!(base.content_hash(), swa.content_hash());
+        // Both modifiers stack, in either order, and feed the builder's
+        // latent-dim validation.
+        let both =
+            parse_descriptor("tiny-mha:decode:16:8:mla=8:window=4", &accel).unwrap();
+        assert_eq!(both.model.name, "tiny-mha+mla8+w4");
+        assert_eq!((both.model.latent_dim, both.model.window), (8, 4));
+        let flipped =
+            parse_descriptor("tiny-mha:decode:16:8:window=4:mla=8", &accel).unwrap();
+        assert_eq!(flipped.content_hash(), both.content_hash());
+        // Errors stay loud: unknown key, zero value, oversized latent.
+        assert!(parse_descriptor("tiny-mha:decode:16:8:swa=4", &accel).is_err());
+        assert!(parse_descriptor("tiny-mha:decode:16:8:window=0", &accel).is_err());
+        assert!(
+            parse_descriptor("tiny-mha:decode:16:8:mla=65536", &accel).is_err(),
+            "latent wider than the full KV must fail spec validation"
+        );
     }
 
     #[test]

@@ -133,6 +133,7 @@ fn run(raw: &[String]) -> Result<()> {
         .unwrap_or("help");
     match cmd {
         "report" => report(&args),
+        "spectrum" => spectrum_cmd(&args),
         "simulate" => simulate_cmd(&args),
         "batch" => batch_cmd(&args),
         "serve" => serve_cmd(&args),
@@ -159,6 +160,20 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
   repro report <exp>       regenerate a paper table/figure
                            (table1 fig1 fig5 fig6 fig7 fig8 fig9
                             table2 table3 sizing headline all)
+  repro spectrum           attention-variant spectrum: run the full
+                           Stage I -> II pipeline for every preset of
+                           the matched-parameter MHA->GQA->MQA->MLA->
+                           windowed ladder and print the peak-occupancy /
+                           gated-energy curve with the PIM-offload
+                           comparison columns
+                           (--prompt N [default 512] --gen N [default
+                            128] --hierarchy MiB [L2 spill capacity;
+                            hierarchy-aware Stage II] --migrate-epb J
+                            [L1<->L2 migration energy per byte]
+                            --paper 1 [also run the paired-prefill pair
+                            and report the 2.72x peak-ratio headline]
+                            --csv-out FILE [deterministic CSV; the CI
+                            spectrum determinism gate compares bytes])
   repro simulate           Stage-I run (--model, --accel, --seq,
                            --decode P:G, --save-trace FILE, --config F,
                            --wal-out DIR [append-only event log of the
@@ -210,7 +225,14 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --report-out FILE [full text report]
                             --online-validate 1 [Stage-III replay of every
                             frontier config; appends the predicted-vs-
-                            observed validation table])
+                            observed validation table]
+                            --hierarchy MiB [banked L1 + L2 spill: sub-
+                            peak capacities stay feasible, migration +
+                            L2 leakage charged through the energy model;
+                            single-sequence workloads only]
+                            --migrate-epb J [per-byte migration energy]
+                            --pim 1 [append the PIM-offload comparison
+                            column to the pareto/portfolio tables])
   repro replay             Stage-III online power-gating co-simulation:
                            replay ONE (C,B,alpha,policy) configuration
                            cycle-by-cycle against the live Stage-I
@@ -224,6 +246,10 @@ TRAPTI reproduction CLI — see README.md and docs/API.md.
                             --capacity MiB --banks B --alpha A
                             --policy none|aggressive|conservative|drowsy
                             --wake N [override wake latency, cycles]
+                            --hierarchy MiB [L1+L2 replay: spill the
+                            over-capacity excess to L2 and charge
+                            migration + L2 leakage; single-sequence]
+                            --migrate-epb J [per-byte migration energy]
                             --timeline-csv FILE [per-bank state spans]
                             --report-out FILE [deterministic report]
                             --wal-out DIR [event log incl. per-bank
@@ -364,6 +390,57 @@ fn report(args: &Args) -> Result<()> {
         .contains(&which)
     {
         bail!("unknown experiment `{which}`");
+    }
+    Ok(())
+}
+
+/// Optional L1+L2 hierarchy from `--hierarchy MiB` (+ `--migrate-epb`).
+/// Absent flags mean the flat, bit-identical historical behavior.
+fn hierarchy_flags(args: &Args) -> Result<Option<trapti::banking::HierarchyConfig>> {
+    let Some(l2) = args.flag("hierarchy") else {
+        if args.flag("migrate-epb").is_some() {
+            bail!("--migrate-epb needs --hierarchy MiB (the L2 spill capacity)");
+        }
+        return Ok(None);
+    };
+    let l2_capacity = parse_bytes(&format!("{}MiB", l2.trim()))?;
+    let mut hc = trapti::banking::HierarchyConfig::new(l2_capacity);
+    if let Some(e) = args.flag("migrate-epb") {
+        hc.migrate_energy_per_byte_j = e.parse()?;
+    }
+    Ok(Some(hc))
+}
+
+/// `repro spectrum` — the attention-variant spectrum report: every
+/// preset of the matched-parameter MHA→GQA→MQA→MLA→windowed ladder runs
+/// the full Stage I → Stage II pipeline (optionally hierarchy-aware)
+/// and lands as one row of the peak-occupancy / gated-energy curve with
+/// the closed-form PIM-offload comparison columns.
+fn spectrum_cmd(args: &Args) -> Result<()> {
+    let prompt: u32 = args.flag_or("prompt", "512").parse()?;
+    let gen: u32 = args.flag_or("gen", "128").parse()?;
+    let hierarchy = hierarchy_flags(args)?;
+    let with_paper = args.bool_flag("paper")?;
+    let ctx = ApiContext::new();
+    let s = exp::spectrum(&ctx, prompt, gen, hierarchy, with_paper)?;
+    emit("spectrum", &tables::spectrum_table(&s).render())?;
+    if !s.peak_is_monotone() {
+        eprintln!(
+            "warning: MHA->GQA->MQA->MLA peak-occupancy curve is not \
+             monotone non-increasing"
+        );
+    }
+    if let Some(r) = s.paper_peak_ratio {
+        println!(
+            "paired-prefill peak SRAM ratio GPT-2 XL / DS-R1D: {r:.2}x \
+             (paper 2.72x)"
+        );
+    }
+    let csv = tables::spectrum_csv(&s);
+    emit_csv("spectrum", &csv)?;
+    if let Some(path) = args.flag("csv-out") {
+        std::fs::write(path, &csv).with_context(|| format!("writing {path}"))?;
+        println!("spectrum CSV saved to {path}");
     }
     Ok(())
 }
@@ -924,6 +1001,16 @@ fn optimize_cmd(args: &Args) -> Result<()> {
     for d in descriptors.split(',') {
         specs.push(parse_workload_descriptor(d.trim(), &accel)?);
     }
+    // --hierarchy lifts every workload's Stage II from flat SRAM to
+    // banked L1 + L2 spill (sub-peak capacities become feasible, with
+    // migration + L2 leakage charged); the spec validator rejects
+    // serving workloads, which have no materializable single trace.
+    if let Some(hc) = hierarchy_flags(args)? {
+        for spec in &mut specs {
+            spec.hierarchy = Some(hc);
+            spec.validate()?;
+        }
+    }
     let grid = match optimize_grid_flags(args)? {
         Some(g) => g,
         // Shared covering grid derived from closed-form capacity bounds
@@ -956,6 +1043,20 @@ fn optimize_cmd(args: &Args) -> Result<()> {
     let run = trapti::api::run_portfolio(&ctx, &specs, &opts)?;
     let r = &run.result;
 
+    // --pim 1: closed-form PIM-offload comparison column per workload
+    // (None for serving, which has no closed form — rendered as `-`).
+    let pim: Option<Vec<Option<trapti::analytic::PimEstimate>>> =
+        if args.bool_flag("pim")? {
+            Some(
+                specs
+                    .iter()
+                    .map(|s| analytic::estimate_pim(&s.model, &s.workload))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
     let mut report = String::new();
     let _ = writeln!(
         report,
@@ -965,7 +1066,7 @@ fn optimize_cmd(args: &Args) -> Result<()> {
         grid.points(),
         r.epsilon,
     );
-    for f in &r.frontiers {
+    for (i, f) in r.frontiers.iter().enumerate() {
         let _ = writeln!(
             report,
             "\n{}: own optimum {} (E={:.3} J over {} cycles)",
@@ -974,10 +1075,20 @@ fn optimize_cmd(args: &Args) -> Result<()> {
             f.best_energy_j,
             f.end_cycles,
         );
-        report.push_str(&tables::pareto_table(f).render());
+        match pim.as_ref().and_then(|ests| ests.get(i)?.as_ref()) {
+            Some(est) => report.push_str(&tables::pareto_table_pim(f, est).render()),
+            None => report.push_str(&tables::pareto_table(f).render()),
+        }
     }
     report.push('\n');
-    report.push_str(&tables::portfolio_table(r, 15).render());
+    match &pim {
+        Some(ests) => {
+            let pim_e: Vec<Option<f64>> =
+                ests.iter().map(|o| o.map(|p| p.e_pim_j)).collect();
+            report.push_str(&tables::portfolio_table_pim(r, 15, &pim_e).render());
+        }
+        None => report.push_str(&tables::portfolio_table(r, 15).render()),
+    }
     if let Some(best) = r.robust_best() {
         let _ = writeln!(
             report,
@@ -1243,6 +1354,11 @@ fn replay_cmd(args: &Args) -> Result<()> {
     if let Some(w) = args.flag("wake") {
         cfg.wake_override = Some(w.parse()?);
     }
+    // --hierarchy: replay through the L1+L2 spill co-simulator instead
+    // of the flat streaming path (needs a materialized trace).
+    if let Some(hc) = hierarchy_flags(args)? {
+        return replay_hierarchy_cmd(args, &spec, cfg, hc);
+    }
     let mut zero_cfg = cfg;
     zero_cfg.wake_override = Some(0);
 
@@ -1304,6 +1420,98 @@ fn replay_cmd(args: &Args) -> Result<()> {
     }
 
     let text = online_replay_report(&label, &report, &zero_wake);
+    print!("{text}");
+    if let Some(path) = args.flag("report-out") {
+        std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;
+        println!("replay report saved to {path}");
+    }
+    if let Some(path) = args.flag("timeline-csv") {
+        std::fs::write(path, report.timeline_csv())
+            .with_context(|| format!("writing {path}"))?;
+        println!("timeline CSV saved to {path}");
+    }
+    Ok(())
+}
+
+/// `repro replay --hierarchy MiB` — Stage-III replay of one
+/// configuration through the L1+L2 spill co-simulator
+/// ([`trapti::banking::replay_hierarchy`]): the over-L1 excess lives in
+/// L2, with migration traffic and L2 leakage charged on top of the
+/// online SRAM energy. Capacities at or above the trace peak fall back
+/// to the flat replay bit-identically.
+fn replay_hierarchy_cmd(
+    args: &Args,
+    spec: &ExperimentSpec,
+    cfg: OnlineConfig,
+    hc: trapti::banking::HierarchyConfig,
+) -> Result<()> {
+    use std::fmt::Write as _;
+    if matches!(spec.workload, Workload::Serving(_)) {
+        bail!(
+            "--hierarchy needs a materializable single-sequence trace; \
+             serving workloads are not supported"
+        );
+    }
+    let ctx = ApiContext::new();
+    let run = spec.materialize(&ctx)?;
+    let replay = trapti::banking::replay_hierarchy(
+        &ctx.cacti,
+        run.trace(),
+        run.stats(),
+        cfg,
+        spec.freq_ghz(),
+        true,
+        Some(&hc),
+    )?;
+    let report = &replay.report;
+    let label = trapti::api::optimize::workload_label(spec);
+    let mut text = String::new();
+    let _ = writeln!(
+        text,
+        "Stage III online replay (L1 + {} MiB L2 spill): {label} @ {}",
+        hc.l2_capacity / MIB,
+        report.config.label(),
+    );
+    match &replay.l2 {
+        Some(l2) => {
+            let _ = writeln!(
+                text,
+                "spill: peak excess {:.2} MiB, migrated {:.2} MiB \
+                 (E_migrate {:.6} J @ {:.3e} J/B), L2 resident {} cycles \
+                 (E_l2_leak {:.6} J)",
+                l2.spilled_peak_bytes as f64 / MIB as f64,
+                l2.migrate_bytes as f64 / MIB as f64,
+                l2.e_migrate_j,
+                hc.migrate_energy_per_byte_j,
+                l2.l2_resident_cycles,
+                l2.e_l2_leak_j,
+            );
+        }
+        None => {
+            let _ = writeln!(
+                text,
+                "no spill: L1 capacity covers the trace peak (flat \
+                 replay, bit-identical to the non-hierarchy path)"
+            );
+        }
+    }
+    let _ = writeln!(
+        text,
+        "trace {} cycles; stalls +{} cycles ({:.4}%) over {} wake event(s)",
+        report.trace_cycles,
+        report.stall_cycles,
+        report.stall_pct(),
+        report.wake_events,
+    );
+    let l2_e = replay.l2.as_ref().map(|l| l.e_total_j()).unwrap_or(0.0);
+    let _ = writeln!(
+        text,
+        "energy online {:.6} J total (SRAM {:.6} + L2 charge {:.6})",
+        replay.e_total_j(),
+        report.e_total_j(),
+        l2_e,
+    );
+    text.push_str(&tables::online_bank_table(report).render());
     print!("{text}");
     if let Some(path) = args.flag("report-out") {
         std::fs::write(path, &text).with_context(|| format!("writing {path}"))?;

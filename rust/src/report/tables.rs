@@ -4,7 +4,8 @@
 
 use std::fmt::Write as _;
 
-use crate::api::experiments::{Sizing, Table2, Table3};
+use crate::analytic::PimEstimate;
+use crate::api::experiments::{Sizing, Spectrum, Table2, Table3};
 use crate::api::OnlineValidation;
 use crate::banking::online::{BankState, OnlineReport};
 use crate::banking::optimize::{OptimizeResult, WorkloadFrontier, WorkloadSweep};
@@ -185,6 +186,72 @@ pub fn sweep_table(w: &WorkloadSweep) -> Table {
     t
 }
 
+/// Attention-variant spectrum table (`repro spectrum`): one row per
+/// preset of [`crate::workload::spectrum_presets`] after the full
+/// Stage I → Stage II pipeline, with the PIM-offload comparison columns.
+/// The title carries the paired-prefill peak ratio when it was computed
+/// (the paper's 2.72x headline).
+pub fn spectrum_table(s: &Spectrum) -> Table {
+    let title = match s.paper_peak_ratio {
+        Some(r) => format!(
+            "Attention spectrum — decode {}+{} (paper paired-prefill peak \
+             ratio {:.2}x)",
+            s.prompt, s.gen, r
+        ),
+        None => format!("Attention spectrum — decode {}+{}", s.prompt, s.gen),
+    };
+    let mut t = Table::new(
+        &title,
+        &[
+            "Preset", "Attn", "KV [MiB]", "Peak [MiB]", "best dE%",
+            "E_best [J]", "E_pim [J]", "PIM peak [MiB]",
+        ],
+    );
+    for r in &s.rows {
+        t.row(vec![
+            r.name.to_string(),
+            format!("{:?}", r.attn).to_uppercase(),
+            format!("{:.2}", r.kv_bytes as f64 / MIB as f64),
+            format!("{:.2}", r.peak_needed as f64 / MIB as f64),
+            format!("{:+.1}", r.best_delta_pct),
+            format!("{:.3}", r.best_energy_j),
+            format!("{:.3}", r.pim_e_j),
+            format!("{:.2}", r.pim_relieved_peak as f64 / MIB as f64),
+        ]);
+    }
+    t
+}
+
+/// Deterministic CSV twin of [`spectrum_table`] — the `repro spectrum
+/// --csv` artifact and the CI spectrum determinism gate's comparison
+/// subject. Byte counts (not MiB) and full float precision; the optional
+/// paper ratio lands on a trailing `paper_peak_ratio` line so two runs
+/// with the same flags are byte-identical.
+pub fn spectrum_csv(s: &Spectrum) -> String {
+    let mut out = String::from(
+        "preset,attn,kv_bytes,peak_needed_bytes,best_delta_e_pct,\
+         best_energy_j,pim_e_j,pim_relieved_peak_bytes\n",
+    );
+    for r in &s.rows {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{:.4},{:.6},{:.6},{}",
+            r.name,
+            format!("{:?}", r.attn).to_uppercase(),
+            r.kv_bytes,
+            r.peak_needed,
+            r.best_delta_pct,
+            r.best_energy_j,
+            r.pim_e_j,
+            r.pim_relieved_peak,
+        );
+    }
+    if let Some(ratio) = s.paper_peak_ratio {
+        let _ = writeln!(out, "paper_peak_ratio,{ratio:.6}");
+    }
+    out
+}
+
 /// One workload's ε-Pareto frontier (from
 /// [`crate::banking::optimize::optimize`]): the configurations that are
 /// not (ε-)beaten on all of energy, activity, and area at once.
@@ -219,6 +286,50 @@ pub fn pareto_table(f: &WorkloadFrontier) -> Table {
     t
 }
 
+/// [`pareto_table`] with the PIM-offload comparison columns: the
+/// closed-form PIM energy for the same (model, workload) and each
+/// frontier configuration's energy as a multiple of it. Existing
+/// callers keep the PIM-free renderer; this wrapper is additive so the
+/// golden pins on [`pareto_table`] stay valid.
+pub fn pareto_table_pim(f: &WorkloadFrontier, pim: &PimEstimate) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Pareto frontier vs PIM offload — {} ({} feasible -> {} on \
+             frontier; E_pim {:.3} J)",
+            f.workload,
+            f.feasible,
+            f.frontier.len(),
+            pim.e_pim_j
+        ),
+        &[
+            "C [MiB]", "B", "alpha", "policy", "E [J]", "dE%", "avgBact",
+            "A [mm2]", "dA%", "wake%", "E/Epim",
+        ],
+    );
+    for fp in &f.frontier {
+        let p = &fp.point;
+        let ratio = if pim.e_pim_j == 0.0 {
+            "-".to_string()
+        } else {
+            format!("{:.2}", p.eval.e_total_j() / pim.e_pim_j)
+        };
+        t.row(vec![
+            (p.eval.capacity / MIB).to_string(),
+            p.eval.banks.to_string(),
+            format!("{:.2}", p.eval.alpha),
+            p.eval.policy.label().to_string(),
+            format!("{:.3}", p.eval.e_total_j()),
+            fmt_delta_pct(p.eval.e_total_j(), p.base_e_j),
+            format!("{:.2}", p.eval.avg_active_banks),
+            format!("{:.1}", p.eval.area_mm2),
+            fmt_delta_pct(p.eval.area_mm2, p.base_area_mm2),
+            format!("{:.2}", fp.wake_exposure_pct),
+            ratio,
+        ]);
+    }
+    t
+}
+
 /// Cross-workload portfolio regret, best-first (the top row is the
 /// robust-best configuration). `max_rows` bounds the rendered rows; the
 /// full ranking lives in the [`OptimizeResult`].
@@ -243,6 +354,51 @@ pub fn portfolio_table(r: &OptimizeResult, max_rows: usize) -> Table {
         let mut row = vec![e.key.label()];
         for reg in &e.regret_pct {
             row.push(format!("{reg:+.1}"));
+        }
+        row.push(format!("{:+.1}", e.worst_regret_pct));
+        row.push(format!("{:+.1}", e.mean_regret_pct));
+        t.row(row);
+    }
+    t
+}
+
+/// [`portfolio_table`] with a PIM-offload comparison column per
+/// workload: each shared configuration's energy on that workload as a
+/// multiple of the closed-form PIM energy (`-` for workloads with no
+/// closed form, e.g. serving). `pim_e_j` pairs with
+/// `r.workload_names` by index.
+pub fn portfolio_table_pim(
+    r: &OptimizeResult,
+    max_rows: usize,
+    pim_e_j: &[Option<f64>],
+) -> Table {
+    let shown = max_rows.min(r.portfolio.len());
+    let mut headers: Vec<String> = vec!["Config".into()];
+    for name in &r.workload_names {
+        headers.push(format!("regret% {name}"));
+        headers.push(format!("xPIM {name}"));
+    }
+    headers.push("worst%".into());
+    headers.push("mean%".into());
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        &format!(
+            "Portfolio regret vs PIM offload (top {shown} of {} shared \
+             configs; row 1 = robust-best)",
+            r.portfolio.len()
+        ),
+        &hdr,
+    );
+    for e in r.portfolio.iter().take(max_rows) {
+        let mut row = vec![e.key.label()];
+        for (i, reg) in e.regret_pct.iter().enumerate() {
+            row.push(format!("{reg:+.1}"));
+            match pim_e_j.get(i).copied().flatten() {
+                Some(p) if p > 0.0 => {
+                    row.push(format!("{:.2}", e.energy_j[i] / p));
+                }
+                _ => row.push("-".into()),
+            }
         }
         row.push(format!("{:+.1}", e.worst_regret_pct));
         row.push(format!("{:+.1}", e.mean_regret_pct));
@@ -678,6 +834,114 @@ mod tests {
         assert!(online_bank_table(&synth_online_report())
             .render()
             .contains("64MiB/B2/a0.90/aggressive"));
+    }
+
+    #[test]
+    fn golden_spectrum_table_and_csv() {
+        use crate::api::experiments::SpectrumRow;
+        use crate::workload::AttnKind;
+        let s = Spectrum {
+            prompt: 512,
+            gen: 128,
+            rows: vec![
+                SpectrumRow {
+                    name: "fig1-mha-124m",
+                    attn: AttnKind::Mha,
+                    kv_bytes: 2 * MIB,
+                    peak_needed: 4 * MIB,
+                    best_delta_pct: -25.0,
+                    best_energy_j: 2.0,
+                    pim_e_j: 0.5,
+                    pim_relieved_peak: 2 * MIB,
+                },
+                SpectrumRow {
+                    name: "fig1-mla-124m",
+                    attn: AttnKind::Mla,
+                    kv_bytes: MIB / 2,
+                    peak_needed: 5 * MIB / 2,
+                    best_delta_pct: -10.0,
+                    best_energy_j: 1.5,
+                    pim_e_j: 0.25,
+                    pim_relieved_peak: 2 * MIB,
+                },
+            ],
+            paper_peak_ratio: Some(2.72),
+        };
+        let got = spectrum_table(&s).to_csv();
+        let want = "Preset,Attn,KV [MiB],Peak [MiB],best dE%,E_best [J],\
+                    E_pim [J],PIM peak [MiB]\n\
+                    fig1-mha-124m,MHA,2.00,4.00,-25.0,2.000,0.500,2.00\n\
+                    fig1-mla-124m,MLA,0.50,2.50,-10.0,1.500,0.250,2.00\n";
+        assert_eq!(got, want);
+        assert!(spectrum_table(&s).render().contains("2.72x"));
+        let got_csv = spectrum_csv(&s);
+        let want_csv = "preset,attn,kv_bytes,peak_needed_bytes,\
+                        best_delta_e_pct,best_energy_j,pim_e_j,\
+                        pim_relieved_peak_bytes\n\
+                        fig1-mha-124m,MHA,2097152,4194304,-25.0000,2.000000,\
+                        0.500000,2097152\n\
+                        fig1-mla-124m,MLA,524288,2621440,-10.0000,1.500000,\
+                        0.250000,2097152\n\
+                        paper_peak_ratio,2.720000\n";
+        assert_eq!(got_csv, want_csv);
+        // Without the paired-prefill run the footer line is absent, so
+        // the CSV stays pure rows.
+        let mut bare = s;
+        bare.paper_peak_ratio = None;
+        assert!(!spectrum_csv(&bare).contains("paper_peak_ratio"));
+        assert!(!spectrum_table(&bare).render().contains("ratio"));
+    }
+
+    #[test]
+    fn golden_pareto_table_pim_csv() {
+        let f = synth_frontier("wa", synth_point(64, 8, 5.0, 110.0, 10.0, 100.0));
+        let pim = PimEstimate {
+            attn_macs: 1000,
+            kv_write_bytes: 100,
+            e_pim_j: 2.5,
+            kv_cache_bytes: MIB,
+        };
+        let got = pareto_table_pim(&f, &pim).to_csv();
+        let want = "C [MiB],B,alpha,policy,E [J],dE%,avgBact,A [mm2],dA%,\
+                    wake%,E/Epim\n\
+                    64,8,0.90,aggressive,5.000,-50.0,2.50,110.0,+10.0,20.00,2.00\n";
+        assert_eq!(got, want);
+        assert!(pareto_table_pim(&f, &pim).render().contains("E_pim 2.500 J"));
+        // A zero PIM estimate renders a dash, never inf.
+        let zero = PimEstimate {
+            attn_macs: 0,
+            kv_write_bytes: 0,
+            e_pim_j: 0.0,
+            kv_cache_bytes: 0,
+        };
+        let rendered = pareto_table_pim(&f, &zero).render();
+        assert!(!rendered.contains("inf"), "{rendered}");
+    }
+
+    #[test]
+    fn golden_portfolio_table_pim_csv() {
+        let pa = synth_point(64, 8, 5.0, 110.0, 10.0, 100.0);
+        let r = OptimizeResult {
+            epsilon: 0.0,
+            constraints: Constraints::default(),
+            workload_names: vec!["wa".to_string(), "wb".to_string()],
+            frontiers: vec![
+                synth_frontier("wa", pa.clone()),
+                synth_frontier("wb", pa.clone()),
+            ],
+            portfolio: vec![PortfolioEntry {
+                key: ConfigKey::of(&pa),
+                energy_j: vec![5.0, 11.0],
+                regret_pct: vec![0.0, 10.0],
+                worst_regret_pct: 10.0,
+                mean_regret_pct: 5.0,
+            }],
+        };
+        // wa has a closed-form PIM estimate; wb (say, serving) does not.
+        let got = portfolio_table_pim(&r, 20, &[Some(2.5), None]).to_csv();
+        let want = "Config,regret% wa,xPIM wa,regret% wb,xPIM wb,worst%,mean%\n\
+                    64MiB/B8/a0.90/aggressive,+0.0,2.00,+10.0,-,+10.0,+5.0\n";
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Attention-block graph builders (MHA / GQA / MQA, prefill and decode).
+//! Attention-block graph builders (MHA / GQA / MQA / MLA / sliding
+//! window, prefill and decode).
 //!
 //! Tensor sizes are bytes at 1 byte/element (uniform 8-bit operands,
 //! paper §IV-A). Positional-encoding ops are omitted per the paper
@@ -34,11 +35,15 @@ pub fn build_prefill_attention(
     x: TensorId,
 ) -> AttnBlockOut {
     let d = m.d_model;
+    // Sliding-window attention caps the visible KV horizon; with the
+    // knob off this is exactly `seq` and every expression below reduces
+    // to the original full-causal form.
+    let horizon = m.kv_horizon(seq as u64) as u32;
     // Attention scores/probabilities are kept at 16-bit internal
     // precision (int8 MAC outputs accumulate in int32 and softmax runs on
     // 16-bit fixed point before re-quantization — standard for 8-bit
     // accelerators; DESIGN.md §5). Hence 2 bytes per score element.
-    let mm = 2 * seq as u64 * seq as u64;
+    let mm = 2 * seq as u64 * horizon as u64;
 
     // Pre-norm.
     let w_ln1 = b.tensor(
@@ -76,9 +81,21 @@ pub fn build_prefill_attention(
         TensorKind::Activation,
         layer,
     );
-    let kv_bytes = seq as u64 * (m.kv_heads * m.d_head) as u64;
-    let k_cache = b.tensor(format!("k.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
-    let v_cache = b.tensor(format!("v.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
+    // Cache tensors hold only the visible horizon; MLA shrinks the
+    // per-token footprint to the latent width (the k/v halves sum to
+    // `kv_token_bytes` exactly, and equal `Hkv * Dh` each when off).
+    let k_cache = b.tensor(
+        format!("k.l{layer}"),
+        horizon as u64 * m.k_token_bytes(),
+        TensorKind::KvCache,
+        layer,
+    );
+    let v_cache = b.tensor(
+        format!("v.l{layer}"),
+        horizon as u64 * m.v_token_bytes(),
+        TensorKind::KvCache,
+        layer,
+    );
     b.op(
         format!("qkv:l{layer}"),
         layer,
@@ -106,7 +123,7 @@ pub fn build_prefill_attention(
             OpKind::MatMul {
                 m: seq,
                 k: m.d_head,
-                n: seq,
+                n: horizon,
             },
             vec![q, k_cache],
             vec![s],
@@ -119,7 +136,7 @@ pub fn build_prefill_attention(
             layer,
             OpKind::Softmax {
                 rows: seq,
-                cols: seq,
+                cols: horizon,
             },
             vec![s],
             vec![s],
@@ -135,7 +152,7 @@ pub fn build_prefill_attention(
             layer,
             OpKind::MatMul {
                 m: seq,
-                k: seq,
+                k: horizon,
                 n: m.d_head,
             },
             vec![s, v_cache],
@@ -213,7 +230,9 @@ pub fn build_decode_attention(
     v_cache: TensorId,
 ) -> TensorId {
     let d = m.d_model;
-    let ctx = pos + 1;
+    // Visible context: pos + 1 cached tokens, capped at the sliding
+    // window when enabled (decode occupancy then plateaus).
+    let ctx = m.kv_horizon(pos as u64 + 1) as u32;
 
     let x_n = b.tensor(
         format!("xn1.l{layer}.t{pos}"),
@@ -252,7 +271,7 @@ pub fn build_decode_attention(
         format!("kvapp:l{layer}.t{pos}"),
         layer,
         OpKind::Elementwise {
-            elems: 2 * (m.kv_heads * m.d_head) as u64,
+            elems: m.kv_token_bytes(),
             inputs: 2,
         },
         vec![qkv, k_cache, v_cache],

@@ -234,9 +234,11 @@ pub fn build_decode(m: &ModelPreset, prompt: u32, gen: u32) -> Result<WorkloadGr
     let mut kv = Vec::with_capacity(m.layers as usize);
     for layer in 0..m.layers {
         weights.push(DecodeLayerWeights::declare(&mut b, m, layer));
-        let kv_bytes = final_ctx * (m.kv_heads * m.d_head) as u64;
-        let k = b.tensor(format!("k.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
-        let v = b.tensor(format!("v.l{layer}"), kv_bytes, TensorKind::KvCache, layer);
+        let horizon = m.kv_horizon(final_ctx);
+        let k_bytes = horizon * m.k_token_bytes();
+        let v_bytes = horizon * m.v_token_bytes();
+        let k = b.tensor(format!("k.l{layer}"), k_bytes, TensorKind::KvCache, layer);
+        let v = b.tensor(format!("v.l{layer}"), v_bytes, TensorKind::KvCache, layer);
         kv.push((k, v));
     }
 
@@ -529,6 +531,19 @@ mod tests {
             .filter(|o| o.name.starts_with("add:embed"))
             .collect();
         assert_eq!(embeds.len(), 2); // gen=3 -> 2 feedback edges
+    }
+
+    #[test]
+    fn decode_kv_tensors_follow_horizon_and_latent_dim() {
+        use crate::workload::models::{FIG1_MLA, FIG1_SWA};
+        // Sliding window: KV inputs sized to the window, not the final
+        // context (decode occupancy plateaus).
+        let g = build_decode(&FIG1_SWA, 512, 4).unwrap();
+        assert_eq!(g.kv_bytes(), FIG1_SWA.kv_cache_bytes(516));
+        assert!(g.kv_bytes() < FIG1_SWA.layers as u64 * 516 * FIG1_SWA.kv_token_bytes());
+        // Latent KV: per-token bytes come from latent_dim, not heads.
+        let g2 = build_decode(&FIG1_MLA, 16, 4).unwrap();
+        assert_eq!(g2.kv_bytes(), FIG1_MLA.kv_cache_bytes(20));
     }
 
     #[test]

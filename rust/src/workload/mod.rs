@@ -16,8 +16,9 @@ pub mod tensor;
 pub use builder::{build_decode, build_prefill, build_workload, Workload};
 pub use graph::{GraphBuilder, KvResidency, WorkloadGraph};
 pub use models::{
-    all_presets, paper_counterpart, preset, AttnKind, FfnKind, ModelPreset,
-    NormKind, DS_R1D_Q15B, GPT2_XL, TINY_GQA, TINY_MHA,
+    all_presets, paper_counterpart, preset, spectrum_presets, AttnKind, FfnKind,
+    ModelPreset, NormKind, DS_R1D_Q15B, FIG1_GQA, FIG1_MHA, FIG1_MLA, FIG1_MQA,
+    FIG1_SWA, GPT2_XL, TINY_GQA, TINY_MHA,
 };
 pub use op::{Op, OpClass, OpKind};
 pub use tensor::{OpId, TensorId, TensorInfo, TensorKind};

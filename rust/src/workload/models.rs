@@ -4,7 +4,9 @@
 //! pytest suite checks the Python side against Table I and
 //! `rust/tests/` checks this side against the same numbers, so the
 //! performance model (here) and the functional model (JAX) can never
-//! silently diverge.
+//! silently diverge. The attention-spectrum extensions (`latent_dim`,
+//! `window`) are performance-model-only occupancy shapes; both default
+//! to 0 (= off), under which every formula reduces to the original.
 
 /// FFN flavor (paper Table I "FFN Type").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,12 +23,16 @@ pub enum NormKind {
     RmsNorm,
 }
 
-/// Attention family (paper Fig. 2).
+/// Attention family (paper Fig. 2, extended with the latent-KV point of
+/// the spectrum).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AttnKind {
     Mha,
     Gqa,
     Mqa,
+    /// Multi-head latent attention: the KV cache stores a compressed
+    /// latent per token (`ModelPreset::latent_dim`), à la DeepSeek-V2.
+    Mla,
 }
 
 /// Structural description of a decoder-only transformer (Table I row).
@@ -41,14 +47,28 @@ pub struct ModelPreset {
     pub d_ff: u32,
     pub ffn: FfnKind,
     pub norm: NormKind,
+    /// Latent-KV (MLA) compression: when > 0, the per-token per-layer
+    /// KV-cache footprint is `latent_dim` bytes (one 8-bit latent
+    /// vector) instead of `2 * kv_heads * d_head`. 0 = off.
+    pub latent_dim: u32,
+    /// Sliding-window attention: when > 0, the KV horizon is capped at
+    /// `window` tokens, so decode occupancy plateaus instead of growing
+    /// with context. 0 = off (full causal horizon).
+    pub window: u32,
 }
 
 impl ModelPreset {
+    /// Classify the attention family. Latent-KV wins outright; a single
+    /// shared KV head is MQA *even when `heads == 1`* (all query heads
+    /// share one KV head trivially), so the MQA arm must fire before the
+    /// MHA arm.
     pub fn attn_kind(&self) -> AttnKind {
-        if self.kv_heads == self.heads {
-            AttnKind::Mha
+        if self.latent_dim > 0 {
+            AttnKind::Mla
         } else if self.kv_heads == 1 {
             AttnKind::Mqa
+        } else if self.kv_heads == self.heads {
+            AttnKind::Mha
         } else {
             AttnKind::Gqa
         }
@@ -76,7 +96,8 @@ impl ModelPreset {
     }
 
     /// Total matmul MACs for a causal pass over `seq` tokens
-    /// (Table I column MACs at seq = 2048).
+    /// (Table I column MACs at seq = 2048). Sliding-window attention
+    /// caps the score/context horizon at `window`.
     pub fn total_macs(&self, seq: u64) -> u64 {
         let d = self.d_model as u64;
         let qkv = d * self.qkv_out_dim() as u64;
@@ -86,13 +107,55 @@ impl ModelPreset {
             FfnKind::SwiGlu => 3 * d * self.d_ff as u64,
         };
         let proj = seq * (qkv + out + ffn);
-        let attn = 2 * self.heads as u64 * seq * seq * self.d_head as u64;
+        let attn =
+            2 * self.heads as u64 * seq * self.kv_horizon(seq) * self.d_head as u64;
         self.layers as u64 * (proj + attn)
     }
 
-    /// KV-cache bytes at `seq` tokens (8-bit operands).
+    /// Combined K+V cache bytes per token per layer (8-bit operands).
+    /// MLA stores one `latent_dim`-byte compressed latent instead of the
+    /// full `2 * kv_heads * d_head` K/V pair.
+    pub fn kv_token_bytes(&self) -> u64 {
+        if self.latent_dim > 0 {
+            self.latent_dim as u64
+        } else {
+            2 * (self.kv_heads * self.d_head) as u64
+        }
+    }
+
+    /// K-side share of [`ModelPreset::kv_token_bytes`] (the ceiling
+    /// half, so `k + v` is exact even for odd latent widths).
+    pub fn k_token_bytes(&self) -> u64 {
+        self.kv_token_bytes().div_ceil(2)
+    }
+
+    /// V-side share of [`ModelPreset::kv_token_bytes`] (the floor half).
+    pub fn v_token_bytes(&self) -> u64 {
+        self.kv_token_bytes() / 2
+    }
+
+    /// Number of cached tokens visible at sequence position `seq`:
+    /// `min(seq, window)` under sliding-window attention, `seq` with the
+    /// full causal horizon.
+    pub fn kv_horizon(&self, seq: u64) -> u64 {
+        if self.window > 0 {
+            seq.min(self.window as u64)
+        } else {
+            seq
+        }
+    }
+
+    /// KV-cache bytes at `seq` tokens (8-bit operands). Reduces to the
+    /// original `2 * layers * seq * kv_heads * d_head` when both
+    /// attention extensions are off.
     pub fn kv_cache_bytes(&self, seq: u64) -> u64 {
-        2 * self.layers as u64 * seq * (self.kv_heads * self.d_head) as u64
+        self.layers as u64 * self.kv_horizon(seq) * self.kv_token_bytes()
+    }
+
+    /// True when either attention-spectrum extension (latent-KV or
+    /// sliding window) is enabled — the spec-hash extension gate.
+    pub fn has_attn_extensions(&self) -> bool {
+        self.latent_dim != 0 || self.window != 0
     }
 
     /// Per-layer weight bytes (8-bit).
@@ -112,6 +175,8 @@ pub const GPT2_XL: ModelPreset = ModelPreset {
     d_ff: 6400,
     ffn: FfnKind::Gelu,
     norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 0,
 };
 
 /// DeepSeek-R1-Distill-Qwen-1.5B (GQA): L=28, D=1536, Dff=8960, H=12,
@@ -126,6 +191,8 @@ pub const DS_R1D_Q15B: ModelPreset = ModelPreset {
     d_ff: 8960,
     ffn: FfnKind::SwiGlu,
     norm: NormKind::RmsNorm,
+    latent_dim: 0,
+    window: 0,
 };
 
 /// Tiny MHA config — matches `python/compile/model.py::TINY_MHA`; the
@@ -140,6 +207,8 @@ pub const TINY_MHA: ModelPreset = ModelPreset {
     d_ff: 256,
     ffn: FfnKind::Gelu,
     norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 0,
 };
 
 /// Tiny GQA config — matches `python/compile/model.py::TINY_GQA`.
@@ -153,6 +222,8 @@ pub const TINY_GQA: ModelPreset = ModelPreset {
     d_ff: 256,
     ffn: FfnKind::SwiGlu,
     norm: NormKind::RmsNorm,
+    latent_dim: 0,
+    window: 0,
 };
 
 /// Fig. 1 matched pair: GPT-2-small-scale models with identical
@@ -170,6 +241,8 @@ pub const FIG1_MHA: ModelPreset = ModelPreset {
     d_ff: 3072,
     ffn: FfnKind::Gelu,
     norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 0,
 };
 
 /// GQA twin: Hkv = 2; Dff enlarged by 640 so the parameter count matches
@@ -185,6 +258,61 @@ pub const FIG1_GQA: ModelPreset = ModelPreset {
     d_ff: 3712,
     ffn: FfnKind::Gelu,
     norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 0,
+};
+
+/// MQA twin: Hkv = 1; Dff enlarged by 704 so the parameter count matches
+/// FIG1_MHA exactly (same construction as [`FIG1_GQA`]: the saved
+/// 2*(H-1)*Dh*D of KV projection equals the added 2*D*704 of FFN width).
+pub const FIG1_MQA: ModelPreset = ModelPreset {
+    name: "fig1-mqa-124m",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    kv_heads: 1,
+    d_head: 64,
+    d_ff: 3776,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 0,
+};
+
+/// MLA twin: FIG1_MHA's exact projection shape, but the KV cache holds a
+/// 64-byte compressed latent per token per layer (DeepSeek-V2-style
+/// latent-KV; the up/down latent projections are modeled as reusing the
+/// KV-projection budget, so parameters stay matched). 24x smaller KV
+/// footprint than FIG1_MHA at any horizon.
+pub const FIG1_MLA: ModelPreset = ModelPreset {
+    name: "fig1-mla-124m",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    kv_heads: 12,
+    d_head: 64,
+    d_ff: 3072,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+    latent_dim: 64,
+    window: 0,
+};
+
+/// Sliding-window twin: FIG1_MHA with a 256-token KV horizon — decode
+/// occupancy grows like MHA up to 256 cached tokens, then plateaus
+/// (Mistral-style SWA). Parameters are untouched.
+pub const FIG1_SWA: ModelPreset = ModelPreset {
+    name: "fig1-swa-124m",
+    layers: 12,
+    d_model: 768,
+    heads: 12,
+    kv_heads: 12,
+    d_head: 64,
+    d_ff: 3072,
+    ffn: FfnKind::Gelu,
+    norm: NormKind::LayerNorm,
+    latent_dim: 0,
+    window: 256,
 };
 
 /// Look up a preset by name (CLI / config files).
@@ -196,12 +324,25 @@ pub fn preset(name: &str) -> Option<ModelPreset> {
         "tiny-gqa" => Some(TINY_GQA),
         "fig1-mha" | "fig1-mha-124m" => Some(FIG1_MHA),
         "fig1-gqa" | "fig1-gqa-124m" => Some(FIG1_GQA),
+        "fig1-mqa" | "fig1-mqa-124m" => Some(FIG1_MQA),
+        "fig1-mla" | "fig1-mla-124m" => Some(FIG1_MLA),
+        "fig1-swa" | "fig1-swa-124m" => Some(FIG1_SWA),
         _ => None,
     }
 }
 
 pub fn all_presets() -> Vec<ModelPreset> {
-    vec![GPT2_XL, DS_R1D_Q15B, TINY_MHA, TINY_GQA]
+    vec![
+        GPT2_XL, DS_R1D_Q15B, TINY_MHA, TINY_GQA, FIG1_MHA, FIG1_GQA, FIG1_MQA,
+        FIG1_MLA, FIG1_SWA,
+    ]
+}
+
+/// The parameter-matched attention-variant spectrum (`repro spectrum`),
+/// in decreasing-KV-footprint order: MHA → GQA → MQA → MLA, plus the
+/// sliding-window point whose footprint plateaus rather than shrinks.
+pub fn spectrum_presets() -> Vec<ModelPreset> {
+    vec![FIG1_MHA, FIG1_GQA, FIG1_MQA, FIG1_MLA, FIG1_SWA]
 }
 
 /// The paper's MHA↔GQA co-residency pairing: the preset that shares a
@@ -278,11 +419,60 @@ mod tests {
     }
 
     #[test]
+    fn spectrum_is_parameter_matched_and_kv_monotone() {
+        let base = FIG1_MHA.param_count();
+        for m in spectrum_presets() {
+            assert_eq!(m.param_count(), base, "{}", m.name);
+        }
+        // KV footprint strictly decreases MHA -> GQA -> MQA -> MLA.
+        let kv: Vec<u64> = [FIG1_MHA, FIG1_GQA, FIG1_MQA, FIG1_MLA]
+            .iter()
+            .map(|m| m.kv_cache_bytes(2048))
+            .collect();
+        assert!(kv.windows(2).all(|w| w[0] > w[1]), "{kv:?}");
+    }
+
+    #[test]
+    fn windowed_kv_plateaus_at_the_window() {
+        assert_eq!(FIG1_SWA.kv_horizon(64), 64);
+        assert_eq!(FIG1_SWA.kv_horizon(256), 256);
+        assert_eq!(FIG1_SWA.kv_horizon(4096), 256);
+        assert_eq!(
+            FIG1_SWA.kv_cache_bytes(4096),
+            FIG1_SWA.kv_cache_bytes(256)
+        );
+        // Below the window, SWA is byte-identical to its MHA base.
+        assert_eq!(
+            FIG1_SWA.kv_cache_bytes(128),
+            FIG1_MHA.kv_cache_bytes(128)
+        );
+    }
+
+    #[test]
+    fn latent_kv_overrides_the_cache_footprint() {
+        assert_eq!(FIG1_MLA.kv_token_bytes(), 64);
+        assert_eq!(FIG1_MLA.kv_cache_bytes(2048), 12 * 2048 * 64);
+        assert_eq!(
+            FIG1_MLA.k_token_bytes() + FIG1_MLA.v_token_bytes(),
+            FIG1_MLA.kv_token_bytes()
+        );
+        // With the knob off, the split halves reproduce the original
+        // 2 * kv_heads * d_head exactly.
+        assert_eq!(
+            FIG1_MHA.k_token_bytes() + FIG1_MHA.v_token_bytes(),
+            2 * (12 * 64) as u64
+        );
+    }
+
+    #[test]
     fn preset_lookup() {
         assert_eq!(preset("gpt2-xl").unwrap(), GPT2_XL);
         assert_eq!(preset("deepseek").unwrap(), DS_R1D_Q15B);
+        assert_eq!(preset("fig1-mqa").unwrap(), FIG1_MQA);
+        assert_eq!(preset("fig1-mla-124m").unwrap(), FIG1_MLA);
+        assert_eq!(preset("fig1-swa").unwrap(), FIG1_SWA);
         assert!(preset("nope").is_none());
-        assert_eq!(all_presets().len(), 4);
+        assert_eq!(all_presets().len(), 9);
     }
 
     #[test]
@@ -301,5 +491,34 @@ mod tests {
         let mut m = TINY_MHA.clone();
         m.kv_heads = 1;
         assert_eq!(m.attn_kind(), AttnKind::Mqa);
+        assert_eq!(FIG1_MQA.attn_kind(), AttnKind::Mqa);
+    }
+
+    /// Regression: a single-head model (`heads == kv_heads == 1`) used to
+    /// hit the MHA arm first; the one shared KV head makes it MQA.
+    #[test]
+    fn single_head_model_classifies_as_mqa() {
+        let mut m = TINY_MHA.clone();
+        m.heads = 1;
+        m.kv_heads = 1;
+        assert_eq!(m.attn_kind(), AttnKind::Mqa);
+    }
+
+    #[test]
+    fn mla_classification_wins_over_head_count() {
+        assert_eq!(FIG1_MLA.attn_kind(), AttnKind::Mla);
+        let mut m = FIG1_MLA.clone();
+        m.kv_heads = 1;
+        assert_eq!(m.attn_kind(), AttnKind::Mla, "latent beats MQA");
+    }
+
+    #[test]
+    fn windowed_macs_plateau_per_token() {
+        // Per-position attention work stops growing past the window.
+        let grow = FIG1_MHA.total_macs(1024) - FIG1_MHA.total_macs(1023);
+        let capped = FIG1_SWA.total_macs(1024) - FIG1_SWA.total_macs(1023);
+        assert!(capped < grow, "SWA marginal MACs must be capped");
+        // And with the knob off the formula is bit-for-bit the original.
+        assert_eq!(FIG1_SWA.total_macs(128), FIG1_MHA.total_macs(128));
     }
 }

@@ -1,0 +1,258 @@
+//! Property suite for the attention-variant spectrum (the scenario
+//! axis): KV-footprint monotonicity MHA → GQA → MQA → MLA at matched
+//! shape, sliding-window decode occupancy plateauing at the window, and
+//! qkv/paper-counterpart consistency for every preset in
+//! `all_presets()`. The degenerate-config rule rides along: a window at
+//! or beyond the final context must leave the decode run bit-identical
+//! to the unwindowed model (while still moving the spec hash, per the
+//! extension-gate rule).
+//!
+//! Case count honors `PROPTEST_CASES` (CI sets 64).
+
+use trapti::api::{ApiContext, ExperimentSpec};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::workload::{
+    all_presets, paper_counterpart, preset, spectrum_presets, AttnKind, FfnKind,
+    ModelPreset, NormKind, FIG1_MHA, FIG1_SWA, TINY_MHA,
+};
+
+/// Honors `PROPTEST_CASES` (the CI knob) with a local default.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// A structurally valid preset at an arbitrary attention shape. Only the
+/// attention knobs vary across a matched chain; everything else is fixed
+/// so KV-footprint comparisons isolate the attention family.
+fn shape(
+    layers: u16,
+    heads: u32,
+    kv_heads: u32,
+    d_head: u32,
+    latent_dim: u32,
+    window: u32,
+) -> ModelPreset {
+    ModelPreset {
+        name: "prop-shape",
+        layers,
+        d_model: heads * d_head,
+        heads,
+        kv_heads,
+        d_head,
+        d_ff: 4 * heads * d_head,
+        ffn: FfnKind::Gelu,
+        norm: NormKind::LayerNorm,
+        latent_dim,
+        window,
+    }
+}
+
+#[test]
+fn spectrum_presets_kv_monotone_non_increasing_at_matched_params() {
+    let presets = spectrum_presets();
+    assert_eq!(presets.len(), 5, "MHA, GQA, MQA, MLA, SWA");
+    for m in &presets {
+        assert_eq!(m.param_count(), FIG1_MHA.param_count(), "{}", m.name);
+    }
+    // The first four are the shrinking-KV chain at every horizon.
+    for seq in [1u64, 64, 256, 2048, 1 << 16] {
+        let kv: Vec<u64> = presets
+            .iter()
+            .take(4)
+            .map(|m| m.kv_cache_bytes(seq))
+            .collect();
+        assert!(kv.windows(2).all(|w| w[0] >= w[1]), "seq={seq}: {kv:?}");
+        assert!(kv[0] > kv[3], "MLA must undercut MHA at seq={seq}: {kv:?}");
+    }
+    // The SWA point plateaus rather than shrinks: equal to its MHA base
+    // below the window, constant above it.
+    assert_eq!(FIG1_SWA.kv_cache_bytes(128), FIG1_MHA.kv_cache_bytes(128));
+    assert_eq!(
+        FIG1_SWA.kv_cache_bytes(1 << 20),
+        FIG1_SWA.kv_cache_bytes(FIG1_SWA.window as u64)
+    );
+}
+
+#[test]
+fn prop_kv_chain_monotone_on_random_matched_shapes() {
+    check("kv-chain-monotone", cases(64), |rng: &mut Rng| {
+        let layers = rng.range(1, 8) as u16;
+        let d_head = 8u32 << rng.below(4);
+        let heads_pool = [4u32, 6, 8, 12, 16, 24];
+        let heads = heads_pool[rng.below(heads_pool.len() as u64) as usize];
+        let divisors: Vec<u32> = (2..heads).filter(|d| heads % d == 0).collect();
+        let kv_mid = divisors[rng.below(divisors.len() as u64) as usize];
+        // MLA latent never wider than the MQA pair it undercuts.
+        let latent = rng.range(1, 2 * d_head as u64) as u32;
+        let chain = [
+            shape(layers, heads, heads, d_head, 0, 0),
+            shape(layers, heads, kv_mid, d_head, 0, 0),
+            shape(layers, heads, 1, d_head, 0, 0),
+            shape(layers, heads, heads, d_head, latent, 0),
+        ];
+        let kinds: Vec<AttnKind> = chain.iter().map(ModelPreset::attn_kind).collect();
+        assert_eq!(
+            kinds,
+            [AttnKind::Mha, AttnKind::Gqa, AttnKind::Mqa, AttnKind::Mla]
+        );
+        for seq in [0u64, 1, rng.range(2, 1 << 14)] {
+            let kv: Vec<u64> = chain.iter().map(|m| m.kv_cache_bytes(seq)).collect();
+            assert!(
+                kv.windows(2).all(|w| w[0] >= w[1]),
+                "H={heads} Hkv={kv_mid} Dh={d_head} latent={latent} seq={seq}: {kv:?}"
+            );
+        }
+        // Per-token accounting stays exact along the whole chain.
+        for m in &chain {
+            assert_eq!(m.k_token_bytes() + m.v_token_bytes(), m.kv_token_bytes());
+        }
+    });
+}
+
+#[test]
+fn prop_windowed_kv_plateaus_and_collapses_when_off() {
+    check("window-plateau", cases(64), |rng: &mut Rng| {
+        let layers = rng.range(1, 6) as u16;
+        let d_head = 8u32 << rng.below(3);
+        let heads = 2u32 << rng.below(3);
+        let window = rng.range(1, 4096) as u32;
+        let base = shape(layers, heads, heads, d_head, 0, 0);
+        let swa = shape(layers, heads, heads, d_head, 0, window);
+        // At or below the window: byte-identical to the unwindowed base.
+        let inside = rng.range(1, window as u64);
+        assert_eq!(swa.kv_cache_bytes(inside), base.kv_cache_bytes(inside));
+        assert_eq!(swa.total_macs(inside), base.total_macs(inside));
+        // Beyond the window: pinned at the window's footprint, never
+        // above the full-causal curve.
+        let beyond = window as u64 + rng.range(1, 1 << 16);
+        assert_eq!(
+            swa.kv_cache_bytes(beyond),
+            swa.kv_cache_bytes(window as u64)
+        );
+        assert!(swa.kv_cache_bytes(beyond) <= base.kv_cache_bytes(beyond));
+        // The window is an occupancy knob only: parameters and the
+        // attention-family classification are untouched.
+        assert_eq!(swa.param_count(), base.param_count());
+        assert_eq!(swa.attn_kind(), base.attn_kind());
+    });
+}
+
+#[test]
+fn windowed_decode_occupancy_plateaus_at_the_window() {
+    let ctx = ApiContext::new();
+    let mut swa = TINY_MHA.clone();
+    swa.window = 8;
+    let peak = |m: &ModelPreset, gen: u32| {
+        let spec = ExperimentSpec::builder()
+            .model(m.clone())
+            .decode(32, gen)
+            .accel(trapti::config::tiny())
+            .build()
+            .unwrap();
+        spec.run_stage1(&ctx).unwrap().trace().peak_needed()
+    };
+    // The window saturates during the 32-token prompt, so windowed
+    // decode peak occupancy is flat in the generation length...
+    let p_short = peak(&swa, 8);
+    let p_long = peak(&swa, 32);
+    assert_eq!(p_short, p_long, "windowed decode peak must plateau");
+    // ...while the full-horizon twin keeps growing with context...
+    let f_short = peak(&TINY_MHA, 8);
+    let f_long = peak(&TINY_MHA, 32);
+    assert!(
+        f_long > f_short,
+        "full-causal decode peak must grow: {f_short} vs {f_long}"
+    );
+    // ...and the plateau sits strictly below the growing curve.
+    assert!(p_long < f_long, "window must cap occupancy: {p_long} vs {f_long}");
+}
+
+#[test]
+fn window_at_or_beyond_final_context_is_bit_identical_to_flat_decode() {
+    let ctx = ApiContext::new();
+    let mut wide = TINY_MHA.clone();
+    wide.window = 64; // final context is 16 + 8 = 24 < 64: never binds
+    let run = |m: &ModelPreset| {
+        let spec = ExperimentSpec::builder()
+            .model(m.clone())
+            .decode(16, 8)
+            .accel(trapti::config::tiny())
+            .build()
+            .unwrap();
+        spec.run_stage1(&ctx).unwrap()
+    };
+    let flat = run(&TINY_MHA);
+    let win = run(&wide);
+    assert_eq!(flat.graph.total_macs(), win.graph.total_macs());
+    assert_eq!(flat.graph.kv_bytes(), win.graph.kv_bytes());
+    assert_eq!(flat.result.total_cycles, win.result.total_cycles);
+    let (a, b) = (flat.trace().samples(), win.trace().samples());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!((x.t, x.needed, x.obsolete), (y.t, y.needed, y.obsolete));
+    }
+    // The run is identical, but the spec hash is not: any enabled
+    // attention extension joins the content hash (the extension-gate
+    // rule), while the all-off form must hash like before the field
+    // existed.
+    assert_ne!(flat.spec.content_hash(), win.spec.content_hash());
+}
+
+#[test]
+fn qkv_and_paper_counterpart_consistency_for_every_preset() {
+    let presets = all_presets();
+    assert_eq!(presets.len(), 9);
+    for m in &presets {
+        assert_eq!(
+            m.qkv_out_dim(),
+            (m.heads + 2 * m.kv_heads) * m.d_head,
+            "{}",
+            m.name
+        );
+        assert_eq!(
+            m.k_token_bytes() + m.v_token_bytes(),
+            m.kv_token_bytes(),
+            "{}",
+            m.name
+        );
+        assert!(
+            m.kv_token_bytes() <= 2 * (m.kv_heads * m.d_head) as u64,
+            "{}: a latent must compress, never inflate, the KV pair",
+            m.name
+        );
+        assert_eq!(
+            preset(m.name).as_ref(),
+            Some(m),
+            "{} must round-trip through preset()",
+            m.name
+        );
+        match paper_counterpart(m.name) {
+            Some(c) => {
+                assert_ne!(c.name, m.name);
+                assert_eq!(
+                    paper_counterpart(c.name).as_ref(),
+                    Some(m),
+                    "{}: pairing must be symmetric",
+                    m.name
+                );
+                // Each pair contrasts MHA against a shared-KV family.
+                assert_ne!(
+                    c.attn_kind() == AttnKind::Mha,
+                    m.attn_kind() == AttnKind::Mha,
+                    "{}",
+                    m.name
+                );
+            }
+            None => assert!(
+                matches!(m.attn_kind(), AttnKind::Mqa | AttnKind::Mla)
+                    || m.window > 0,
+                "{} must have a co-residency counterpart",
+                m.name
+            ),
+        }
+    }
+}

@@ -1,0 +1,344 @@
+//! Differential wall for the hierarchy-aware Stage II/III engine
+//! (`banking::hierarchy`). The degenerate-config contract: with the
+//! knob off — `config = None`, or an L1 capacity already covering the
+//! peak — the hierarchy path must be `to_bits`-identical to the flat
+//! `sweep_fused` / `replay_trace_with` engines. Below the peak, the
+//! oracle is a trace clamped at the L1 capacity in the test itself: the
+//! L1 side of every spilled point must equal the flat sweep of that
+//! clamped trace bit-for-bit, and the L2 charge obeys closed-form
+//! invariants (spilled peak, migration lower bound, residency bound,
+//! collapse conservation).
+//!
+//! Case count honors `PROPTEST_CASES` (CI sets 64).
+
+use trapti::api::ApiContext;
+use trapti::banking::{
+    replay_hierarchy, replay_trace_with, sweep_fused, sweep_hierarchy,
+    GatingPolicy, HierarchyConfig, HierarchyPoint, OnlineConfig, OnlineError,
+    OnlineReport, SweepPoint, SweepSpec,
+};
+use trapti::trace::{AccessStats, OccupancyTrace};
+use trapti::util::proptest::check;
+use trapti::util::rng::Rng;
+use trapti::util::MIB;
+
+/// Honors `PROPTEST_CASES` (the CI knob) with a local default.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Strict point comparator: every field identical, floats by `to_bits`.
+fn assert_points_bit_identical(flat: &[SweepPoint], hier: &[HierarchyPoint]) {
+    assert_eq!(flat.len(), hier.len(), "point count");
+    for (f, h) in flat.iter().zip(hier) {
+        let n = &h.point;
+        let at = format!(
+            "C={} B={} alpha={} {:?}",
+            f.eval.capacity, f.eval.banks, f.eval.alpha, f.eval.policy
+        );
+        assert_eq!(f.eval.capacity, n.eval.capacity, "{at}");
+        assert_eq!(f.eval.banks, n.eval.banks, "{at}");
+        assert_eq!(f.eval.alpha.to_bits(), n.eval.alpha.to_bits(), "{at}");
+        assert_eq!(f.eval.policy, n.eval.policy, "{at}");
+        assert_eq!(f.eval.n_switch, n.eval.n_switch, "{at}");
+        assert_eq!(f.eval.latency_cycles, n.eval.latency_cycles, "{at}");
+        for (a, b, what) in [
+            (f.eval.e_dyn_j, n.eval.e_dyn_j, "e_dyn_j"),
+            (f.eval.e_leak_j, n.eval.e_leak_j, "e_leak_j"),
+            (f.eval.e_sw_j, n.eval.e_sw_j, "e_sw_j"),
+            (f.eval.avg_active_banks, n.eval.avg_active_banks, "avg_active"),
+            (f.eval.gated_fraction, n.eval.gated_fraction, "gated_fraction"),
+            (f.eval.area_mm2, n.eval.area_mm2, "area_mm2"),
+            (f.base_e_j, n.base_e_j, "base_e_j"),
+            (f.base_area_mm2, n.base_area_mm2, "base_area_mm2"),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b} at {at}");
+        }
+        assert_eq!(f.eval.characterization, n.eval.characterization, "{at}");
+    }
+}
+
+/// Strict online-report comparator (timeline-free replays).
+fn assert_reports_bit_identical(f: &OnlineReport, h: &OnlineReport) {
+    assert_eq!(f.stall_cycles, h.stall_cycles);
+    assert_eq!(f.wake_events, h.wake_events);
+    assert_eq!(f.trace_cycles, h.trace_cycles);
+    assert_eq!(f.eval.n_switch, h.eval.n_switch);
+    for (a, b, what) in [
+        (f.eval.e_dyn_j, h.eval.e_dyn_j, "e_dyn_j"),
+        (f.eval.e_leak_j, h.eval.e_leak_j, "e_leak_j"),
+        (f.eval.e_sw_j, h.eval.e_sw_j, "e_sw_j"),
+        (f.eval.gated_fraction, h.eval.gated_fraction, "gated_fraction"),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+    }
+}
+
+/// Random occupancy trace with nonzero obsolete bytes (the clamp must
+/// respect the obsolete-fits-in-the-remainder rule too).
+fn random_trace(rng: &mut Rng, capacity: u64, max_segments: u64) -> OccupancyTrace {
+    let mut tr = OccupancyTrace::new("mem", capacity);
+    let mut t = 0u64;
+    for _ in 0..rng.below(max_segments + 1) {
+        t += rng.range(1, 10_000);
+        let needed = if rng.below(6) == 0 { 0 } else { rng.below(capacity + 1) };
+        let obsolete = rng.below(capacity - needed + 1);
+        tr.record(t, needed, obsolete);
+    }
+    tr.finalize(t + rng.range(1, 2_000));
+    tr
+}
+
+fn random_stats(rng: &mut Rng) -> AccessStats {
+    AccessStats {
+        reads: rng.below(20_000_000),
+        writes: rng.below(5_000_000),
+        ..Default::default()
+    }
+}
+
+const POLICY_POOL: [GatingPolicy; 4] = [
+    GatingPolicy::None,
+    GatingPolicy::Aggressive,
+    GatingPolicy::Conservative { min_idle_factor: 4.0 },
+    GatingPolicy::Drowsy { retention_factor: 0.25 },
+];
+
+/// Random subset of the policy pool; never empty.
+fn random_policies(rng: &mut Rng) -> Vec<GatingPolicy> {
+    let mask = rng.range(1, 15);
+    POLICY_POOL
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1 << i) != 0)
+        .map(|(_, p)| *p)
+        .collect()
+}
+
+/// Random subset of the power-of-two bank pool; never empty.
+fn random_banks(rng: &mut Rng, pool: &[u32]) -> Vec<u32> {
+    let mask = rng.range(1, (1u64 << pool.len()) - 1);
+    pool.iter()
+        .enumerate()
+        .filter(|(i, _)| mask & (1u64 << i) != 0)
+        .map(|(_, b)| *b)
+        .collect()
+}
+
+/// The test's own clamp — the documented L1 view of a spilled run:
+/// needed capped at the capacity, obsolete in whatever room remains.
+fn clamp(tr: &OccupancyTrace, cap: u64) -> OccupancyTrace {
+    let mut out = OccupancyTrace::new(&tr.memory, cap);
+    for s in tr.samples() {
+        let needed = s.needed.min(cap);
+        out.record(s.t, needed, s.obsolete.min(cap - needed));
+    }
+    out.finalize(tr.end_time().expect("finalized input"));
+    out
+}
+
+#[test]
+fn prop_none_config_is_bitwise_flat_sweep() {
+    let ctx = ApiContext::new();
+    check("hier-none-flat", cases(48), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 26);
+        let tr = random_trace(rng, cap, 50);
+        let peak = tr.peak_needed();
+        // Straddle the peak so the flat infeasibility filter fires too.
+        let grid = SweepSpec {
+            capacities: vec![(peak / 2).max(1), peak.max(1), cap.max(1) * 2],
+            banks: random_banks(rng, &[1, 2, 4, 8, 16]),
+            alphas: vec![0.05 + rng.f64() * 0.95],
+            policies: random_policies(rng),
+        };
+        let stats = random_stats(rng);
+        let freq = 0.5 + rng.f64() * 1.5;
+        let flat = sweep_fused(&ctx.cacti, &tr, &stats, &grid, freq).unwrap();
+        let hier = sweep_hierarchy(&ctx.cacti, &tr, &stats, &grid, freq, None).unwrap();
+        assert!(hier.iter().all(|p| p.l2.is_none()));
+        assert_points_bit_identical(&flat, &hier);
+    });
+}
+
+#[test]
+fn prop_l1_covering_peak_is_bitwise_flat_even_with_config() {
+    let ctx = ApiContext::new();
+    check("hier-above-peak-flat", cases(32), |rng: &mut Rng| {
+        let cap = rng.range(1, 1 << 26);
+        let tr = random_trace(rng, cap, 50);
+        let peak = tr.peak_needed();
+        // Every capacity covers the peak: the config must be inert.
+        let grid = SweepSpec {
+            capacities: vec![peak.max(1), peak.max(1) * 2, peak.max(1) * 4],
+            banks: random_banks(rng, &[1, 4, 16, 64]),
+            alphas: vec![0.9, 1.0],
+            policies: random_policies(rng),
+        };
+        let cfg = HierarchyConfig::new(rng.range(1, 1 << 26));
+        let stats = random_stats(rng);
+        let flat = sweep_fused(&ctx.cacti, &tr, &stats, &grid, 1.0).unwrap();
+        let hier =
+            sweep_hierarchy(&ctx.cacti, &tr, &stats, &grid, 1.0, Some(&cfg)).unwrap();
+        assert!(hier.iter().all(|p| p.l2.is_none()));
+        assert_points_bit_identical(&flat, &hier);
+    });
+}
+
+#[test]
+fn prop_spilled_points_match_flat_sweep_of_clamped_trace() {
+    let ctx = ApiContext::new();
+    check("hier-spill-oracle", cases(32), |rng: &mut Rng| {
+        let cap = rng.range(1 << 10, 1 << 26);
+        let tr = random_trace(rng, cap, 50);
+        let peak = tr.peak_needed();
+        if peak < 2 {
+            return; // no below-peak capacity exists
+        }
+        let l1 = rng.range(1, peak - 1);
+        let cfg = HierarchyConfig::new(peak); // excess always fits
+        let grid = SweepSpec {
+            capacities: vec![l1],
+            banks: random_banks(rng, &[1, 2, 8, 32]),
+            alphas: vec![0.9],
+            policies: random_policies(rng),
+        };
+        let stats = random_stats(rng);
+        let hier =
+            sweep_hierarchy(&ctx.cacti, &tr, &stats, &grid, 1.0, Some(&cfg)).unwrap();
+        assert_eq!(hier.len(), grid.points(), "spill cap must be admitted");
+        // Oracle: the L1 side is the flat sweep of the clamped trace.
+        let flat = sweep_fused(&ctx.cacti, &clamp(&tr, l1), &stats, &grid, 1.0).unwrap();
+        assert_points_bit_identical(&flat, &hier);
+        let end = tr.end_time().unwrap();
+        for p in &hier {
+            let l2 = p.l2.as_ref().expect("below-peak point must carry L2");
+            assert_eq!(l2.spilled_peak_bytes, peak - l1);
+            // The spill level must at least rise from 0 to its own peak.
+            assert!(l2.migrate_bytes >= l2.spilled_peak_bytes);
+            assert_eq!(
+                l2.e_migrate_j.to_bits(),
+                (l2.migrate_bytes as f64 * cfg.migrate_energy_per_byte_j).to_bits()
+            );
+            assert!(l2.l2_resident_cycles <= end);
+            assert!(l2.e_l2_leak_j >= 0.0);
+            // Collapse conserves components exactly: migration joins
+            // dynamic energy, L2 residence joins leakage.
+            let before = p.point.eval.clone();
+            let c = p.clone().collapse();
+            assert_eq!(
+                c.eval.e_dyn_j.to_bits(),
+                (before.e_dyn_j + l2.e_migrate_j).to_bits()
+            );
+            assert_eq!(
+                c.eval.e_leak_j.to_bits(),
+                (before.e_leak_j + l2.e_l2_leak_j).to_bits()
+            );
+            assert_eq!(c.eval.e_sw_j.to_bits(), before.e_sw_j.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_replay_flat_when_feasible_and_clamped_oracle_when_spilled() {
+    let ctx = ApiContext::new();
+    check("hier-replay-diff", cases(32), |rng: &mut Rng| {
+        let cap = rng.range(1 << 10, 1 << 26);
+        let tr = random_trace(rng, cap, 40);
+        let peak = tr.peak_needed();
+        let stats = random_stats(rng);
+        let policy = POLICY_POOL[rng.below(4) as usize];
+        let banks = 1u32 << rng.below(5);
+        // Feasible capacity: the config (present or not) must be inert.
+        let config = OnlineConfig::new(peak.max(1), banks, 0.9, policy);
+        let cfg = HierarchyConfig::new(rng.range(1, 1 << 20));
+        let flat =
+            replay_trace_with(&ctx.cacti, &tr, &stats, config, 1.0, false).unwrap();
+        for hierarchy in [None, Some(&cfg)] {
+            let hier = replay_hierarchy(
+                &ctx.cacti, &tr, &stats, config, 1.0, false, hierarchy,
+            )
+            .unwrap();
+            assert!(hier.l2.is_none());
+            assert_reports_bit_identical(&flat, &hier.report);
+            assert_eq!(flat.e_total_j().to_bits(), hier.e_total_j().to_bits());
+        }
+        if peak < 2 {
+            return;
+        }
+        // Below the peak: the flat replay refuses outright...
+        let l1 = rng.range(1, peak - 1);
+        let sub = OnlineConfig::new(l1, banks, 0.9, policy);
+        assert!(matches!(
+            replay_trace_with(&ctx.cacti, &tr, &stats, sub, 1.0, false),
+            Err(OnlineError::InfeasibleCapacity { .. })
+        ));
+        // ...the hierarchy admits it when the excess fits the pool, and
+        // the L1 report is the flat replay of the clamped trace...
+        let pool = HierarchyConfig::new(peak - l1);
+        let rep = replay_hierarchy(&ctx.cacti, &tr, &stats, sub, 1.0, false, Some(&pool))
+            .unwrap();
+        let l2 = rep.l2.as_ref().expect("spilled replay must carry L2");
+        assert_eq!(l2.spilled_peak_bytes, peak - l1);
+        let flat_sub =
+            replay_trace_with(&ctx.cacti, &clamp(&tr, l1), &stats, sub, 1.0, false)
+                .unwrap();
+        assert_reports_bit_identical(&flat_sub, &rep.report);
+        // ...and overflow past the pool reports the combined capacity.
+        if peak - l1 >= 2 {
+            let small = HierarchyConfig::new(peak - l1 - 1);
+            match replay_hierarchy(&ctx.cacti, &tr, &stats, sub, 1.0, false, Some(&small))
+            {
+                Err(OnlineError::InfeasibleCapacity { capacity, peak_needed }) => {
+                    assert_eq!(capacity, l1 + small.l2_capacity);
+                    assert_eq!(peak_needed, peak);
+                }
+                other => panic!("expected InfeasibleCapacity, got {other:?}"),
+            }
+        }
+    });
+}
+
+/// Deterministic grid-shape check: capacity-major output order, the
+/// skip rule for excess beyond the L2 pool, and flat bit-identity for
+/// the at-or-above-peak columns of a mixed grid.
+#[test]
+fn mixed_grid_orders_capacities_and_skips_oversized_spill() {
+    let ctx = ApiContext::new();
+    let mut tr = OccupancyTrace::new("sram", 128 * MIB);
+    let mut t = 0;
+    while t < 4_000_000 {
+        tr.record(t, 40 * MIB, 0);
+        tr.record(t + 300_000, 8 * MIB, MIB);
+        t += 600_000;
+    }
+    tr.finalize(4_000_000);
+    let stats = AccessStats {
+        reads: 2_000_000,
+        writes: 500_000,
+        ..Default::default()
+    };
+    // 4 MiB spills 36 MiB (> pool: skipped), 24 MiB spills 16 MiB
+    // (admitted), 64 MiB covers the peak (flat).
+    let grid = SweepSpec {
+        capacities: vec![4 * MIB, 24 * MIB, 64 * MIB],
+        banks: vec![1, 4],
+        alphas: vec![0.9],
+        policies: vec![GatingPolicy::None, GatingPolicy::Aggressive],
+    };
+    let cfg = HierarchyConfig::new(20 * MIB);
+    let pts =
+        sweep_hierarchy(&ctx.cacti, &tr, &stats, &grid, 1.0, Some(&cfg)).unwrap();
+    let caps: Vec<u64> = pts.iter().map(|p| p.point.eval.capacity).collect();
+    assert_eq!(pts.len(), 8, "two admitted capacities x 2 banks x 2 policies");
+    assert!(caps[..4].iter().all(|&c| c == 24 * MIB), "{caps:?}");
+    assert!(caps[4..].iter().all(|&c| c == 64 * MIB), "{caps:?}");
+    assert!(pts[..4].iter().all(|p| p.l2.is_some()));
+    assert!(pts[4..].iter().all(|p| p.l2.is_none()));
+    // The flat column of the mixed grid is bit-identical to the whole
+    // flat sweep (which drops both below-peak capacities itself).
+    let flat = sweep_fused(&ctx.cacti, &tr, &stats, &grid, 1.0).unwrap();
+    assert_points_bit_identical(&flat, &pts[4..]);
+}

@@ -11,11 +11,11 @@
 //! `LAB_SCHEMA_VERSION` deliberately and regenerate stores.
 
 use trapti::api::ExperimentSpec;
-use trapti::banking::{GatingPolicy, SweepSpec};
+use trapti::banking::{GatingPolicy, HierarchyConfig, SweepSpec};
 use trapti::config::{baseline, tiny};
 use trapti::serving::ServingParams;
 use trapti::util::MIB;
-use trapti::workload::{GPT2_XL, TINY_GQA, TINY_MHA};
+use trapti::workload::{FIG1_MLA, FIG1_MQA, FIG1_SWA, GPT2_XL, TINY_GQA, TINY_MHA};
 
 #[test]
 fn tiny_mha_prefill_pin() {
@@ -119,4 +119,101 @@ fn paper_scale_decode_pin() {
         .build()
         .unwrap();
     assert_eq!(spec.content_hash(), 0x028d7062579eccb1);
+}
+
+/// New spectrum presets: MQA carries no attention extension, so it
+/// hashes through the legacy serialization; MLA and SWA each trip the
+/// attention gate (marker word + latent/window fields). All three
+/// values are recomputed independently from the documented
+/// serialization, like every pin in this file.
+#[test]
+fn spectrum_preset_pins() {
+    let mqa = ExperimentSpec::builder()
+        .model(FIG1_MQA)
+        .decode(16, 8)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(mqa.content_hash(), 0x537965368b9f02f9);
+
+    let mla = ExperimentSpec::builder()
+        .model(FIG1_MLA)
+        .decode(16, 8)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(mla.content_hash(), 0x6349fa8b559c981a);
+
+    let swa = ExperimentSpec::builder()
+        .model(FIG1_SWA)
+        .prefill(64)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(swa.content_hash(), 0x457871cb024342c9);
+}
+
+/// The attention-extension gate mirrors the serving rule: fields only
+/// hash when enabled. A preset with both knobs zeroed is
+/// indistinguishable from one that predates the fields — the tiny-MHA
+/// pin above proves that for the stock presets; here the same model
+/// with a latent or a window must move away from its own pin, and the
+/// two knobs must not collide with each other.
+#[test]
+fn attn_extensions_preserve_legacy_pin_and_are_semantic() {
+    let build = |latent_dim: u32, window: u32| {
+        let mut m = TINY_MHA.clone();
+        m.latent_dim = latent_dim;
+        m.window = window;
+        ExperimentSpec::builder()
+            .model(m)
+            .prefill(64)
+            .accel(tiny())
+            .build()
+            .unwrap()
+            .content_hash()
+    };
+    let legacy = build(0, 0);
+    assert_eq!(legacy, 0xf0956a9f84583979, "all-off must keep the pin");
+    let latent = build(64, 0);
+    let window = build(0, 64);
+    assert_ne!(latent, legacy);
+    assert_ne!(window, legacy);
+    assert_ne!(latent, window);
+}
+
+/// The hierarchy gate follows the same extension rule: a flat spec
+/// (`hierarchy` unset) keeps its pre-hierarchy pin bit-for-bit, and
+/// enabling the L2 pool moves the hash to a pinned value of its own.
+/// Both the capacity and the migration energy are part of the identity.
+#[test]
+fn hierarchy_preserves_legacy_pin_and_pins_its_own() {
+    let flat = ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(tiny())
+        .build()
+        .unwrap();
+    assert_eq!(flat.content_hash(), 0xf0956a9f84583979);
+
+    let hier = ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(tiny())
+        .hierarchy(HierarchyConfig::new(8 * MIB))
+        .build()
+        .unwrap();
+    assert_eq!(hier.content_hash(), 0xfd70ecf44bad3719);
+
+    let mut pricier = HierarchyConfig::new(8 * MIB);
+    pricier.migrate_energy_per_byte_j = 4e-12;
+    let repriced = ExperimentSpec::builder()
+        .model(TINY_MHA)
+        .prefill(64)
+        .accel(tiny())
+        .hierarchy(pricier)
+        .build()
+        .unwrap();
+    assert_ne!(repriced.content_hash(), hier.content_hash());
+    assert_ne!(repriced.content_hash(), flat.content_hash());
 }
